@@ -1,0 +1,48 @@
+//! Non-convex workload driver: the paper's Fig-1-bottom (a 4-hidden-layer
+//! 92K-parameter network on synthetic CIFAR-10 at C_comm/C_comp = 1000).
+//!
+//! Focuses on the period-length trade-off (fig1g): τ too small ⇒ paying the
+//! communication bottleneck every iteration; τ too large ⇒ local drift.
+//! The paper finds the interior optimum around τ=10.
+//!
+//! ```bash
+//! cargo run --release --example cifar_nonconvex [--fast]
+//! ```
+
+use fedpaq::config::EngineKind;
+use fedpaq::figures::{figure, Runner};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    anyhow::ensure!(
+        std::path::Path::new("artifacts/manifest.json").exists(),
+        "NN models need the PJRT artifacts: run `make artifacts` first"
+    );
+    let mut runner = Runner::new(EngineKind::Pjrt, "artifacts");
+    if fast {
+        runner.t_override = Some(20);
+    }
+    let out = std::path::Path::new("results");
+
+    // τ sweep + the three-way benchmark comparison.
+    for id in ["fig1g", "fig1h"] {
+        let spec = figure(id).unwrap();
+        println!("=== {} — {}", spec.id, spec.title);
+        let fig = runner.run_and_save(&spec, out)?;
+        if id == "fig1g" {
+            // Rank τ by final (time, loss): the paper's trade-off.
+            println!("tau trade-off (end of T iterations):");
+            let mut rows: Vec<_> = fig
+                .curves
+                .iter()
+                .map(|c| (c.label.clone(), c.total_time(), c.final_loss().unwrap_or(f64::NAN)))
+                .collect();
+            rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+            for (label, t, loss) in rows {
+                println!("  {label:<10} total-time {t:>10.0}  final-loss {loss:.4}");
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Fig-1-top reproduction driver: the strongly-convex workload (logistic
+//! regression on synthetic MNIST-0/8) under the paper's three sweeps.
+//!
+//! Runs the full fig1a–fig1d grids and prints the communication/computation
+//! trade-off summary: time-to-target-loss per curve, which is the ordering
+//! the paper's Figure 1 (top) demonstrates.
+//!
+//! ```bash
+//! cargo run --release --example mnist_convex [--fast]
+//! ```
+
+use fedpaq::config::EngineKind;
+use fedpaq::figures::{figure, Runner};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let engine = if std::path::Path::new("artifacts/manifest.json").exists() {
+        EngineKind::Pjrt
+    } else {
+        EngineKind::Rust
+    };
+    let mut runner = Runner::new(engine, "artifacts");
+    if fast {
+        runner.t_override = Some(40);
+    }
+    let out = std::path::Path::new("results");
+
+    for id in ["fig1a", "fig1b", "fig1c", "fig1d"] {
+        let spec = figure(id).unwrap();
+        println!("=== {} — {}", spec.id, spec.title);
+        let fig = runner.run_and_save(&spec, out)?;
+        // Time-to-loss table: pick a target reachable by every curve.
+        let worst_final = fig
+            .curves
+            .iter()
+            .filter_map(|c| c.final_loss())
+            .fold(f64::MIN, f64::max);
+        let target = worst_final.max(0.05) * 1.15;
+        println!("time to reach loss {target:.4}:");
+        for c in &fig.curves {
+            match c.time_to_loss(target) {
+                Some(t) => println!("  {:<26} t = {t:>10.1}", c.label),
+                None => println!("  {:<26} (not reached)", c.label),
+            }
+        }
+        println!();
+    }
+    println!("CSV series written under results/fig1[a-d].csv");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: train a federated logistic-regression model with FedPAQ.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the whole public API in ~30 lines: build a config, load
+//! the PJRT engine (falling back to the pure-rust engine when artifacts
+//! are missing), run Algorithm 1, inspect the loss-vs-time curve.
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::figures::Runner;
+use fedpaq::quant::Quantizer;
+
+fn main() -> anyhow::Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let engine = if have_artifacts { EngineKind::Pjrt } else { EngineKind::Rust };
+    println!("engine: {engine:?} (artifacts present: {have_artifacts})");
+
+    // FedPAQ on the paper's Fig-1 logreg workload: n=50 nodes, r=25
+    // participate per round, τ=5 local steps, 1-level QSGD quantization.
+    let cfg = ExperimentConfig::fig1_logreg_base()
+        .with_name("quickstart FedPAQ (s=1, r=25, tau=5)")
+        .with_quantizer(Quantizer::qsgd(1))
+        .with_engine(engine.clone());
+
+    let mut runner = Runner::new(engine, "artifacts");
+    let result = runner.run_config(cfg)?;
+
+    println!("\nround  iters  virtual-time  uploaded-bits  train-loss");
+    for p in &result.curve.points {
+        println!(
+            "{:>5}  {:>5}  {:>12.2}  {:>13}  {:.6}",
+            p.round, p.iterations, p.time, p.bits_up, p.loss
+        );
+    }
+    let first = result.curve.points.first().unwrap().loss;
+    let last = result.curve.points.last().unwrap().loss;
+    println!("\nloss {first:.4} -> {last:.4} over {} rounds", result.rounds.len());
+    println!(
+        "total upload: {:.2} MBit ({:.0}x less than unquantized FedAvg)",
+        result.total_bits as f64 / 1e6,
+        (result.curve.points.last().unwrap().round as u64
+            * 25
+            * 32
+            * result.params.len() as u64) as f64
+            / result.total_bits as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Real distributed FedPAQ over TCP on localhost: one leader + W worker
+//! *processes*, each running its own PJRT engine and regenerating only its
+//! shard — nothing but quantized updates crosses the sockets.
+//!
+//! The same binary re-execs itself in worker role:
+//!
+//! ```bash
+//! cargo run --release --example tcp_cluster            # 2 workers
+//! cargo run --release --example tcp_cluster -- 4       # 4 workers
+//! ```
+//!
+//! Verifies at the end that the distributed run reproduces the in-process
+//! simulation's final parameters (same seeds ⇒ same uploads).
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::figures::Runner;
+use std::path::Path;
+use std::process::{Child, Command};
+
+fn cluster_config() -> ExperimentConfig {
+    // Default to the pure-rust engine: the cluster demo is about the
+    // *network* path (the PJRT engine is exercised by every other example
+    // and by integration_pjrt.rs; running several PJRT CPU clients as
+    // sibling subprocesses of one parent is flaky on this image). Pass
+    // --pjrt to force the AOT engine.
+    let engine = if std::env::args().any(|a| a == "--pjrt")
+        && Path::new("artifacts/manifest.json").exists()
+    {
+        EngineKind::Pjrt
+    } else {
+        EngineKind::Rust
+    };
+    let mut cfg = ExperimentConfig::fig1_logreg_base()
+        .with_name("tcp-cluster FedPAQ")
+        .with_engine(engine);
+    cfg.t_total = 40; // 8 rounds at tau=5: quick but non-trivial
+    cfg.r = 10;
+    cfg.n_nodes = 20;
+    cfg.per_node = 500; // keep 10_000 samples for the logreg eval slab
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    // Worker role: `tcp_cluster --worker <addr>`.
+    if args.get(1).map(String::as_str) == Some("--worker") {
+        let addr = args.get(2).cloned().unwrap_or("127.0.0.1:7071".into());
+        // The parent spawns workers before its listener is up: retry.
+        for attempt in 0..200 {
+            match fedpaq::net::run_worker(&addr, Path::new("artifacts")) {
+                Ok(()) => return Ok(()),
+                Err(e) if e.to_string().contains("connect") => {
+                    let _ = attempt;
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        anyhow::bail!("worker could not reach the leader at {addr}");
+    }
+
+    let n_workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let addr = "127.0.0.1:7071";
+    let exe = std::env::current_exe()?;
+    println!("spawning {n_workers} worker processes ...");
+    let mut children: Vec<Child> = (0..n_workers)
+        .map(|_| {
+            Command::new(&exe)
+                .arg("--worker")
+                .arg(addr)
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+
+    let cfg = cluster_config();
+    let dist = {
+        let mut engine = fedpaq::net::worker::build_engine(&cfg, Path::new("artifacts"))?;
+        fedpaq::net::run_leader(cfg.clone(), addr, n_workers, engine.as_mut(), Path::new("artifacts"))?
+    };
+    for c in children.iter_mut() {
+        let _ = c.wait();
+    }
+
+    println!("\ndistributed curve (wall-clock seconds):");
+    for p in &dist.curve.points {
+        println!("  k={:<3} wall={:<8.3}s loss={:.6}", p.round, p.time, p.loss);
+    }
+
+    // Cross-check against the in-process simulation.
+    println!("\nreplaying in-process for parity check ...");
+    let mut runner = Runner::new(cfg.engine.clone(), "artifacts");
+    let sim = runner.run_config(cfg)?;
+    let max_diff = dist
+        .params
+        .iter()
+        .zip(&sim.params)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("max |dist - sim| over params: {max_diff:e}");
+    anyhow::ensure!(max_diff < 1e-4, "distributed run diverged from simulation");
+    println!("tcp_cluster OK: distributed == simulated");
+    Ok(())
+}

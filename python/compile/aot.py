@@ -1,0 +1,185 @@
+"""AOT compile path: lower every model variant to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` rust crate links) rejects; the text parser reassigns ids and
+round-trips cleanly.
+
+Run once via `make artifacts`; python never runs on the training path.
+
+Artifacts per model <name> (see model.py for the zoo):
+  <name>_step.hlo.txt   (params, x[B], y[B], lr)   -> (params',)
+  <name>_loss.hlo.txt   (params, X[E], Y[E])       -> (loss,)
+  <name>_init.hlo.txt   ()                          -> (params0,)
+  <name>_grad.hlo.txt   (params, X[E], Y[E])       -> (grad,)   [theory models]
+plus the standalone L1 quantizer demo:
+  quantize4096.hlo.txt  (x[4096], u[4096], s[])     -> (q,)
+
+artifacts/manifest.json records shapes + dtypes so the rust runtime can
+validate its buffers against what was compiled.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import quantize as Q
+
+BATCH = 10  # paper §5: batchsize B = 10 everywhere
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: every exported program has exactly one output
+    # array, and an untupled root lets the rust runtime chain an output
+    # buffer straight into the next execute_b call (τ on-device local
+    # steps without host round-trips).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def data_shapes(spec, n: int):
+    """(x, y) ShapeDtypeStructs for a batch of n examples."""
+    f32, i32 = jnp.float32, jnp.int32
+    if spec.kind == "logreg":
+        return (
+            jax.ShapeDtypeStruct((n, spec.d), f32),
+            jax.ShapeDtypeStruct((n,), f32),
+        )
+    if spec.kind == "mlp":
+        return (
+            jax.ShapeDtypeStruct((n, spec.layers[0]), f32),
+            jax.ShapeDtypeStruct((n,), i32),
+        )
+    if spec.kind == "transformer":
+        return (
+            jax.ShapeDtypeStruct((n, spec.seq), i32),
+            jax.ShapeDtypeStruct((n, spec.seq), i32),
+        )
+    raise ValueError(spec.kind)
+
+
+def eval_n(spec) -> int:
+    """Eval-slab size per model (full logreg train set; subsample for NNs)."""
+    if spec.kind == "logreg":
+        return 10000
+    if spec.kind == "transformer":
+        return 64
+    return 2048
+
+
+THEORY_GRAD = ("logreg", "mlp92k")  # models that export a _grad artifact
+
+
+def lower_model(spec, outdir: str, manifest: dict) -> None:
+    f32 = jnp.float32
+    p = spec.param_count
+    params = jax.ShapeDtypeStruct((p,), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    xb, yb = data_shapes(spec, BATCH)
+    xe, ye = data_shapes(spec, eval_n(spec))
+
+    progs = {
+        f"{spec.name}_step": (
+            functools.partial(M.sgd_step, spec), (params, xb, yb, lr)),
+        f"{spec.name}_loss": (
+            functools.partial(M.eval_loss, spec), (params, xe, ye)),
+        f"{spec.name}_init": (
+            lambda: (M.init_params(spec, seed=0),), ()),
+    }
+    if spec.name in THEORY_GRAD:
+        progs[f"{spec.name}_grad"] = (
+            functools.partial(M.grad_fn, spec), (params, xe, ye))
+
+    for name, (fn, args) in progs.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        # §Perf (EXPERIMENTS.md): the *step* programs keep the L1 Pallas
+        # kernels (the training hot path); *loss*/*grad* eval programs
+        # lower with the pure-jnp dot — the interpret-mode grid loop does
+        # not fuse on XLA CPU for the 2048-row eval shapes (~25x slower).
+        eval_prog = name.endswith("_loss") or name.endswith("_grad")
+        os.environ["FEDPAQ_NO_PALLAS"] = "1" if eval_prog else "0"
+        try:
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+        finally:
+            os.environ.pop("FEDPAQ_NO_PALLAS", None)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    entry = {
+        "kind": spec.kind,
+        "param_count": p,
+        "batch": BATCH,
+        "eval_n": eval_n(spec),
+        "programs": sorted(progs),
+    }
+    if spec.kind == "logreg":
+        entry.update(d_in=spec.d, n_classes=2, l2=spec.l2,
+                     label_dtype="f32")
+    elif spec.kind == "mlp":
+        entry.update(d_in=spec.layers[0], n_classes=spec.layers[-1],
+                     layers=list(spec.layers), l2=spec.l2,
+                     label_dtype="i32")
+    else:
+        entry.update(vocab=spec.vocab, seq=spec.seq, d_model=spec.d_model,
+                     n_layers=spec.n_layers, label_dtype="i32")
+    manifest["models"][spec.name] = entry
+
+
+def lower_quantizer(outdir: str, manifest: dict, p: int = 4096) -> None:
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((p,), f32)
+    u = jax.ShapeDtypeStruct((p,), f32)
+    s = jax.ShapeDtypeStruct((), f32)
+    name = f"quantize{p}"
+    text = to_hlo_text(jax.jit(lambda x, u, s: (Q.quantize(x, u, s),)).lower(x, u, s))
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)", file=sys.stderr)
+    manifest["quantizer"] = {"name": name, "p": p}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model names (default: all)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    zoo = M.model_zoo()
+    names = args.only.split(",") if args.only else list(zoo)
+    manifest = {"batch": BATCH, "models": {}}
+    for name in names:
+        print(f"lowering {name} ...", file=sys.stderr)
+        lower_model(zoo[name], outdir, manifest)
+    lower_quantizer(outdir, manifest)
+
+    mpath = os.path.join(outdir, "manifest.json")
+    # Merge with an existing manifest so --only runs don't drop entries.
+    if os.path.exists(mpath) and args.only:
+        with open(mpath) as f:
+            old = json.load(f)
+        old["models"].update(manifest["models"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""L1 Pallas matmul / dense-layer kernel.
+
+TPU-style tiling: the grid walks (M/bm, N/bn, K/bk) output/contraction
+blocks; each step loads an (bm, bk) tile of ``a`` and a (bk, bn) tile of
+``b`` into VMEM and accumulates into the (bm, bn) output tile resident in
+VMEM — the classic MXU-feeding schedule expressed with BlockSpec instead of
+CUDA threadblocks.  Block sizes adapt to the (often tiny) federated batch
+shapes so padding waste stays bounded.
+
+The kernel MUST be lowered with ``interpret=True`` on this testbed: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot run.
+Interpret-mode lowering turns the kernel into plain HLO (fused loops), which
+XLA CPU then compiles — so the exported artifact is still fast at runtime.
+
+``matmul`` carries a custom VJP (Pallas calls have no autodiff rule), with
+both backward matmuls routed through the same kernel, so the L2 backward
+pass also exercises L1.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM budget we tile for (TPU v4 has 16 MiB/core; keep ~25% headroom).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_blocks(m: int, k: int, n: int):
+    """Choose (bm, bk, bn) tiles.
+
+    Prefers MXU-shaped 128x128 output tiles with a 512-deep contraction
+    block, shrinking to the (8-padded) actual dims when they are smaller so
+    tiny federated batches (B=10) do not pay a 128-row padding tax.
+    """
+    bm = min(128, _round_up(m, 8))
+    bn = min(128, _round_up(n, 8))
+    bk = min(512, _round_up(k, 8))
+    # Shrink bk if the three tiles would blow the VMEM budget (f32).
+    while bk > 8 and 4 * (bm * bk + bk * bn + bm * bn) > VMEM_BUDGET_BYTES:
+        bk //= 2
+    return bm, bk, bn
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, kk) grid step: accumulate a-tile @ b-tile into o-tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_pallas(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} @ {b.shape}"
+    bm, bk, bn = pick_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p.astype(jnp.float32), b_p.astype(jnp.float32))
+    return out[:m, :n]
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("FEDPAQ_NO_PALLAS", "0") != "1"
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """``a @ b`` through the Pallas kernel, differentiable via custom VJP."""
+    if _use_pallas():
+        return _matmul_pallas(a, b)
+    return ref.matmul_ref(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # da = g @ b^T ; db = a^T @ g — both through the Pallas kernel too.
+    return matmul(g, b.T), matmul(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def dense(x, w, b):
+    """Affine layer ``x @ w + b`` on the Pallas matmul."""
+    return matmul(x, w) + b
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def dense_act(x, w, b, act="relu"):
+    """Fused-style dense + activation (activation fuses in XLA)."""
+    z = dense(x, w, b)
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "tanh":
+        return jnp.tanh(z)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")

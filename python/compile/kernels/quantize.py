@@ -1,0 +1,74 @@
+"""L1 Pallas kernel for the QSGD low-precision quantizer (paper Example 1).
+
+Elementwise VPU-style pass: the grid streams 1-D blocks of the update
+vector through VMEM; the global l2-norm and the level count ``s`` ride
+along as tiny broadcast blocks.  Stochastic rounding is driven by a
+caller-supplied uniform tensor (the rust coordinator owns RNG seeds, so
+quantization is reproducible across engines).
+
+Output is the *dequantized* value ``||x|| * sign(x_i) * level_i / s``; the
+bit-exact wire encoding (sign + level integers + norm) lives in the rust
+``quant`` module, which must agree with this kernel — cross-checked by an
+integration test through the exported ``quantize`` artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_BLOCK = 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _quantize_kernel(x_ref, u_ref, norm_ref, s_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    norm = norm_ref[0]
+    s = s_ref[0]
+    safe = jnp.where(norm > 0.0, norm, 1.0)
+    a = jnp.abs(x) / safe * s
+    lo = jnp.floor(a)
+    level = lo + (u < (a - lo)).astype(jnp.float32)
+    q = safe * jnp.sign(x) * level / s
+    o_ref[...] = jnp.where(norm > 0.0, q, jnp.zeros_like(x))
+
+
+def quantize(x, u, s):
+    """QSGD-quantize ``x`` with levels ``s`` and uniforms ``u`` (both 1-D).
+
+    ``s`` is a runtime scalar (f32), so one compiled artifact serves every
+    quantization level in the experiment grid.
+    """
+    (p,) = x.shape
+    assert u.shape == (p,)
+    x = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(x).reshape((1,))
+    s_arr = jnp.asarray(s, jnp.float32).reshape((1,))
+    block = min(_BLOCK, _round_up(p, 8))
+    pp = _round_up(p, block)
+    x_p = jnp.pad(x, (0, pp - p))
+    u_p = jnp.pad(u.astype(jnp.float32), (0, pp - p))
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=(pp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(x_p, u_p, norm, s_arr)
+    return out[:p]
+
+
+def quantize_ref(x, u, s):
+    """Re-export of the pure-jnp oracle (for parity tests)."""
+    return ref.quantize_ref(x, u, s)

@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float round-off)
+counterpart here; pytest/hypothesis compare the two across shapes, dtypes
+and random inputs.  The references are also used directly by the L2 model
+code when ``FEDPAQ_NO_PALLAS=1`` (debug escape hatch).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain dense matmul: ``a @ b`` with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def dense_ref(x, w, b):
+    """Affine layer: ``x @ w + b``."""
+    return matmul_ref(x, w) + b
+
+
+def quantize_ref(x, u, s):
+    """QSGD low-precision quantizer (paper Example 1), dequantized output.
+
+    For each coordinate ``i``::
+
+        a_i     = |x_i| / ||x||_2 * s          (in [0, s])
+        l_i     = floor(a_i)
+        xi_i    = (l_i + 1)/s  with prob  a_i - l_i,  else  l_i / s
+        Q_i(x)  = ||x|| * sign(x_i) * xi_i
+
+    ``u`` are i.i.d. uniforms in [0,1) driving the stochastic rounding.
+    ``s`` may be a traced scalar (runtime quantization level).  The
+    quantizer is unbiased, E[Q(x)|x] = x, with variance
+    E||Q(x)-x||^2 <= q ||x||^2 for q = min(p/s^2, sqrt(p)/s).
+    """
+    x = x.astype(jnp.float32)
+    norm = jnp.linalg.norm(x)
+    safe = jnp.where(norm > 0.0, norm, 1.0)
+    a = jnp.abs(x) / safe * s
+    lo = jnp.floor(a)
+    up = (u < (a - lo)).astype(jnp.float32)
+    level = lo + up
+    q = safe * jnp.sign(x) * level / s
+    return jnp.where(norm > 0.0, q, jnp.zeros_like(x))

@@ -1,0 +1,314 @@
+"""L2: JAX model definitions (forward/backward) over FLAT parameter vectors.
+
+Every model variant exposes two pure functions that the rust coordinator
+calls through AOT-compiled HLO:
+
+  step(params[p], x[B,...], y[B], lr[])  -> params'[p]   one SGD minibatch step
+  loss(params[p], X[E,...], Y[E])        -> loss[]        training-loss eval
+
+Parameters travel as a single f32[p] vector — the rust side owns exactly one
+buffer per model and never needs to know the layer structure.  Un/flattening
+happens inside JAX with static offsets, so XLA fuses it away.
+
+All dense algebra goes through the L1 Pallas kernel (kernels.dense.matmul),
+including the custom-VJP backward pass.
+
+Model zoo (matching the paper's §5/§9 workloads):
+  logreg       784 -> 1, l2-regularized logistic loss (strongly convex)
+  mlp92k       3072 -> [28]*4 -> 10   (~92K params;  Fig 1 bottom)
+  mlp248k      3072 -> [76]*4 -> 10   (~248K params; Fig 2)
+  mlp_c100     3072 -> 64 -> 100      (one hidden layer; Fig 3)
+  mlp_fashion  784 -> 128 -> 10       (one hidden layer; Fig 4)
+  transformer  tiny GPT (2 layers, d=64) for the e2e driver
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as K
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LogRegSpec:
+    """Binary l2-regularized logistic regression (strongly convex)."""
+
+    name: str = "logreg"
+    d: int = 784
+    l2: float = 0.05
+
+    @property
+    def param_count(self) -> int:
+        return self.d + 1  # w, b
+
+    @property
+    def kind(self) -> str:
+        return "logreg"
+
+
+@dataclass(frozen=True)
+class MlpSpec:
+    """Fully-connected classifier with ReLU hidden layers, softmax CE loss."""
+
+    name: str
+    layers: Tuple[int, ...]  # (d_in, h1, ..., n_classes)
+    l2: float = 0.0
+
+    @property
+    def param_count(self) -> int:
+        return sum(
+            self.layers[i] * self.layers[i + 1] + self.layers[i + 1]
+            for i in range(len(self.layers) - 1)
+        )
+
+    @property
+    def kind(self) -> str:
+        return "mlp"
+
+
+@dataclass(frozen=True)
+class TransformerSpec:
+    """Tiny decoder-only transformer LM (next-token CE loss)."""
+
+    name: str = "transformer"
+    vocab: int = 64
+    seq: int = 32
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 256
+
+    @property
+    def kind(self) -> str:
+        return "transformer"
+
+    @property
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        per_layer = 4 * d * d + 4 * d  # qkvo
+        per_layer += d * f + f + f * d + d  # mlp
+        per_layer += 4 * d  # 2 layernorms (scale+bias)
+        tot = self.vocab * d  # embed
+        tot += self.seq * d  # positional
+        tot += self.n_layers * per_layer
+        tot += 2 * d  # final LN
+        tot += d * self.vocab + self.vocab  # unembed
+        return tot
+
+
+def model_zoo():
+    """All exported model variants, keyed by name."""
+    specs = [
+        LogRegSpec(),
+        MlpSpec("mlp92k", (3072, 29, 29, 29, 29, 10)),
+        MlpSpec("mlp248k", (3072, 76, 76, 76, 76, 10)),
+        MlpSpec("mlp_c100", (3072, 64, 100)),
+        MlpSpec("mlp_fashion", (784, 128, 10)),
+        TransformerSpec(),
+    ]
+    return {s.name: s for s in specs}
+
+
+# --------------------------------------------------------------------------
+# Flat <-> structured parameters
+# --------------------------------------------------------------------------
+
+
+def _take(flat, offset, shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[offset : offset + n].reshape(shape), offset + n
+
+
+def unflatten_mlp(spec: MlpSpec, flat):
+    """Split a flat vector into [(W_i, b_i)] for each layer."""
+    params, off = [], 0
+    for i in range(len(spec.layers) - 1):
+        w, off = _take(flat, off, (spec.layers[i], spec.layers[i + 1]))
+        b, off = _take(flat, off, (spec.layers[i + 1],))
+        params.append((w, b))
+    assert off == spec.param_count
+    return params
+
+
+def unflatten_transformer(spec: TransformerSpec, flat):
+    d, f = spec.d_model, spec.d_ff
+    off = 0
+    p = {}
+    p["embed"], off = _take(flat, off, (spec.vocab, d))
+    p["pos"], off = _take(flat, off, (spec.seq, d))
+    p["blocks"] = []
+    for _ in range(spec.n_layers):
+        blk = {}
+        for nm in ("wq", "wk", "wv", "wo"):
+            blk[nm], off = _take(flat, off, (d, d))
+            blk[nm + "_b"], off = _take(flat, off, (d,))
+        blk["w1"], off = _take(flat, off, (d, f))
+        blk["b1"], off = _take(flat, off, (f,))
+        blk["w2"], off = _take(flat, off, (f, d))
+        blk["b2"], off = _take(flat, off, (d,))
+        blk["ln1_s"], off = _take(flat, off, (d,))
+        blk["ln1_b"], off = _take(flat, off, (d,))
+        blk["ln2_s"], off = _take(flat, off, (d,))
+        blk["ln2_b"], off = _take(flat, off, (d,))
+        p["blocks"].append(blk)
+    p["lnf_s"], off = _take(flat, off, (d,))
+    p["lnf_b"], off = _take(flat, off, (d,))
+    p["unembed"], off = _take(flat, off, (d, spec.vocab))
+    p["unembed_b"], off = _take(flat, off, (spec.vocab,))
+    assert off == spec.param_count, (off, spec.param_count)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Initialization (mirrored bit-for-bit nowhere: rust fetches init via the
+# exported `<name>_init` artifact so both engines start identically).
+# --------------------------------------------------------------------------
+
+
+def init_params(spec, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    if spec.kind == "logreg":
+        return jnp.zeros((spec.param_count,), jnp.float32)
+    if spec.kind == "mlp":
+        chunks = []
+        for i in range(len(spec.layers) - 1):
+            key, k1 = jax.random.split(key)
+            fan_in = spec.layers[i]
+            w = jax.random.normal(
+                k1, (fan_in, spec.layers[i + 1]), jnp.float32
+            ) * jnp.sqrt(2.0 / fan_in)
+            chunks += [w.reshape(-1), jnp.zeros((spec.layers[i + 1],))]
+        return jnp.concatenate(chunks).astype(jnp.float32)
+    if spec.kind == "transformer":
+        key, k = jax.random.split(key)
+        flat = jax.random.normal(k, (spec.param_count,), jnp.float32) * 0.02
+        # LayerNorm scales must start at 1: rebuild via unflatten offsets.
+        p = unflatten_transformer(spec, flat)
+        ones = jnp.ones((spec.d_model,), jnp.float32)
+        for blk in p["blocks"]:
+            blk["ln1_s"] = ones
+            blk["ln2_s"] = ones
+        p["lnf_s"] = ones
+        return flatten_transformer(spec, p)
+    raise ValueError(spec.kind)
+
+
+def flatten_transformer(spec: TransformerSpec, p) -> jnp.ndarray:
+    parts = [p["embed"].reshape(-1), p["pos"].reshape(-1)]
+    for blk in p["blocks"]:
+        for nm in ("wq", "wk", "wv", "wo"):
+            parts += [blk[nm].reshape(-1), blk[nm + "_b"].reshape(-1)]
+        parts += [
+            blk["w1"].reshape(-1), blk["b1"].reshape(-1),
+            blk["w2"].reshape(-1), blk["b2"].reshape(-1),
+            blk["ln1_s"], blk["ln1_b"], blk["ln2_s"], blk["ln2_b"],
+        ]
+    parts += [p["lnf_s"], p["lnf_b"], p["unembed"].reshape(-1),
+              p["unembed_b"].reshape(-1)]
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def loss_logreg(spec: LogRegSpec, flat, x, y):
+    """Mean logistic loss + (l2/2)||w||^2; y in {0,1} as f32."""
+    w, b = flat[: spec.d], flat[spec.d]
+    z = K.matmul(x, w.reshape(spec.d, 1)).reshape(-1) + b
+    sgn = 2.0 * y - 1.0
+    losses = jnp.logaddexp(0.0, -sgn * z)
+    return jnp.mean(losses) + 0.5 * spec.l2 * jnp.dot(w, w)
+
+
+def loss_mlp(spec: MlpSpec, flat, x, y):
+    """Softmax cross-entropy; y int32 class labels."""
+    params = unflatten_mlp(spec, flat)
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.maximum(K.dense(h, w, b), 0.0)
+    w, b = params[-1]
+    logits = K.dense(h, w, b)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)
+    ce = jnp.mean(logz - ll.reshape(-1))
+    if spec.l2 > 0.0:
+        ce = ce + 0.5 * spec.l2 * jnp.dot(flat, flat)
+    return ce
+
+
+def _layernorm(h, s, b):
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return (h - mu) / jnp.sqrt(var + 1e-5) * s + b
+
+
+def loss_transformer(spec: TransformerSpec, flat, tokens, targets):
+    """Next-token CE. tokens/targets: int32[B, seq]."""
+    p = unflatten_transformer(spec, flat)
+    B, S = tokens.shape
+    d, H = spec.d_model, spec.n_heads
+    hd = d // H
+    h = p["embed"][tokens] + p["pos"][None, :S, :]
+    mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+    for blk in p["blocks"]:
+        hn = _layernorm(h, blk["ln1_s"], blk["ln1_b"])
+        flat_h = hn.reshape(B * S, d)
+        q = K.dense(flat_h, blk["wq"], blk["wq_b"]).reshape(B, S, H, hd)
+        k = K.dense(flat_h, blk["wk"], blk["wk_b"]).reshape(B, S, H, hd)
+        v = K.dense(flat_h, blk["wv"], blk["wv_b"]).reshape(B, S, H, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(mask[None, None] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B * S, d)
+        h = h + K.dense(o, blk["wo"], blk["wo_b"]).reshape(B, S, d)
+        hn = _layernorm(h, blk["ln2_s"], blk["ln2_b"]).reshape(B * S, d)
+        ff = jnp.maximum(K.dense(hn, blk["w1"], blk["b1"]), 0.0)
+        h = h + K.dense(ff, blk["w2"], blk["b2"]).reshape(B, S, d)
+    h = _layernorm(h, p["lnf_s"], p["lnf_b"]).reshape(B * S, d)
+    logits = K.dense(h, p["unembed"], p["unembed_b"])
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, targets.reshape(B * S, 1).astype(jnp.int32), axis=-1
+    )
+    return jnp.mean(logz - ll.reshape(-1))
+
+
+def loss_fn(spec, flat, x, y):
+    if spec.kind == "logreg":
+        return loss_logreg(spec, flat, x, y)
+    if spec.kind == "mlp":
+        return loss_mlp(spec, flat, x, y)
+    if spec.kind == "transformer":
+        return loss_transformer(spec, flat, x, y)
+    raise ValueError(spec.kind)
+
+
+# --------------------------------------------------------------------------
+# The two exported programs
+# --------------------------------------------------------------------------
+
+
+def sgd_step(spec, flat, x, y, lr):
+    """One SGD minibatch step: params - lr * grad(loss)(params; batch)."""
+    g = jax.grad(lambda f: loss_fn(spec, f, x, y))(flat)
+    return (flat - lr * g,)
+
+
+def eval_loss(spec, flat, x, y):
+    return (loss_fn(spec, flat, x, y),)
+
+
+def grad_fn(spec, flat, x, y):
+    """Raw gradient (used by Theorem-2 checks: E||grad f||^2)."""
+    return (jax.grad(lambda f: loss_fn(spec, f, x, y))(flat),)

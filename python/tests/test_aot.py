@@ -1,0 +1,81 @@
+"""AOT path: lowering to HLO text must succeed and produce loadable,
+shape-consistent artifacts + a manifest the rust runtime can trust."""
+
+import json
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lowered_logreg(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = {"batch": aot.BATCH, "models": {}}
+    aot.lower_model(M.model_zoo()["logreg"], out, manifest)
+    return out, manifest
+
+
+def test_lowering_writes_hlo_text(lowered_logreg):
+    out, manifest = lowered_logreg
+    for prog in ["logreg_step", "logreg_loss", "logreg_init", "logreg_grad"]:
+        path = os.path.join(out, f"{prog}.hlo.txt")
+        assert os.path.exists(path), prog
+        text = open(path).read()
+        assert text.startswith("HloModule"), prog
+        # Untupled root: the entry computation must return an array, not a
+        # tuple (required for the rust runtime's buffer chaining).
+        assert "ENTRY" in text
+
+
+def test_manifest_entry_consistent(lowered_logreg):
+    _, manifest = lowered_logreg
+    e = manifest["models"]["logreg"]
+    assert e["param_count"] == 785
+    assert e["batch"] == 10
+    assert e["eval_n"] == 10000
+    assert e["kind"] == "logreg"
+    assert e["label_dtype"] == "f32"
+    assert sorted(e["programs"]) == [
+        "logreg_grad", "logreg_init", "logreg_loss", "logreg_step",
+    ]
+
+
+def test_step_hlo_has_expected_parameter_count(lowered_logreg):
+    out, _ = lowered_logreg
+    text = open(os.path.join(out, "logreg_step.hlo.txt")).read()
+    # (params, x, y, lr) = 4 entry parameters.
+    entry = text[text.index("ENTRY"):]
+    head = entry[: entry.index("\n")]
+    assert head.count("parameter") == 0  # signature names live in the body
+    assert "f32[785]" in text  # param vector appears
+    assert "f32[10,784]" in text  # batch appears
+
+
+def test_repo_manifest_matches_zoo():
+    """If `make artifacts` has run, its manifest must agree with model.py."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(path))
+    zoo = M.model_zoo()
+    for name, entry in manifest["models"].items():
+        assert name in zoo
+        assert entry["param_count"] == zoo[name].param_count, name
+    q = manifest["quantizer"]
+    assert os.path.exists(
+        os.path.join(os.path.dirname(path), f"{q['name']}.hlo.txt")
+    )
+
+
+def test_eval_n_per_model_kind():
+    zoo = M.model_zoo()
+    assert aot.eval_n(zoo["logreg"]) == 10000  # full train set
+    assert aot.eval_n(zoo["mlp92k"]) == 2048
+    assert aot.eval_n(zoo["transformer"]) == 64

@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept with hypothesis.
+
+This is the core correctness signal for the compute layer — the same
+kernels lower into every exported HLO artifact the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as K
+from compile.kernels import quantize as Q
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=300)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    a = rand(seed, m, k)
+    b = rand(seed + 1, k, n)
+    got = K.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (10, 3072, 29),  # the mlp92k first-layer shape (B=10)
+        (128, 128, 128),  # exactly one MXU tile
+        (129, 513, 127),  # off-by-one around tile boundaries
+        (10, 784, 1),  # logreg shape
+    ],
+)
+def test_matmul_paper_shapes(m, k, n):
+    a = rand(7, m, k)
+    b = rand(8, k, n)
+    np.testing.assert_allclose(
+        K.matmul(a, b), ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_matmul_gradients_flow_through_custom_vjp():
+    a = rand(1, 6, 5)
+    b = rand(2, 5, 4)
+
+    def f_pallas(a, b):
+        return jnp.sum(K.matmul(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(ref.matmul_ref(a, b) ** 2)
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_p, ga_r, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gb_p, gb_r, rtol=1e-3, atol=1e-4)
+
+
+def test_dense_act_variants():
+    x = rand(3, 9, 7)
+    w = rand(4, 7, 5)
+    b = rand(5, 5)
+    z = ref.dense_ref(x, w, b)
+    np.testing.assert_allclose(
+        K.dense_act(x, w, b, act="relu"), jnp.maximum(z, 0), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        K.dense_act(x, w, b, act="tanh"), jnp.tanh(z), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        K.dense_act(x, w, b, act="none"), z, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_pick_blocks_respects_vmem_budget():
+    for m, k, n in [(10, 3072, 29), (2048, 3072, 100), (1, 1, 1), (4096, 4096, 4096)]:
+        bm, bk, bn = K.pick_blocks(m, k, n)
+        assert 4 * (bm * bk + bk * bn + bm * bn) <= K.VMEM_BUDGET_BYTES
+        assert bm % 8 == 0 or bm == min(128, m)
+        assert bm >= 1 and bk >= 1 and bn >= 1
+
+
+# ---------------------------------------------------------------- quantize
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=5000),
+    s=st.sampled_from([1.0, 2.0, 5.0, 10.0, 64.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(p, s, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (p,), jnp.float32)
+    u = jax.random.uniform(k2, (p,), jnp.float32)
+    got = Q.quantize(x, u, s)
+    want = ref.quantize_ref(x, u, s)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_quantize_levels_on_grid():
+    x = rand(11, 1000)
+    u = jax.random.uniform(jax.random.PRNGKey(12), (1000,), jnp.float32)
+    s = 4.0
+    q = np.asarray(Q.quantize(x, u, s))
+    norm = float(jnp.linalg.norm(x))
+    levels = np.abs(q) / norm * s
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
+    assert levels.max() <= s + 1e-4
+
+
+def test_quantize_unbiased_monte_carlo():
+    p = 64
+    x = np.asarray(rand(13, p))
+    trials = 3000
+    key = jax.random.PRNGKey(14)
+    us = jax.random.uniform(key, (trials, p), jnp.float32)
+    qs = jax.vmap(lambda u: ref.quantize_ref(jnp.array(x), u, 2.0))(us)
+    mean = np.asarray(qs).mean(axis=0)
+    norm = np.linalg.norm(x)
+    tol = 5.0 * (norm / 2.0) / np.sqrt(trials)
+    np.testing.assert_allclose(mean, x, atol=tol)
+
+
+def test_quantize_variance_bound():
+    # E||Q(x)-x||^2 <= q ||x||^2, q = min(p/s^2, sqrt(p)/s)
+    p, s = 128, 2.0
+    x = np.asarray(rand(15, p))
+    trials = 2000
+    us = jax.random.uniform(jax.random.PRNGKey(16), (trials, p), jnp.float32)
+    qs = np.asarray(jax.vmap(lambda u: ref.quantize_ref(jnp.array(x), u, s))(us))
+    err = ((qs - x[None]) ** 2).sum(axis=1).mean()
+    qparam = min(p / s**2, np.sqrt(p) / s)
+    bound = qparam * (np.linalg.norm(x) ** 2)
+    assert err <= bound * 1.05, (err, bound)
+
+
+def test_quantize_zero_vector():
+    z = jnp.zeros((100,), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(17), (100,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(Q.quantize(z, u, 4.0)), 0.0)
+
+
+def test_quantize_runtime_s_is_dynamic():
+    # One jitted function must serve multiple quantization levels.
+    f = jax.jit(Q.quantize)
+    x = rand(18, 256)
+    u = jax.random.uniform(jax.random.PRNGKey(19), (256,), jnp.float32)
+    for s in [1.0, 5.0, 10.0]:
+        np.testing.assert_allclose(
+            f(x, u, s), ref.quantize_ref(x, u, s), rtol=1e-5, atol=1e-6
+        )

@@ -1,0 +1,137 @@
+"""L2 model correctness: shapes, losses, gradients and SGD behaviour for
+every exported model variant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ZOO = M.model_zoo()
+
+
+def batch_for(spec, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    if spec.kind == "logreg":
+        x = jax.random.normal(k1, (n, spec.d), jnp.float32)
+        y = (jax.random.uniform(k2, (n,)) > 0.5).astype(jnp.float32)
+    elif spec.kind == "mlp":
+        x = jax.random.normal(k1, (n, spec.layers[0]), jnp.float32)
+        y = jax.random.randint(k2, (n,), 0, spec.layers[-1]).astype(jnp.int32)
+    else:
+        x = jax.random.randint(k1, (n, spec.seq), 0, spec.vocab).astype(jnp.int32)
+        y = jax.random.randint(k2, (n, spec.seq), 0, spec.vocab).astype(jnp.int32)
+    return x, y
+
+
+# -------------------------------------------------- param counts / shapes
+
+
+def test_zoo_contains_paper_models():
+    assert set(ZOO) == {
+        "logreg", "mlp92k", "mlp248k", "mlp_c100", "mlp_fashion", "transformer",
+    }
+    # Paper: "more that 92K" and "more than 248K" parameters.
+    assert 92_000 <= ZOO["mlp92k"].param_count <= 95_000
+    assert 248_000 <= ZOO["mlp248k"].param_count <= 255_000
+    assert ZOO["logreg"].param_count == 785
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_init_shape_and_determinism(name):
+    spec = ZOO[name]
+    p1 = M.init_params(spec, seed=0)
+    p2 = M.init_params(spec, seed=0)
+    assert p1.shape == (spec.param_count,)
+    assert p1.dtype == jnp.float32
+    np.testing.assert_array_equal(p1, p2)
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_step_reduces_loss_and_keeps_shape(name):
+    spec = ZOO[name]
+    params = M.init_params(spec, seed=1)
+    x, y = batch_for(spec, 10, seed=2)
+    l0 = float(M.eval_loss(spec, params, x, y)[0])
+    lr = jnp.float32(0.5 if spec.kind == "logreg" else 0.05)
+    p = params
+    for _ in range(10):
+        (p,) = M.sgd_step(spec, p, x, y, lr)
+    l1 = float(M.eval_loss(spec, p, x, y)[0])
+    assert p.shape == params.shape
+    assert l1 < l0, f"{name}: {l0} -> {l1}"
+
+
+def test_initial_losses_match_theory():
+    # Zero-init logreg: ln 2. Fresh softmax over C classes: ~ln C.
+    spec = ZOO["logreg"]
+    x, y = batch_for(spec, 50)
+    l0 = float(M.eval_loss(spec, M.init_params(spec), x, y)[0])
+    assert abs(l0 - np.log(2)) < 1e-5
+
+    # He-init + unit-variance inputs leave some logit variance, so the
+    # fresh softmax CE sits a bit above ln C (never far below it).
+    for name, classes in [("mlp92k", 10), ("mlp_c100", 100)]:
+        spec = ZOO[name]
+        x, y = batch_for(spec, 64)
+        l0 = float(M.eval_loss(spec, M.init_params(spec), x, y)[0])
+        assert np.log(classes) - 0.1 < l0 < np.log(classes) + 2.0, (name, l0)
+
+    t = ZOO["transformer"]
+    x, y = batch_for(t, 4)
+    l0 = float(M.eval_loss(t, M.init_params(t), x, y)[0])
+    assert abs(l0 - np.log(t.vocab)) < 0.5
+
+
+# -------------------------------------------------- gradients
+
+
+def test_logreg_grad_matches_finite_difference():
+    spec = ZOO["logreg"]
+    params = jax.random.normal(jax.random.PRNGKey(3), (spec.param_count,)) * 0.1
+    x, y = batch_for(spec, 4, seed=4)
+    (g,) = M.grad_fn(spec, params, x, y)
+    eps = 1e-3
+    for j in [0, 100, 500, 784]:
+        pp = params.at[j].add(eps)
+        pm = params.at[j].add(-eps)
+        fd = (M.loss_fn(spec, pp, x, y) - M.loss_fn(spec, pm, x, y)) / (2 * eps)
+        assert abs(float(fd) - float(g[j])) < 2e-3, j
+
+
+def test_mlp_grad_matches_finite_difference_spotcheck():
+    spec = M.MlpSpec("tiny", (6, 5, 3))
+    params = M.init_params(spec, seed=5)
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (4, 6), jnp.float32)
+    y = jnp.array([0, 2, 1, 1], jnp.int32)
+    g = jax.grad(lambda f: M.loss_fn(spec, f, x, y))(params)
+    eps = 1e-2
+    for j in range(0, spec.param_count, 7):
+        pp = params.at[j].add(eps)
+        pm = params.at[j].add(-eps)
+        fd = (M.loss_fn(spec, pp, x, y) - M.loss_fn(spec, pm, x, y)) / (2 * eps)
+        assert abs(float(fd) - float(g[j])) < 5e-3, j
+
+
+def test_unflatten_roundtrip_transformer():
+    spec = ZOO["transformer"]
+    flat = M.init_params(spec, seed=7)
+    p = M.unflatten_transformer(spec, flat)
+    back = M.flatten_transformer(spec, p)
+    np.testing.assert_array_equal(flat, back)
+
+
+def test_step_is_plain_sgd():
+    # step == params - lr * grad, exactly.
+    spec = ZOO["logreg"]
+    params = jax.random.normal(jax.random.PRNGKey(8), (spec.param_count,)) * 0.1
+    x, y = batch_for(spec, 10, seed=9)
+    lr = jnp.float32(0.3)
+    (stepped,) = M.sgd_step(spec, params, x, y, lr)
+    (g,) = M.grad_fn(spec, params, x, y)
+    np.testing.assert_allclose(stepped, params - lr * g, rtol=1e-6, atol=1e-7)

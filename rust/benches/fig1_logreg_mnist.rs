@@ -1,0 +1,9 @@
+//! End-to-end bench for the workload of Fig 1 top (logreg/MNIST): FedPAQ vs FedAvg vs
+//! QSGD round pipeline at reduced T. Full series: `fedpaq figure fig1*`.
+
+#[path = "fig_common.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::bench_figure("fig1_logreg_mnist", "fig1d", 10);
+}

@@ -1,0 +1,9 @@
+//! End-to-end bench for the workload of Fig 1 bottom (mlp92k/CIFAR-10): FedPAQ vs FedAvg vs
+//! QSGD round pipeline at reduced T. Full series: `fedpaq figure fig1h*`.
+
+#[path = "fig_common.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::bench_figure("fig1_nn_cifar10", "fig1h", 4);
+}

@@ -1,0 +1,9 @@
+//! End-to-end bench for the workload of Fig 2 (mlp248k/CIFAR-10): FedPAQ vs FedAvg vs
+//! QSGD round pipeline at reduced T. Full series: `fedpaq figure fig2*`.
+
+#[path = "fig_common.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::bench_figure("fig2_nn_cifar10_248k", "fig2d", 2);
+}

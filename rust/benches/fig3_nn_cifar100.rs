@@ -1,0 +1,9 @@
+//! End-to-end bench for the workload of Fig 3 (CIFAR-100): FedPAQ vs FedAvg vs
+//! QSGD round pipeline at reduced T. Full series: `fedpaq figure fig3*`.
+
+#[path = "fig_common.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::bench_figure("fig3_nn_cifar100", "fig3d", 2);
+}

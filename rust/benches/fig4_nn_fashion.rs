@@ -1,0 +1,9 @@
+//! End-to-end bench for the workload of Fig 4 (Fashion-MNIST): FedPAQ vs FedAvg vs
+//! QSGD round pipeline at reduced T. Full series: `fedpaq figure fig4*`.
+
+#[path = "fig_common.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::bench_figure("fig4_nn_fashion", "fig4d", 4);
+}

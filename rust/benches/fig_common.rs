@@ -1,0 +1,35 @@
+//! Shared helper for the per-figure benches.
+//!
+//! Each paper figure has a bench that measures the *end-to-end round
+//! pipeline* of its workload (sample → broadcast → τ local PJRT steps ×
+//! r nodes → quantize → aggregate → clock) at a reduced T; one sample =
+//! one full (shortened) training run including world setup. The complete
+//! full-length figure series are regenerated with `fedpaq figure <id>`
+//! (or `make figures`); EXPERIMENTS.md records those curves.
+
+use fedpaq::config::EngineKind;
+use fedpaq::figures::{figure, Runner};
+use fedpaq::util::bench::Group;
+use std::time::Duration;
+
+/// Benchmark every curve of figure `fig_id`, truncated to `t_total` SGD
+/// iterations per run. Skips (with a message) when artifacts are missing
+/// so `cargo bench` degrades gracefully before `make artifacts`.
+pub fn bench_figure(group: &str, fig_id: &str, t_total: usize) {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[{group}] artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    let spec = figure(fig_id).unwrap_or_else(|| panic!("unknown figure {fig_id}"));
+    let mut runner = Runner::new(EngineKind::Pjrt, "artifacts");
+    runner.t_override = Some(t_total);
+    let mut g = Group::new(group);
+    g.sample_size = 5;
+    g.target_time = Duration::from_secs(2);
+    for cfg in &spec.configs {
+        g.bench(&cfg.name, || {
+            runner.run_config(cfg.clone()).expect("run failed");
+        });
+    }
+    g.finish();
+}

@@ -1,0 +1,79 @@
+//! Micro-benchmarks for the L3 hot paths: quantizer codec throughput,
+//! Elias coding, aggregation, node sampling and batch gathering.
+//!
+//! These isolate the coordinator-side cost per round so EXPERIMENTS.md
+//! §Perf can verify L3 stays far below the PJRT execute time.
+//! (Harness: `fedpaq::util::bench` — criterion is unavailable offline.)
+
+use fedpaq::coordinator::aggregate::Aggregator;
+use fedpaq::coordinator::local::{gather_local_batches, GatherBufs};
+use fedpaq::coordinator::sampler::sample_nodes;
+use fedpaq::data::{BatchSampler, DatasetKind, FederatedDataset, Partition};
+use fedpaq::quant::{Coding, Quantizer};
+use fedpaq::util::bench::Group;
+use fedpaq::util::rng::Rng;
+use std::hint::black_box;
+
+fn quantizer_codec() {
+    let mut g = Group::new("quant_codec");
+    for &p in &[785usize, 92_027, 251_874] {
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.37).sin()).collect();
+        for (label, q) in [
+            ("qsgd_s1", Quantizer::qsgd(1)),
+            ("qsgd_s10", Quantizer::qsgd(10)),
+            ("qsgd_s1_elias", Quantizer::Qsgd { s: 1, coding: Coding::Elias }),
+            ("identity", Quantizer::Identity),
+        ] {
+            let mut rng = Rng::seed_from_u64(1);
+            g.bench_throughput(&format!("{label}/p{p}"), Some((p * 4) as u64), || {
+                let out = q.apply(black_box(&x), &mut rng);
+                black_box(out);
+            });
+        }
+    }
+    g.finish();
+}
+
+fn aggregation() {
+    let mut g = Group::new("aggregate");
+    let p = 92_027;
+    let q = Quantizer::qsgd(1);
+    let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.13).cos() * 0.01).collect();
+    let mut rng = Rng::seed_from_u64(2);
+    let encs: Vec<_> = (0..25).map(|_| q.encode(&x, &mut rng)).collect();
+    g.bench("r25_p92k_qsgd1", || {
+        let mut agg = Aggregator::new(q, p);
+        for e in &encs {
+            agg.push(e);
+        }
+        let mut params = vec![0f32; p];
+        agg.apply(&mut params);
+        black_box(params);
+    });
+    g.finish();
+}
+
+fn sampling_and_gather() {
+    let mut g = Group::new("coordinator_misc");
+    let mut round = 0usize;
+    g.bench("sample_nodes_50c25", || {
+        round += 1;
+        black_box(sample_nodes(50, 25, 7, black_box(round)));
+    });
+    let data = FederatedDataset::generate(DatasetKind::Cifar10, 1, 10_000);
+    let part = Partition::iid(10_000, 50, 200, 1);
+    let sampler = BatchSampler::new(1, 10);
+    let mut bufs = GatherBufs::default();
+    g.bench("gather_tau5_b10_cifar", || {
+        let labels =
+            gather_local_batches(&data, part.shard(7), &sampler, 7, black_box(3), 5, &mut bufs);
+        black_box(labels);
+    });
+    g.finish();
+}
+
+fn main() {
+    quantizer_codec();
+    aggregation();
+    sampling_and_gather();
+}

@@ -1,0 +1,367 @@
+//! Typed experiment configuration (JSON files + programmatic builders).
+//!
+//! One [`ExperimentConfig`] fully determines a training run: model, data,
+//! the FedPAQ knobs `(n, r, τ, s)`, stepsize schedule, cost-model ratio
+//! and seeds. Runs are reproducible from the config alone — every RNG in
+//! the system is keyed off `seed` plus structural coordinates.
+//!
+//! Serialization goes through the in-tree JSON module (`util::json`);
+//! see `configs/` for example files.
+
+use crate::data::{DatasetKind, PartitionKind};
+use crate::opt::LrSchedule;
+use crate::quant::{Coding, Quantizer};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Which backend executes the model math.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// AOT HLO through PJRT (the production path).
+    #[default]
+    Pjrt,
+    /// Pure-rust oracle (logreg/MLP only; no PJRT startup).
+    Rust,
+}
+
+/// Full description of one federated training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Human label (also the curve label on figures).
+    pub name: String,
+    /// Model name from `artifacts/manifest.json` (e.g. `"logreg"`, `"mlp92k"`).
+    pub model: String,
+    /// Synthetic dataset standing in for the paper's (DESIGN.md §4).
+    pub dataset: DatasetKind,
+    /// Total nodes `n`.
+    pub n_nodes: usize,
+    /// Samples per node `m`.
+    pub per_node: usize,
+    /// Participants per round `r ≤ n`.
+    pub r: usize,
+    /// Period length `τ` (local SGD steps between averagings).
+    pub tau: usize,
+    /// Total SGD iterations `T`; rounds `K = ceil(T/τ)`.
+    pub t_total: usize,
+    /// Upload quantizer (Identity == FedAvg).
+    pub quantizer: Quantizer,
+    /// Stepsize schedule.
+    pub lr: LrSchedule,
+    /// Cost-model ratio `C_comm/C_comp` (paper: 100 convex, 1000 NN).
+    pub ratio: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Evaluate the training loss every this many rounds.
+    pub eval_every: usize,
+    /// Backend.
+    pub engine: EngineKind,
+    /// How samples are assigned to nodes (paper: iid; Dirichlet is the
+    /// heterogeneity-extension ablation).
+    pub partition: PartitionKind,
+}
+
+impl ExperimentConfig {
+    /// Rounds `K = ceil(T/τ)`.
+    pub fn rounds(&self) -> usize {
+        self.t_total.div_ceil(self.tau)
+    }
+
+    /// Validate internal consistency; returns self for chaining.
+    pub fn validated(self) -> crate::Result<Self> {
+        anyhow::ensure!(self.n_nodes >= 1, "need at least one node");
+        anyhow::ensure!(
+            (1..=self.n_nodes).contains(&self.r),
+            "r={} must be in 1..=n={}",
+            self.r,
+            self.n_nodes
+        );
+        anyhow::ensure!(self.tau >= 1, "tau must be >= 1");
+        anyhow::ensure!(self.t_total >= self.tau, "T must be >= tau");
+        anyhow::ensure!(self.per_node >= 1, "per_node must be >= 1");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
+        anyhow::ensure!(self.ratio > 0.0, "ratio must be positive");
+        if let Quantizer::Qsgd { s, .. } = self.quantizer {
+            anyhow::ensure!(s >= 1, "QSGD needs s >= 1");
+        }
+        if let PartitionKind::Dirichlet { alpha } = self.partition {
+            anyhow::ensure!(alpha > 0.0, "dirichlet alpha must be positive");
+        }
+        Ok(self)
+    }
+
+    /// Paper Fig-1-top base config: logreg on synthetic MNIST-0/8,
+    /// `n=50, m=200, T=100, ratio=100`.
+    pub fn fig1_logreg_base() -> Self {
+        ExperimentConfig {
+            name: "fedpaq".into(),
+            model: "logreg".into(),
+            dataset: DatasetKind::Mnist08,
+            n_nodes: 50,
+            per_node: 200,
+            r: 25,
+            tau: 5,
+            t_total: 100,
+            quantizer: Quantizer::qsgd(1),
+            lr: LrSchedule::Const { eta: 0.2 },
+            ratio: 100.0,
+            seed: 42,
+            eval_every: 1,
+            engine: EngineKind::Pjrt,
+            partition: PartitionKind::Iid,
+        }
+    }
+
+    /// Paper Fig-1-bottom base config: mlp92k on synthetic CIFAR-10,
+    /// `n=50, 10K samples, T=100, ratio=1000`.
+    pub fn fig1_nn_base() -> Self {
+        ExperimentConfig {
+            name: "fedpaq".into(),
+            model: "mlp92k".into(),
+            dataset: DatasetKind::Cifar10,
+            n_nodes: 50,
+            per_node: 200,
+            r: 25,
+            tau: 2,
+            t_total: 100,
+            quantizer: Quantizer::qsgd(1),
+            lr: LrSchedule::Const { eta: 0.1 },
+            ratio: 1000.0,
+            seed: 42,
+            eval_every: 1,
+            engine: EngineKind::Pjrt,
+            partition: PartitionKind::Iid,
+        }
+    }
+
+    // ---------------- JSON (de)serialization ----------------
+
+    pub fn to_json(&self) -> Json {
+        let quant = match self.quantizer {
+            Quantizer::Identity => Json::obj(vec![("type", Json::str("identity"))]),
+            Quantizer::Qsgd { s, coding } => Json::obj(vec![
+                ("type", Json::str("qsgd")),
+                ("s", Json::num(s as f64)),
+                (
+                    "coding",
+                    Json::str(match coding {
+                        Coding::Naive => "naive",
+                        Coding::Elias => "elias",
+                    }),
+                ),
+            ]),
+        };
+        let lr = match self.lr {
+            LrSchedule::Const { eta } => Json::obj(vec![
+                ("type", Json::str("const")),
+                ("eta", Json::num(eta as f64)),
+            ]),
+            LrSchedule::PolyDecay { mu, tau, eta_max } => Json::obj(vec![
+                ("type", Json::str("poly_decay")),
+                ("mu", Json::num(mu as f64)),
+                ("tau", Json::num(tau as f64)),
+                ("eta_max", Json::num(eta_max as f64)),
+            ]),
+            LrSchedule::NonConvex { l_smooth, t_total } => Json::obj(vec![
+                ("type", Json::str("non_convex")),
+                ("l_smooth", Json::num(l_smooth as f64)),
+                ("t_total", Json::num(t_total as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("model", Json::str(&self.model)),
+            ("dataset", Json::str(self.dataset.name())),
+            ("n_nodes", Json::num(self.n_nodes as f64)),
+            ("per_node", Json::num(self.per_node as f64)),
+            ("r", Json::num(self.r as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("t_total", Json::num(self.t_total as f64)),
+            ("quantizer", quant),
+            ("lr", lr),
+            ("ratio", Json::num(self.ratio)),
+            // Seeds are u64 and exceed f64's 2^53 integer range: ship as a
+            // decimal string (parse accepts either form).
+            ("seed", Json::str(self.seed.to_string())),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            (
+                "engine",
+                Json::str(match self.engine {
+                    EngineKind::Pjrt => "pjrt",
+                    EngineKind::Rust => "rust",
+                }),
+            ),
+            (
+                "partition",
+                match self.partition {
+                    PartitionKind::Iid => Json::obj(vec![("type", Json::str("iid"))]),
+                    PartitionKind::Dirichlet { alpha } => Json::obj(vec![
+                        ("type", Json::str("dirichlet")),
+                        ("alpha", Json::num(alpha)),
+                    ]),
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let quantizer = {
+            let q = j.req("quantizer")?;
+            match q.req_str("type")? {
+                "identity" => Quantizer::Identity,
+                "qsgd" => Quantizer::Qsgd {
+                    s: q.req_usize("s")? as u32,
+                    coding: match q.get("coding").and_then(Json::as_str).unwrap_or("naive") {
+                        "elias" => Coding::Elias,
+                        _ => Coding::Naive,
+                    },
+                },
+                other => anyhow::bail!("unknown quantizer type {other:?}"),
+            }
+        };
+        let lr = {
+            let l = j.req("lr")?;
+            match l.req_str("type")? {
+                "const" => LrSchedule::Const { eta: l.req_f64("eta")? as f32 },
+                "poly_decay" => LrSchedule::PolyDecay {
+                    mu: l.req_f64("mu")? as f32,
+                    tau: l.req_usize("tau")?,
+                    eta_max: l.req_f64("eta_max")? as f32,
+                },
+                "non_convex" => LrSchedule::NonConvex {
+                    l_smooth: l.req_f64("l_smooth")? as f32,
+                    t_total: l.req_usize("t_total")?,
+                },
+                other => anyhow::bail!("unknown lr type {other:?}"),
+            }
+        };
+        ExperimentConfig {
+            name: j.req_str("name")?.to_string(),
+            model: j.req_str("model")?.to_string(),
+            dataset: DatasetKind::parse(j.req_str("dataset")?)?,
+            n_nodes: j.req_usize("n_nodes")?,
+            per_node: j.req_usize("per_node")?,
+            r: j.req_usize("r")?,
+            tau: j.req_usize("tau")?,
+            t_total: j.req_usize("t_total")?,
+            quantizer,
+            lr,
+            ratio: j.req_f64("ratio")?,
+            seed: match j.req("seed")? {
+                Json::Str(t) => t.parse::<u64>()?,
+                v => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("seed must be number or string"))?
+                    as u64,
+            },
+            eval_every: j.get("eval_every").and_then(Json::as_usize).unwrap_or(1),
+            engine: match j.get("engine").and_then(Json::as_str).unwrap_or("pjrt") {
+                "rust" => EngineKind::Rust,
+                _ => EngineKind::Pjrt,
+            },
+            partition: match j.get("partition") {
+                None => PartitionKind::Iid,
+                Some(p) => match p.req_str("type")? {
+                    "iid" => PartitionKind::Iid,
+                    "dirichlet" => PartitionKind::Dirichlet { alpha: p.req_f64("alpha")? },
+                    other => anyhow::bail!("unknown partition type {other:?}"),
+                },
+            },
+        }
+        .validated()
+    }
+
+    /// Load from a JSON config file.
+    pub fn from_json_file(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    // ---------------- builder helpers for the figure grids ----------------
+
+    pub fn with_name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    pub fn with_quantizer(mut self, q: Quantizer) -> Self {
+        self.quantizer = q;
+        self
+    }
+
+    pub fn with_r(mut self, r: usize) -> Self {
+        self.r = r;
+        self
+    }
+
+    pub fn with_tau(mut self, tau: usize) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: LrSchedule) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_partition(mut self, partition: PartitionKind) -> Self {
+        self.partition = partition;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_configs_validate() {
+        ExperimentConfig::fig1_logreg_base().validated().unwrap();
+        ExperimentConfig::fig1_nn_base().validated().unwrap();
+    }
+
+    #[test]
+    fn rounds_is_ceil() {
+        let c = ExperimentConfig::fig1_logreg_base().with_tau(3);
+        assert_eq!(c.rounds(), 34); // ceil(100/3)
+        let c = c.with_tau(5);
+        assert_eq!(c.rounds(), 20);
+    }
+
+    #[test]
+    fn invalid_r_rejected() {
+        let c = ExperimentConfig::fig1_logreg_base().with_r(51);
+        assert!(c.validated().is_err());
+        let c = ExperimentConfig::fig1_logreg_base().with_r(0);
+        assert!(c.validated().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            ExperimentConfig::fig1_nn_base().with_tau(7).with_r(13),
+            ExperimentConfig::fig1_logreg_base()
+                .with_quantizer(Quantizer::Identity)
+                .with_engine(EngineKind::Rust)
+                .with_lr(LrSchedule::PolyDecay { mu: 0.1, tau: 5, eta_max: 1.0 }),
+        ] {
+            let j = cfg.to_json();
+            let back = ExperimentConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, back);
+            // And through text.
+            let back2 =
+                ExperimentConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+            assert_eq!(cfg, back2);
+        }
+    }
+}

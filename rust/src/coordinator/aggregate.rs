@@ -1,0 +1,105 @@
+//! Server-side aggregation (Algorithm 1 line 13):
+//! `x_{k+1} = x_k + (1/r) Σ_{i∈S_k} Q(x_{k,τ}^{(i)} − x_k)`.
+
+use crate::quant::{Encoded, Quantizer};
+
+/// Streaming aggregator: decodes each upload and accumulates the mean
+/// update in f64 (bit-stable regardless of arrival order is NOT promised —
+/// floating addition — but f64 accumulation keeps the error ≪ f32 eps).
+#[derive(Debug)]
+pub struct Aggregator {
+    quantizer: Quantizer,
+    sum: Vec<f64>,
+    count: usize,
+    bits: Vec<u64>,
+}
+
+impl Aggregator {
+    pub fn new(quantizer: Quantizer, p: usize) -> Self {
+        Aggregator { quantizer, sum: vec![0.0; p], count: 0, bits: Vec::new() }
+    }
+
+    /// Decode and absorb one node's upload.
+    pub fn push(&mut self, enc: &Encoded) {
+        assert_eq!(enc.p, self.sum.len(), "upload dimension mismatch");
+        let dec = self.quantizer.decode(enc);
+        for (s, v) in self.sum.iter_mut().zip(dec) {
+            *s += v as f64;
+        }
+        self.bits.push(enc.bits());
+        self.count += 1;
+    }
+
+    /// Absorb an already-decoded update (in-process fast path: skips the
+    /// wire encode/decode *arithmetic result is identical by construction*
+    /// because the decoded values come from the same codec).
+    pub fn push_decoded(&mut self, dec: &[f32], bits: u64) {
+        assert_eq!(dec.len(), self.sum.len());
+        for (s, &v) in self.sum.iter_mut().zip(dec) {
+            *s += v as f64;
+        }
+        self.bits.push(bits);
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Per-upload bit sizes (for the §5 communication-time model).
+    pub fn upload_bits(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Apply the averaged update to `params`, consuming the aggregator.
+    pub fn apply(self, params: &mut [f32]) {
+        assert!(self.count > 0, "no uploads to aggregate");
+        let inv = 1.0 / self.count as f64;
+        for (p, s) in params.iter_mut().zip(self.sum) {
+            *p = (*p as f64 + s * inv) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_aggregation_is_mean() {
+        let q = Quantizer::Identity;
+        let mut agg = Aggregator::new(q, 3);
+        let mut rng = Rng::seed_from_u64(0);
+        agg.push(&q.encode(&[1.0, 2.0, 3.0], &mut rng));
+        agg.push(&q.encode(&[3.0, 0.0, -1.0], &mut rng));
+        let mut params = vec![10.0f32, 10.0, 10.0];
+        agg.apply(&mut params);
+        assert_eq!(params, vec![12.0, 11.0, 11.0]);
+    }
+
+    #[test]
+    fn push_decoded_matches_push() {
+        let q = Quantizer::qsgd(2);
+        let x = vec![0.5f32, -1.5, 2.0, 0.0];
+        let mut rng1 = Rng::seed_from_u64(7);
+        let mut rng2 = Rng::seed_from_u64(7);
+        let enc = q.encode(&x, &mut rng1);
+        let (dec, bits) = q.apply(&x, &mut rng2);
+        let mut a = Aggregator::new(q, 4);
+        a.push(&enc);
+        let mut b = Aggregator::new(q, 4);
+        b.push_decoded(&dec, bits);
+        let mut pa = vec![0f32; 4];
+        let mut pb = vec![0f32; 4];
+        a.apply(&mut pa);
+        b.apply(&mut pb);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    #[should_panic(expected = "no uploads")]
+    fn empty_apply_panics() {
+        Aggregator::new(Quantizer::Identity, 2).apply(&mut [0.0, 0.0]);
+    }
+}

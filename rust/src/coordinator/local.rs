@@ -1,0 +1,150 @@
+//! Node-side local training (Algorithm 1 lines 4–11), shared by the sim
+//! engine and the TCP worker: gather the τ minibatches from the node's
+//! shard, run the engine's chained local SGD, quantize the model delta.
+
+use crate::config::ExperimentConfig;
+use crate::data::{BatchSampler, FederatedDataset};
+use crate::model::{Engine, LabelBatch};
+use crate::quant::Encoded;
+
+/// Owned label storage for gathered batches.
+#[derive(Debug, Clone)]
+pub enum OwnedLabels {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OwnedLabels {
+    pub fn as_batch(&self) -> LabelBatch<'_> {
+        match self {
+            OwnedLabels::F32(v) => LabelBatch::F32(v),
+            OwnedLabels::I32(v) => LabelBatch::I32(v),
+        }
+    }
+}
+
+/// Reusable gather buffers (allocation-free hot loop).
+#[derive(Debug, Default)]
+pub struct GatherBufs {
+    pub idx: Vec<usize>,
+    pub x: Vec<f32>,
+    pub y_f32: Vec<f32>,
+    pub y_i32: Vec<i32>,
+}
+
+/// Gather the τ minibatches node `node` uses in round `round`.
+///
+/// Returns `(xs, ys)` with `xs` holding `τ·B` feature rows back-to-back.
+/// Batch indices are deterministic in `(seed, node, round, step)` so every
+/// engine resamples identical batches.
+pub fn gather_local_batches(
+    data: &FederatedDataset,
+    shard: &[usize],
+    sampler: &BatchSampler,
+    node: usize,
+    round: usize,
+    tau: usize,
+    bufs: &mut GatherBufs,
+) -> OwnedLabels {
+    let b = sampler.batch_size();
+    bufs.idx.resize(b, 0);
+    bufs.x.clear();
+    bufs.y_f32.clear();
+    bufs.y_i32.clear();
+    let float_labels = matches!(data.labels, crate::data::Labels::Float(_));
+    let mut xtmp = Vec::new();
+    let mut ytmp_f = Vec::new();
+    let mut ytmp_i = Vec::new();
+    for t in 0..tau {
+        sampler.sample_into(node, round, t, shard.len(), &mut bufs.idx);
+        // Map shard-relative indices to dataset indices.
+        let abs: Vec<usize> = bufs.idx.iter().map(|&i| shard[i]).collect();
+        data.gather_features(&abs, &mut xtmp);
+        bufs.x.extend_from_slice(&xtmp);
+        if float_labels {
+            data.gather_labels_f32(&abs, &mut ytmp_f);
+            bufs.y_f32.extend_from_slice(&ytmp_f);
+        } else {
+            data.gather_labels_i32(&abs, &mut ytmp_i);
+            bufs.y_i32.extend_from_slice(&ytmp_i);
+        }
+    }
+    if float_labels {
+        OwnedLabels::F32(bufs.y_f32.clone())
+    } else {
+        OwnedLabels::I32(bufs.y_i32.clone())
+    }
+}
+
+/// Full node round: local SGD then quantize-and-encode the delta.
+///
+/// Returns the encoded upload (and its exact bit size via `enc.bits()`).
+pub fn node_round(
+    cfg: &ExperimentConfig,
+    engine: &mut dyn Engine,
+    data: &FederatedDataset,
+    shard: &[usize],
+    sampler: &BatchSampler,
+    node: usize,
+    round: usize,
+    global_params: &[f32],
+    lrs: &[f32],
+    bufs: &mut GatherBufs,
+) -> crate::Result<Encoded> {
+    let labels = gather_local_batches(data, shard, sampler, node, round, cfg.tau, bufs);
+    let new_params = engine.local_sgd(global_params, &bufs.x, labels.as_batch(), lrs)?;
+    let delta: Vec<f32> = new_params
+        .iter()
+        .zip(global_params)
+        .map(|(&a, &b)| a - b)
+        .collect();
+    let mut qrng = quant_rng(cfg.seed, node, round);
+    Ok(cfg.quantizer.encode(&delta, &mut qrng))
+}
+
+/// Quantizer RNG stream for `(seed, node, round)` — shared with the TCP
+/// worker so both execution modes produce identical uploads.
+pub fn quant_rng(seed: u64, node: usize, round: usize) -> crate::util::rng::Rng {
+    crate::util::rng::Rng::from_coords(seed, &[3, node as u64, round as u64])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, Partition};
+
+    #[test]
+    fn gather_shapes_and_determinism() {
+        let data = FederatedDataset::generate(DatasetKind::Mnist08, 1, 1000);
+        let part = Partition::iid(1000, 10, 100, 1);
+        let sampler = BatchSampler::new(1, 10);
+        let mut b1 = GatherBufs::default();
+        let mut b2 = GatherBufs::default();
+        let y1 = gather_local_batches(&data, part.shard(3), &sampler, 3, 7, 5, &mut b1);
+        let y2 = gather_local_batches(&data, part.shard(3), &sampler, 3, 7, 5, &mut b2);
+        assert_eq!(b1.x.len(), 5 * 10 * 784);
+        assert_eq!(b1.x, b2.x);
+        match (y1, y2) {
+            (OwnedLabels::F32(a), OwnedLabels::F32(b)) => assert_eq!(a, b),
+            _ => panic!("expected float labels"),
+        }
+    }
+
+    #[test]
+    fn gather_uses_only_own_shard() {
+        let data = FederatedDataset::generate(DatasetKind::Mnist08, 2, 200);
+        let part = Partition::iid(200, 4, 50, 2);
+        let sampler = BatchSampler::new(2, 10);
+        let mut bufs = GatherBufs::default();
+        gather_local_batches(&data, part.shard(0), &sampler, 0, 0, 3, &mut bufs);
+        // Every gathered row must match a row of shard 0.
+        for row_i in 0..30 {
+            let row = &bufs.x[row_i * 784..(row_i + 1) * 784];
+            let found = part
+                .shard(0)
+                .iter()
+                .any(|&abs| data.row(abs) == row);
+            assert!(found, "row {row_i} not from shard 0");
+        }
+    }
+}

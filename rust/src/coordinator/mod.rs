@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the FedPAQ training protocol (paper Algorithm 1).
+//!
+//! The [`Server`] owns the global model and drives `K = T/τ` rounds:
+//!
+//! 1. sample `r` of `n` nodes uniformly without replacement ([`sampler`]);
+//! 2. broadcast the current model `x_k` to the sampled nodes;
+//! 3. each node runs `τ` local SGD steps on its own shard ([`local`]);
+//! 4. each node uploads `Q(x_{k,τ}^{(i)} − x_k)` ([`crate::quant`]);
+//! 5. server sets `x_{k+1} = x_k + (1/r) Σ Q(Δ_i)` ([`aggregate`]);
+//! 6. the virtual clock advances by the round's straggler-compute plus
+//!    serialized-upload time ([`crate::simtime`]).
+//!
+//! Baselines fall out of the same loop: **FedAvg** = identity quantizer,
+//! **QSGD** = `τ = 1`, vanilla parallel SGD = both.
+
+pub mod aggregate;
+pub mod local;
+pub mod sampler;
+pub mod server;
+
+pub use server::{RoundStats, RunResult, Server};

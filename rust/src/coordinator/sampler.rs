@@ -1,0 +1,72 @@
+//! Partial node participation (paper §3.2): per round, `r` of `n` nodes
+//! are sampled uniformly without replacement — `Pr[S_k] = 1/C(n,r)`.
+
+use crate::util::rng::Rng;
+
+/// Sample the participant set `S_k` for round `round`.
+///
+/// Deterministic in `(seed, round)`; partial Fisher–Yates, O(n) time.
+pub fn sample_nodes(n: usize, r: usize, seed: u64, round: usize) -> Vec<usize> {
+    assert!(r >= 1 && r <= n, "r={r} out of 1..={n}");
+    let mut rng = rng_for(seed, round);
+    let mut pool: Vec<usize> = (0..n).collect();
+    for i in 0..r {
+        let j = rng.gen_range(i, n);
+        pool.swap(i, j);
+    }
+    pool.truncate(r);
+    pool
+}
+
+fn rng_for(seed: u64, round: usize) -> Rng {
+    Rng::from_coords(seed, &[2, round as u64])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn distinct_and_in_range() {
+        for round in 0..50 {
+            let s = sample_nodes(50, 25, 7, round);
+            assert_eq!(s.len(), 25);
+            let set: HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 25, "duplicates in round {round}");
+            assert!(s.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn full_participation_is_everyone() {
+        let mut s = sample_nodes(10, 10, 3, 0);
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_and_varies_by_round() {
+        assert_eq!(sample_nodes(50, 5, 1, 2), sample_nodes(50, 5, 1, 2));
+        assert_ne!(sample_nodes(50, 5, 1, 2), sample_nodes(50, 5, 1, 3));
+    }
+
+    #[test]
+    fn marginal_inclusion_is_uniform() {
+        // Each node should appear in ≈ rounds*r/n samples.
+        let (n, r, rounds) = (20usize, 5usize, 4000usize);
+        let mut counts = vec![0usize; n];
+        for k in 0..rounds {
+            for i in sample_nodes(n, r, 99, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = rounds * r / n; // 1000
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < 0.15 * expect as f64,
+                "node {i}: {c} vs {expect}"
+            );
+        }
+    }
+}

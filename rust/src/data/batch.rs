@@ -1,0 +1,94 @@
+//! Per-node minibatch sampling for the local SGD loop (Algorithm 1 line 7).
+//!
+//! Each node samples `B` indices *with replacement* from its own shard for
+//! every local iteration — the paper's stochastic-gradient model (a fresh
+//! ξ ~ D_i per step). Sampling is keyed by `(seed, node, round, step)` so
+//! any engine (sim, TCP worker, pure-rust oracle) regenerates the exact
+//! same batch sequence independently.
+
+use crate::util::rng::Rng;
+
+/// Deterministic minibatch index sampler.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchSampler {
+    seed: u64,
+    batch: usize,
+}
+
+impl BatchSampler {
+    pub fn new(seed: u64, batch: usize) -> Self {
+        assert!(batch > 0);
+        Self { seed, batch }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Indices (into the node's shard) for local step `t` of round `k`.
+    pub fn sample(&self, node: usize, round: usize, step: usize, shard_len: usize) -> Vec<usize> {
+        let mut out = vec![0usize; self.batch];
+        self.sample_into(node, round, step, shard_len, &mut out);
+        out
+    }
+
+    /// Allocation-free variant for the hot loop.
+    pub fn sample_into(
+        &self,
+        node: usize,
+        round: usize,
+        step: usize,
+        shard_len: usize,
+        out: &mut [usize],
+    ) {
+        debug_assert_eq!(out.len(), self.batch);
+        let mut rng = self.rng_for(node, round, step);
+        for o in out.iter_mut() {
+            *o = rng.gen_range(0, shard_len);
+        }
+    }
+
+    fn rng_for(&self, node: usize, round: usize, step: usize) -> Rng {
+        Rng::from_coords(self.seed, &[1, node as u64, round as u64, step as u64])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_coordinates() {
+        let s = BatchSampler::new(1, 10);
+        assert_eq!(s.sample(3, 5, 2, 200), s.sample(3, 5, 2, 200));
+        assert_ne!(s.sample(3, 5, 2, 200), s.sample(3, 5, 3, 200));
+        assert_ne!(s.sample(3, 5, 2, 200), s.sample(4, 5, 2, 200));
+        assert_ne!(s.sample(3, 5, 2, 200), s.sample(3, 6, 2, 200));
+    }
+
+    #[test]
+    fn indices_in_range() {
+        let s = BatchSampler::new(9, 64);
+        for round in 0..5 {
+            let idx = s.sample(0, round, 0, 17);
+            assert_eq!(idx.len(), 64);
+            assert!(idx.iter().all(|&i| i < 17));
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let s = BatchSampler::new(2, 10);
+        let mut counts = vec![0usize; 20];
+        for round in 0..500 {
+            for &i in &s.sample(1, round, 0, 20) {
+                counts[i] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        assert_eq!(total, 5000);
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((150..350).contains(&c), "bucket {i}: {c}");
+        }
+    }
+}

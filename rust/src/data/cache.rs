@@ -1,0 +1,52 @@
+//! Process-global dataset cache.
+//!
+//! A figure sweep runs many configs over the *same* synthetic dataset
+//! (same kind/seed/size); regeneration costs ~1s for the 10K×3072
+//! CIFAR-like worlds (30M Box–Muller draws), which would dominate short
+//! runs. Datasets are immutable after generation, so sharing an `Arc` is
+//! safe; the cache keeps a handful of worlds and evicts wholesale when
+//! it grows past that (worlds are ~30–100 MB each).
+
+use super::synth::{DatasetKind, FederatedDataset};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+type Key = (DatasetKind, u64, usize);
+
+fn cache() -> &'static Mutex<HashMap<Key, Arc<FederatedDataset>>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<FederatedDataset>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// At most this many cached worlds before wholesale eviction.
+const MAX_ENTRIES: usize = 4;
+
+/// Generate-or-reuse the dataset for `(kind, seed, n_samples)`.
+pub fn cached_generate(kind: DatasetKind, seed: u64, n_samples: usize) -> Arc<FederatedDataset> {
+    let key = (kind, seed, n_samples);
+    let mut map = cache().lock().unwrap();
+    if let Some(ds) = map.get(&key) {
+        return ds.clone();
+    }
+    let ds = Arc::new(FederatedDataset::generate(kind, seed, n_samples));
+    if map.len() >= MAX_ENTRIES {
+        map.clear();
+    }
+    map.insert(key, ds.clone());
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_same_arc_for_same_key() {
+        let a = cached_generate(DatasetKind::Mnist08, 777, 100);
+        let b = cached_generate(DatasetKind::Mnist08, 777, 100);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = cached_generate(DatasetKind::Mnist08, 778, 100);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.features.len(), a.features.len());
+    }
+}

@@ -1,0 +1,282 @@
+//! The i.i.d. federated partitioner: `n` nodes × `m` samples each.
+//!
+//! The paper's setting (§2) is i.i.d. data uniformly spread over nodes; we
+//! shuffle the global sample indices with a seeded RNG and deal them out
+//! contiguously. Invariant (property-tested): the node shards are a
+//! *partition* — disjoint and jointly covering the first `n*m` samples.
+
+use crate::util::rng::Rng;
+
+/// How samples are spread over nodes.
+///
+/// The paper's setting is [`PartitionKind::Iid`]; `Dirichlet` is the
+/// standard label-skew heterogeneity model (an extension ablation — the
+/// paper lists statistical heterogeneity as future work).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionKind {
+    Iid,
+    /// Per-node class proportions drawn from `Dir(alpha·1)`; smaller
+    /// `alpha` ⇒ more skew (`alpha → ∞` recovers iid).
+    Dirichlet { alpha: f64 },
+}
+
+/// Assignment of dataset sample indices to nodes.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    shards: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Deal `n_nodes * per_node` samples out of `n_samples` (must suffice)
+    /// into `n_nodes` equal shards, i.i.d. via a seeded shuffle.
+    pub fn iid(n_samples: usize, n_nodes: usize, per_node: usize, seed: u64) -> Self {
+        assert!(
+            n_nodes * per_node <= n_samples,
+            "need {} samples, dataset has {}",
+            n_nodes * per_node,
+            n_samples
+        );
+        let mut idx: Vec<usize> = (0..n_samples).collect();
+        let mut rng = Rng::from_coords(seed, &[0x9a27_11c3]);
+        rng.shuffle(&mut idx);
+        let shards = (0..n_nodes)
+            .map(|i| idx[i * per_node..(i + 1) * per_node].to_vec())
+            .collect();
+        Partition { shards }
+    }
+
+    /// Label-skew partition: node `i` draws class proportions
+    /// `p_i ~ Dir(alpha·1)` and fills its shard by sampling classes from
+    /// the remaining per-class pools (falling back to whatever is left
+    /// when a pool drains). `class_of[j]` gives sample `j`'s label.
+    pub fn dirichlet(
+        class_of: &[usize],
+        n_classes: usize,
+        n_nodes: usize,
+        per_node: usize,
+        alpha: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(alpha > 0.0, "alpha must be positive");
+        assert!(
+            n_nodes * per_node <= class_of.len(),
+            "need {} samples, dataset has {}",
+            n_nodes * per_node,
+            class_of.len()
+        );
+        let mut rng = Rng::from_coords(seed, &[0xd112_c137]);
+        // Per-class index pools, shuffled.
+        let mut pools: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+        for (j, &c) in class_of.iter().enumerate() {
+            pools[c].push(j);
+        }
+        for pool in pools.iter_mut() {
+            rng.shuffle(pool);
+        }
+        let mut shards = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let props = dirichlet_sample(&mut rng, n_classes, alpha);
+            let mut shard = Vec::with_capacity(per_node);
+            for _ in 0..per_node {
+                // Sample a class by proportion, restricted to non-empty pools.
+                let total: f64 = pools
+                    .iter()
+                    .zip(&props)
+                    .filter(|(p, _)| !p.is_empty())
+                    .map(|(_, &w)| w)
+                    .sum();
+                let mut pick = None;
+                if total > 0.0 {
+                    let mut u = rng.gen_f64() * total;
+                    for (c, pool) in pools.iter().enumerate() {
+                        if pool.is_empty() {
+                            continue;
+                        }
+                        u -= props[c];
+                        if u <= 0.0 {
+                            pick = Some(c);
+                            break;
+                        }
+                    }
+                }
+                let c = pick.unwrap_or_else(|| {
+                    // All weighted pools empty: take any non-empty class.
+                    pools.iter().position(|p| !p.is_empty()).expect("samples left")
+                });
+                shard.push(pools[c].pop().unwrap());
+            }
+            shards.push(shard);
+        }
+        Partition { shards }
+    }
+
+    /// Dispatch on [`PartitionKind`]; `Dirichlet` needs class labels and
+    /// falls back to iid for the LM dataset (per-token labels).
+    pub fn build(
+        kind: PartitionKind,
+        data: &super::synth::FederatedDataset,
+        n_nodes: usize,
+        per_node: usize,
+        seed: u64,
+    ) -> Self {
+        match kind {
+            PartitionKind::Iid => Self::iid(data.n_samples, n_nodes, per_node, seed),
+            PartitionKind::Dirichlet { alpha } => {
+                use super::synth::{DatasetKind, Labels};
+                if data.kind == DatasetKind::LmMarkov {
+                    return Self::iid(data.n_samples, n_nodes, per_node, seed);
+                }
+                let class_of: Vec<usize> = match &data.labels {
+                    Labels::Float(v) => v.iter().map(|&y| y as usize).collect(),
+                    Labels::Int(v) => v.iter().map(|&y| y as usize).collect(),
+                };
+                Self::dirichlet(
+                    &class_of,
+                    data.kind.n_classes(),
+                    n_nodes,
+                    per_node,
+                    alpha,
+                    seed,
+                )
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, node: usize) -> &[usize] {
+        &self.shards[node]
+    }
+
+    /// All assigned indices in node order (used for full-train-set eval).
+    pub fn all_indices(&self) -> Vec<usize> {
+        self.shards.iter().flatten().copied().collect()
+    }
+}
+
+/// One `Dir(alpha·1_k)` draw via normalized `Gamma(alpha, 1)` samples.
+fn dirichlet_sample(rng: &mut Rng, k: usize, alpha: f64) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..k).map(|_| gamma_sample(rng, alpha)).collect();
+    let sum: f64 = v.iter().sum();
+    if sum <= 0.0 {
+        return vec![1.0 / k as f64; k];
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+    v
+}
+
+/// Marsaglia–Tsang Gamma(shape, 1) sampler (with the alpha<1 boost).
+fn gamma_sample(rng: &mut Rng, shape: f64) -> f64 {
+    if shape < 1.0 {
+        let u = rng.gen_f64().max(1e-300);
+        return gamma_sample(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.gen_normal() as f64;
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.gen_f64().max(1e-300);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn covers_exactly_once() {
+        let p = Partition::iid(10_000, 50, 200, 42);
+        let mut seen = HashSet::new();
+        for node in 0..50 {
+            for &i in p.shard(node) {
+                assert!(seen.insert(i), "sample {i} assigned twice");
+                assert!(i < 10_000);
+            }
+        }
+        assert_eq!(seen.len(), 10_000);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Partition::iid(1000, 10, 100, 7);
+        let b = Partition::iid(1000, 10, 100, 7);
+        for n in 0..10 {
+            assert_eq!(a.shard(n), b.shard(n));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need")]
+    fn too_few_samples_panics() {
+        Partition::iid(99, 10, 10, 0);
+    }
+
+    fn fake_labels(n: usize, classes: usize, seed: u64) -> Vec<usize> {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        (0..n).map(|_| rng.gen_range(0, classes)).collect()
+    }
+
+    #[test]
+    fn dirichlet_is_disjoint_and_sized() {
+        let labels = fake_labels(1000, 10, 1);
+        let p = Partition::dirichlet(&labels, 10, 8, 100, 0.3, 2);
+        let mut seen = HashSet::new();
+        for node in 0..8 {
+            assert_eq!(p.shard(node).len(), 100);
+            for &i in p.shard(node) {
+                assert!(seen.insert(i));
+            }
+        }
+    }
+
+    #[test]
+    fn small_alpha_skews_more_than_large() {
+        // Measure mean per-node label entropy: low alpha => low entropy.
+        let labels = fake_labels(4000, 10, 3);
+        let entropy = |alpha: f64| -> f64 {
+            let p = Partition::dirichlet(&labels, 10, 10, 200, alpha, 4);
+            let mut acc = 0.0;
+            for node in 0..10 {
+                let mut counts = [0f64; 10];
+                for &i in p.shard(node) {
+                    counts[labels[i]] += 1.0;
+                }
+                let n: f64 = counts.iter().sum();
+                acc -= counts
+                    .iter()
+                    .filter(|&&c| c > 0.0)
+                    .map(|&c| (c / n) * (c / n).ln())
+                    .sum::<f64>();
+            }
+            acc / 10.0
+        };
+        let skewed = entropy(0.05);
+        let near_iid = entropy(100.0);
+        assert!(
+            skewed < near_iid - 0.5,
+            "skewed {skewed} vs near-iid {near_iid}"
+        );
+    }
+
+    #[test]
+    fn dirichlet_deterministic() {
+        let labels = fake_labels(500, 5, 5);
+        let a = Partition::dirichlet(&labels, 5, 4, 100, 0.5, 6);
+        let b = Partition::dirichlet(&labels, 5, 4, 100, 0.5, 6);
+        for n in 0..4 {
+            assert_eq!(a.shard(n), b.shard(n));
+        }
+    }
+}

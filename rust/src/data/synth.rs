@@ -1,0 +1,364 @@
+//! Seeded synthetic dataset generators (paper-dataset stand-ins).
+//!
+//! All generators are deterministic in `(kind, seed, n_samples)` — the sim
+//! engine, the TCP workers and the test suite regenerate identical data
+//! from the config alone, so no tensors ever need to ship.
+
+use crate::util::rng::Rng;
+
+/// Which paper workload this dataset stands in for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// MNIST digits '0' vs '8' (binary, d=784) — Fig 1 top.
+    Mnist08,
+    /// CIFAR-10 (10 classes, d=3072) — Fig 1 bottom / Fig 2.
+    Cifar10,
+    /// CIFAR-100 (100 classes, d=3072) — Fig 3.
+    Cifar100,
+    /// Fashion-MNIST (10 classes, d=784) — Fig 4.
+    FashionMnist,
+    /// Markov-chain token sequences for the transformer e2e driver.
+    LmMarkov,
+}
+
+impl DatasetKind {
+    /// Stable string name (config files, CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Mnist08 => "mnist08",
+            DatasetKind::Cifar10 => "cifar10",
+            DatasetKind::Cifar100 => "cifar100",
+            DatasetKind::FashionMnist => "fashion",
+            DatasetKind::LmMarkov => "lm",
+        }
+    }
+
+    /// Inverse of [`DatasetKind::name`].
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "mnist08" => DatasetKind::Mnist08,
+            "cifar10" => DatasetKind::Cifar10,
+            "cifar100" => DatasetKind::Cifar100,
+            "fashion" => DatasetKind::FashionMnist,
+            "lm" => DatasetKind::LmMarkov,
+            other => anyhow::bail!("unknown dataset {other:?}"),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            DatasetKind::Mnist08 | DatasetKind::FashionMnist => 784,
+            DatasetKind::Cifar10 | DatasetKind::Cifar100 => 3072,
+            DatasetKind::LmMarkov => 32, // sequence length
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            DatasetKind::Mnist08 => 2,
+            DatasetKind::Cifar10 | DatasetKind::FashionMnist => 10,
+            DatasetKind::Cifar100 => 100,
+            DatasetKind::LmMarkov => 64, // vocab
+        }
+    }
+
+    /// Class-mean separation scale (tuned per workload difficulty).
+    fn sep(&self) -> f32 {
+        match self {
+            DatasetKind::Mnist08 => 2.2,
+            DatasetKind::Cifar10 => 1.0,
+            DatasetKind::Cifar100 => 0.8,
+            DatasetKind::FashionMnist => 1.2,
+            DatasetKind::LmMarkov => 0.0,
+        }
+    }
+
+    /// Label-noise rate (fraction of flipped labels).
+    fn label_noise(&self) -> f64 {
+        match self {
+            DatasetKind::Mnist08 => 0.01,
+            DatasetKind::Cifar10 | DatasetKind::FashionMnist => 0.05,
+            DatasetKind::Cifar100 => 0.05,
+            DatasetKind::LmMarkov => 0.0,
+        }
+    }
+}
+
+/// Labels are f32 {0,1} for the binary logreg task, i32 classes otherwise;
+/// for LM data `Int` holds flattened token sequences (features unused).
+#[derive(Debug, Clone)]
+pub enum Labels {
+    Float(Vec<f32>),
+    Int(Vec<i32>),
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Float(v) => v.len(),
+            Labels::Int(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The full federated dataset: `n_samples` rows of dimension `dim`,
+/// row-major features + labels, plus the generator config for provenance.
+#[derive(Debug, Clone)]
+pub struct FederatedDataset {
+    pub kind: DatasetKind,
+    pub seed: u64,
+    pub dim: usize,
+    pub n_samples: usize,
+    /// Row-major `[n_samples * dim]` features. For `LmMarkov` this holds
+    /// the *input* token ids as f32 (converted on upload); targets are the
+    /// shifted sequence stored in `labels`.
+    pub features: Vec<f32>,
+    pub labels: Labels,
+}
+
+impl FederatedDataset {
+    /// Generate the synthetic stand-in for `kind`.
+    ///
+    /// Gaussian mixture construction: class means `μ_c = sep · g_c / √d`
+    /// with `g_c ~ N(0, I)` drawn from the seed, inputs
+    /// `x = μ_{y} + ε, ε ~ N(0, I/√d)`-ish (coordinate σ chosen so the
+    /// SNR stays in the paper's training-difficulty regime), labels
+    /// flipped with the per-kind noise rate.
+    pub fn generate(kind: DatasetKind, seed: u64, n_samples: usize) -> Self {
+        match kind {
+            DatasetKind::LmMarkov => Self::generate_lm(seed, n_samples),
+            _ => Self::generate_mixture(kind, seed, n_samples),
+        }
+    }
+
+    fn generate_mixture(kind: DatasetKind, seed: u64, n_samples: usize) -> Self {
+        let d = kind.dim();
+        let c = kind.n_classes();
+        let mut rng = Rng::from_coords(seed, &[0x5eed_da7a]);
+        // Class means.
+        let scale = kind.sep() / (d as f32).sqrt();
+        let means: Vec<Vec<f32>> = (0..c)
+            .map(|_| (0..d).map(|_| rng.gen_normal() * scale).collect())
+            .collect();
+        let mut features = Vec::with_capacity(n_samples * d);
+        let noise_sigma = 1.0 / (d as f32).sqrt();
+        let flip = kind.label_noise();
+        let binary = c == 2;
+        let mut fl = Vec::new();
+        let mut il = Vec::new();
+        for _ in 0..n_samples {
+            let mut y = rng.gen_range(0, c);
+            let mu = &means[y];
+            for j in 0..d {
+                features.push(mu[j] + rng.gen_normal() * noise_sigma);
+            }
+            if rng.gen_bool(flip) {
+                y = rng.gen_range(0, c);
+            }
+            if binary {
+                fl.push(y as f32);
+            } else {
+                il.push(y as i32);
+            }
+        }
+        let labels = if binary { Labels::Float(fl) } else { Labels::Int(il) };
+        FederatedDataset { kind, seed, dim: d, n_samples, features, labels }
+    }
+
+    /// Order-1 Markov-chain token sequences: each token prefers a small
+    /// set of successors, so next-token entropy is well below ln(vocab)
+    /// and the LM loss has real signal to descend.
+    fn generate_lm(seed: u64, n_samples: usize) -> Self {
+        let kind = DatasetKind::LmMarkov;
+        let seq = kind.dim();
+        let vocab = kind.n_classes();
+        let mut rng = Rng::from_coords(seed, &[0x1a27_83ff]);
+        // Transition table: per token, 4 preferred successors (p=0.22 each)
+        // and uniform leakage over the rest.
+        let succ: Vec<[usize; 4]> = (0..vocab)
+            .map(|_| {
+                [
+                    rng.gen_range(0, vocab),
+                    rng.gen_range(0, vocab),
+                    rng.gen_range(0, vocab),
+                    rng.gen_range(0, vocab),
+                ]
+            })
+            .collect();
+        let mut features = Vec::with_capacity(n_samples * seq);
+        let mut targets = Vec::with_capacity(n_samples * seq);
+        for _ in 0..n_samples {
+            let mut t = rng.gen_range(0, vocab);
+            let mut toks = Vec::with_capacity(seq + 1);
+            toks.push(t);
+            for _ in 0..seq {
+                t = if rng.gen_bool(0.88) {
+                    succ[t][rng.gen_range(0, 4)]
+                } else {
+                    rng.gen_range(0, vocab)
+                };
+                toks.push(t);
+            }
+            for i in 0..seq {
+                features.push(toks[i] as f32);
+                targets.push(toks[i + 1] as i32);
+            }
+        }
+        FederatedDataset {
+            kind,
+            seed,
+            dim: seq,
+            n_samples,
+            features,
+            labels: Labels::Int(targets),
+        }
+    }
+
+    /// Borrow the feature row(s) for sample `idx`.
+    pub fn row(&self, idx: usize) -> &[f32] {
+        &self.features[idx * self.dim..(idx + 1) * self.dim]
+    }
+
+    /// Gather features for `idx` into `out` (row-major, len = idx.len()*dim).
+    pub fn gather_features(&self, idx: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(idx.len() * self.dim);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+    }
+
+    /// Gather f32 labels (binary task only).
+    pub fn gather_labels_f32(&self, idx: &[usize], out: &mut Vec<f32>) {
+        out.clear();
+        match &self.labels {
+            Labels::Float(v) => out.extend(idx.iter().map(|&i| v[i])),
+            Labels::Int(_) => panic!("dataset has integer labels"),
+        }
+    }
+
+    /// Gather i32 labels. For LM data a "label" for sample `i` is the whole
+    /// target sequence (dim entries).
+    pub fn gather_labels_i32(&self, idx: &[usize], out: &mut Vec<i32>) {
+        out.clear();
+        match &self.labels {
+            Labels::Int(v) => {
+                if self.kind == DatasetKind::LmMarkov {
+                    for &i in idx {
+                        out.extend_from_slice(&v[i * self.dim..(i + 1) * self.dim]);
+                    }
+                } else {
+                    out.extend(idx.iter().map(|&i| v[i]));
+                }
+            }
+            Labels::Float(_) => panic!("dataset has float labels"),
+        }
+    }
+}
+
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = FederatedDataset::generate(DatasetKind::Mnist08, 7, 100);
+        let b = FederatedDataset::generate(DatasetKind::Mnist08, 7, 100);
+        assert_eq!(a.features, b.features);
+        let c = FederatedDataset::generate(DatasetKind::Mnist08, 8, 100);
+        assert_ne!(a.features, c.features);
+    }
+
+    #[test]
+    fn shapes_per_kind() {
+        for kind in [
+            DatasetKind::Mnist08,
+            DatasetKind::Cifar10,
+            DatasetKind::Cifar100,
+            DatasetKind::FashionMnist,
+        ] {
+            let ds = FederatedDataset::generate(kind, 1, 50);
+            assert_eq!(ds.features.len(), 50 * kind.dim());
+            assert_eq!(ds.labels.len(), 50);
+        }
+        let lm = FederatedDataset::generate(DatasetKind::LmMarkov, 1, 20);
+        assert_eq!(lm.features.len(), 20 * 32);
+        assert_eq!(lm.labels.len(), 20 * 32); // per-token targets
+    }
+
+    #[test]
+    fn binary_labels_are_01() {
+        let ds = FederatedDataset::generate(DatasetKind::Mnist08, 3, 500);
+        match &ds.labels {
+            Labels::Float(v) => {
+                assert!(v.iter().all(|&y| y == 0.0 || y == 1.0));
+                let ones = v.iter().filter(|&&y| y == 1.0).count();
+                // Roughly balanced classes.
+                assert!(ones > 150 && ones < 350, "ones={ones}");
+            }
+            _ => panic!("expected float labels"),
+        }
+    }
+
+    #[test]
+    fn class_labels_in_range() {
+        let ds = FederatedDataset::generate(DatasetKind::Cifar100, 5, 300);
+        match &ds.labels {
+            Labels::Int(v) => assert!(v.iter().all(|&y| (0..100).contains(&y))),
+            _ => panic!("expected int labels"),
+        }
+    }
+
+    #[test]
+    fn lm_tokens_in_vocab() {
+        let ds = FederatedDataset::generate(DatasetKind::LmMarkov, 5, 10);
+        assert!(ds.features.iter().all(|&t| (0.0..64.0).contains(&t)));
+        match &ds.labels {
+            Labels::Int(v) => assert!(v.iter().all(|&t| (0..64).contains(&t))),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_on_average() {
+        // Mean within-class distance must be smaller than between-class.
+        let ds = FederatedDataset::generate(DatasetKind::Mnist08, 11, 400);
+        let ys = match &ds.labels {
+            Labels::Float(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let mut mean0 = vec![0f32; ds.dim];
+        let mut mean1 = vec![0f32; ds.dim];
+        let (mut n0, mut n1) = (0, 0);
+        for i in 0..ds.n_samples {
+            let row = ds.row(i);
+            if ys[i] == 0.0 {
+                n0 += 1;
+                for (m, &x) in mean0.iter_mut().zip(row) {
+                    *m += x;
+                }
+            } else {
+                n1 += 1;
+                for (m, &x) in mean1.iter_mut().zip(row) {
+                    *m += x;
+                }
+            }
+        }
+        let gap: f32 = mean0
+            .iter()
+            .zip(&mean1)
+            .map(|(&a, &b)| {
+                let d = a / n0 as f32 - b / n1 as f32;
+                d * d
+            })
+            .sum::<f32>()
+            .sqrt();
+        assert!(gap > 0.5, "class means too close: {gap}");
+    }
+}

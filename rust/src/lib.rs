@@ -1,0 +1,41 @@
+//! # FedPAQ — communication-efficient federated learning
+//!
+//! Production-grade reproduction of *FedPAQ: A Communication-Efficient
+//! Federated Learning Method with Periodic Averaging and Quantization*
+//! (Reisizadeh, Mokhtari, Hassani, Jadbabaie, Pedarsani — AISTATS 2020).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **Layer 3 (this crate)** — the federated coordinator: node sampling,
+//!   periodic averaging rounds, quantized message passing, the paper's §5
+//!   communication/computation cost model, baselines (FedAvg, QSGD), a real
+//!   TCP leader/worker mode, and the figure-regeneration harness.
+//! * **Layer 2** — JAX model programs (`python/compile/model.py`), AOT
+//!   lowered once to HLO text and executed here through PJRT
+//!   ([`runtime`]); python never runs on the training path.
+//! * **Layer 1** — Pallas kernels (dense matmul + the QSGD quantizer)
+//!   called from the L2 programs.
+//!
+//! The crate is usable as a library: build a [`config::ExperimentConfig`],
+//! construct an engine ([`runtime::PjrtEngine`] or the pure-rust
+//! [`model::RustEngine`]), and drive [`coordinator::Server`].
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod opt;
+pub mod quant;
+pub mod runtime;
+pub mod simtime;
+pub mod theory;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Bits used by an *unquantized* f32 coordinate on the wire (paper §5: `F`).
+pub const FLOAT_BITS: u64 = 32;

@@ -1,0 +1,345 @@
+//! `fedpaq` — CLI launcher for the FedPAQ federated-learning runtime.
+//!
+//! ```text
+//! fedpaq figure <id|all> [--out DIR] [--engine pjrt|rust] [--t N]
+//! fedpaq train [--config FILE.json] [--model M] [--s S] [--tau T] ...
+//! fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json]
+//! fedpaq worker [--connect ADDR]
+//! fedpaq quantize-check [--s S] [--seed SEED]
+//! fedpaq info
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is unavailable offline); flags
+//! are `--key value` pairs after the subcommand.
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::data::DatasetKind;
+use fedpaq::figures::{all_figures, figure, Runner};
+use fedpaq::opt::LrSchedule;
+use fedpaq::quant::{Coding, Quantizer};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+fedpaq — FedPAQ (AISTATS 2020) reproduction
+
+USAGE:
+  fedpaq figure <id|all> [--out DIR] [--engine pjrt|rust] [--t N]
+  fedpaq train [--config FILE.json] [--model NAME] [--dataset D] [--nodes N]
+               [--per-node M] [--r R] [--tau TAU] [--t T] [--s S] [--elias]
+               [--lr ETA] [--ratio X] [--seed SEED] [--engine pjrt|rust]
+  fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
+  fedpaq worker [--connect ADDR]
+  fedpaq quantize-check [--s S] [--seed SEED]
+  fedpaq info
+
+Global: --artifacts DIR (default: artifacts)
+";
+
+/// Tiny `--key value` / `--flag` parser over the args after the subcommand.
+struct Flags {
+    map: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Self> {
+        let mut map = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // Boolean flags have no value or are followed by another --flag.
+                let is_bool = matches!(key, "elias" | "fast");
+                if is_bool {
+                    map.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                    map.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Flags { map, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn engine(&self) -> anyhow::Result<EngineKind> {
+        match self.get_or("engine", "pjrt").as_str() {
+            "pjrt" => Ok(EngineKind::Pjrt),
+            "rust" => Ok(EngineKind::Rust),
+            other => anyhow::bail!("--engine must be pjrt|rust, got {other}"),
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&argv[1..])?;
+    let artifacts = PathBuf::from(flags.get_or("artifacts", "artifacts"));
+
+    match cmd.as_str() {
+        "figure" => {
+            let id = flags
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("figure needs an id or `all`"))?;
+            let out = PathBuf::from(flags.get_or("out", "results"));
+            let mut runner = Runner::new(flags.engine()?, &artifacts);
+            if let Some(t) = flags.get("t") {
+                runner.t_override = Some(t.parse()?);
+            }
+            let specs = if id == "all" {
+                all_figures()
+            } else {
+                vec![figure(id).ok_or_else(|| anyhow::anyhow!("unknown figure {id}"))?]
+            };
+            for spec in &specs {
+                eprintln!("=== {} — {}", spec.id, spec.title);
+                runner.run_and_save(spec, &out)?;
+            }
+        }
+        "train" => {
+            let cfg = if let Some(path) = flags.get("config") {
+                ExperimentConfig::from_json_file(Path::new(path))?
+            } else {
+                let model = flags.get_or("model", "logreg");
+                let s: u32 = flags.parse_num("s", 1u32)?;
+                let r: usize = flags.parse_num("r", 25usize)?;
+                let tau: usize = flags.parse_num("tau", 5usize)?;
+                let elias = flags.get("elias").is_some();
+                ExperimentConfig {
+                    name: format!("{model} s={s} r={r} tau={tau}"),
+                    model,
+                    dataset: DatasetKind::parse(&flags.get_or("dataset", "mnist08"))?,
+                    n_nodes: flags.parse_num("nodes", 50usize)?,
+                    per_node: flags.parse_num("per-node", 200usize)?,
+                    r,
+                    tau,
+                    t_total: flags.parse_num("t", 100usize)?,
+                    quantizer: if s == 0 {
+                        Quantizer::Identity
+                    } else {
+                        Quantizer::Qsgd {
+                            s,
+                            coding: if elias { Coding::Elias } else { Coding::Naive },
+                        }
+                    },
+                    lr: LrSchedule::Const { eta: flags.parse_num("lr", 0.1f32)? },
+                    ratio: flags.parse_num("ratio", 100.0f64)?,
+                    seed: flags.parse_num("seed", 42u64)?,
+                    eval_every: flags.parse_num("eval-every", 1usize)?,
+                    engine: flags.engine()?,
+                    partition: match flags.get("dirichlet") {
+                        Some(a) => fedpaq::data::PartitionKind::Dirichlet {
+                            alpha: a.parse()?,
+                        },
+                        None => fedpaq::data::PartitionKind::Iid,
+                    },
+                }
+                .validated()?
+            };
+            let mut runner = Runner::new(cfg.engine.clone(), &artifacts);
+            let res = runner.run_config(cfg.clone())?;
+            println!("run: {}", cfg.name);
+            println!(
+                "rounds: {}  total upload: {} bits",
+                res.rounds.len(),
+                res.total_bits
+            );
+            for p in &res.curve.points {
+                println!(
+                    "  k={:<4} iter={:<5} time={:<12.3} loss={:.6}",
+                    p.round, p.iterations, p.time, p.loss
+                );
+            }
+            if let Some(dir) = flags.get("out") {
+                let mut fig = fedpaq::metrics::FigureData::new("train", &cfg.name);
+                fig.curves.push(res.curve);
+                let path = fig.write_csv(Path::new(dir))?;
+                println!("wrote {}", path.display());
+            }
+        }
+        "leader" => {
+            let cfg = match flags.get("config") {
+                Some(path) => ExperimentConfig::from_json_file(Path::new(path))?,
+                None => ExperimentConfig::fig1_logreg_base(),
+            }
+            .with_engine(flags.engine()?);
+            let bind = flags.get_or("bind", "127.0.0.1:7070");
+            let workers: usize = flags.parse_num("workers", 2usize)?;
+            let mut engine = fedpaq::net::worker::build_engine(&cfg, &artifacts)?;
+            let res =
+                fedpaq::net::run_leader(cfg, &bind, workers, engine.as_mut(), &artifacts)?;
+            println!("distributed run complete: final loss {:?}", res.curve.final_loss());
+            for p in &res.curve.points {
+                println!("  k={:<4} wall={:<10.3}s loss={:.6}", p.round, p.time, p.loss);
+            }
+        }
+        "worker" => {
+            let connect = flags.get_or("connect", "127.0.0.1:7070");
+            fedpaq::net::run_worker(&connect, &artifacts)?;
+        }
+        "quantize-check" => {
+            let s: u32 = flags.parse_num("s", 4u32)?;
+            let seed: u64 = flags.parse_num("seed", 123u64)?;
+            let client = fedpaq::runtime::cpu_client()?;
+            let kernel = fedpaq::runtime::QuantizeKernel::load(&client, &artifacts)?;
+            let mut rng = fedpaq::util::rng::Rng::seed_from_u64(seed);
+            let x: Vec<f32> = (0..kernel.p).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+            let u: Vec<f32> = (0..kernel.p).map(|_| rng.gen_f32()).collect();
+            let kq = kernel.run(&x, &u, s as f32)?;
+            // Reference levels computed the same way the rust codec does.
+            let norm = fedpaq::quant::l2_norm(&x);
+            let mut max_err = 0f32;
+            for i in 0..kernel.p {
+                let a = x[i].abs() / norm * s as f32;
+                let lo = a.floor();
+                let level = lo + (u[i] < a - lo) as u32 as f32;
+                let want = norm * x[i].signum() * level / s as f32;
+                max_err = max_err.max((want - kq[i]).abs());
+            }
+            println!(
+                "pallas-vs-rust max abs err over {} coords: {max_err:e}",
+                kernel.p
+            );
+            anyhow::ensure!(max_err < 1e-4, "kernel/codec mismatch");
+            println!("quantize-check OK");
+        }
+        "perf-probe" => {
+            // §Perf instrumentation: per-program PJRT dispatch+compute cost.
+            let model = flags.get_or("model", "mlp92k");
+            let iters: usize = flags.parse_num("iters", 50usize)?;
+            let client = fedpaq::runtime::cpu_client()?;
+            let mut eng = fedpaq::runtime::PjrtEngine::load(&client, &artifacts, &model)?;
+            let (kind, batch, eval_n) = fedpaq::figures::zoo_kind(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+            let d = kind.d_in();
+            let p = kind.param_count();
+            let mut rng = fedpaq::util::rng::Rng::seed_from_u64(1);
+            let params = {
+                use fedpaq::model::Engine;
+                eng.init_params()?
+            };
+            let mk_x = |rng: &mut fedpaq::util::rng::Rng, n: usize| -> Vec<f32> {
+                (0..n * d).map(|_| rng.gen_f32() - 0.5).collect()
+            };
+            let float_labels = kind.float_labels();
+            let yb_f: Vec<f32> = (0..batch).map(|_| rng.gen_bool(0.5) as u8 as f32).collect();
+            let n_lab = if matches!(kind, fedpaq::model::ModelKind::Transformer { seq, .. } if seq > 0)
+            {
+                batch * d
+            } else {
+                batch
+            };
+            let yb_i: Vec<i32> = (0..n_lab).map(|_| rng.gen_range(0, 10) as i32).collect();
+            let xb = mk_x(&mut rng, batch);
+            use fedpaq::model::{Engine, LabelBatch};
+            let yb = || {
+                if float_labels { LabelBatch::F32(&yb_f) } else { LabelBatch::I32(&yb_i) }
+            };
+            // Warmup.
+            let _ = eng.sgd_step(&params, &xb, yb(), 0.01)?;
+            let t0 = std::time::Instant::now();
+            let mut pcur = params.clone();
+            for _ in 0..iters {
+                pcur = eng.sgd_step(&pcur, &xb, yb(), 0.01)?;
+            }
+            let step_us = t0.elapsed().as_micros() as f64 / iters as f64;
+            // Chained: tau steps with one host roundtrip.
+            let tau = 10usize;
+            let xs = mk_x(&mut rng, batch * tau);
+            let ys_f: Vec<f32> = (0..batch * tau).map(|_| 0.0).collect();
+            let ys_i: Vec<i32> = (0..n_lab * tau).map(|_| 0).collect();
+            let ys = || {
+                if float_labels { LabelBatch::F32(&ys_f) } else { LabelBatch::I32(&ys_i) }
+            };
+            let lrs = vec![0.01f32; tau];
+            let _ = eng.local_sgd(&params, &xs, ys(), &lrs)?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters.div_ceil(tau) {
+                let _ = eng.local_sgd(&params, &xs, ys(), &lrs)?;
+            }
+            let chain_us =
+                t0.elapsed().as_micros() as f64 / (iters.div_ceil(tau) * tau) as f64;
+            // Eval (cached slab).
+            let ex = mk_x(&mut rng, eval_n);
+            let ey_f: Vec<f32> = (0..eval_n).map(|_| 1.0).collect();
+            let ey_i: Vec<i32> = vec![
+                0;
+                if float_labels { 0 } else { eval_n * n_lab / batch }
+            ];
+            let ey = || {
+                if float_labels { LabelBatch::F32(&ey_f) } else { LabelBatch::I32(&ey_i) }
+            };
+            let _ = eng.eval_loss_token(&params, 9, &ex, ey())?;
+            let t0 = std::time::Instant::now();
+            let evals = 10;
+            for _ in 0..evals {
+                let _ = eng.eval_loss_token(&params, 9, &ex, ey())?;
+            }
+            let eval_us = t0.elapsed().as_micros() as f64 / evals as f64;
+            println!(
+                "perf-probe {model}: p={p} B={batch} eval_n={eval_n}\n  \
+                 sgd_step (host roundtrip each): {step_us:9.1} us/step\n  \
+                 local_sgd chained tau=10:       {chain_us:9.1} us/step\n  \
+                 eval_loss (cached slab):        {eval_us:9.1} us/eval\n  \
+                 total execs this probe: {}",
+                eng.exec_count
+            );
+        }
+        "info" => {
+            println!("models:");
+            for name in
+                ["logreg", "mlp92k", "mlp248k", "mlp_c100", "mlp_fashion", "transformer"]
+            {
+                if let Some((kind, batch, eval_n)) = fedpaq::figures::zoo_kind(name) {
+                    println!(
+                        "  {name:<12} p={:<8} batch={batch} eval_n={eval_n}",
+                        kind.param_count()
+                    );
+                }
+            }
+            println!("figures:");
+            for f in all_figures() {
+                println!("  {:<7} {} ({} curves)", f.id, f.title, f.configs.len());
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

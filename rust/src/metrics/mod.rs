@@ -1,0 +1,175 @@
+//! Run metrics: loss curves, CSV emission and quick terminal plots.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One evaluated point of a training run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    /// Communication round index `k` (1-based after the round completes).
+    pub round: usize,
+    /// SGD iterations completed so far (`k·τ`).
+    pub iterations: usize,
+    /// Virtual training time (paper's x-axis).
+    pub time: f64,
+    /// Cumulative uploaded bits.
+    pub bits_up: u64,
+    /// Training loss at the server model.
+    pub loss: f64,
+}
+
+/// A named loss-vs-time series (one line on a paper plot).
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>) -> Self {
+        Curve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.points.last().map_or(0.0, |p| p.time)
+    }
+
+    /// First virtual time at which the loss reaches `target` (linear
+    /// interpolation between evaluated rounds); `None` if never reached.
+    /// This is the headline "time-to-loss" comparison metric.
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        let mut prev: Option<&CurvePoint> = None;
+        for p in &self.points {
+            if p.loss <= target {
+                return Some(match prev {
+                    Some(q) if q.loss > p.loss => {
+                        let f = (q.loss - target) / (q.loss - p.loss);
+                        q.time + f * (p.time - q.time)
+                    }
+                    _ => p.time,
+                });
+            }
+            prev = Some(p);
+        }
+        None
+    }
+}
+
+/// A figure = several curves sharing axes (one sub-plot of Fig 1–4).
+#[derive(Debug, Clone)]
+pub struct FigureData {
+    pub id: String,
+    pub title: String,
+    pub curves: Vec<Curve>,
+}
+
+impl FigureData {
+    pub fn new(id: impl Into<String>, title: impl Into<String>) -> Self {
+        FigureData { id: id.into(), title: title.into(), curves: Vec::new() }
+    }
+
+    /// Write `<dir>/<id>.csv` with columns `label,round,iterations,time,bits_up,loss`.
+    pub fn write_csv(&self, dir: &Path) -> crate::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "label,round,iterations,time,bits_up,loss")?;
+        for c in &self.curves {
+            for p in &c.points {
+                writeln!(
+                    f,
+                    "{},{},{},{:.6},{},{:.6}",
+                    c.label, p.round, p.iterations, p.time, p.bits_up, p.loss
+                )?;
+            }
+        }
+        Ok(path)
+    }
+
+    /// Compact terminal rendering: per curve, the loss at a few time marks
+    /// plus final (time, loss) — enough to eyeball the paper's orderings.
+    pub fn ascii_summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("=== {} — {}\n", self.id, self.title));
+        let t_max = self
+            .curves
+            .iter()
+            .map(Curve::total_time)
+            .fold(0.0f64, f64::max);
+        for c in &self.curves {
+            out.push_str(&format!("  {:<28}", c.label));
+            for frac in [0.25, 0.5, 0.75, 1.0] {
+                let t = t_max * frac;
+                let loss = c
+                    .points
+                    .iter()
+                    .take_while(|p| p.time <= t)
+                    .last()
+                    .map(|p| p.loss);
+                match loss {
+                    Some(l) => out.push_str(&format!(" t{:>3.0}%:{l:>8.4}", frac * 100.0)),
+                    None => out.push_str(&format!(" t{:>3.0}%:{:>8}", frac * 100.0, "-")),
+                }
+            }
+            out.push_str(&format!(
+                "  end t={:.1} loss={:.4}\n",
+                c.total_time(),
+                c.final_loss().unwrap_or(f64::NAN)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(label: &str, pts: &[(f64, f64)]) -> Curve {
+        let mut c = Curve::new(label);
+        for (i, &(t, l)) in pts.iter().enumerate() {
+            c.push(CurvePoint { round: i + 1, iterations: (i + 1) * 5, time: t, bits_up: 0, loss: l });
+        }
+        c
+    }
+
+    #[test]
+    fn time_to_loss_interpolates() {
+        let c = curve("a", &[(1.0, 1.0), (2.0, 0.5), (3.0, 0.25)]);
+        assert_eq!(c.time_to_loss(0.5), Some(2.0));
+        let t = c.time_to_loss(0.75).unwrap();
+        assert!((t - 1.5).abs() < 1e-12);
+        assert_eq!(c.time_to_loss(0.1), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("fedpaq-metrics-{}", std::process::id()));
+        let mut fig = FigureData::new("figX", "test");
+        fig.curves.push(curve("s=1", &[(1.0, 0.9), (2.0, 0.5)]));
+        let path = fig.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("label,round"));
+        assert!(lines[1].starts_with("s=1,1,5,1.000000,0,0.9"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ascii_summary_mentions_all_curves() {
+        let mut fig = FigureData::new("f", "t");
+        fig.curves.push(curve("alpha", &[(1.0, 0.9)]));
+        fig.curves.push(curve("beta", &[(2.0, 0.8)]));
+        let s = fig.ascii_summary();
+        assert!(s.contains("alpha") && s.contains("beta"));
+    }
+}

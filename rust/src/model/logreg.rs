@@ -1,0 +1,154 @@
+//! Pure-rust l2-regularized binary logistic regression.
+//!
+//! Matches `python/compile/model.py::loss_logreg` exactly:
+//! `mean softplus(-(2y-1)(x·w + b)) + (l2/2)||w||²` (bias unregularized).
+//! Used as the numerical oracle for the PJRT logreg artifacts and as the
+//! strongly-convex testbed for the Theorem-1 checks (μ = l2).
+
+/// Model hyper-parameters; params are flat `[w (d), b (1)]`.
+#[derive(Debug, Clone, Copy)]
+pub struct LogRegModel {
+    pub d: usize,
+    pub l2: f32,
+}
+
+impl LogRegModel {
+    pub fn param_count(&self) -> usize {
+        self.d + 1
+    }
+
+    /// Mean loss over a batch; `x` row-major `[n, d]`, `y ∈ {0,1}`.
+    pub fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> f32 {
+        let n = y.len();
+        debug_assert_eq!(x.len(), n * self.d);
+        debug_assert_eq!(params.len(), self.d + 1);
+        let (w, b) = (&params[..self.d], params[self.d]);
+        let mut acc = 0f64;
+        for i in 0..n {
+            let z = dot(&x[i * self.d..(i + 1) * self.d], w) + b;
+            let sgn = 2.0 * y[i] - 1.0;
+            acc += softplus((-sgn * z) as f64);
+        }
+        let reg = 0.5 * self.l2 as f64 * dot(w, w) as f64;
+        (acc / n as f64 + reg) as f32
+    }
+
+    /// Mean gradient over a batch (same layout as params).
+    pub fn grad(&self, params: &[f32], x: &[f32], y: &[f32]) -> Vec<f32> {
+        let n = y.len();
+        let (w, b) = (&params[..self.d], params[self.d]);
+        let mut g = vec![0f32; self.d + 1];
+        for i in 0..n {
+            let row = &x[i * self.d..(i + 1) * self.d];
+            let z = dot(row, w) + b;
+            let sgn = 2.0 * y[i] - 1.0;
+            // d/dz softplus(-sgn z) = -sgn * sigmoid(-sgn z)
+            let coef = -sgn * sigmoid(-sgn * z) / n as f32;
+            for (gj, &xj) in g[..self.d].iter_mut().zip(row) {
+                *gj += coef * xj;
+            }
+            g[self.d] += coef;
+        }
+        for (gj, &wj) in g[..self.d].iter_mut().zip(w) {
+            *gj += self.l2 * wj;
+        }
+        g
+    }
+
+    /// Smoothness constant upper bound `L ≤ λ_max(XᵀX)/4n + l2`; we use the
+    /// cheap bound `max_i ||x_i||²/4 + l2` for stepsize guards.
+    pub fn smoothness_bound(&self, x: &[f32], n: usize) -> f32 {
+        let mut max_sq = 0f32;
+        for i in 0..n {
+            let r = &x[i * self.d..(i + 1) * self.d];
+            max_sq = max_sq.max(dot(r, r));
+        }
+        max_sq / 4.0 + self.l2
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[inline]
+fn softplus(z: f64) -> f64 {
+    // log(1 + e^z), stable form.
+    if z > 30.0 {
+        z
+    } else {
+        z.max(0.0) + (1.0 + (-z.abs()).exp()).ln()
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (LogRegModel, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let m = LogRegModel { d: 3, l2: 0.1 };
+        let params = vec![0.2, -0.4, 0.7, 0.05];
+        let x = vec![1.0, 0.5, -1.0, /* row2 */ -0.3, 0.8, 0.2];
+        let y = vec![1.0, 0.0];
+        (m, params, x, y)
+    }
+
+    #[test]
+    fn zero_params_gives_ln2() {
+        let m = LogRegModel { d: 4, l2: 0.0 };
+        let p = vec![0.0; 5];
+        let x = vec![0.3; 8];
+        let y = vec![1.0, 0.0];
+        let l = m.loss(&p, &x, &y);
+        assert!((l - core::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (m, params, x, y) = toy();
+        let g = m.grad(&params, &x, &y);
+        let eps = 1e-3f32;
+        for j in 0..params.len() {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let lp = m.loss(&pp, &x, &y);
+            pp[j] -= 2.0 * eps;
+            let lm = m.loss(&pp, &x, &y);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[j]).abs() < 2e-3,
+                "param {j}: fd {fd} vs grad {}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn gd_descends_to_small_gradient() {
+        let (m, mut p, x, y) = toy();
+        let mut last = m.loss(&p, &x, &y);
+        for _ in 0..500 {
+            let g = m.grad(&p, &x, &y);
+            for (pi, gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.5 * gi;
+            }
+            let l = m.loss(&p, &x, &y);
+            assert!(l <= last + 1e-5);
+            last = l;
+        }
+        let g = m.grad(&p, &x, &y);
+        let gn: f32 = g.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(gn < 1e-3, "gradient norm {gn}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Pure-rust ReLU MLP with softmax cross-entropy — the non-convex oracle.
+//!
+//! Mirrors `python/compile/model.py::loss_mlp` (same layer layout, same
+//! flat parameter order: per layer `[W (fan_in×fan_out row-major), b]`).
+//! Init differs from JAX (different RNG), so cross-engine tests compare
+//! *math* (loss/grad at given params), not training trajectories.
+
+use crate::util::rng::Rng;
+
+/// Model hyper-parameters. `layers = [d_in, h1, ..., n_classes]`.
+#[derive(Debug, Clone)]
+pub struct MlpModel {
+    pub layers: Vec<usize>,
+    pub l2: f32,
+}
+
+/// He-normal init over the flat layout (deterministic in `seed`).
+pub fn he_init(layers: &[usize], seed: u64) -> Vec<f32> {
+    let mut rng = Rng::from_coords(seed, &[0x11e_1417]);
+    let mut out = Vec::new();
+    for w in layers.windows(2) {
+        let (fi, fo) = (w[0], w[1]);
+        let scale = (2.0 / fi as f32).sqrt();
+        out.extend((0..fi * fo).map(|_| rng.gen_normal() * scale));
+        out.extend(std::iter::repeat(0f32).take(fo));
+    }
+    out
+}
+
+impl MlpModel {
+    pub fn param_count(&self) -> usize {
+        self.layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// Forward pass storing post-activation values per layer (for backprop).
+    /// Returns (activations per layer incl. input, logits).
+    fn forward(&self, params: &[f32], x: &[f32], n: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut off = 0usize;
+        let last = self.layers.len() - 2;
+        for (li, w) in self.layers.windows(2).enumerate() {
+            let (fi, fo) = (w[0], w[1]);
+            let wmat = &params[off..off + fi * fo];
+            let bias = &params[off + fi * fo..off + fi * fo + fo];
+            off += fi * fo + fo;
+            let inp = acts.last().unwrap();
+            let mut out = vec![0f32; n * fo];
+            matmul_bias(inp, wmat, bias, &mut out, n, fi, fo);
+            if li != last {
+                for v in out.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            acts.push(out);
+        }
+        let logits = acts.pop().unwrap();
+        (acts, logits)
+    }
+
+    /// Mean softmax-CE (+ l2) over a batch; `y` int class labels.
+    pub fn loss(&self, params: &[f32], x: &[f32], y: &[i32]) -> f32 {
+        let n = y.len();
+        let (_, logits) = self.forward(params, x, n);
+        let c = *self.layers.last().unwrap();
+        let mut acc = 0f64;
+        for i in 0..n {
+            let row = &logits[i * c..(i + 1) * c];
+            acc += (logsumexp(row) - row[y[i] as usize]) as f64;
+        }
+        let mut loss = (acc / n as f64) as f32;
+        if self.l2 > 0.0 {
+            let ss: f32 = params.iter().map(|v| v * v).sum();
+            loss += 0.5 * self.l2 * ss;
+        }
+        loss
+    }
+
+    /// Mean gradient over a batch (flat layout, same as params).
+    pub fn grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> Vec<f32> {
+        let n = y.len();
+        let (acts, logits) = self.forward(params, x, n);
+        let c = *self.layers.last().unwrap();
+        // dL/dlogits = (softmax - onehot)/n
+        let mut delta = vec![0f32; n * c];
+        for i in 0..n {
+            let row = &logits[i * c..(i + 1) * c];
+            let lz = logsumexp(row);
+            for j in 0..c {
+                delta[i * c + j] = (row[j] - lz).exp() / n as f32;
+            }
+            delta[i * c + y[i] as usize] -= 1.0 / n as f32;
+        }
+        let mut grads = vec![0f32; self.param_count()];
+        // Walk layers backwards; `delta` is dL/d(pre-activation of layer li).
+        let mut offsets = Vec::new();
+        {
+            let mut off = 0;
+            for w in self.layers.windows(2) {
+                offsets.push(off);
+                off += w[0] * w[1] + w[1];
+            }
+        }
+        let nl = self.layers.len() - 1;
+        for li in (0..nl).rev() {
+            let (fi, fo) = (self.layers[li], self.layers[li + 1]);
+            let off = offsets[li];
+            let inp = &acts[li]; // [n, fi]
+            // dW = inpᵀ · delta ; db = Σ_i delta
+            {
+                let (gw, gb) = grads[off..off + fi * fo + fo].split_at_mut(fi * fo);
+                for i in 0..n {
+                    let drow = &delta[i * fo..(i + 1) * fo];
+                    let xrow = &inp[i * fi..(i + 1) * fi];
+                    for a in 0..fi {
+                        let xa = xrow[a];
+                        if xa != 0.0 {
+                            let gwrow = &mut gw[a * fo..(a + 1) * fo];
+                            for (g, &d) in gwrow.iter_mut().zip(drow) {
+                                *g += xa * d;
+                            }
+                        }
+                    }
+                    for (g, &d) in gb.iter_mut().zip(drow) {
+                        *g += d;
+                    }
+                }
+            }
+            if li > 0 {
+                // delta_prev = (delta · Wᵀ) ⊙ relu'(act_prev)
+                let wmat = &params[off..off + fi * fo];
+                let mut nd = vec![0f32; n * fi];
+                for i in 0..n {
+                    let drow = &delta[i * fo..(i + 1) * fo];
+                    let ndrow = &mut nd[i * fi..(i + 1) * fi];
+                    for a in 0..fi {
+                        let wrow = &wmat[a * fo..(a + 1) * fo];
+                        let mut acc = 0f32;
+                        for (w, &d) in wrow.iter().zip(drow) {
+                            acc += w * d;
+                        }
+                        ndrow[a] = acc;
+                    }
+                    let arow = &acts[li][i * fi..(i + 1) * fi];
+                    for (v, &a) in ndrow.iter_mut().zip(arow) {
+                        if a <= 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                delta = nd;
+            }
+        }
+        if self.l2 > 0.0 {
+            for (g, &p) in grads.iter_mut().zip(params) {
+                *g += self.l2 * p;
+            }
+        }
+        grads
+    }
+}
+
+/// `out[n, fo] = x[n, fi] · w[fi, fo] + b`, row-major.
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], n: usize, fi: usize, fo: usize) {
+    for i in 0..n {
+        let orow = &mut out[i * fo..(i + 1) * fo];
+        orow.copy_from_slice(b);
+        let xrow = &x[i * fi..(i + 1) * fi];
+        for a in 0..fi {
+            let xa = xrow[a];
+            if xa != 0.0 {
+                let wrow = &w[a * fo..(a + 1) * fo];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xa * wv;
+                }
+            }
+        }
+    }
+}
+
+fn logsumexp(row: &[f32]) -> f32 {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (MlpModel, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let m = MlpModel { layers: vec![4, 5, 3], l2: 0.01 };
+        let p = he_init(&m.layers, 42);
+        let x: Vec<f32> = (0..8).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.3).collect();
+        let y = vec![0, 2];
+        (m, p, x, y)
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let m = MlpModel { layers: vec![4, 5, 3], l2: 0.0 };
+        assert_eq!(m.param_count(), 4 * 5 + 5 + 5 * 3 + 3);
+        assert_eq!(he_init(&m.layers, 0).len(), m.param_count());
+    }
+
+    #[test]
+    fn uniform_logits_loss_is_ln_c() {
+        let m = MlpModel { layers: vec![3, 4], l2: 0.0 };
+        let p = vec![0.0; m.param_count()];
+        let x = vec![0.5; 6];
+        let y = vec![1, 3];
+        assert!((m.loss(&p, &x, &y) - (4f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (m, p, x, y) = toy();
+        let g = m.grad(&p, &x, &y);
+        let eps = 1e-2f32;
+        // Spot-check a spread of parameter indices (full fd is O(p²)).
+        for j in (0..p.len()).step_by(3) {
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let lp = m.loss(&pp, &x, &y);
+            pp[j] -= 2.0 * eps;
+            let lm = m.loss(&pp, &x, &y);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[j]).abs() < 5e-3,
+                "param {j}: fd {fd} vs grad {}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let (m, mut p, x, y) = toy();
+        let l0 = m.loss(&p, &x, &y);
+        for _ in 0..200 {
+            let g = m.grad(&p, &x, &y);
+            for (pi, gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.1 * gi;
+            }
+        }
+        let l1 = m.loss(&p, &x, &y);
+        assert!(l1 < l0 * 0.5, "{l0} -> {l1}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Model abstractions + a pure-rust reference engine.
+//!
+//! The coordinator drives training through the [`Engine`] trait so the same
+//! Algorithm-1 loop runs on either backend:
+//!
+//! * [`crate::runtime::PjrtEngine`] — the production path: AOT-lowered
+//!   JAX/Pallas HLO executed via PJRT (python never runs).
+//! * [`RustEngine`] (here) — a dependency-free reimplementation of the
+//!   logreg/MLP forward+backward used as a numerical oracle in tests, for
+//!   proptest (no PJRT startup cost), and as a fallback engine.
+//!
+//! Both engines share batch RNG and quantization codecs, so for equal
+//! seeds they follow the same sample paths up to f32 round-off.
+
+pub mod logreg;
+pub mod mlp;
+
+/// Structural description of a model variant (mirrors `python/compile/model.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelKind {
+    /// l2-regularized binary logistic regression (strongly convex).
+    LogReg { d: usize, l2: f32 },
+    /// ReLU MLP with softmax cross-entropy; `layers = [d_in, ..., classes]`.
+    Mlp { layers: Vec<usize>, l2: f32 },
+    /// Tiny GPT (PJRT engine only).
+    Transformer { vocab: usize, seq: usize, d_model: usize, n_layers: usize },
+}
+
+impl ModelKind {
+    /// Total flat parameter count `p`.
+    pub fn param_count(&self) -> usize {
+        match self {
+            ModelKind::LogReg { d, .. } => d + 1,
+            ModelKind::Mlp { layers, .. } => layers
+                .windows(2)
+                .map(|w| w[0] * w[1] + w[1])
+                .sum(),
+            ModelKind::Transformer { vocab, seq, d_model, n_layers } => {
+                let d = *d_model;
+                let f = 4 * d;
+                let per = 4 * d * d + 4 * d + d * f + f + f * d + d + 4 * d;
+                vocab * d + seq * d + n_layers * per + 2 * d + d * vocab + vocab
+            }
+        }
+    }
+
+    /// Input feature dimension per sample (seq length for the LM).
+    pub fn d_in(&self) -> usize {
+        match self {
+            ModelKind::LogReg { d, .. } => *d,
+            ModelKind::Mlp { layers, .. } => layers[0],
+            ModelKind::Transformer { seq, .. } => *seq,
+        }
+    }
+
+    /// Whether labels are f32 (binary) or i32 (classes / tokens).
+    pub fn float_labels(&self) -> bool {
+        matches!(self, ModelKind::LogReg { .. })
+    }
+}
+
+/// A minibatch of labels, borrowing from the dataset gather buffers.
+#[derive(Debug, Clone, Copy)]
+pub enum LabelBatch<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl LabelBatch<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            LabelBatch::F32(v) => v.len(),
+            LabelBatch::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Training backend: everything the FedPAQ loop needs from a model.
+pub trait Engine {
+    /// Model structure this engine is serving.
+    fn kind(&self) -> &ModelKind;
+
+    /// Flat parameter count.
+    fn param_count(&self) -> usize {
+        self.kind().param_count()
+    }
+
+    /// Minibatch size the step program was compiled for.
+    fn batch(&self) -> usize;
+
+    /// Initial parameter vector (deterministic; identical across engines).
+    fn init_params(&mut self) -> crate::Result<Vec<f32>>;
+
+    /// One SGD step on a `batch()`-sized minibatch; returns new params.
+    fn sgd_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+        lr: f32,
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Training loss on an eval slab of exactly `eval_n()` examples.
+    fn eval_loss(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<f32>;
+
+    /// Eval-slab size the loss program was compiled for.
+    fn eval_n(&self) -> usize;
+
+    /// Run `lrs.len()` chained local SGD steps (Algorithm 1 lines 6–10).
+    ///
+    /// `xs` holds the τ minibatches back-to-back (`τ·B·d_in` floats) and
+    /// `ys` the matching labels. The default implementation loops
+    /// [`Engine::sgd_step`] on the host; `PjrtEngine` overrides it to keep
+    /// the parameters on-device across all τ executions.
+    fn local_sgd(
+        &mut self,
+        params: &[f32],
+        xs: &[f32],
+        ys: LabelBatch<'_>,
+        lrs: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let tau = lrs.len();
+        let b = self.batch();
+        let d = self.kind().d_in();
+        anyhow::ensure!(xs.len() == tau * b * d, "xs: {} != {tau}x{b}x{d}", xs.len());
+        let mut p = params.to_vec();
+        for (t, &lr) in lrs.iter().enumerate() {
+            let x = &xs[t * b * d..(t + 1) * b * d];
+            p = match ys {
+                LabelBatch::F32(v) => {
+                    let per = v.len() / tau;
+                    self.sgd_step(&p, x, LabelBatch::F32(&v[t * per..(t + 1) * per]), lr)?
+                }
+                LabelBatch::I32(v) => {
+                    let per = v.len() / tau;
+                    self.sgd_step(&p, x, LabelBatch::I32(&v[t * per..(t + 1) * per]), lr)?
+                }
+            };
+        }
+        Ok(p)
+    }
+
+    /// Loss evaluation where `token` identifies an immutable eval slab, so
+    /// engines may cache the uploaded tensors across rounds.
+    fn eval_loss_token(
+        &mut self,
+        params: &[f32],
+        _token: u64,
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<f32> {
+        self.eval_loss(params, x, y)
+    }
+
+    /// Full-slab gradient, if this engine exports one (theory checks).
+    fn grad(
+        &mut self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: LabelBatch<'_>,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::bail!("engine does not export a gradient program")
+    }
+}
+
+pub use logreg::LogRegModel;
+pub use mlp::MlpModel;
+
+/// Pure-rust engine over [`LogRegModel`] / [`MlpModel`].
+#[derive(Debug, Clone)]
+pub struct RustEngine {
+    kind: ModelKind,
+    batch: usize,
+    eval_n: usize,
+    seed: u64,
+}
+
+impl RustEngine {
+    pub fn new(kind: ModelKind, batch: usize, eval_n: usize) -> crate::Result<Self> {
+        if matches!(kind, ModelKind::Transformer { .. }) {
+            anyhow::bail!("RustEngine does not implement the transformer; use PjrtEngine");
+        }
+        Ok(Self { kind, batch, eval_n, seed: 0 })
+    }
+}
+
+impl Engine for RustEngine {
+    fn kind(&self) -> &ModelKind {
+        &self.kind
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_n(&self) -> usize {
+        self.eval_n
+    }
+
+    fn init_params(&mut self) -> crate::Result<Vec<f32>> {
+        match &self.kind {
+            ModelKind::LogReg { .. } => Ok(vec![0.0; self.kind.param_count()]),
+            ModelKind::Mlp { layers, .. } => Ok(mlp::he_init(layers, self.seed)),
+            _ => unreachable!(),
+        }
+    }
+
+    fn sgd_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+        lr: f32,
+    ) -> crate::Result<Vec<f32>> {
+        let mut out = params.to_vec();
+        match (&self.kind, y) {
+            (ModelKind::LogReg { d, l2 }, LabelBatch::F32(y)) => {
+                let m = LogRegModel { d: *d, l2: *l2 };
+                let g = m.grad(params, x, y);
+                for (p, gi) in out.iter_mut().zip(g) {
+                    *p -= lr * gi;
+                }
+            }
+            (ModelKind::Mlp { layers, l2 }, LabelBatch::I32(y)) => {
+                let m = MlpModel { layers: layers.clone(), l2: *l2 };
+                let g = m.grad(params, x, y);
+                for (p, gi) in out.iter_mut().zip(g) {
+                    *p -= lr * gi;
+                }
+            }
+            _ => anyhow::bail!("label type does not match model kind"),
+        }
+        Ok(out)
+    }
+
+    fn eval_loss(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<f32> {
+        match (&self.kind, y) {
+            (ModelKind::LogReg { d, l2 }, LabelBatch::F32(y)) => {
+                Ok(LogRegModel { d: *d, l2: *l2 }.loss(params, x, y))
+            }
+            (ModelKind::Mlp { layers, l2 }, LabelBatch::I32(y)) => {
+                Ok(MlpModel { layers: layers.clone(), l2: *l2 }.loss(params, x, y))
+            }
+            _ => anyhow::bail!("label type does not match model kind"),
+        }
+    }
+
+    fn grad(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<Vec<f32>> {
+        match (&self.kind, y) {
+            (ModelKind::LogReg { d, l2 }, LabelBatch::F32(y)) => {
+                Ok(LogRegModel { d: *d, l2: *l2 }.grad(params, x, y))
+            }
+            (ModelKind::Mlp { layers, l2 }, LabelBatch::I32(y)) => {
+                Ok(MlpModel { layers: layers.clone(), l2: *l2 }.grad(params, x, y))
+            }
+            _ => anyhow::bail!("label type does not match model kind"),
+        }
+    }
+}

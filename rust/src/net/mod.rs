@@ -1,0 +1,28 @@
+//! Real distributed mode: a TCP leader/worker runtime for FedPAQ.
+//!
+//! The simulation engine ([`crate::coordinator::Server`]) models time; this
+//! module actually *distributes* the protocol across processes, with the
+//! exact same codecs and RNG streams, so the aggregated models match the
+//! sim bit-for-bit for equal configs/seeds (modulo float summation order,
+//! which we fix by aggregating uploads in node order).
+//!
+//! Protocol (length-prefixed hand-rolled binary frames over TCP, see [`proto`]):
+//!
+//! ```text
+//! worker -> leader   Join
+//! leader -> worker   Setup { cfg }           once, after all workers join
+//! leader -> worker   Work { round, node, params, lrs }   r msgs per round
+//! worker -> leader   Update { round, node, enc }
+//! leader -> worker   Shutdown
+//! ```
+//!
+//! Each worker impersonates the *virtual nodes* assigned to it (the paper's
+//! `n` is decoupled from the number of worker processes), regenerates its
+//! shard locally from the seeded config, and never sees other shards.
+
+pub mod leader;
+pub mod proto;
+pub mod worker;
+
+pub use leader::run_leader;
+pub use worker::run_worker;

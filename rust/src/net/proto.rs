@@ -1,0 +1,393 @@
+//! Wire protocol: u32-LE length prefix + a hand-rolled binary codec
+//! (no serde in this environment — every message knows how to write and
+//! read itself; layouts are versioned by a magic byte per variant).
+//!
+//! Layout conventions: little-endian throughout; `str` = u32 len + UTF-8;
+//! `vec<T>` = u64 len + elements; f32 slices are bulk-copied.
+
+use crate::config::ExperimentConfig;
+use crate::quant::{bitstream::BitBuf, Coding, Encoded, Quantizer};
+use std::io::{Read, Write};
+
+/// Hard cap on frame size (a full-precision 248K-param upload is ~1 MiB;
+/// generous headroom for bigger models).
+pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+/// Leader → worker messages.
+#[derive(Debug, Clone)]
+pub enum ToWorker {
+    /// World description; the worker builds its engine + data from this.
+    Setup { cfg: ExperimentConfig },
+    /// Run virtual node `node` for round `round` from `params`.
+    Work { round: u64, node: u64, params: Vec<f32>, lrs: Vec<f32> },
+    /// Clean shutdown.
+    Shutdown,
+}
+
+/// Worker → leader messages.
+#[derive(Debug, Clone)]
+pub enum ToLeader {
+    /// Initial handshake.
+    Join,
+    /// Setup acknowledged (engine compiled, data generated).
+    Ready,
+    /// One node's quantized upload.
+    Update { round: u64, node: u64, enc: Encoded },
+}
+
+// ---------------- primitive writers/readers ----------------
+
+pub struct Buf(pub Vec<u8>);
+
+impl Buf {
+    fn new() -> Self {
+        Buf(Vec::new())
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[allow(dead_code)]
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+}
+
+pub struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(self.i + n <= self.b.len(), "truncated frame");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[allow(dead_code)]
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n * 4 <= self.b.len(), "oversized f32 vec");
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn u64s(&mut self) -> crate::Result<Vec<u64>> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(n * 8 <= self.b.len(), "oversized u64 vec");
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+}
+
+// ---------------- domain codecs ----------------
+
+fn write_quantizer(b: &mut Buf, q: &Quantizer) {
+    match q {
+        Quantizer::Identity => b.u8(0),
+        Quantizer::Qsgd { s, coding } => {
+            b.u8(1);
+            b.u32(*s);
+            b.u8(match coding {
+                Coding::Naive => 0,
+                Coding::Elias => 1,
+            });
+        }
+    }
+}
+
+fn read_quantizer(c: &mut Cursor<'_>) -> crate::Result<Quantizer> {
+    Ok(match c.u8()? {
+        0 => Quantizer::Identity,
+        1 => {
+            let s = c.u32()?;
+            let coding = match c.u8()? {
+                0 => Coding::Naive,
+                1 => Coding::Elias,
+                x => anyhow::bail!("bad coding tag {x}"),
+            };
+            Quantizer::Qsgd { s, coding }
+        }
+        x => anyhow::bail!("bad quantizer tag {x}"),
+    })
+}
+
+fn write_encoded(b: &mut Buf, e: &Encoded) {
+    write_quantizer(b, &e.quantizer);
+    b.u64(e.p as u64);
+    b.u64(e.buf.len_bits());
+    b.u64s(e.buf.words());
+}
+
+fn read_encoded(c: &mut Cursor<'_>) -> crate::Result<Encoded> {
+    let quantizer = read_quantizer(c)?;
+    let p = c.u64()? as usize;
+    let len = c.u64()?;
+    let words = c.u64s()?;
+    Ok(Encoded { buf: BitBuf::from_parts(words, len)?, p, quantizer })
+}
+
+impl ToWorker {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Buf::new();
+        match self {
+            ToWorker::Setup { cfg } => {
+                b.u8(0);
+                b.string(&cfg.to_json().to_string_pretty());
+            }
+            ToWorker::Work { round, node, params, lrs } => {
+                b.u8(1);
+                b.u64(*round);
+                b.u64(*node);
+                b.f32s(params);
+                b.f32s(lrs);
+            }
+            ToWorker::Shutdown => b.u8(2),
+        }
+        b.0
+    }
+
+    pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
+        let mut c = Cursor::new(bytes);
+        let msg = match c.u8()? {
+            0 => {
+                let text = c.string()?;
+                let cfg =
+                    ExperimentConfig::from_json(&crate::util::json::Json::parse(&text)?)?;
+                ToWorker::Setup { cfg }
+            }
+            1 => ToWorker::Work {
+                round: c.u64()?,
+                node: c.u64()?,
+                params: c.f32s()?,
+                lrs: c.f32s()?,
+            },
+            2 => ToWorker::Shutdown,
+            x => anyhow::bail!("bad ToWorker tag {x}"),
+        };
+        anyhow::ensure!(c.i == bytes.len(), "trailing bytes in frame");
+        Ok(msg)
+    }
+}
+
+impl ToLeader {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Buf::new();
+        match self {
+            ToLeader::Join => b.u8(0),
+            ToLeader::Ready => b.u8(1),
+            ToLeader::Update { round, node, enc } => {
+                b.u8(2);
+                b.u64(*round);
+                b.u64(*node);
+                write_encoded(&mut b, enc);
+            }
+        }
+        b.0
+    }
+
+    pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
+        let mut c = Cursor::new(bytes);
+        let msg = match c.u8()? {
+            0 => ToLeader::Join,
+            1 => ToLeader::Ready,
+            2 => ToLeader::Update {
+                round: c.u64()?,
+                node: c.u64()?,
+                enc: read_encoded(&mut c)?,
+            },
+            x => anyhow::bail!("bad ToLeader tag {x}"),
+        };
+        anyhow::ensure!(c.i == bytes.len(), "trailing bytes in frame");
+        Ok(msg)
+    }
+}
+
+// ---------------- framing over blocking streams ----------------
+
+/// Write one length-prefixed frame.
+pub fn send_frame<W: Write>(w: &mut W, payload: &[u8]) -> crate::Result<()> {
+    anyhow::ensure!(payload.len() as u64 <= MAX_FRAME as u64, "frame too large");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn recv_frame<R: Read>(r: &mut R) -> crate::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    anyhow::ensure!(len <= MAX_FRAME, "oversized frame {len}");
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+pub fn send_to_worker<W: Write>(w: &mut W, msg: &ToWorker) -> crate::Result<()> {
+    send_frame(w, &msg.encode())
+}
+
+pub fn recv_to_worker<R: Read>(r: &mut R) -> crate::Result<ToWorker> {
+    ToWorker::decode(&recv_frame(r)?)
+}
+
+pub fn send_to_leader<W: Write>(w: &mut W, msg: &ToLeader) -> crate::Result<()> {
+    send_frame(w, &msg.encode())
+}
+
+pub fn recv_to_leader<R: Read>(r: &mut R) -> crate::Result<ToLeader> {
+    ToLeader::decode(&recv_frame(r)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn work_roundtrip() {
+        let msg = ToWorker::Work {
+            round: 3,
+            node: 17,
+            params: vec![1.0, -2.5, 3.25],
+            lrs: vec![0.1, 0.1],
+        };
+        match ToWorker::decode(&msg.encode()).unwrap() {
+            ToWorker::Work { round, node, params, lrs } => {
+                assert_eq!((round, node), (3, 17));
+                assert_eq!(params, vec![1.0, -2.5, 3.25]);
+                assert_eq!(lrs, vec![0.1, 0.1]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn setup_roundtrip_carries_config() {
+        let cfg = ExperimentConfig::fig1_nn_base().with_tau(7);
+        let msg = ToWorker::Setup { cfg: cfg.clone() };
+        match ToWorker::decode(&msg.encode()).unwrap() {
+            ToWorker::Setup { cfg: back } => assert_eq!(cfg, back),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn update_roundtrip_preserves_bits() {
+        let q = Quantizer::qsgd(3);
+        let x: Vec<f32> = (0..300).map(|i| (i as f32 * 0.7).sin()).collect();
+        let enc = q.encode(&x, &mut Rng::seed_from_u64(1));
+        let dec_before = q.decode(&enc);
+        let msg = ToLeader::Update { round: 9, node: 4, enc };
+        match ToLeader::decode(&msg.encode()).unwrap() {
+            ToLeader::Update { round, node, enc } => {
+                assert_eq!((round, node), (9, 4));
+                assert_eq!(q.decode(&enc), dec_before);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn framing_over_a_pipe() {
+        // In-memory "stream" via Vec<u8>.
+        let mut wire = Vec::new();
+        for i in 0..5u64 {
+            send_frame(&mut wire, &ToLeader::Update {
+                round: i,
+                node: i * 2,
+                enc: Quantizer::qsgd(1).encode(&[0.5; 16], &mut Rng::seed_from_u64(i)),
+            }
+            .encode())
+            .unwrap();
+        }
+        let mut rd = &wire[..];
+        for i in 0..5u64 {
+            match recv_to_leader(&mut rd).unwrap() {
+                ToLeader::Update { round, node, .. } => {
+                    assert_eq!(round, i);
+                    assert_eq!(node, i * 2);
+                }
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_garbage() {
+        let mut bytes = ToLeader::Join.encode();
+        bytes.push(0xff);
+        assert!(ToLeader::decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Worker process: connects to the leader, builds its world from the
+//! `Setup` config, then services `Work` requests until `Shutdown`.
+//! Blocking I/O — each worker is its own OS process with its own PJRT
+//! client, so there is nothing to multiplex inside one worker.
+
+use super::proto::{recv_to_worker, send_to_leader, ToLeader, ToWorker};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::coordinator::local::{self, GatherBufs};
+use crate::data::{BatchSampler, FederatedDataset, Partition};
+use crate::figures::zoo_kind;
+use crate::model::{Engine, RustEngine};
+use std::net::TcpStream;
+use std::path::Path;
+
+/// Build the engine a worker (or leader) uses for `cfg`.
+pub fn build_engine(
+    cfg: &ExperimentConfig,
+    artifacts: &Path,
+) -> crate::Result<Box<dyn Engine>> {
+    Ok(match cfg.engine {
+        EngineKind::Pjrt => {
+            let client = crate::runtime::cpu_client()?;
+            Box::new(crate::runtime::PjrtEngine::load(&client, artifacts, &cfg.model)?)
+        }
+        EngineKind::Rust => {
+            let (kind, batch, eval_n) = zoo_kind(&cfg.model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.model))?;
+            Box::new(RustEngine::new(kind, batch, eval_n)?)
+        }
+    })
+}
+
+/// Worker main loop. Returns after a clean `Shutdown`.
+pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    stream.set_nodelay(true)?;
+    let mut rd = stream.try_clone()?;
+    let mut wr = stream;
+    send_to_leader(&mut wr, &ToLeader::Join)?;
+
+    // World state, built on Setup.
+    let mut world: Option<(
+        ExperimentConfig,
+        Box<dyn Engine>,
+        FederatedDataset,
+        Partition,
+        BatchSampler,
+    )> = None;
+    let mut bufs = GatherBufs::default();
+
+    loop {
+        let msg = recv_to_worker(&mut rd)?;
+        match msg {
+            ToWorker::Setup { cfg } => {
+                let engine = build_engine(&cfg, artifacts)?;
+                let n_samples = cfg.n_nodes * cfg.per_node;
+                let data = FederatedDataset::generate(cfg.dataset, cfg.seed, n_samples);
+                let partition =
+                    Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);
+                let sampler = BatchSampler::new(cfg.seed, engine.batch());
+                world = Some((cfg, engine, data, partition, sampler));
+                send_to_leader(&mut wr, &ToLeader::Ready)?;
+            }
+            ToWorker::Work { round, node, params, lrs } => {
+                let (cfg, engine, data, partition, sampler) = world
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("Work before Setup"))?;
+                let enc = local::node_round(
+                    cfg,
+                    engine.as_mut(),
+                    data,
+                    partition.shard(node as usize),
+                    sampler,
+                    node as usize,
+                    round as usize,
+                    &params,
+                    &lrs,
+                    &mut bufs,
+                )?;
+                send_to_leader(&mut wr, &ToLeader::Update { round, node, enc })?;
+            }
+            ToWorker::Shutdown => return Ok(()),
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Learning-rate schedules used by the paper's two theorems.
+//!
+//! * Theorem 1 (strongly convex): `η_{k} = (4/μ) / (kτ + 1)` — decaying
+//!   per *round* `k` with period `τ`.
+//! * Theorem 2 (non-convex): constant `η = 1/(L√T)`.
+//! * Experiments (§5): a constant stepsize whose coefficient is
+//!   "finely tuned" — we expose `Const` for that.
+
+/// Stepsize schedule `η_{k,t}` (paper uses per-round schedules, so `t` is
+/// unused but kept in the signature for generality).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant stepsize.
+    Const { eta: f32 },
+    /// Theorem-1 decay: `η_k = (4/μ)/(kτ + 1)`, capped at `eta_max` to
+    /// respect the `k ≥ k0` warm-up condition without simulating k0 rounds.
+    PolyDecay { mu: f32, tau: usize, eta_max: f32 },
+    /// Theorem-2 constant: `η = 1/(L√T)`.
+    NonConvex { l_smooth: f32, t_total: usize },
+}
+
+impl LrSchedule {
+    /// Stepsize for local iteration `t` of round `k`.
+    pub fn lr(&self, k: usize, _t: usize) -> f32 {
+        match *self {
+            LrSchedule::Const { eta } => eta,
+            LrSchedule::PolyDecay { mu, tau, eta_max } => {
+                let eta = (4.0 / mu) / ((k * tau + 1) as f32);
+                eta.min(eta_max)
+            }
+            LrSchedule::NonConvex { l_smooth, t_total } => {
+                1.0 / (l_smooth * (t_total as f32).sqrt())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_const() {
+        let s = LrSchedule::Const { eta: 0.3 };
+        assert_eq!(s.lr(0, 0), 0.3);
+        assert_eq!(s.lr(99, 5), 0.3);
+    }
+
+    #[test]
+    fn poly_decays_like_1_over_ktau() {
+        let s = LrSchedule::PolyDecay { mu: 2.0, tau: 5, eta_max: 10.0 };
+        // 4/μ = 2; at k=1: 2/6; at k=3: 2/16.
+        assert!((s.lr(1, 0) - 2.0 / 6.0).abs() < 1e-7);
+        assert!((s.lr(3, 0) - 2.0 / 16.0).abs() < 1e-7);
+        // Cap applies at k=0: 4/μ/1 = 2 > eta_max? No (10) — so 2.0.
+        assert!((s.lr(0, 0) - 2.0).abs() < 1e-7);
+        let capped = LrSchedule::PolyDecay { mu: 2.0, tau: 5, eta_max: 0.5 };
+        assert_eq!(capped.lr(0, 0), 0.5);
+    }
+
+    #[test]
+    fn nonconvex_matches_formula() {
+        let s = LrSchedule::NonConvex { l_smooth: 4.0, t_total: 100 };
+        assert!((s.lr(7, 3) - 1.0 / 40.0).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,182 @@
+//! Bit-level writer/reader used by the quantizer wire codecs.
+//!
+//! The FedPAQ evaluation charges communication time by the *exact* number
+//! of uploaded bits (`r * |Q(p,s)| / BW`), so the codec must be bit-exact,
+//! not an estimate. Bits are packed LSB-first into a `Vec<u64>`.
+
+/// Append-only bit sink.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    /// Number of valid bits in the stream.
+    len: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bits written so far.
+    pub fn len_bits(&self) -> u64 {
+        self.len
+    }
+
+    /// Write the low `n` bits of `v` (LSB-first), `n <= 64`.
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+        let bit_off = (self.len % 64) as u32;
+        let word_idx = (self.len / 64) as usize;
+        if word_idx >= self.words.len() {
+            self.words.push(0);
+        }
+        self.words[word_idx] |= v << bit_off;
+        if bit_off + n > 64 {
+            self.words.push(v >> (64 - bit_off));
+        }
+        self.len += n as u64;
+    }
+
+    /// Write a single bit.
+    pub fn write_bit(&mut self, b: bool) {
+        self.write_bits(b as u64, 1);
+    }
+
+    /// Write a full f32 (32 bits, its IEEE-754 pattern).
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    /// Finish and expose the packed words (plus the bit length).
+    pub fn finish(self) -> BitBuf {
+        BitBuf { words: self.words, len: self.len }
+    }
+}
+
+/// An immutable packed bit buffer (what actually travels on the wire).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitBuf {
+    words: Vec<u64>,
+    len: u64,
+}
+
+impl BitBuf {
+    pub fn len_bits(&self) -> u64 {
+        self.len
+    }
+
+    /// The packed words (for wire serialization).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from wire parts; validates the word count against `len`.
+    pub fn from_parts(words: Vec<u64>, len: u64) -> crate::Result<Self> {
+        anyhow::ensure!(
+            words.len() as u64 == len.div_ceil(64),
+            "bitbuf length mismatch: {} words for {len} bits",
+            words.len()
+        );
+        Ok(BitBuf { words, len })
+    }
+
+    /// Wire size rounded up to whole bytes (what a socket would carry).
+    pub fn len_bytes(&self) -> usize {
+        self.len.div_ceil(8) as usize
+    }
+
+    pub fn reader(&self) -> BitReader<'_> {
+        BitReader { buf: self, pos: 0 }
+    }
+}
+
+/// Sequential bit reader over a [`BitBuf`].
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a BitBuf,
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    /// Bits remaining.
+    pub fn remaining(&self) -> u64 {
+        self.buf.len - self.pos
+    }
+
+    /// Read the next `n` bits (LSB-first), `n <= 64`.
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        debug_assert!(self.pos + n as u64 <= self.buf.len, "bitstream underrun");
+        if n == 0 {
+            return 0;
+        }
+        let bit_off = (self.pos % 64) as u32;
+        let word_idx = (self.pos / 64) as usize;
+        let mut v = self.buf.words[word_idx] >> bit_off;
+        if bit_off + n > 64 {
+            v |= self.buf.words[word_idx + 1] << (64 - bit_off);
+        }
+        self.pos += n as u64;
+        if n == 64 {
+            v
+        } else {
+            v & ((1u64 << n) - 1)
+        }
+    }
+
+    pub fn read_bit(&mut self) -> bool {
+        self.read_bits(1) != 0
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_f32(core::f32::consts::PI);
+        w.write_bit(true);
+        w.write_bits(u64::MAX, 64);
+        w.write_bits(0x1234, 16);
+        let buf = w.finish();
+        assert_eq!(buf.len_bits(), 3 + 32 + 1 + 64 + 16);
+        let mut r = buf.reader();
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_f32(), core::f32::consts::PI);
+        assert!(r.read_bit());
+        assert_eq!(r.read_bits(64), u64::MAX);
+        assert_eq!(r.read_bits(16), 0x1234);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.write_bits(i, 7);
+        }
+        let buf = w.finish();
+        let mut r = buf.reader();
+        for i in 0..100u64 {
+            assert_eq!(r.read_bits(7), i & 0x7f);
+        }
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        let buf = BitWriter::new().finish();
+        assert_eq!(buf.len_bits(), 0);
+        assert_eq!(buf.len_bytes(), 0);
+    }
+}

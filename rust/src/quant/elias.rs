@@ -1,0 +1,106 @@
+//! Elias-ω (omega) universal integer coding.
+//!
+//! QSGD (Alistarh et al., 2017 — the quantizer FedPAQ's Example 1 is taken
+//! from) encodes the integer quantization levels with Elias recursive
+//! coding, which is what makes the `s = √p` regime pay `O(√p log p)` bits.
+//! We implement Elias-ω for positive integers (level 0 is mapped to 1,
+//! i.e. `encode(v+1)`), matching the QSGD paper's `Elias(k)` usage.
+
+use super::bitstream::{BitReader, BitWriter};
+
+/// Append the Elias-ω code of `n >= 1` to the writer.
+///
+/// Encoding (classic recursive construction): start with a terminal `0`;
+/// while `n > 1`, prepend the binary representation of `n` and set
+/// `n = floor(log2 n)`.
+pub fn encode_omega(w: &mut BitWriter, mut n: u64) {
+    assert!(n >= 1, "Elias-omega encodes positive integers");
+    // Build groups back-to-front, then emit front-to-back.
+    let mut groups: Vec<(u64, u32)> = Vec::new();
+    while n > 1 {
+        let width = 64 - n.leading_zeros(); // bits in binary repr of n
+        groups.push((n, width));
+        n = (width - 1) as u64;
+    }
+    for &(v, width) in groups.iter().rev() {
+        // MSB-first emission of the binary representation.
+        for i in (0..width).rev() {
+            w.write_bit((v >> i) & 1 == 1);
+        }
+    }
+    w.write_bit(false); // terminal 0
+}
+
+/// Decode one Elias-ω integer.
+pub fn decode_omega(r: &mut BitReader<'_>) -> u64 {
+    let mut n: u64 = 1;
+    loop {
+        if !r.read_bit() {
+            return n;
+        }
+        // The bit we just read is the leading 1 of an (n+1)-bit group.
+        let mut v: u64 = 1;
+        for _ in 0..n {
+            v = (v << 1) | r.read_bit() as u64;
+        }
+        n = v;
+    }
+}
+
+/// Bit length of the Elias-ω code of `n` (without encoding).
+pub fn omega_len(mut n: u64) -> u64 {
+    assert!(n >= 1);
+    let mut bits = 1; // terminal 0
+    while n > 1 {
+        let width = (64 - n.leading_zeros()) as u64;
+        bits += width;
+        n = width - 1;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small() {
+        let mut w = BitWriter::new();
+        for n in 1..=300u64 {
+            encode_omega(&mut w, n);
+        }
+        let buf = w.finish();
+        let mut r = buf.reader();
+        for n in 1..=300u64 {
+            assert_eq!(decode_omega(&mut r), n, "value {n}");
+        }
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_large_and_lengths() {
+        let vals = [1u64, 2, 3, 7, 8, 100, 1_000, 65_536, u32::MAX as u64, 1 << 40];
+        let mut w = BitWriter::new();
+        let mut expect = 0;
+        for &v in &vals {
+            encode_omega(&mut w, v);
+            expect += omega_len(v);
+        }
+        let buf = w.finish();
+        assert_eq!(buf.len_bits(), expect);
+        let mut r = buf.reader();
+        for &v in &vals {
+            assert_eq!(decode_omega(&mut r), v);
+        }
+    }
+
+    #[test]
+    fn known_codes() {
+        // Classic table: 1 -> "0", 2 -> "10 0", 3 -> "11 0", 4 -> "10 100 0"
+        assert_eq!(omega_len(1), 1);
+        assert_eq!(omega_len(2), 3);
+        assert_eq!(omega_len(3), 3);
+        assert_eq!(omega_len(4), 6);
+        assert_eq!(omega_len(16), 11);
+    }
+}

@@ -1,0 +1,185 @@
+//! `artifacts/manifest.json` — what the AOT pass compiled, so the runtime
+//! can validate buffers against the baked shapes before executing.
+//! Parsed with the in-tree JSON module (`util::json`).
+
+use crate::model::ModelKind;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Top-level manifest written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Minibatch size every `_step` program was compiled for.
+    pub batch: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub quantizer: Option<QuantEntry>,
+}
+
+/// One model's compiled metadata.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub kind: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub eval_n: usize,
+    pub d_in: Option<usize>,
+    pub n_classes: Option<usize>,
+    pub layers: Option<Vec<usize>>,
+    pub l2: Option<f32>,
+    pub vocab: Option<usize>,
+    pub seq: Option<usize>,
+    pub d_model: Option<usize>,
+    pub n_layers: Option<usize>,
+    pub programs: Vec<String>,
+}
+
+/// The standalone Pallas-quantizer artifact.
+#[derive(Debug, Clone)]
+pub struct QuantEntry {
+    pub name: String,
+    pub p: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let j = Json::parse(text)?;
+        let batch = j.req_usize("batch")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models is not an object"))?
+        {
+            models.insert(name.clone(), ModelEntry::from_json(m)?);
+        }
+        let quantizer = match j.get("quantizer") {
+            Some(q) if *q != Json::Null => Some(QuantEntry {
+                name: q.req_str("name")?.to_string(),
+                p: q.req_usize("p")?,
+            }),
+            _ => None,
+        };
+        Ok(Manifest { batch, models, quantizer })
+    }
+}
+
+impl ModelEntry {
+    fn from_json(m: &Json) -> crate::Result<Self> {
+        let opt_usize = |k: &str| m.get(k).and_then(Json::as_usize);
+        Ok(ModelEntry {
+            kind: m.req_str("kind")?.to_string(),
+            param_count: m.req_usize("param_count")?,
+            batch: m.req_usize("batch")?,
+            eval_n: m.req_usize("eval_n")?,
+            d_in: opt_usize("d_in"),
+            n_classes: opt_usize("n_classes"),
+            layers: m.get("layers").and_then(Json::as_arr).map(|a| {
+                a.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+            }),
+            l2: m.get("l2").and_then(Json::as_f64).map(|x| x as f32),
+            vocab: opt_usize("vocab"),
+            seq: opt_usize("seq"),
+            d_model: opt_usize("d_model"),
+            n_layers: opt_usize("n_layers"),
+            programs: m
+                .get("programs")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Structural [`ModelKind`] for this entry; cross-checks param counts.
+    pub fn to_kind(&self) -> crate::Result<ModelKind> {
+        let kind = match self.kind.as_str() {
+            "logreg" => ModelKind::LogReg {
+                d: self.d_in.ok_or_else(|| anyhow::anyhow!("logreg missing d_in"))?,
+                l2: self.l2.unwrap_or(0.0),
+            },
+            "mlp" => ModelKind::Mlp {
+                layers: self
+                    .layers
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("mlp missing layers"))?,
+                l2: self.l2.unwrap_or(0.0),
+            },
+            "transformer" => ModelKind::Transformer {
+                vocab: self.vocab.ok_or_else(|| anyhow::anyhow!("missing vocab"))?,
+                seq: self.seq.ok_or_else(|| anyhow::anyhow!("missing seq"))?,
+                d_model: self.d_model.ok_or_else(|| anyhow::anyhow!("missing d_model"))?,
+                n_layers: self.n_layers.ok_or_else(|| anyhow::anyhow!("missing n_layers"))?,
+            },
+            other => anyhow::bail!("unknown model kind {other:?}"),
+        };
+        anyhow::ensure!(
+            kind.param_count() == self.param_count,
+            "manifest param_count {} != computed {} — manifest/runtime drift",
+            self.param_count,
+            kind.param_count()
+        );
+        Ok(kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_inline_manifest() {
+        let text = r#"{
+          "batch": 10,
+          "models": {
+            "logreg": {"kind": "logreg", "param_count": 785, "batch": 10,
+                       "eval_n": 10000, "d_in": 784, "n_classes": 2,
+                       "l2": 0.05, "label_dtype": "f32",
+                       "programs": ["logreg_step", "logreg_loss"]},
+            "mlp": {"kind": "mlp", "param_count": 49, "batch": 10,
+                    "eval_n": 16, "d_in": 4, "layers": [4, 5, 4], "l2": 0.0}
+          },
+          "quantizer": {"name": "quantize4096", "p": 4096}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.batch, 10);
+        let lr = &m.models["logreg"];
+        assert_eq!(lr.to_kind().unwrap().param_count(), 785);
+        assert_eq!(lr.programs.len(), 2);
+        let mlp = &m.models["mlp"];
+        assert_eq!(mlp.to_kind().unwrap().param_count(), 4 * 5 + 5 + 5 * 4 + 4);
+        assert_eq!(m.quantizer.as_ref().unwrap().p, 4096);
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("logreg"));
+        for (name, entry) in &m.models {
+            let kind = entry.to_kind().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(kind.param_count(), entry.param_count, "{name}");
+        }
+    }
+
+    #[test]
+    fn kind_param_count_mismatch_rejected() {
+        let text = r#"{"batch": 10, "models": {"bad": {"kind": "logreg",
+          "param_count": 999, "batch": 10, "eval_n": 1, "d_in": 784, "l2": 0}}}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert!(m.models["bad"].to_kind().is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! PJRT runtime: load AOT-lowered HLO text and run it from the hot path.
+//!
+//! This wraps the `xla` crate (PJRT C API) exactly as the reference at
+//! `/opt/xla-example/load_hlo/`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! Perf-relevant design (see EXPERIMENTS.md §Perf):
+//!
+//! * every exported program has an **untupled** root, so an output buffer
+//!   feeds the next `execute_b` call directly — the τ local SGD steps of a
+//!   node chain on-device with zero host round-trips;
+//! * the eval slab (up to 2048×3072 f32 ≈ 24 MiB) is uploaded **once** per
+//!   run and reused across every round's loss evaluation;
+//! * executables are compiled once per process and cached per model.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelEntry};
+
+use crate::model::{Engine, LabelBatch, ModelKind};
+use std::path::{Path, PathBuf};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Shared PJRT client handle (the `xla` client is an `Rc` internally, so
+/// clones are cheap; it is deliberately `!Send` — keep it on one thread).
+pub fn cpu_client() -> crate::Result<PjRtClient> {
+    PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e}"))
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> crate::Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))
+}
+
+/// One model's compiled programs + metadata, implementing [`Engine`].
+pub struct PjrtEngine {
+    client: PjRtClient,
+    kind: ModelKind,
+    name: String,
+    batch: usize,
+    eval_n: usize,
+    step_exe: PjRtLoadedExecutable,
+    loss_exe: PjRtLoadedExecutable,
+    init_exe: PjRtLoadedExecutable,
+    grad_exe: Option<PjRtLoadedExecutable>,
+    /// Cached on-device eval slab `(x, y)`; filled by the first eval call
+    /// with a given slab (keyed by a caller-provided token).
+    eval_cache: Option<(u64, PjRtBuffer, PjRtBuffer)>,
+    /// Cached on-device learning-rate scalar (keyed by bit pattern) — the
+    /// schedule repeats the same lr across all nodes of a round, so this
+    /// saves one host->device transfer per local step (§Perf).
+    lr_cache: Option<(u32, PjRtBuffer)>,
+    /// Executions performed (for perf accounting).
+    pub exec_count: u64,
+}
+
+impl PjrtEngine {
+    /// Load + compile one model's artifacts from `dir`.
+    pub fn load(client: &PjRtClient, dir: &Path, model: &str) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let entry = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model {model} not in manifest"))?;
+        let kind = entry.to_kind()?;
+        let p = |suffix: &str| -> PathBuf { dir.join(format!("{model}_{suffix}.hlo.txt")) };
+        let step_exe = compile(client, &p("step"))?;
+        let loss_exe = compile(client, &p("loss"))?;
+        let init_exe = compile(client, &p("init"))?;
+        let grad_path = p("grad");
+        let grad_exe =
+            if grad_path.exists() { Some(compile(client, &grad_path)?) } else { None };
+        Ok(PjrtEngine {
+            client: client.clone(),
+            kind,
+            name: model.to_string(),
+            batch: entry.batch,
+            eval_n: entry.eval_n,
+            step_exe,
+            loss_exe,
+            init_exe,
+            grad_exe,
+            eval_cache: None,
+            lr_cache: None,
+            exec_count: 0,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Upload a feature batch; transformer inputs are token ids (i32).
+    fn x_buffer(&self, x: &[f32], rows: usize) -> crate::Result<PjRtBuffer> {
+        let d = self.kind.d_in();
+        anyhow::ensure!(x.len() == rows * d, "x: {} != {rows}x{d}", x.len());
+        let buf = match self.kind {
+            ModelKind::Transformer { .. } => {
+                let toks: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+                self.client.buffer_from_host_buffer(&toks, &[rows, d], None)
+            }
+            _ => self.client.buffer_from_host_buffer(x, &[rows, d], None),
+        };
+        buf.map_err(|e| anyhow::anyhow!("x upload: {e}"))
+    }
+
+    fn y_buffer(&self, y: LabelBatch<'_>, rows: usize) -> crate::Result<PjRtBuffer> {
+        let buf = match (y, &self.kind) {
+            (LabelBatch::F32(v), ModelKind::LogReg { .. }) => {
+                anyhow::ensure!(v.len() == rows, "y: {} != {rows}", v.len());
+                self.client.buffer_from_host_buffer(v, &[rows], None)
+            }
+            (LabelBatch::I32(v), ModelKind::Mlp { .. }) => {
+                anyhow::ensure!(v.len() == rows, "y: {} != {rows}", v.len());
+                self.client.buffer_from_host_buffer(v, &[rows], None)
+            }
+            (LabelBatch::I32(v), ModelKind::Transformer { seq, .. }) => {
+                anyhow::ensure!(v.len() == rows * seq, "y: {} != {rows}x{seq}", v.len());
+                self.client.buffer_from_host_buffer(v, &[rows, *seq], None)
+            }
+            _ => anyhow::bail!("label dtype does not match model kind"),
+        };
+        buf.map_err(|e| anyhow::anyhow!("y upload: {e}"))
+    }
+
+    fn params_buffer(&self, params: &[f32]) -> crate::Result<PjRtBuffer> {
+        anyhow::ensure!(
+            params.len() == self.kind.param_count(),
+            "params: {} != {}",
+            params.len(),
+            self.kind.param_count()
+        );
+        self.client
+            .buffer_from_host_buffer(params, &[params.len()], None)
+            .map_err(|e| anyhow::anyhow!("params upload: {e}"))
+    }
+
+    fn first_out(mut outs: Vec<Vec<PjRtBuffer>>) -> crate::Result<PjRtBuffer> {
+        Ok(outs
+            .pop()
+            .and_then(|mut v| {
+                v.truncate(1);
+                v.pop()
+            })
+            .ok_or_else(|| anyhow::anyhow!("executable returned no output"))?)
+    }
+
+    fn buf_to_vec(buf: &PjRtBuffer) -> crate::Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+
+    /// Run τ chained local SGD steps fully on-device. `xs`/`ys` hold the τ
+    /// gathered minibatches back-to-back; `lrs[t]` is the stepsize of step t.
+    pub fn local_sgd_chained(
+        &mut self,
+        params: &[f32],
+        xs: &[f32],
+        ys: LabelBatch<'_>,
+        lrs: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let b = self.batch;
+        let d = self.kind.d_in();
+        let tau = lrs.len();
+        anyhow::ensure!(xs.len() == tau * b * d, "xs len");
+        let mut pbuf = self.params_buffer(params)?;
+        for (t, &lr) in lrs.iter().enumerate() {
+            let xb = self.x_buffer(&xs[t * b * d..(t + 1) * b * d], b)?;
+            let yb = match ys {
+                LabelBatch::F32(v) => self.y_buffer(LabelBatch::F32(&v[t * b..(t + 1) * b]), b)?,
+                LabelBatch::I32(v) => {
+                    let per = v.len() / tau;
+                    self.y_buffer(LabelBatch::I32(&v[t * per..(t + 1) * per]), b)?
+                }
+            };
+            if self.lr_cache.as_ref().map(|c| c.0) != Some(lr.to_bits()) {
+                let lr_lit = Literal::scalar(lr);
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &lr_lit)
+                    .map_err(|e| anyhow::anyhow!("lr upload: {e}"))?;
+                self.lr_cache = Some((lr.to_bits(), buf));
+            }
+            let lr_buf = &self.lr_cache.as_ref().unwrap().1;
+            let outs = self
+                .step_exe
+                .execute_b(&[&pbuf, &xb, &yb, lr_buf])
+                .map_err(|e| anyhow::anyhow!("step exec: {e}"))?;
+            self.exec_count += 1;
+            pbuf = Self::first_out(outs)?;
+        }
+        Self::buf_to_vec(&pbuf)
+    }
+
+    /// Loss on a cached eval slab. `token` identifies the slab so repeated
+    /// calls skip the upload (pass a new token to invalidate).
+    pub fn eval_loss_cached(
+        &mut self,
+        params: &[f32],
+        token: u64,
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<f32> {
+        if self.eval_cache.as_ref().map(|c| c.0) != Some(token) {
+            let xb = self.x_buffer(x, self.eval_n)?;
+            let yb = self.y_buffer(y, self.eval_n)?;
+            self.eval_cache = Some((token, xb, yb));
+        }
+        let pbuf = self.params_buffer(params)?;
+        let (_, xb, yb) = self.eval_cache.as_ref().unwrap();
+        let outs = self
+            .loss_exe
+            .execute_b(&[&pbuf, xb, yb])
+            .map_err(|e| anyhow::anyhow!("loss exec: {e}"))?;
+        self.exec_count += 1;
+        let out = Self::first_out(outs)?;
+        let lit = out.to_literal_sync().map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        lit.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("scalar: {e}"))
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn kind(&self) -> &ModelKind {
+        &self.kind
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_n(&self) -> usize {
+        self.eval_n
+    }
+
+    fn init_params(&mut self) -> crate::Result<Vec<f32>> {
+        let outs = self
+            .init_exe
+            .execute::<Literal>(&[])
+            .map_err(|e| anyhow::anyhow!("init exec: {e}"))?;
+        self.exec_count += 1;
+        Self::buf_to_vec(&Self::first_out(outs)?)
+    }
+
+    fn sgd_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+        lr: f32,
+    ) -> crate::Result<Vec<f32>> {
+        self.local_sgd_chained(params, x, y, &[lr])
+    }
+
+    fn eval_loss(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<f32> {
+        // Un-cached path (distinct slabs): hash-free token 0 + invalidate.
+        self.eval_cache = None;
+        self.eval_loss_cached(params, 0, x, y)
+    }
+
+    fn local_sgd(
+        &mut self,
+        params: &[f32],
+        xs: &[f32],
+        ys: LabelBatch<'_>,
+        lrs: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        self.local_sgd_chained(params, xs, ys, lrs)
+    }
+
+    fn eval_loss_token(
+        &mut self,
+        params: &[f32],
+        token: u64,
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<f32> {
+        self.eval_loss_cached(params, token, x, y)
+    }
+
+    fn grad(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: LabelBatch<'_>,
+    ) -> crate::Result<Vec<f32>> {
+        let exe = self
+            .grad_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model {} exports no grad program", self.name))?;
+        let pbuf = self.params_buffer(params)?;
+        let xb = self.x_buffer(x, self.eval_n)?;
+        let yb = self.y_buffer(y, self.eval_n)?;
+        let outs = exe
+            .execute_b(&[&pbuf, &xb, &yb])
+            .map_err(|e| anyhow::anyhow!("grad exec: {e}"))?;
+        self.exec_count += 1;
+        Self::buf_to_vec(&Self::first_out(outs)?)
+    }
+}
+
+/// Standalone wrapper for the exported Pallas quantizer artifact
+/// (`quantize<p>.hlo.txt`) — used to cross-check the rust codec against the
+/// L1 kernel bit-for-bit.
+pub struct QuantizeKernel {
+    exe: PjRtLoadedExecutable,
+    pub p: usize,
+}
+
+impl QuantizeKernel {
+    pub fn load(client: &PjRtClient, dir: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let q = manifest
+            .quantizer
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no quantizer artifact in manifest"))?;
+        let exe = compile(client, &dir.join(format!("{}.hlo.txt", q.name)))?;
+        Ok(QuantizeKernel { exe, p: q.p })
+    }
+
+    /// Dequantized QSGD values for `x` with uniforms `u` and level count `s`.
+    pub fn run(&self, x: &[f32], u: &[f32], s: f32) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == self.p && u.len() == self.p, "length mismatch");
+        let xl = Literal::vec1(x);
+        let ul = Literal::vec1(u);
+        let sl = Literal::scalar(s);
+        let outs = self
+            .exe
+            .execute::<Literal>(&[xl, ul, sl])
+            .map_err(|e| anyhow::anyhow!("quantize exec: {e}"))?;
+        let out = PjrtEngine::first_out(outs)?;
+        PjrtEngine::buf_to_vec(&out)
+    }
+}

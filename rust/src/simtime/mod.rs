@@ -1,0 +1,174 @@
+//! The paper's §5 cost model: virtual training-time accounting.
+//!
+//! Per communication round with `r` participants, period `τ`, batch `B`,
+//! model dimension `p` and quantizer upload size `|Q(p,s)|` bits:
+//!
+//! * **computation**: each node needs a shifted-exponential time
+//!   `τ·B·shift + Exp(mean = τ·B/scale)`; the round waits for the
+//!   *slowest* of the `r` sampled nodes (stragglers!).
+//! * **communication**: `r · |Q(p,s)| / BW` — uploads are serialized
+//!   through the base station's bandwidth `BW`.
+//!
+//! The ratio `C_comm/C_comp = (p·F/BW) / (shift + 1/scale)` calibrates how
+//! communication-bound the deployment is (paper: 100 for logreg/MNIST,
+//! 1000 for the CIFAR networks).
+
+use crate::util::rng::Rng;
+
+/// Cost-model parameters (paper §5 "Communication/Computation time").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Deterministic per-gradient compute time component.
+    pub shift: f64,
+    /// Exponential rate: the random component of one gradient has mean `1/scale`.
+    pub scale: f64,
+    /// Uplink bandwidth in bits per virtual-time unit.
+    pub bandwidth: f64,
+    /// RNG seed for the straggler draws.
+    pub seed: u64,
+}
+
+impl CostModel {
+    /// Mean computation time of ONE gradient: `shift + 1/scale`.
+    pub fn c_comp(&self) -> f64 {
+        self.shift + 1.0 / self.scale
+    }
+
+    /// Communication time of one *unquantized* length-`p` vector: `pF/BW`.
+    pub fn c_comm(&self, p: usize) -> f64 {
+        (p as u64 * crate::FLOAT_BITS) as f64 / self.bandwidth
+    }
+
+    /// The paper's ratio for a given model dimension.
+    pub fn ratio(&self, p: usize) -> f64 {
+        self.c_comm(p) / self.c_comp()
+    }
+
+    /// Build a model achieving `ratio = C_comm/C_comp` for dimension `p`,
+    /// with `shift = 0.5`, `scale = 2` (so `C_comp = 1`).
+    pub fn with_ratio(ratio: f64, p: usize, seed: u64) -> Self {
+        let shift = 0.5;
+        let scale = 2.0;
+        let c_comp = shift + 1.0 / scale; // = 1
+        let bandwidth = (p as u64 * crate::FLOAT_BITS) as f64 / (ratio * c_comp);
+        CostModel { shift, scale, bandwidth, seed }
+    }
+
+    /// Computation time for node `node` in round `k`: `τ·B` gradients of
+    /// shifted-exponential cost. Deterministic in `(seed, node, round)`.
+    pub fn node_compute_time(&self, node: usize, round: usize, tau: usize, batch: usize) -> f64 {
+        let work = (tau * batch) as f64;
+        let mut rng = self.rng_for(node, round);
+        let u: f64 = (1.0 - rng.gen_f64()).max(1e-12); // in (0, 1]
+        // Exp with mean work/scale.
+        let exp = -u.ln() * work / self.scale;
+        work * self.shift + exp
+    }
+
+    /// Round computation time = max over the sampled nodes (stragglers).
+    pub fn round_compute_time(&self, nodes: &[usize], round: usize, tau: usize, batch: usize) -> f64 {
+        nodes
+            .iter()
+            .map(|&i| self.node_compute_time(i, round, tau, batch))
+            .fold(0.0, f64::max)
+    }
+
+    /// Round communication time for `uploads` of given bit sizes
+    /// (serialized through the shared uplink): `Σ bits / BW`.
+    pub fn round_comm_time(&self, upload_bits: &[u64]) -> f64 {
+        upload_bits.iter().map(|&b| b as f64).sum::<f64>() / self.bandwidth
+    }
+
+    fn rng_for(&self, node: usize, round: usize) -> Rng {
+        Rng::from_coords(self.seed, &[4, node as u64, round as u64])
+    }
+}
+
+/// Monotone virtual clock accumulating round times.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt ≥ 0` and return the new time.
+    pub fn advance(&mut self, dt: f64) -> f64 {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad time step {dt}");
+        self.now += dt;
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_calibration() {
+        for &(ratio, p) in &[(100.0, 785usize), (1000.0, 92027)] {
+            let cm = CostModel::with_ratio(ratio, p, 0);
+            assert!((cm.ratio(p) - ratio).abs() / ratio < 1e-12);
+            assert!((cm.c_comp() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn compute_time_has_shift_floor_and_mean() {
+        let cm = CostModel::with_ratio(100.0, 785, 1);
+        let (tau, b) = (5usize, 10usize);
+        let floor = (tau * b) as f64 * cm.shift;
+        let mut acc = 0.0;
+        let n = 4000;
+        for round in 0..n {
+            let t = cm.node_compute_time(0, round, tau, b);
+            assert!(t >= floor);
+            acc += t;
+        }
+        let mean = acc / n as f64;
+        let expect = (tau * b) as f64 * (cm.shift + 1.0 / cm.scale);
+        assert!(
+            (mean - expect).abs() / expect < 0.05,
+            "mean {mean} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn straggler_max_dominates() {
+        let cm = CostModel::with_ratio(100.0, 785, 2);
+        let nodes: Vec<usize> = (0..20).collect();
+        let t = cm.round_compute_time(&nodes, 3, 5, 10);
+        for &n in &nodes {
+            assert!(t >= cm.node_compute_time(n, 3, 5, 10));
+        }
+    }
+
+    #[test]
+    fn comm_time_linear_in_bits() {
+        let cm = CostModel { shift: 0.5, scale: 2.0, bandwidth: 1000.0, seed: 0 };
+        assert_eq!(cm.round_comm_time(&[500, 500]), 1.0);
+        assert_eq!(cm.round_comm_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.0);
+        assert_eq!(c.now(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad time step")]
+    fn clock_rejects_negative() {
+        VirtualClock::new().advance(-1.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! The paper's convergence-theory constants (Theorems 1 and 2).
+//!
+//! Everything here is a direct transcription of the formulas in §4 /
+//! supplementary §7–8, used by `examples/theory_check.rs` to overlay the
+//! predicted rates on measured optimality gaps, and by the test suite to
+//! sanity-check monotonicities (e.g. more participation ⇒ smaller
+//! constants; finer quantization ⇒ smaller `q`).
+
+/// Problem-level constants the bounds are expressed in.
+#[derive(Debug, Clone, Copy)]
+pub struct ProblemConsts {
+    /// Smoothness `L` (Assumption 2).
+    pub l_smooth: f64,
+    /// Strong convexity `μ` (Assumption 4; only for Theorem 1).
+    pub mu: f64,
+    /// Stochastic-gradient variance `σ²` (Assumption 3).
+    pub sigma2: f64,
+    /// Quantizer variance parameter `q` (Assumption 1).
+    pub q: f64,
+    /// Total nodes `n` and per-round participants `r`.
+    pub n: usize,
+    pub r: usize,
+}
+
+impl ProblemConsts {
+    fn part(&self) -> f64 {
+        // The recurring participation factor (n-r)/(r(n-1)); 0 when r=n.
+        let (n, r) = (self.n as f64, self.r as f64);
+        if self.n == 1 {
+            0.0
+        } else {
+            (n - r) / (r * (n - 1.0))
+        }
+    }
+
+    /// `B1 = 2L²( q/n + 4(1+q)(n−r)/(r(n−1)) )` — eq. (10).
+    pub fn b1(&self) -> f64 {
+        2.0 * self.l_smooth.powi(2)
+            * (self.q / self.n as f64 + 4.0 * (1.0 + self.q) * self.part())
+    }
+
+    /// `B2 = q/n + 4(1+q)(n−r)/(r(n−1))` — eq. (15).
+    pub fn b2(&self) -> f64 {
+        self.q / self.n as f64 + 4.0 * (1.0 + self.q) * self.part()
+    }
+
+    /// Theorem-1 constants `C1, C2, C3` — eq. (13).
+    pub fn c123(&self) -> (f64, f64, f64) {
+        let (n, _) = (self.n as f64, self.r as f64);
+        let e = std::f64::consts::E;
+        let mu2 = self.mu * self.mu;
+        let part = self.part() * n; // n(n−r)/(r(n−1))
+        let c1 = 16.0 * self.sigma2 / (mu2 * n)
+            * (1.0 + 2.0 * self.q + 8.0 * (1.0 + self.q) * part);
+        let c2 = 16.0 * e * self.l_smooth.powi(2) * self.sigma2 / (mu2 * n);
+        let c3 = 256.0 * e * self.l_smooth.powi(2) * self.sigma2 / (mu2 * mu2 * n)
+            * (n + 2.0 * self.q + 8.0 * (1.0 + self.q) * part);
+        (c1, c2, c3)
+    }
+
+    /// Theorem-2 constants `N1, N2`.
+    pub fn n12(&self) -> (f64, f64) {
+        let n = self.n as f64;
+        let part = self.part() * n;
+        let n1 = (1.0 + self.q) * self.sigma2 / n * (1.0 + part);
+        let n2 = self.sigma2 / n * (n + 1.0);
+        (n1, n2)
+    }
+
+    /// Theorem-1 warm-up threshold `k0` — eq. (11).
+    pub fn k0(&self, tau: usize) -> usize {
+        let mu2 = self.mu * self.mu;
+        let cands = [
+            self.l_smooth / self.mu,
+            4.0 * (self.b1() / mu2 + 1.0),
+            1.0 / tau as f64,
+            4.0 * self.n as f64 / (mu2 * tau as f64),
+        ];
+        let m = cands.iter().cloned().fold(0.0f64, f64::max);
+        (4.0 * m).ceil() as usize
+    }
+
+    /// Theorem-1 bound on `E‖x_k − x*‖²` given the gap at `k0` — eq. (12).
+    pub fn thm1_bound(&self, tau: usize, k: usize, k0: usize, gap_k0: f64) -> f64 {
+        let (c1, c2, c3) = self.c123();
+        let kt = (k * tau + 1) as f64;
+        let k0t = (k0 * tau + 1) as f64;
+        let tm1 = (tau as f64) - 1.0;
+        (k0t / kt).powi(2) * gap_k0
+            + c1 * tau as f64 / kt
+            + c2 * tm1 * tm1 / kt
+            + c3 * tm1 / (kt * kt)
+    }
+
+    /// Theorem-2 bound on the averaged squared gradient norm — eq. (17).
+    pub fn thm2_bound(&self, tau: usize, t_total: usize, f0_minus_fstar: f64) -> f64 {
+        let (n1, n2) = self.n12();
+        let t = t_total as f64;
+        2.0 * self.l_smooth * f0_minus_fstar / t.sqrt()
+            + n1 / t.sqrt()
+            + n2 * ((tau as f64) - 1.0) / t
+    }
+
+    /// Maximum period allowed by Theorem 2's condition (16).
+    pub fn thm2_tau_max(&self, t_total: usize) -> f64 {
+        let b2 = self.b2();
+        ((b2 * b2 + 0.8).sqrt() - b2) / 8.0 * (t_total as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ProblemConsts {
+        ProblemConsts { l_smooth: 2.0, mu: 0.5, sigma2: 1.0, q: 1.0, n: 50, r: 25 }
+    }
+
+    #[test]
+    fn full_participation_zeroes_the_sampling_term() {
+        let mut c = base();
+        c.r = 50;
+        // B1 reduces to 2L² q/n; B2 to q/n.
+        assert!((c.b1() - 2.0 * 4.0 * (1.0 / 50.0)).abs() < 1e-12);
+        assert!((c.b2() - 1.0 / 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_quantization_recovers_sampling_only() {
+        let mut c = base();
+        c.q = 0.0;
+        c.r = 50;
+        assert_eq!(c.b1(), 0.0);
+        assert_eq!(c.b2(), 0.0);
+    }
+
+    #[test]
+    fn constants_monotone_in_participation() {
+        // Fewer participants ⇒ larger constants (more variance).
+        let mut lo = base();
+        lo.r = 10;
+        let mut hi = base();
+        hi.r = 40;
+        assert!(lo.b1() > hi.b1());
+        assert!(lo.b2() > hi.b2());
+        assert!(lo.c123().0 > hi.c123().0);
+        assert!(lo.n12().0 > hi.n12().0);
+    }
+
+    #[test]
+    fn thm1_bound_decreases_in_k() {
+        let c = base();
+        let k0 = c.k0(5);
+        let b_near = c.thm1_bound(5, k0 + 10, k0, 1.0);
+        let b_far = c.thm1_bound(5, k0 + 1000, k0, 1.0);
+        assert!(b_far < b_near);
+    }
+
+    #[test]
+    fn thm1_tau1_kills_tau_terms() {
+        let c = base();
+        let (c1, _, _) = c.c123();
+        let k = 100;
+        let b = c.thm1_bound(1, k, 0, 0.0);
+        let expect = c1 / (k as f64 + 1.0);
+        assert!((b - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thm2_tau_max_scales_sqrt_t() {
+        let c = base();
+        let t1 = c.thm2_tau_max(100);
+        let t2 = c.thm2_tau_max(10_000);
+        assert!((t2 / t1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k0_respects_all_lower_bounds() {
+        let c = base();
+        let k0 = c.k0(5) as f64;
+        assert!(k0 >= 4.0 * c.l_smooth / c.mu);
+        assert!(k0 >= 16.0 * (c.b1() / (c.mu * c.mu) + 1.0));
+    }
+}

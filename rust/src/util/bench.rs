@@ -1,0 +1,178 @@
+//! Tiny measurement harness for the `rust/benches/` targets (criterion is
+//! unavailable offline). Warmup + N timed samples, robust statistics,
+//! criterion-style terminal output, optional throughput, and a JSON record
+//! appended under `target/bench-results/` so EXPERIMENTS.md §Perf can cite
+//! exact numbers.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group (mirrors criterion's `benchmark_group`).
+pub struct Group {
+    name: String,
+    /// Samples per benchmark.
+    pub sample_size: usize,
+    /// Target time per benchmark (warmup excluded).
+    pub target_time: Duration,
+    results: Vec<Record>,
+}
+
+/// A finished measurement.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub group: String,
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub throughput_bytes: Option<u64>,
+}
+
+impl Group {
+    pub fn new(name: impl Into<String>) -> Self {
+        Group {
+            name: name.into(),
+            sample_size: 20,
+            target_time: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, auto-calibrating iterations per sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.bench_throughput(name, None, f)
+    }
+
+    /// Measure with a bytes-processed-per-iteration annotation.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        mut f: F,
+    ) {
+        // Calibrate: run once, then scale to ~target_time/sample_size.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = (self.target_time.as_nanos() / self.sample_size as u128)
+            .max(once.as_nanos());
+        let iters = ((per_sample / once.as_nanos()).max(1)) as u64;
+
+        // Warmup ~3 samples worth.
+        for _ in 0..(3 * iters).min(1000) {
+            f();
+        }
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.sample_size);
+        for _ in 0..self.sample_size {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples_ns.sort_by(f64::total_cmp);
+        let median = samples_ns[samples_ns.len() / 2];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let var = samples_ns
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / samples_ns.len() as f64;
+        let rec = Record {
+            group: self.name.clone(),
+            name: name.to_string(),
+            mean_ns: mean,
+            median_ns: median,
+            stddev_ns: var.sqrt(),
+            samples: self.sample_size,
+            iters_per_sample: iters,
+            throughput_bytes: bytes,
+        };
+        println!("{}", rec.render());
+        self.results.push(rec);
+    }
+
+    /// Print & persist the group's results; call at the end of the bench.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name.replace('/', "_")));
+        let arr = crate::util::json::Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    crate::util::json::Json::obj(vec![
+                        ("group", crate::util::json::Json::str(&r.group)),
+                        ("name", crate::util::json::Json::str(&r.name)),
+                        ("mean_ns", crate::util::json::Json::num(r.mean_ns)),
+                        ("median_ns", crate::util::json::Json::num(r.median_ns)),
+                        ("stddev_ns", crate::util::json::Json::num(r.stddev_ns)),
+                        (
+                            "throughput_bytes",
+                            r.throughput_bytes
+                                .map(|b| crate::util::json::Json::num(b as f64))
+                                .unwrap_or(crate::util::json::Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let _ = std::fs::write(path, arr.to_string_pretty());
+    }
+}
+
+impl Record {
+    fn render(&self) -> String {
+        let human = |ns: f64| -> String {
+            if ns < 1e3 {
+                format!("{ns:.1} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        };
+        let mut line = format!(
+            "{}/{:<32} time: [{} ± {}] (median {}, n={}x{})",
+            self.group,
+            self.name,
+            human(self.mean_ns),
+            human(self.stddev_ns),
+            human(self.median_ns),
+            self.samples,
+            self.iters_per_sample,
+        );
+        if let Some(b) = self.throughput_bytes {
+            let gbps = b as f64 / self.mean_ns; // bytes/ns == GB/s
+            line.push_str(&format!("  thrpt: {gbps:.3} GB/s"));
+        }
+        line
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut g = Group::new("selftest");
+        g.sample_size = 5;
+        g.target_time = Duration::from_millis(50);
+        let mut acc = 0u64;
+        g.bench("wrapping_mul_loop", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(g.results.len(), 1);
+        let r = &g.results[0];
+        assert!(r.mean_ns > 0.0 && r.mean_ns < 1e9);
+        assert!(r.median_ns > 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree substrates for an offline build environment.
+//!
+//! The registry mirror only carries the `xla` crate's closure, so the
+//! usual ecosystem crates are reimplemented here, scoped to exactly what
+//! this project needs:
+//!
+//! * [`rng`]   — deterministic xoshiro256++ PRNG (replaces `rand`/`rand_chacha`)
+//! * [`json`]  — minimal JSON parser + writer (replaces `serde_json`)
+//! * [`bench`] — measurement harness for the `rust/benches/` targets
+//!   (replaces `criterion`)
+//! * [`prop`]  — randomized property-test driver (replaces `proptest`)
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,63 @@
+//! Randomized property-test driver (proptest is unavailable offline).
+//!
+//! `check(cases, seed, |rng| ...)` runs a property over many random
+//! inputs; on failure it reports the case index and the per-case seed so
+//! the exact input can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::check(256, 0xfed_aq, |rng| {
+//!     let p = rng.gen_range(1, 2000);
+//!     let x: Vec<f32> = (0..p).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+//!     ... assertions ...
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `property` over `cases` random cases. Panics (with replay info) on
+/// the first failing case. The property gets a fresh deterministic RNG per
+/// case, so shrinking-by-replay is `check(1, reported_seed, ...)`.
+pub fn check<F: FnMut(&mut Rng)>(cases: usize, seed: u64, mut property: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case}/{cases} (replay: check(1, {case_seed:#x}, ..)):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_a_true_property() {
+        check(100, 1, |rng| {
+            let a = rng.gen_range(0, 1000);
+            let b = rng.gen_range(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        check(100, 2, |rng| {
+            let x = rng.gen_range(0, 50);
+            assert!(x < 49, "x was {x}");
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic PRNG: xoshiro256++ seeded through SplitMix64.
+//!
+//! Every stochastic choice in the system (data generation, node sampling,
+//! minibatch draws, stochastic quantization, straggler times) flows through
+//! this generator, keyed by `(master_seed, structural coordinates)`, so any
+//! engine — sim, TCP worker, pure-rust oracle — independently reproduces
+//! the exact same randomness.
+
+/// xoshiro256++ (Blackman & Vigna). Passes BigCrush; not cryptographic.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the full 256-bit state from one u64 via SplitMix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive a child stream from a seed plus structural coordinates
+    /// (node / round / step …), statistically independent per tuple.
+    pub fn from_coords(seed: u64, coords: &[u64]) -> Self {
+        let mut sm = seed ^ 0x6a09_e667_f3bc_c908;
+        let mut acc = splitmix64(&mut sm);
+        for &c in coords {
+            let mut s2 = c.wrapping_add(0x9e37_79b9_7f4a_7c15) ^ acc.rotate_left(17);
+            acc ^= splitmix64(&mut s2);
+            acc = acc.rotate_left(23).wrapping_mul(0x2545_f491_4f6c_dd1d);
+        }
+        Self::seed_from_u64(acc)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in `[0, 1)` (24-bit mantissa path).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa path).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` — Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn gen_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `lo..hi`.
+    #[inline]
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + self.gen_below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gen_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.gen_f32();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.gen_f32();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * core::f32::consts::PI * u2).cos();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.gen_range(0, i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn coords_streams_differ_per_coordinate() {
+        let a: Vec<u64> = {
+            let mut r = Rng::from_coords(1, &[2, 3]);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        for coords in [[2u64, 4], [3, 3], [2, 2]] {
+            let mut r = Rng::from_coords(1, &coords);
+            let b: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+            assert_ne!(a, b, "{coords:?}");
+        }
+        let mut r2 = Rng::from_coords(1, &[2, 3]);
+        let again: Vec<u64> = (0..8).map(|_| r2.next_u64()).collect();
+        assert_eq!(a, again);
+    }
+
+    #[test]
+    fn uniform_unit_interval() {
+        let mut r = Rng::seed_from_u64(3);
+        let n = 100_000;
+        let mut acc = 0f64;
+        for _ in 0..n {
+            let x = r.gen_f32();
+            assert!((0.0..1.0).contains(&x));
+            acc += x as f64;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gen_below_unbiased() {
+        let mut r = Rng::seed_from_u64(4);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.gen_below(7) as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((9_300..10_700).contains(&c), "bucket {i}: {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(5);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = r.gen_normal() as f64;
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.05, "var {m2}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(6);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,116 @@
+//! Distributed-mode integration: leader + workers over real localhost TCP
+//! sockets (worker threads in-process, pure-rust engines), checked for
+//! exact parity against the in-process simulation.
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::coordinator::Server;
+use fedpaq::data::DatasetKind;
+use fedpaq::figures::zoo_kind;
+use fedpaq::model::RustEngine;
+use fedpaq::net::{run_leader, run_worker};
+use fedpaq::opt::LrSchedule;
+use fedpaq::quant::Quantizer;
+use std::net::TcpListener;
+use std::path::Path;
+
+fn cluster_cfg(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "net-it".into(),
+        model: "logreg".into(),
+        dataset: DatasetKind::Mnist08,
+        n_nodes: 12,
+        per_node: 900, // 10_800 samples >= the 10_000 eval slab
+        r: 6,
+        tau: 2,
+        t_total: 10,
+        quantizer: Quantizer::qsgd(2),
+        lr: LrSchedule::Const { eta: 0.4 },
+        ratio: 100.0,
+        seed,
+        eval_every: 1,
+        engine: EngineKind::Rust,
+        partition: fedpaq::data::PartitionKind::Iid,
+    }
+}
+
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+fn run_cluster(cfg: &ExperimentConfig, n_workers: usize) -> fedpaq::coordinator::RunResult {
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // Retry until the leader is listening.
+                for _ in 0..100 {
+                    match run_worker(&addr, Path::new("artifacts")) {
+                        Ok(()) => return,
+                        Err(e) => {
+                            if e.to_string().contains("connect") {
+                                std::thread::sleep(std::time::Duration::from_millis(20));
+                                continue;
+                            }
+                            panic!("worker failed: {e}");
+                        }
+                    }
+                }
+                panic!("worker could not connect");
+            })
+        })
+        .collect();
+    let (kind, batch, eval_n) = zoo_kind("logreg").unwrap();
+    let mut engine = RustEngine::new(kind, batch, eval_n).unwrap();
+    let res = run_leader(cfg.clone(), &addr, n_workers, &mut engine, Path::new("artifacts"))
+        .unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    res
+}
+
+#[test]
+fn distributed_matches_simulation_exactly() {
+    let cfg = cluster_cfg(31);
+    let dist = run_cluster(&cfg, 2);
+
+    let (kind, batch, eval_n) = zoo_kind("logreg").unwrap();
+    let mut engine = RustEngine::new(kind, batch, eval_n).unwrap();
+    let sim = Server::new(cfg, &mut engine).unwrap().run().unwrap();
+
+    // Same engine, same seeds, aggregation in node order: parameters and
+    // bit counts must match exactly (bit-for-bit uploads).
+    assert_eq!(dist.total_bits, sim.total_bits);
+    let max_diff = dist
+        .params
+        .iter()
+        .zip(&sim.params)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert_eq!(max_diff, 0.0, "distributed != simulated");
+    // Loss trajectories match too.
+    for (a, b) in dist.curve.points.iter().zip(&sim.curve.points) {
+        assert!((a.loss - b.loss).abs() < 1e-12, "{} vs {}", a.loss, b.loss);
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let cfg = cluster_cfg(32);
+    let one = run_cluster(&cfg, 1);
+    let three = run_cluster(&cfg, 3);
+    assert_eq!(one.total_bits, three.total_bits);
+    let max_diff = one
+        .params
+        .iter()
+        .zip(&three.params)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert_eq!(max_diff, 0.0);
+}

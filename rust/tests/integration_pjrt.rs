@@ -1,0 +1,265 @@
+//! Integration tests over the PJRT runtime: AOT artifacts must load,
+//! execute, agree with the pure-rust oracle, and train end-to-end.
+//!
+//! All tests skip gracefully when `make artifacts` has not run (CI before
+//! the python stage). PJRT clients are process-global state in the CPU
+//! plugin, so every test shares one client via a thread-local.
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::coordinator::Server;
+use fedpaq::data::DatasetKind;
+use fedpaq::figures::{zoo_kind, Runner};
+use fedpaq::model::{Engine, LabelBatch, RustEngine};
+use fedpaq::opt::LrSchedule;
+use fedpaq::quant::{l2_norm, Quantizer};
+use fedpaq::runtime::{cpu_client, PjrtEngine, QuantizeKernel};
+use fedpaq::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn client() -> xla::PjRtClient {
+    cpu_client().expect("PJRT CPU client")
+}
+
+#[test]
+fn logreg_engine_matches_rust_oracle() {
+    let dir = require_artifacts!();
+    let client = client();
+    let mut pjrt = PjrtEngine::load(&client, &dir, "logreg").unwrap();
+    let mut oracle = RustEngine::new(zoo_kind("logreg").unwrap().0, 10, 10_000).unwrap();
+
+    // Identical zero init.
+    let p0 = pjrt.init_params().unwrap();
+    assert_eq!(p0, oracle.init_params().unwrap());
+    assert_eq!(p0.len(), 785);
+
+    // Same loss on a random batch (PJRT loss program is eval_n-shaped, so
+    // build an eval-sized slab).
+    let mut rng = Rng::seed_from_u64(1);
+    let n = 10_000;
+    let x: Vec<f32> = (0..n * 784).map(|_| rng.gen_f32() - 0.5).collect();
+    let y: Vec<f32> = (0..n).map(|_| (rng.gen_bool(0.5)) as u8 as f32).collect();
+    let lp = pjrt.eval_loss(&p0, &x, LabelBatch::F32(&y)).unwrap();
+    let lo = oracle.eval_loss(&p0, &x, LabelBatch::F32(&y)).unwrap();
+    assert!((lp - lo).abs() < 1e-5, "pjrt {lp} vs oracle {lo}");
+
+    // One SGD step must agree coordinate-wise.
+    let xb: Vec<f32> = x[..10 * 784].to_vec();
+    let yb: Vec<f32> = y[..10].to_vec();
+    let sp = pjrt.sgd_step(&p0, &xb, LabelBatch::F32(&yb), 0.5).unwrap();
+    let so = oracle.sgd_step(&p0, &xb, LabelBatch::F32(&yb), 0.5).unwrap();
+    let max_diff = sp
+        .iter()
+        .zip(&so)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-5, "step divergence {max_diff}");
+
+    // Chained local SGD == looped single steps.
+    let tau = 4;
+    let xs: Vec<f32> = x[..tau * 10 * 784].to_vec();
+    let ys: Vec<f32> = y[..tau * 10].to_vec();
+    let lrs = vec![0.3f32; tau];
+    let chained = pjrt.local_sgd_chained(&p0, &xs, LabelBatch::F32(&ys), &lrs).unwrap();
+    let mut looped = p0.clone();
+    for t in 0..tau {
+        looped = oracle
+            .sgd_step(
+                &looped,
+                &xs[t * 7840..(t + 1) * 7840],
+                LabelBatch::F32(&ys[t * 10..(t + 1) * 10]),
+                0.3,
+            )
+            .unwrap();
+    }
+    let max_diff = chained
+        .iter()
+        .zip(&looped)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 5e-5, "chained divergence {max_diff}");
+}
+
+#[test]
+fn mlp_engine_loss_matches_rust_oracle() {
+    let dir = require_artifacts!();
+    let client = client();
+    let (kind, batch, eval_n) = zoo_kind("mlp_fashion").unwrap();
+    let mut pjrt = PjrtEngine::load(&client, &dir, "mlp_fashion").unwrap();
+    let mut oracle = RustEngine::new(kind, batch, eval_n).unwrap();
+
+    // Shared params: use the PJRT (JAX) init on both engines.
+    let p0 = pjrt.init_params().unwrap();
+    let mut rng = Rng::seed_from_u64(2);
+    let x: Vec<f32> = (0..eval_n * 784).map(|_| rng.gen_f32() - 0.5).collect();
+    let y: Vec<i32> = (0..eval_n).map(|_| rng.gen_range(0, 10) as i32).collect();
+    let lp = pjrt.eval_loss(&p0, &x, LabelBatch::I32(&y)).unwrap();
+    let lo = oracle.eval_loss(&p0, &x, LabelBatch::I32(&y)).unwrap();
+    assert!(
+        (lp - lo).abs() / lo.abs().max(1.0) < 1e-4,
+        "pjrt {lp} vs oracle {lo}"
+    );
+
+    // One SGD step agrees (different backprop implementations).
+    let xb: Vec<f32> = x[..batch * 784].to_vec();
+    let yb: Vec<i32> = y[..batch].to_vec();
+    let sp = pjrt.sgd_step(&p0, &xb, LabelBatch::I32(&yb), 0.1).unwrap();
+    let so = oracle.sgd_step(&p0, &xb, LabelBatch::I32(&yb), 0.1).unwrap();
+    let rel: f32 = {
+        let num: f32 = sp.iter().zip(&so).map(|(&a, &b)| (a - b) * (a - b)).sum();
+        let den: f32 = so.iter().map(|&b| b * b).sum();
+        (num / den).sqrt()
+    };
+    assert!(rel < 1e-4, "relative step divergence {rel}");
+}
+
+#[test]
+fn pallas_quantizer_matches_rust_codec_grid() {
+    let dir = require_artifacts!();
+    let client = client();
+    let kernel = QuantizeKernel::load(&client, &dir).unwrap();
+    let mut rng = Rng::seed_from_u64(3);
+    let x: Vec<f32> = (0..kernel.p).map(|_| rng.gen_f32() * 4.0 - 2.0).collect();
+    let u: Vec<f32> = (0..kernel.p).map(|_| rng.gen_f32()).collect();
+    for s in [1u32, 5, 10] {
+        let out = kernel.run(&x, &u, s as f32).unwrap();
+        // Same stochastic-rounding formula as the rust codec.
+        let norm = l2_norm(&x);
+        for i in 0..kernel.p {
+            let a = x[i].abs() / norm * s as f32;
+            let lo = a.floor();
+            let level = lo + (u[i] < a - lo) as u32 as f32;
+            let want = norm * x[i].signum() * level / s as f32;
+            assert!(
+                (want - out[i]).abs() <= 2e-4 * norm.max(1.0),
+                "s={s} coord {i}: kernel {} vs codec {want}",
+                out[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn transformer_artifacts_execute_and_learn_direction() {
+    let dir = require_artifacts!();
+    let client = client();
+    let mut eng = PjrtEngine::load(&client, &dir, "transformer").unwrap();
+    let p0 = eng.init_params().unwrap();
+    assert_eq!(p0.len(), eng.param_count());
+
+    let mut rng = Rng::seed_from_u64(4);
+    let b = eng.batch();
+    let seq = 32;
+    // Constant-successor sequences: highly learnable.
+    let mk = |rng: &mut Rng, n: usize| -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let start = rng.gen_range(0, 64);
+            for t in 0..seq {
+                xs.push(((start + t) % 64) as f32);
+                ys.push(((start + t + 1) % 64) as i32);
+            }
+        }
+        (xs, ys)
+    };
+    let (ex, ey) = mk(&mut rng, eng.eval_n());
+    let l0 = eng.eval_loss(&p0, &ex, LabelBatch::I32(&ey)).unwrap();
+    assert!((l0 - (64f32).ln()).abs() < 0.5, "fresh LM loss {l0}");
+
+    let mut p = p0;
+    for step in 0..60 {
+        let (xb, yb) = mk(&mut rng, b);
+        p = eng
+            .local_sgd_chained(&p, &xb, LabelBatch::I32(&yb), &[0.1])
+            .unwrap();
+        let _ = step;
+    }
+    let l1 = eng.eval_loss(&p, &ex, LabelBatch::I32(&ey)).unwrap();
+    assert!(l1 < l0 * 0.8, "LM did not learn: {l0} -> {l1}");
+}
+
+#[test]
+fn pjrt_fedpaq_run_decreases_loss_and_matches_shape() {
+    let dir = require_artifacts!();
+    let mut runner = Runner::new(EngineKind::Pjrt, &dir);
+    let cfg = ExperimentConfig {
+        name: "it".into(),
+        model: "logreg".into(),
+        dataset: DatasetKind::Mnist08,
+        n_nodes: 50,
+        per_node: 200,
+        r: 10,
+        tau: 5,
+        t_total: 40,
+        quantizer: Quantizer::qsgd(1),
+        lr: LrSchedule::Const { eta: 0.2 },
+        ratio: 100.0,
+        seed: 11,
+        eval_every: 2,
+        engine: EngineKind::Pjrt,
+        partition: fedpaq::data::PartitionKind::Iid,
+    };
+    let res = runner.run_config(cfg).unwrap();
+    let first = res.curve.points.first().unwrap().loss;
+    let last = res.curve.points.last().unwrap().loss;
+    assert!(last < first * 0.7, "{first} -> {last}");
+    assert_eq!(res.rounds.len(), 8);
+}
+
+#[test]
+fn pjrt_and_rust_engines_agree_on_full_logreg_run() {
+    let dir = require_artifacts!();
+    let cfg = ExperimentConfig {
+        name: "parity".into(),
+        model: "logreg".into(),
+        dataset: DatasetKind::Mnist08,
+        n_nodes: 50,
+        per_node: 200,
+        r: 5,
+        tau: 3,
+        t_total: 12,
+        quantizer: Quantizer::qsgd(2),
+        lr: LrSchedule::Const { eta: 0.3 },
+        ratio: 100.0,
+        seed: 21,
+        eval_every: 4,
+        engine: EngineKind::Pjrt,
+        partition: fedpaq::data::PartitionKind::Iid,
+    };
+    let client = client();
+    let mut pjrt = PjrtEngine::load(&client, &dir, "logreg").unwrap();
+    let res_pjrt = Server::new(cfg.clone(), &mut pjrt).unwrap().run().unwrap();
+    let mut oracle = RustEngine::new(zoo_kind("logreg").unwrap().0, 10, 10_000).unwrap();
+    let res_rust = Server::new(cfg.with_engine(EngineKind::Rust), &mut oracle)
+        .unwrap()
+        .run()
+        .unwrap();
+    // Same seeds -> same batches, same sampling, same quantization stream.
+    // Engines differ only in f32 rounding, which quantization re-grids, so
+    // trajectories stay extremely close over a short horizon.
+    let max_diff = res_pjrt
+        .params
+        .iter()
+        .zip(&res_rust.params)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 2e-3, "engine divergence {max_diff}");
+    assert_eq!(res_pjrt.total_bits, res_rust.total_bits);
+}

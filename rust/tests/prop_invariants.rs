@@ -1,0 +1,250 @@
+//! Property-based tests over the coordinator's core invariants
+//! (driver: `fedpaq::util::prop` — proptest is unavailable offline).
+//!
+//! Each `check(N, seed, ..)` runs N random cases; failures print a
+//! replayable per-case seed.
+
+use fedpaq::config::ExperimentConfig;
+use fedpaq::coordinator::sampler::sample_nodes;
+use fedpaq::data::{BatchSampler, Partition};
+use fedpaq::quant::{bitstream::BitWriter, elias, l2_norm, Coding, Quantizer};
+use fedpaq::util::json::Json;
+use fedpaq::util::prop::check;
+use fedpaq::util::rng::Rng;
+
+fn random_vec(rng: &mut Rng, p: usize, scale: f32) -> Vec<f32> {
+    (0..p).map(|_| (rng.gen_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+#[test]
+fn prop_qsgd_decode_encode_levels_and_bits() {
+    check(200, 0xfed_aa, |rng| {
+        let p = rng.gen_range(1, 3000);
+        let s = rng.gen_range(1, 40) as u32;
+        let x = random_vec(rng, p, 10.0);
+        let q = Quantizer::qsgd(s);
+        let enc = q.encode(&x, &mut rng.clone());
+        // Exact bit accounting under naive coding.
+        assert_eq!(enc.bits(), q.upload_bits(p));
+        // Decoded values on the quantization grid, |level| <= s.
+        let norm = l2_norm(&x);
+        for (i, v) in q.decode(&enc).iter().enumerate() {
+            if norm == 0.0 {
+                assert_eq!(*v, 0.0);
+                continue;
+            }
+            let lvl = v.abs() / norm * s as f32;
+            assert!((lvl - lvl.round()).abs() < 1e-3, "coord {i}: lvl {lvl}");
+            assert!(lvl.round() as u32 <= s, "coord {i}");
+            // Sign preserved (zero-level loses the sign, which is fine).
+            if lvl.round() > 0.0 {
+                assert_eq!(v.signum(), x[i].signum(), "coord {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_qsgd_error_within_deterministic_bound() {
+    // |Q_i(x) - x_i| <= norm/s always (one quantization bin), since the
+    // stochastic rounding picks an adjacent level.
+    check(150, 0xfed_ab, |rng| {
+        let p = rng.gen_range(1, 800);
+        let s = rng.gen_range(1, 16) as u32;
+        let x = random_vec(rng, p, 3.0);
+        let q = Quantizer::qsgd(s);
+        let (dec, _) = q.apply(&x, &mut rng.clone());
+        let bin = l2_norm(&x) / s as f32 + 1e-5;
+        for (i, (&xi, &qi)) in x.iter().zip(&dec).enumerate() {
+            assert!(
+                (xi - qi).abs() <= bin,
+                "coord {i}: |{xi} - {qi}| > bin {bin}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_elias_roundtrip_arbitrary_u64() {
+    check(300, 0xfed_ac, |rng| {
+        let n = rng.gen_range(1, 20);
+        let vals: Vec<u64> = (0..n)
+            .map(|_| {
+                let bits = rng.gen_range(0, 40);
+                (rng.next_u64() >> (63 - bits)).max(1)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        let mut expect_len = 0;
+        for &v in &vals {
+            elias::encode_omega(&mut w, v);
+            expect_len += elias::omega_len(v);
+        }
+        let buf = w.finish();
+        assert_eq!(buf.len_bits(), expect_len);
+        let mut r = buf.reader();
+        for &v in &vals {
+            assert_eq!(elias::decode_omega(&mut r), v);
+        }
+    });
+}
+
+#[test]
+fn prop_elias_coded_upload_decodes_identically() {
+    check(100, 0xfed_ad, |rng| {
+        let p = rng.gen_range(1, 500);
+        let s = rng.gen_range(1, 64) as u32;
+        let x = random_vec(rng, p, 1.0);
+        let naive = Quantizer::Qsgd { s, coding: Coding::Naive };
+        let elias_q = Quantizer::Qsgd { s, coding: Coding::Elias };
+        // Same RNG stream -> same stochastic levels -> identical decode.
+        let seed = rng.next_u64();
+        let en = naive.encode(&x, &mut Rng::seed_from_u64(seed));
+        let ee = elias_q.encode(&x, &mut Rng::seed_from_u64(seed));
+        assert_eq!(naive.decode(&en), elias_q.decode(&ee));
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    check(100, 0xfed_ae, |rng| {
+        let n_nodes = rng.gen_range(1, 40);
+        let per_node = rng.gen_range(1, 60);
+        let extra = rng.gen_range(0, 50);
+        let n_samples = n_nodes * per_node + extra;
+        let part = Partition::iid(n_samples, n_nodes, per_node, rng.next_u64());
+        let mut seen = vec![false; n_samples];
+        for node in 0..n_nodes {
+            assert_eq!(part.shard(node).len(), per_node);
+            for &i in part.shard(node) {
+                assert!(!seen[i], "sample {i} in two shards");
+                seen[i] = true;
+            }
+        }
+        assert_eq!(seen.iter().filter(|&&b| b).count(), n_nodes * per_node);
+    });
+}
+
+#[test]
+fn prop_node_sampling_uniform_without_replacement() {
+    check(150, 0xfed_af, |rng| {
+        let n = rng.gen_range(1, 100);
+        let r = rng.gen_range(1, n + 1);
+        let nodes = sample_nodes(n, r, rng.next_u64(), rng.gen_range(0, 1000));
+        assert_eq!(nodes.len(), r);
+        let mut sorted = nodes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), r, "duplicates");
+        assert!(nodes.iter().all(|&i| i < n));
+    });
+}
+
+#[test]
+fn prop_batch_sampler_deterministic_and_in_range() {
+    check(150, 0xfed_b0, |rng| {
+        let b = rng.gen_range(1, 64);
+        let shard = rng.gen_range(1, 500);
+        let seed = rng.next_u64();
+        let s = BatchSampler::new(seed, b);
+        let (node, round, step) =
+            (rng.gen_range(0, 50), rng.gen_range(0, 100), rng.gen_range(0, 50));
+        let a = s.sample(node, round, step, shard);
+        let b2 = s.sample(node, round, step, shard);
+        assert_eq!(a, b2);
+        assert!(a.iter().all(|&i| i < shard));
+    });
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    check(120, 0xfed_b1, |rng| {
+        let mut cfg = ExperimentConfig::fig1_logreg_base();
+        cfg.n_nodes = rng.gen_range(1, 100);
+        cfg.r = rng.gen_range(1, cfg.n_nodes + 1);
+        cfg.tau = rng.gen_range(1, 60);
+        cfg.t_total = cfg.tau * rng.gen_range(1, 50);
+        cfg.seed = rng.next_u64();
+        cfg.ratio = rng.gen_f64() * 1000.0 + 1.0;
+        cfg.quantizer = match rng.gen_range(0, 3) {
+            0 => Quantizer::Identity,
+            1 => Quantizer::qsgd(rng.gen_range(1, 100) as u32),
+            _ => Quantizer::Qsgd {
+                s: rng.gen_range(1, 100) as u32,
+                coding: Coding::Elias,
+            },
+        };
+        let cfg = cfg.validated().unwrap();
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    });
+}
+
+#[test]
+fn prop_json_parser_roundtrips_random_documents() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_bool(0.5)),
+            2 => Json::Num((rng.gen_f64() * 2e6).round() / 1e3),
+            3 => Json::Str(
+                (0..rng.gen_range(0, 12))
+                    .map(|_| {
+                        let c = rng.gen_range(32, 127) as u8 as char;
+                        if c == '\\' { 'x' } else { c }
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.gen_range(0, 5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(200, 0xfed_b2, |rng| {
+        let doc = random_json(rng, 0);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert_eq!(doc, back, "\n{text}");
+    });
+}
+
+#[test]
+fn prop_wire_messages_roundtrip() {
+    use fedpaq::net::proto::{ToLeader, ToWorker};
+    check(150, 0xfed_b3, |rng| {
+        let p = rng.gen_range(1, 400);
+        let msg = ToWorker::Work {
+            round: rng.next_u64() % 1000,
+            node: rng.next_u64() % 50,
+            params: random_vec(rng, p, 1.0),
+            lrs: {
+                let n_lrs = rng.gen_range(1, 8);
+                random_vec(rng, n_lrs, 0.1)
+            },
+        };
+        match (ToWorker::decode(&msg.encode()).unwrap(), &msg) {
+            (
+                ToWorker::Work { round, node, params, lrs },
+                ToWorker::Work { round: r2, node: n2, params: p2, lrs: l2 },
+            ) => {
+                assert_eq!(round, *r2);
+                assert_eq!(node, *n2);
+                assert_eq!(&params, p2);
+                assert_eq!(&lrs, l2);
+            }
+            _ => panic!(),
+        }
+        let q = Quantizer::qsgd(rng.gen_range(1, 16) as u32);
+        let enc = q.encode(&random_vec(rng, p, 2.0), &mut rng.clone());
+        let want = q.decode(&enc);
+        let up = ToLeader::Update { round: 1, node: 2, enc };
+        match ToLeader::decode(&up.encode()).unwrap() {
+            ToLeader::Update { enc, .. } => assert_eq!(q.decode(&enc), want),
+            _ => panic!(),
+        }
+    });
+}

@@ -19,7 +19,7 @@ use fedpaq::data::DatasetKind;
 use fedpaq::figures::Runner;
 use fedpaq::metrics::FigureData;
 use fedpaq::opt::LrSchedule;
-use fedpaq::quant::Quantizer;
+use fedpaq::quant::CodecSpec;
 
 fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         r: 5,
         tau,
         t_total: rounds * tau,
-        quantizer: Quantizer::qsgd(4),
+        codec: CodecSpec::qsgd(4),
         lr: LrSchedule::Const { eta: 0.05 },
         ratio: 1000.0,
         seed: 7,

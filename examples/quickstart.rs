@@ -4,28 +4,34 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Demonstrates the whole public API in ~30 lines: build a config, load
-//! the PJRT engine (falling back to the pure-rust engine when artifacts
-//! are missing), run Algorithm 1, inspect the loss-vs-time curve.
+//! Demonstrates the composable round-pipeline API in ~40 lines: build a
+//! config, load an engine (falling back to the pure-rust engine when PJRT
+//! artifacts are missing), assemble the server with `ServerBuilder`, run
+//! Algorithm 1, then swap the upload codec for top-k sparsification
+//! without touching anything else.
 
 use fedpaq::config::{EngineKind, ExperimentConfig};
-use fedpaq::figures::Runner;
-use fedpaq::quant::Quantizer;
+use fedpaq::coordinator::ServerBuilder;
+use fedpaq::quant::{CodecSpec, TopKCodec};
+use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
-    let engine = if have_artifacts { EngineKind::Pjrt } else { EngineKind::Rust };
-    println!("engine: {engine:?} (artifacts present: {have_artifacts})");
+    let engine_kind = if have_artifacts { EngineKind::Pjrt } else { EngineKind::Rust };
+    println!("engine: {engine_kind:?} (artifacts present: {have_artifacts})");
 
     // FedPAQ on the paper's Fig-1 logreg workload: n=50 nodes, r=25
-    // participate per round, τ=5 local steps, 1-level QSGD quantization.
+    // participate per round, τ=5 local steps, 1-level QSGD uploads.
     let cfg = ExperimentConfig::fig1_logreg_base()
         .with_name("quickstart FedPAQ (s=1, r=25, tau=5)")
-        .with_quantizer(Quantizer::qsgd(1))
-        .with_engine(engine.clone());
+        .with_codec(CodecSpec::qsgd(1))
+        .with_engine(engine_kind);
 
-    let mut runner = Runner::new(engine, "artifacts");
-    let result = runner.run_config(cfg)?;
+    let mut engine = fedpaq::net::worker::build_engine(&cfg, Path::new("artifacts"))?;
+    let result = ServerBuilder::new(cfg.clone())
+        .engine(engine.as_mut())
+        .build()?
+        .run()?;
 
     println!("\nround  iters  virtual-time  uploaded-bits  train-loss");
     for p in &result.curve.points {
@@ -45,6 +51,20 @@ fn main() -> anyhow::Result<()> {
             * 32
             * result.params.len() as u64) as f64
             / result.total_bits as f64
+    );
+
+    // The codec is a pluggable seam: rerun the identical experiment with
+    // top-k sparsification (keep the 10% largest-magnitude coordinates)
+    // just by overriding the codec on the builder.
+    let topk = ServerBuilder::new(cfg.with_name("quickstart top-k (10%)"))
+        .engine(engine.as_mut())
+        .codec(TopKCodec::new(100))
+        .build()?
+        .run()?;
+    let t_last = topk.curve.points.last().unwrap().loss;
+    println!(
+        "\ntop-k 10%: loss {first:.4} -> {t_last:.4}, {:.2} MBit uploaded",
+        topk.total_bits as f64 / 1e6
     );
     Ok(())
 }

@@ -17,7 +17,7 @@ use fedpaq::coordinator::Server;
 use fedpaq::data::{FederatedDataset, Labels, Partition};
 use fedpaq::model::{Engine, LabelBatch, LogRegModel};
 use fedpaq::opt::LrSchedule;
-use fedpaq::quant::Quantizer;
+use fedpaq::quant::CodecSpec;
 use fedpaq::theory::ProblemConsts;
 
 /// Solve the logreg ERM to high precision with full-batch GD (the oracle's
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         tau: 5,
         r: 25,
         t_total: 2000,
-        quantizer: Quantizer::qsgd(2),
+        codec: CodecSpec::qsgd(2),
         lr: LrSchedule::PolyDecay { mu: 0.05, tau: 5, eta_max: 0.5 },
         eval_every: 40,
         engine: EngineKind::Rust,
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         l_smooth: 0.6,
         mu: 0.05,
         sigma2: 0.5,
-        q: cfg.quantizer.variance_q(785),
+        q: cfg.codec.variance_q(785),
         n: cfg.n_nodes,
         r: cfg.r,
     };
@@ -130,7 +130,7 @@ fn main() -> anyhow::Result<()> {
             tau,
             r: 25,
             t_total,
-            quantizer: Quantizer::qsgd(1),
+            codec: CodecSpec::qsgd(1),
             lr: LrSchedule::NonConvex { l_smooth: 4.0, t_total },
             eval_every: 5,
             engine: EngineKind::Pjrt,
@@ -144,7 +144,7 @@ fn main() -> anyhow::Result<()> {
             l_smooth: 4.0,
             mu: 0.0,
             sigma2: 1.0,
-            q: cfg2.quantizer.variance_q(92_027),
+            q: cfg2.codec.variance_q(92_027),
             n: cfg2.n_nodes,
             r: cfg2.r,
         };

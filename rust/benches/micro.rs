@@ -9,7 +9,7 @@ use fedpaq::coordinator::aggregate::Aggregator;
 use fedpaq::coordinator::local::{gather_local_batches, GatherBufs};
 use fedpaq::coordinator::sampler::sample_nodes;
 use fedpaq::data::{BatchSampler, DatasetKind, FederatedDataset, Partition};
-use fedpaq::quant::{Coding, Quantizer};
+use fedpaq::quant::{CodecSpec, Coding, UpdateCodec};
 use fedpaq::util::bench::Group;
 use fedpaq::util::rng::Rng;
 use std::hint::black_box;
@@ -18,15 +18,17 @@ fn quantizer_codec() {
     let mut g = Group::new("quant_codec");
     for &p in &[785usize, 92_027, 251_874] {
         let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.37).sin()).collect();
-        for (label, q) in [
-            ("qsgd_s1", Quantizer::qsgd(1)),
-            ("qsgd_s10", Quantizer::qsgd(10)),
-            ("qsgd_s1_elias", Quantizer::Qsgd { s: 1, coding: Coding::Elias }),
-            ("identity", Quantizer::Identity),
+        for (label, spec) in [
+            ("qsgd_s1", CodecSpec::qsgd(1)),
+            ("qsgd_s10", CodecSpec::qsgd(10)),
+            ("qsgd_s1_elias", CodecSpec::Qsgd { s: 1, coding: Coding::Elias }),
+            ("identity", CodecSpec::Identity),
+            ("topk_10pct", CodecSpec::top_k(100)),
         ] {
+            let q = spec.build().unwrap();
             let mut rng = Rng::seed_from_u64(1);
             g.bench_throughput(&format!("{label}/p{p}"), Some((p * 4) as u64), || {
-                let out = q.apply(black_box(&x), &mut rng);
+                let out = q.apply(black_box(&x), &mut rng).unwrap();
                 black_box(out);
             });
         }
@@ -37,17 +39,20 @@ fn quantizer_codec() {
 fn aggregation() {
     let mut g = Group::new("aggregate");
     let p = 92_027;
-    let q = Quantizer::qsgd(1);
+    let q = CodecSpec::qsgd(1).build().unwrap();
     let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.13).cos() * 0.01).collect();
     let mut rng = Rng::seed_from_u64(2);
     let encs: Vec<_> = (0..25).map(|_| q.encode(&x, &mut rng)).collect();
+    // One long-lived aggregator, reset per round: the decode scratch and
+    // sum buffers are allocated once, as on the real hot path.
+    let mut agg = Aggregator::new(p);
     g.bench("r25_p92k_qsgd1", || {
-        let mut agg = Aggregator::new(q, p);
+        agg.reset();
         for e in &encs {
-            agg.push(e);
+            agg.push(q.as_ref(), e).unwrap();
         }
         let mut params = vec![0f32; p];
-        agg.apply(&mut params);
+        agg.apply(&mut params).unwrap();
         black_box(params);
     });
     g.finish();

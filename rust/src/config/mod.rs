@@ -1,16 +1,42 @@
 //! Typed experiment configuration (JSON files + programmatic builders).
 //!
 //! One [`ExperimentConfig`] fully determines a training run: model, data,
-//! the FedPAQ knobs `(n, r, τ, s)`, stepsize schedule, cost-model ratio
-//! and seeds. Runs are reproducible from the config alone — every RNG in
-//! the system is keyed off `seed` plus structural coordinates.
+//! the FedPAQ knobs `(n, r, τ)`, the upload codec, stepsize schedule,
+//! cost-model ratio and seeds. Runs are reproducible from the config
+//! alone — every RNG in the system is keyed off `seed` plus structural
+//! coordinates.
+//!
+//! ## Codec spec (JSON)
+//!
+//! The `codec` field is a tagged object naming a built-in
+//! [`UpdateCodec`](crate::quant::UpdateCodec) implementation:
+//!
+//! ```json
+//! {"type": "identity"}
+//! {"type": "qsgd",  "s": 4, "coding": "naive" | "elias"}
+//! {"type": "top_k", "k_permille": 100, "coding": "naive" | "elias"}
+//! ```
+//!
+//! The legacy key `quantizer` is accepted as an alias of `codec`, so
+//! pre-redesign config files keep working. Codecs beyond the built-ins
+//! plug in programmatically through
+//! [`ServerBuilder::codec`](crate::coordinator::ServerBuilder::codec).
+//!
+//! ## Transport knobs
+//!
+//! The transport is an execution-mode choice, not an experiment
+//! parameter, so it stays out of this struct: the CLI picks it
+//! (`fedpaq train` = in-process, `fedpaq leader`/`worker` = TCP), and
+//! library users pass one to
+//! [`ServerBuilder::transport`](crate::coordinator::ServerBuilder::transport).
+//! Both modes replay identical uploads from the same config + seed.
 //!
 //! Serialization goes through the in-tree JSON module (`util::json`);
 //! see `configs/` for example files.
 
 use crate::data::{DatasetKind, PartitionKind};
 use crate::opt::LrSchedule;
-use crate::quant::{Coding, Quantizer};
+use crate::quant::{CodecSpec, Coding};
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -43,8 +69,8 @@ pub struct ExperimentConfig {
     pub tau: usize,
     /// Total SGD iterations `T`; rounds `K = ceil(T/τ)`.
     pub t_total: usize,
-    /// Upload quantizer (Identity == FedAvg).
-    pub quantizer: Quantizer,
+    /// Upload codec spec (Identity == FedAvg).
+    pub codec: CodecSpec,
     /// Stepsize schedule.
     pub lr: LrSchedule,
     /// Cost-model ratio `C_comm/C_comp` (paper: 100 convex, 1000 NN).
@@ -80,8 +106,17 @@ impl ExperimentConfig {
         anyhow::ensure!(self.per_node >= 1, "per_node must be >= 1");
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!(self.ratio > 0.0, "ratio must be positive");
-        if let Quantizer::Qsgd { s, .. } = self.quantizer {
-            anyhow::ensure!(s >= 1, "QSGD needs s >= 1");
+        match self.codec {
+            CodecSpec::Qsgd { s, .. } => {
+                anyhow::ensure!(s >= 1, "QSGD needs s >= 1");
+            }
+            CodecSpec::TopK { k_permille, .. } => {
+                anyhow::ensure!(
+                    (1..=1000).contains(&k_permille),
+                    "top-k needs k_permille in 1..=1000, got {k_permille}"
+                );
+            }
+            CodecSpec::Identity | CodecSpec::External { .. } => {}
         }
         if let PartitionKind::Dirichlet { alpha } = self.partition {
             anyhow::ensure!(alpha > 0.0, "dirichlet alpha must be positive");
@@ -101,7 +136,7 @@ impl ExperimentConfig {
             r: 25,
             tau: 5,
             t_total: 100,
-            quantizer: Quantizer::qsgd(1),
+            codec: CodecSpec::qsgd(1),
             lr: LrSchedule::Const { eta: 0.2 },
             ratio: 100.0,
             seed: 42,
@@ -123,7 +158,7 @@ impl ExperimentConfig {
             r: 25,
             tau: 2,
             t_total: 100,
-            quantizer: Quantizer::qsgd(1),
+            codec: CodecSpec::qsgd(1),
             lr: LrSchedule::Const { eta: 0.1 },
             ratio: 1000.0,
             seed: 42,
@@ -136,18 +171,27 @@ impl ExperimentConfig {
     // ---------------- JSON (de)serialization ----------------
 
     pub fn to_json(&self) -> Json {
-        let quant = match self.quantizer {
-            Quantizer::Identity => Json::obj(vec![("type", Json::str("identity"))]),
-            Quantizer::Qsgd { s, coding } => Json::obj(vec![
+        let coding_str = |coding: &Coding| {
+            Json::str(match coding {
+                Coding::Naive => "naive",
+                Coding::Elias => "elias",
+            })
+        };
+        let codec = match self.codec {
+            CodecSpec::Identity => Json::obj(vec![("type", Json::str("identity"))]),
+            CodecSpec::Qsgd { s, ref coding } => Json::obj(vec![
                 ("type", Json::str("qsgd")),
                 ("s", Json::num(s as f64)),
-                (
-                    "coding",
-                    Json::str(match coding {
-                        Coding::Naive => "naive",
-                        Coding::Elias => "elias",
-                    }),
-                ),
+                ("coding", coding_str(coding)),
+            ]),
+            CodecSpec::TopK { k_permille, ref coding } => Json::obj(vec![
+                ("type", Json::str("top_k")),
+                ("k_permille", Json::num(k_permille as f64)),
+                ("coding", coding_str(coding)),
+            ]),
+            CodecSpec::External { id } => Json::obj(vec![
+                ("type", Json::str("external")),
+                ("id", Json::num(id as f64)),
             ]),
         };
         let lr = match self.lr {
@@ -176,7 +220,7 @@ impl ExperimentConfig {
             ("r", Json::num(self.r as f64)),
             ("tau", Json::num(self.tau as f64)),
             ("t_total", Json::num(self.t_total as f64)),
-            ("quantizer", quant),
+            ("codec", codec),
             ("lr", lr),
             ("ratio", Json::num(self.ratio)),
             // Seeds are u64 and exceed f64's 2^53 integer range: ship as a
@@ -204,18 +248,37 @@ impl ExperimentConfig {
     }
 
     pub fn from_json(j: &Json) -> crate::Result<Self> {
-        let quantizer = {
-            let q = j.req("quantizer")?;
+        let codec = {
+            // `codec` is the current key; `quantizer` is the legacy alias
+            // kept so pre-redesign config files parse unchanged.
+            let q = j
+                .get("codec")
+                .or_else(|| j.get("quantizer"))
+                .ok_or_else(|| anyhow::anyhow!("missing JSON field \"codec\""))?;
+            let coding = || match q.get("coding").and_then(Json::as_str).unwrap_or("naive") {
+                "elias" => Coding::Elias,
+                _ => Coding::Naive,
+            };
             match q.req_str("type")? {
-                "identity" => Quantizer::Identity,
-                "qsgd" => Quantizer::Qsgd {
-                    s: q.req_usize("s")? as u32,
-                    coding: match q.get("coding").and_then(Json::as_str).unwrap_or("naive") {
-                        "elias" => Coding::Elias,
-                        _ => Coding::Naive,
-                    },
-                },
-                other => anyhow::bail!("unknown quantizer type {other:?}"),
+                "identity" => CodecSpec::Identity,
+                "qsgd" => {
+                    let s = q.req_usize("s")?;
+                    anyhow::ensure!(s <= u32::MAX as usize, "qsgd s {s} out of range");
+                    CodecSpec::Qsgd { s: s as u32, coding: coding() }
+                }
+                "top_k" => {
+                    // Range-check before narrowing: `as u16` would wrap
+                    // out-of-range values into plausible configs.
+                    let k = q.req_usize("k_permille")?;
+                    anyhow::ensure!(k <= 1000, "top-k k_permille {k} out of range 0..=1000");
+                    CodecSpec::TopK { k_permille: k as u16, coding: coding() }
+                }
+                "external" => {
+                    let id = q.req_usize("id")?;
+                    anyhow::ensure!(id <= u32::MAX as usize, "external id {id} out of range");
+                    CodecSpec::External { id: id as u32 }
+                }
+                other => anyhow::bail!("unknown codec type {other:?}"),
             }
         };
         let lr = {
@@ -243,7 +306,7 @@ impl ExperimentConfig {
             r: j.req_usize("r")?,
             tau: j.req_usize("tau")?,
             t_total: j.req_usize("t_total")?,
-            quantizer,
+            codec,
             lr,
             ratio: j.req_f64("ratio")?,
             seed: match j.req("seed")? {
@@ -284,8 +347,8 @@ impl ExperimentConfig {
         self
     }
 
-    pub fn with_quantizer(mut self, q: Quantizer) -> Self {
-        self.quantizer = q;
+    pub fn with_codec(mut self, codec: CodecSpec) -> Self {
+        self.codec = codec;
         self
     }
 
@@ -347,13 +410,26 @@ mod tests {
     }
 
     #[test]
+    fn invalid_top_k_rejected() {
+        let c = ExperimentConfig::fig1_logreg_base().with_codec(CodecSpec::top_k(0));
+        assert!(c.validated().is_err());
+        let c = ExperimentConfig::fig1_logreg_base()
+            .with_codec(CodecSpec::TopK { k_permille: 1001, coding: Coding::Naive });
+        assert!(c.validated().is_err());
+    }
+
+    #[test]
     fn json_roundtrip() {
         for cfg in [
             ExperimentConfig::fig1_nn_base().with_tau(7).with_r(13),
             ExperimentConfig::fig1_logreg_base()
-                .with_quantizer(Quantizer::Identity)
+                .with_codec(CodecSpec::Identity)
                 .with_engine(EngineKind::Rust)
                 .with_lr(LrSchedule::PolyDecay { mu: 0.1, tau: 5, eta_max: 1.0 }),
+            ExperimentConfig::fig1_logreg_base()
+                .with_codec(CodecSpec::TopK { k_permille: 125, coding: Coding::Elias }),
+            ExperimentConfig::fig1_logreg_base()
+                .with_codec(CodecSpec::External { id: 41 }),
         ] {
             let j = cfg.to_json();
             let back = ExperimentConfig::from_json(&j).unwrap();
@@ -363,5 +439,30 @@ mod tests {
                 ExperimentConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
             assert_eq!(cfg, back2);
         }
+    }
+
+    #[test]
+    fn example_config_files_parse() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs");
+        for f in
+            ["fedpaq_qsgd_logreg.json", "topk_logreg.json", "legacy_quantizer_key.json"]
+        {
+            ExperimentConfig::from_json_file(&dir.join(f))
+                .unwrap_or_else(|e| panic!("{f}: {e}"));
+        }
+    }
+
+    #[test]
+    fn legacy_quantizer_key_still_parses() {
+        // Pre-redesign config files tagged the codec under "quantizer".
+        let mut j = ExperimentConfig::fig1_logreg_base().to_json();
+        if let Json::Obj(map) = &mut j {
+            let codec = map.remove("codec").unwrap();
+            map.insert("quantizer".to_string(), codec);
+        } else {
+            panic!("config JSON must be an object");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.codec, CodecSpec::qsgd(1));
     }
 }

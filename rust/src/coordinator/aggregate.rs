@@ -1,38 +1,60 @@
 //! Server-side aggregation (Algorithm 1 line 13):
 //! `x_{k+1} = x_k + (1/r) Σ_{i∈S_k} Q(x_{k,τ}^{(i)} − x_k)`.
 
-use crate::quant::{Encoded, Quantizer};
+use crate::quant::{Encoded, UpdateCodec};
 
 /// Streaming aggregator: decodes each upload and accumulates the mean
 /// update in f64 (bit-stable regardless of arrival order is NOT promised —
 /// floating addition — but f64 accumulation keeps the error ≪ f32 eps).
+///
+/// Designed to live for a whole run: [`Aggregator::reset`] rewinds it for
+/// the next round while keeping the `sum` and decode-scratch allocations,
+/// so the per-upload hot path ([`Aggregator::push`]) allocates nothing.
 #[derive(Debug)]
 pub struct Aggregator {
-    quantizer: Quantizer,
     sum: Vec<f64>,
     count: usize,
     bits: Vec<u64>,
+    /// Reused decode buffer: one allocation per run, not per upload.
+    scratch: Vec<f32>,
 }
 
 impl Aggregator {
-    pub fn new(quantizer: Quantizer, p: usize) -> Self {
-        Aggregator { quantizer, sum: vec![0.0; p], count: 0, bits: Vec::new() }
+    pub fn new(p: usize) -> Self {
+        Aggregator { sum: vec![0.0; p], count: 0, bits: Vec::new(), scratch: Vec::new() }
     }
 
-    /// Decode and absorb one node's upload.
-    pub fn push(&mut self, enc: &Encoded) {
-        assert_eq!(enc.p, self.sum.len(), "upload dimension mismatch");
-        let dec = self.quantizer.decode(enc);
-        for (s, v) in self.sum.iter_mut().zip(dec) {
+    /// Rewind for the next round, keeping all allocations.
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|s| *s = 0.0);
+        self.count = 0;
+        self.bits.clear();
+    }
+
+    /// Decode and absorb one node's upload (allocation-free: decodes into
+    /// the internal scratch buffer via [`UpdateCodec::decode_into`]).
+    pub fn push(&mut self, codec: &dyn UpdateCodec, enc: &Encoded) -> crate::Result<()> {
+        anyhow::ensure!(
+            enc.p == self.sum.len(),
+            "upload dimension mismatch: {} != {}",
+            enc.p,
+            self.sum.len()
+        );
+        codec.decode_into(enc, &mut self.scratch)?;
+        for (s, &v) in self.sum.iter_mut().zip(&self.scratch) {
             *s += v as f64;
         }
         self.bits.push(enc.bits());
         self.count += 1;
+        Ok(())
     }
 
-    /// Absorb an already-decoded update (in-process fast path: skips the
-    /// wire encode/decode *arithmetic result is identical by construction*
-    /// because the decoded values come from the same codec).
+    /// Absorb an already-decoded update, skipping the wire decode — for
+    /// embedders and custom transports whose uploads arrive dequantized
+    /// (the arithmetic result is identical by construction when the
+    /// decoded values come from the same codec). The built-in round
+    /// pipeline always carries [`Encoded`] buffers and uses
+    /// [`Aggregator::push`].
     pub fn push_decoded(&mut self, dec: &[f32], bits: u64) {
         assert_eq!(dec.len(), self.sum.len());
         for (s, &v) in self.sum.iter_mut().zip(dec) {
@@ -51,55 +73,86 @@ impl Aggregator {
         &self.bits
     }
 
-    /// Apply the averaged update to `params`, consuming the aggregator.
-    pub fn apply(self, params: &mut [f32]) {
-        assert!(self.count > 0, "no uploads to aggregate");
+    /// Apply the averaged update to `params`. Errors (instead of
+    /// panicking) when no uploads arrived, so a round where every sampled
+    /// node failed cannot abort a long run — the engine skips it instead.
+    pub fn apply(&mut self, params: &mut [f32]) -> crate::Result<()> {
+        anyhow::ensure!(self.count > 0, "no uploads to aggregate");
         let inv = 1.0 / self.count as f64;
-        for (p, s) in params.iter_mut().zip(self.sum) {
+        for (p, &s) in params.iter_mut().zip(&self.sum) {
             *p = (*p as f64 + s * inv) as f32;
         }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{IdentityCodec, QsgdCodec, UpdateCodec};
     use crate::util::rng::Rng;
 
     #[test]
     fn identity_aggregation_is_mean() {
-        let q = Quantizer::Identity;
-        let mut agg = Aggregator::new(q, 3);
+        let q = IdentityCodec;
+        let mut agg = Aggregator::new(3);
         let mut rng = Rng::seed_from_u64(0);
-        agg.push(&q.encode(&[1.0, 2.0, 3.0], &mut rng));
-        agg.push(&q.encode(&[3.0, 0.0, -1.0], &mut rng));
+        agg.push(&q, &q.encode(&[1.0, 2.0, 3.0], &mut rng)).unwrap();
+        agg.push(&q, &q.encode(&[3.0, 0.0, -1.0], &mut rng)).unwrap();
         let mut params = vec![10.0f32, 10.0, 10.0];
-        agg.apply(&mut params);
+        agg.apply(&mut params).unwrap();
         assert_eq!(params, vec![12.0, 11.0, 11.0]);
     }
 
     #[test]
     fn push_decoded_matches_push() {
-        let q = Quantizer::qsgd(2);
+        let q = QsgdCodec::new(2);
         let x = vec![0.5f32, -1.5, 2.0, 0.0];
         let mut rng1 = Rng::seed_from_u64(7);
         let mut rng2 = Rng::seed_from_u64(7);
         let enc = q.encode(&x, &mut rng1);
-        let (dec, bits) = q.apply(&x, &mut rng2);
-        let mut a = Aggregator::new(q, 4);
-        a.push(&enc);
-        let mut b = Aggregator::new(q, 4);
+        let (dec, bits) = q.apply(&x, &mut rng2).unwrap();
+        let mut a = Aggregator::new(4);
+        a.push(&q, &enc).unwrap();
+        let mut b = Aggregator::new(4);
         b.push_decoded(&dec, bits);
         let mut pa = vec![0f32; 4];
         let mut pb = vec![0f32; 4];
-        a.apply(&mut pa);
-        b.apply(&mut pb);
+        a.apply(&mut pa).unwrap();
+        b.apply(&mut pb).unwrap();
         assert_eq!(pa, pb);
     }
 
     #[test]
-    #[should_panic(expected = "no uploads")]
-    fn empty_apply_panics() {
-        Aggregator::new(Quantizer::Identity, 2).apply(&mut [0.0, 0.0]);
+    fn empty_apply_is_an_error_not_a_panic() {
+        let mut agg = Aggregator::new(2);
+        assert!(agg.apply(&mut [0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn reset_reuses_allocations_across_rounds() {
+        let q = QsgdCodec::new(1);
+        let x = vec![0.25f32; 64];
+        let mut rng = Rng::seed_from_u64(1);
+        let mut agg = Aggregator::new(64);
+        let mut first = vec![0f32; 64];
+        agg.push(&q, &q.encode(&x, &mut rng)).unwrap();
+        agg.apply(&mut first).unwrap();
+        agg.reset();
+        assert_eq!(agg.count(), 0);
+        assert!(agg.upload_bits().is_empty());
+        let mut again = vec![0f32; 64];
+        let mut rng2 = Rng::seed_from_u64(1);
+        agg.push(&q, &q.encode(&x, &mut rng2)).unwrap();
+        agg.apply(&mut again).unwrap();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn mismatched_codec_push_is_rejected() {
+        let enc = QsgdCodec::new(2).encode(&[1.0f32; 8], &mut Rng::seed_from_u64(2));
+        let mut agg = Aggregator::new(8);
+        assert!(agg.push(&QsgdCodec::new(3), &enc).is_err());
+        assert_eq!(agg.count(), 0);
     }
 }

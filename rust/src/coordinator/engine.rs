@@ -1,0 +1,249 @@
+//! The [`RoundEngine`]: one implementation of the per-round FedPAQ
+//! protocol (Algorithm 1), generic over [`Transport`] and
+//! [`UpdateCodec`].
+//!
+//! Each round: sample `S_k` → `transport.round()` runs the nodes' local
+//! work → decode + aggregate uploads in node order → apply the averaged
+//! update → advance the clock (virtual §5 time for simulated transports,
+//! wall-clock for real ones) → evaluate on the [`EvalSlab`] schedule.
+//!
+//! A round that yields zero uploads is *not* fatal: it is logged,
+//! charged zero time, and the model carries over unchanged. The
+//! built-in transports never produce one — they error out on node
+//! failure instead — so this skip path is the seam for transports that
+//! *drop* failed nodes (the async rounds on the ROADMAP).
+
+use super::aggregate::Aggregator;
+use super::local::OwnedLabels;
+use super::sampler;
+use super::transport::{RoundCtx, Transport};
+use crate::config::ExperimentConfig;
+use crate::data::{FederatedDataset, Labels, Partition};
+use crate::metrics::{Curve, CurvePoint};
+use crate::model::Engine;
+use crate::quant::UpdateCodec;
+use crate::simtime::{CostModel, VirtualClock};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Regenerate the seeded federated world for `cfg`: the (process-cached)
+/// dataset and its node partition. Single source of truth shared by the
+/// eval slab and the in-process transport, so the loss is always
+/// evaluated against exactly the shards the nodes train on.
+pub(crate) fn build_world(
+    cfg: &ExperimentConfig,
+    engine: &mut dyn Engine,
+) -> crate::Result<(Arc<FederatedDataset>, Partition)> {
+    let n_samples = cfg.n_nodes * cfg.per_node;
+    let data = crate::data::cached_generate(cfg.dataset, cfg.seed, n_samples);
+    anyhow::ensure!(
+        data.dim == engine.kind().d_in(),
+        "dataset dim {} != model d_in {}",
+        data.dim,
+        engine.kind().d_in()
+    );
+    let partition =
+        Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);
+    Ok((data, partition))
+}
+
+/// Per-round timing/traffic record.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStats {
+    pub round: usize,
+    pub compute_time: f64,
+    pub comm_time: f64,
+    pub bits_up: u64,
+}
+
+/// Output of a full training run.
+#[derive(Debug)]
+pub struct RunResult {
+    /// Loss-vs-time curve (the paper's plotted series).
+    pub curve: Curve,
+    /// Final server model.
+    pub params: Vec<f32>,
+    /// Per-round stats.
+    pub rounds: Vec<RoundStats>,
+    /// Total uploaded bits over the run.
+    pub total_bits: u64,
+}
+
+/// The fixed evaluation slab: the first `eval_n` assigned samples
+/// (partition order is already a seeded shuffle). For logreg `eval_n` is
+/// the full training set, matching the paper's "training loss" axis
+/// exactly; for the NNs it is a fixed 2048-sample estimate (DESIGN.md §4).
+///
+/// Shared by every execution mode, so the sim server and the TCP leader
+/// evaluate the identical loss.
+#[derive(Debug)]
+pub struct EvalSlab {
+    x: Vec<f32>,
+    y: OwnedLabels,
+    token: u64,
+}
+
+impl EvalSlab {
+    /// Build the slab for `cfg`, regenerating the seeded world.
+    pub fn build(cfg: &ExperimentConfig, engine: &mut dyn Engine) -> crate::Result<Self> {
+        let (data, partition) = build_world(cfg, engine)?;
+        Self::from_world(cfg, engine, &data, &partition)
+    }
+
+    /// Build the slab from an already-constructed world (what
+    /// `ServerBuilder` uses so the world is built once per run).
+    pub fn from_world(
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+        data: &FederatedDataset,
+        partition: &Partition,
+    ) -> crate::Result<Self> {
+        let eval_n = engine.eval_n();
+        let all = partition.all_indices();
+        anyhow::ensure!(all.len() >= eval_n, "eval slab larger than dataset");
+        let idx = &all[..eval_n];
+        let mut x = Vec::new();
+        data.gather_features(idx, &mut x);
+        let y = match &data.labels {
+            Labels::Float(_) => {
+                let mut y = Vec::new();
+                data.gather_labels_f32(idx, &mut y);
+                OwnedLabels::F32(y)
+            }
+            Labels::Int(_) => {
+                let mut y = Vec::new();
+                data.gather_labels_i32(idx, &mut y);
+                OwnedLabels::I32(y)
+            }
+        };
+        let token = cfg.seed ^ 0xe7a1_0000 ^ ((eval_n as u64) << 32);
+        Ok(EvalSlab { x, y, token })
+    }
+
+    /// Evaluate the training loss at `params` (engines may cache the
+    /// uploaded slab tensors across calls via the token).
+    pub fn eval(&self, engine: &mut dyn Engine, params: &[f32]) -> crate::Result<f64> {
+        Ok(engine.eval_loss_token(params, self.token, &self.x, self.y.as_batch())? as f64)
+    }
+}
+
+/// Time accounting: the §5 virtual-time model for simulated transports,
+/// real wall-clock for networked ones.
+enum Timing {
+    Virtual { cost: CostModel, clock: VirtualClock },
+    Wall { t0: Instant },
+}
+
+/// The per-round protocol, composed from pluggable parts.
+///
+/// Built directly or via
+/// [`ServerBuilder`](super::server::ServerBuilder); `run` is
+/// deterministic in `(cfg.seed, codec, transport)` — for the built-in
+/// transports equal seeds reproduce bit-identical models.
+pub struct RoundEngine {
+    codec: Box<dyn UpdateCodec>,
+    transport: Box<dyn Transport>,
+}
+
+impl RoundEngine {
+    pub fn new(codec: Box<dyn UpdateCodec>, transport: Box<dyn Transport>) -> Self {
+        RoundEngine { codec, transport }
+    }
+
+    pub fn codec(&self) -> &dyn UpdateCodec {
+        self.codec.as_ref()
+    }
+
+    /// Drive the full K-round protocol for a *validated* `cfg`, recording
+    /// the loss curve through `slab` on `cfg.eval_every`'s schedule.
+    pub fn run(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+        slab: &EvalSlab,
+    ) -> crate::Result<RunResult> {
+        self.transport.setup(cfg, engine)?;
+        let mut params = engine.init_params()?;
+        let p = params.len();
+        let rounds = cfg.rounds();
+        let mut timing = if self.transport.virtual_time() {
+            Timing::Virtual {
+                cost: CostModel::with_ratio(cfg.ratio, p, cfg.seed),
+                clock: VirtualClock::new(),
+            }
+        } else {
+            Timing::Wall { t0: Instant::now() }
+        };
+        let mut curve = Curve::new(cfg.name.clone());
+        let mut stats = Vec::with_capacity(rounds);
+        let mut total_bits = 0u64;
+        let mut agg = Aggregator::new(p);
+
+        // Round-0 point: initial loss at time 0.
+        let loss0 = slab.eval(engine, &params)?;
+        curve.push(CurvePoint { round: 0, iterations: 0, time: 0.0, bits_up: 0, loss: loss0 });
+
+        for k in 0..rounds {
+            let round_t0 = Instant::now();
+            let nodes = sampler::sample_nodes(cfg.n_nodes, cfg.r, cfg.seed, k);
+            let lrs: Vec<f32> = (0..cfg.tau).map(|t| cfg.lr.lr(k, t)).collect();
+            let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
+            let uploads = self.transport.round(&ctx, self.codec.as_ref(), engine)?;
+            agg.reset();
+            for enc in &uploads {
+                agg.push(self.codec.as_ref(), enc)?;
+            }
+            let bits: u64 = agg.upload_bits().iter().sum();
+            let (compute_time, comm_time) = match &mut timing {
+                Timing::Virtual { cost, clock } => {
+                    let (ct, mt) = if agg.count() > 0 {
+                        (
+                            cost.round_compute_time(&nodes, k, cfg.tau, engine.batch()),
+                            cost.round_comm_time(agg.upload_bits()),
+                        )
+                    } else {
+                        (0.0, 0.0)
+                    };
+                    clock.advance(ct + mt);
+                    (ct, mt)
+                }
+                Timing::Wall { .. } => {
+                    let ct = if agg.count() > 0 {
+                        round_t0.elapsed().as_secs_f64()
+                    } else {
+                        0.0
+                    };
+                    (ct, 0.0)
+                }
+            };
+            if agg.count() > 0 {
+                agg.apply(&mut params)?;
+            } else {
+                eprintln!(
+                    "[{}] round {k}: no uploads from {} sampled nodes — skipping",
+                    self.transport.name(),
+                    nodes.len()
+                );
+            }
+            total_bits += bits;
+            stats.push(RoundStats { round: k, compute_time, comm_time, bits_up: bits });
+
+            if (k + 1) % cfg.eval_every == 0 || k + 1 == rounds {
+                let loss = slab.eval(engine, &params)?;
+                let time = match &timing {
+                    Timing::Virtual { clock, .. } => clock.now(),
+                    Timing::Wall { t0 } => t0.elapsed().as_secs_f64(),
+                };
+                curve.push(CurvePoint {
+                    round: k + 1,
+                    iterations: (k + 1) * cfg.tau,
+                    time,
+                    bits_up: total_bits,
+                    loss,
+                });
+            }
+        }
+        self.transport.shutdown()?;
+        Ok(RunResult { curve, params, rounds: stats, total_bits })
+    }
+}

@@ -5,7 +5,7 @@
 use crate::config::ExperimentConfig;
 use crate::data::{BatchSampler, FederatedDataset};
 use crate::model::{Engine, LabelBatch};
-use crate::quant::Encoded;
+use crate::quant::{Encoded, UpdateCodec};
 
 /// Owned label storage for gathered batches.
 #[derive(Debug, Clone)]
@@ -76,11 +76,14 @@ pub fn gather_local_batches(
     }
 }
 
-/// Full node round: local SGD then quantize-and-encode the delta.
+/// Full node round: local SGD then compress-and-encode the delta through
+/// the run's [`UpdateCodec`].
 ///
 /// Returns the encoded upload (and its exact bit size via `enc.bits()`).
+#[allow(clippy::too_many_arguments)]
 pub fn node_round(
     cfg: &ExperimentConfig,
+    codec: &dyn UpdateCodec,
     engine: &mut dyn Engine,
     data: &FederatedDataset,
     shard: &[usize],
@@ -99,7 +102,7 @@ pub fn node_round(
         .map(|(&a, &b)| a - b)
         .collect();
     let mut qrng = quant_rng(cfg.seed, node, round);
-    Ok(cfg.quantizer.encode(&delta, &mut qrng))
+    Ok(codec.encode(&delta, &mut qrng))
 }
 
 /// Quantizer RNG stream for `(seed, node, round)` — shared with the TCP

@@ -1,21 +1,40 @@
-//! Layer-3 coordinator: the FedPAQ training protocol (paper Algorithm 1).
+//! Layer-3 coordinator: the FedPAQ training protocol (paper Algorithm 1)
+//! as a *composition of pluggable parts*.
 //!
-//! The [`Server`] owns the global model and drives `K = T/τ` rounds:
+//! One round of the protocol is
 //!
 //! 1. sample `r` of `n` nodes uniformly without replacement ([`sampler`]);
 //! 2. broadcast the current model `x_k` to the sampled nodes;
 //! 3. each node runs `τ` local SGD steps on its own shard ([`local`]);
-//! 4. each node uploads `Q(x_{k,τ}^{(i)} − x_k)` ([`crate::quant`]);
+//! 4. each node uploads `Q(x_{k,τ}^{(i)} − x_k)` compressed by an
+//!    [`UpdateCodec`](crate::quant::UpdateCodec);
 //! 5. server sets `x_{k+1} = x_k + (1/r) Σ Q(Δ_i)` ([`aggregate`]);
-//! 6. the virtual clock advances by the round's straggler-compute plus
-//!    serialized-upload time ([`crate::simtime`]).
+//! 6. the clock advances — §5 virtual time ([`crate::simtime`]) for
+//!    simulated transports, wall-clock for networked ones.
 //!
-//! Baselines fall out of the same loop: **FedAvg** = identity quantizer,
+//! The pieces compose through two seams:
+//!
+//! * **[`transport::Transport`]** — *where* steps 2–4 execute:
+//!   [`transport::InProcess`] runs every virtual node on the leader's own
+//!   engine (the simulation path), [`crate::net::Tcp`] fans the same work
+//!   out to worker processes over sockets. Same codecs, same RNG streams:
+//!   equal seeds give bit-identical models either way.
+//! * **[`crate::quant::UpdateCodec`]** — *how* step 4 compresses uploads.
+//!
+//! [`engine::RoundEngine`] drives the loop; [`server::ServerBuilder`]
+//! assembles `config × engine × codec × transport` and
+//! [`server::Server`] keeps the historical one-call entry point.
+//!
+//! Baselines fall out of the same pipeline: **FedAvg** = identity codec,
 //! **QSGD** = `τ = 1`, vanilla parallel SGD = both.
 
 pub mod aggregate;
+pub mod engine;
 pub mod local;
 pub mod sampler;
 pub mod server;
+pub mod transport;
 
-pub use server::{RoundStats, RunResult, Server};
+pub use engine::{EvalSlab, RoundEngine, RoundStats, RunResult};
+pub use server::{Server, ServerBuilder};
+pub use transport::{InProcess, RoundCtx, Transport};

@@ -1,179 +1,156 @@
-//! The FedPAQ parameter server: Algorithm 1 + the §5 virtual-time model.
+//! The FedPAQ parameter server: a thin composition of the pluggable round
+//! pipeline (codec × transport × engine), plus the [`ServerBuilder`] that
+//! assembles it.
+//!
+//! `Server::new(cfg, engine)` keeps the historical one-call path (codec
+//! from the config, in-process transport, §5 virtual time) and is
+//! bit-for-bit identical to the pre-trait monolithic loop for equal
+//! seeds. Every part can be swapped:
+//!
+//! ```ignore
+//! let mut server = ServerBuilder::new(cfg)
+//!     .engine(&mut engine)
+//!     .codec(TopKCodec::new(100))      // any UpdateCodec impl
+//!     .transport(InProcess::new())     // or net::Tcp, or your own
+//!     .build()?;
+//! let result = server.run()?;
+//! ```
 
-use super::{aggregate::Aggregator, local, sampler};
+use super::engine::{EvalSlab, RoundEngine, RunResult};
+use super::transport::{InProcess, Transport};
 use crate::config::ExperimentConfig;
-use crate::data::{BatchSampler, FederatedDataset, Labels, Partition};
-use crate::metrics::{Curve, CurvePoint};
-use crate::model::{Engine, LabelBatch};
-use crate::simtime::{CostModel, VirtualClock};
+use crate::model::Engine;
+use crate::quant::UpdateCodec;
 
-/// Per-round timing/traffic record.
-#[derive(Debug, Clone, Copy)]
-pub struct RoundStats {
-    pub round: usize,
-    pub compute_time: f64,
-    pub comm_time: f64,
-    pub bits_up: u64,
+/// Assembles a [`Server`] from config + engine + optional overrides.
+pub struct ServerBuilder<'e> {
+    cfg: ExperimentConfig,
+    engine: Option<&'e mut dyn Engine>,
+    codec: Option<Box<dyn UpdateCodec>>,
+    transport: Option<Box<dyn Transport>>,
 }
 
-/// Output of a full training run.
-#[derive(Debug)]
-pub struct RunResult {
-    /// Loss-vs-virtual-time curve (the paper's plotted series).
-    pub curve: Curve,
-    /// Final server model.
-    pub params: Vec<f32>,
-    /// Per-round stats.
-    pub rounds: Vec<RoundStats>,
-    /// Total uploaded bits over the run.
-    pub total_bits: u64,
+impl<'e> ServerBuilder<'e> {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        ServerBuilder { cfg, engine: None, codec: None, transport: None }
+    }
+
+    /// The engine evaluating the loss — and, for in-process transports,
+    /// running the nodes' local SGD. Required.
+    pub fn engine(mut self, engine: &'e mut dyn Engine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Override the upload codec (default: built from `cfg.codec`).
+    ///
+    /// The config's `codec` field is rewritten to the override's
+    /// [`UpdateCodec::spec`] at build time so `Server::config()` stays
+    /// consistent with what actually runs. Overrides are an
+    /// **in-process seam**: networked transports broadcast the config
+    /// to workers, which rebuild their codec from the tagged spec — an
+    /// arbitrary trait object cannot travel that way, so `build()`
+    /// rejects the combination. To change codecs on a distributed run,
+    /// set `cfg.codec` to a built-in spec instead.
+    pub fn codec(mut self, codec: impl UpdateCodec + 'static) -> Self {
+        self.codec = Some(Box::new(codec));
+        self
+    }
+
+    /// Boxed-codec variant of [`ServerBuilder::codec`].
+    pub fn codec_boxed(mut self, codec: Box<dyn UpdateCodec>) -> Self {
+        self.codec = Some(codec);
+        self
+    }
+
+    /// Override the transport (default: [`InProcess`]).
+    ///
+    /// The default transport shares the federated world `build()`
+    /// constructs for the eval slab. An explicitly passed
+    /// [`InProcess::new()`] rebuilds its own in `setup` (the dataset
+    /// itself comes from the process-global cache either way); pass
+    /// [`InProcess::with_world`] to share one.
+    pub fn transport(mut self, transport: impl Transport + 'static) -> Self {
+        self.transport = Some(Box::new(transport));
+        self
+    }
+
+    /// Boxed-transport variant of [`ServerBuilder::transport`].
+    pub fn transport_boxed(mut self, transport: Box<dyn Transport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Validate the config, build the federated world once, and assemble
+    /// the eval slab + round engine from it.
+    pub fn build(self) -> crate::Result<Server<'e>> {
+        let mut cfg = self.cfg;
+        if let Some(codec) = &self.codec {
+            cfg.codec = codec.spec();
+        }
+        let cfg = cfg.validated()?;
+        let engine = self
+            .engine
+            .ok_or_else(|| anyhow::anyhow!("ServerBuilder needs an engine"))?;
+        // One world per run: the eval slab borrows it, and the default
+        // in-process transport takes ownership instead of rebuilding it.
+        let (data, partition) = super::engine::build_world(&cfg, engine)?;
+        let slab = EvalSlab::from_world(&cfg, engine, &data, &partition)?;
+        let transport = match self.transport {
+            Some(t) => t,
+            None => Box::new(InProcess::with_world(data, partition)) as Box<dyn Transport>,
+        };
+        // A codec override is a local trait object; transports whose
+        // remote ends rebuild codecs from the broadcast config cannot
+        // carry it, so workers would encode with a different codec than
+        // the leader decodes with. Fail fast instead.
+        anyhow::ensure!(
+            self.codec.is_none() || !transport.rebuilds_codec_from_config(),
+            "codec overrides are in-process only — the {} transport rebuilds \
+             its codec from cfg.codec; set a built-in spec there instead",
+            transport.name()
+        );
+        let codec = match self.codec {
+            Some(codec) => codec,
+            None => cfg.codec.build()?,
+        };
+        Ok(Server { cfg, engine, slab, rounds: RoundEngine::new(codec, transport) })
+    }
 }
 
 /// The parameter server driving one experiment on one engine.
 pub struct Server<'e> {
     cfg: ExperimentConfig,
     engine: &'e mut dyn Engine,
-    data: std::sync::Arc<FederatedDataset>,
-    partition: Partition,
-    sampler: BatchSampler,
-    cost: CostModel,
-    eval_x: Vec<f32>,
-    eval_y: OwnedEval,
-    eval_token: u64,
-}
-
-#[derive(Debug)]
-enum OwnedEval {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl OwnedEval {
-    fn as_batch(&self) -> LabelBatch<'_> {
-        match self {
-            OwnedEval::F32(v) => LabelBatch::F32(v),
-            OwnedEval::I32(v) => LabelBatch::I32(v),
-        }
-    }
+    slab: EvalSlab,
+    rounds: RoundEngine,
 }
 
 impl<'e> Server<'e> {
-    /// Build the federated world for `cfg` and bind it to `engine`.
+    /// Historical one-call construction: codec from the config, in-process
+    /// transport. Equivalent to
+    /// `ServerBuilder::new(cfg).engine(engine).build()`.
     pub fn new(cfg: ExperimentConfig, engine: &'e mut dyn Engine) -> crate::Result<Self> {
-        let cfg = cfg.validated()?;
-        let n_samples = cfg.n_nodes * cfg.per_node;
-        let data = crate::data::cached_generate(cfg.dataset, cfg.seed, n_samples);
-        anyhow::ensure!(
-            data.dim == engine.kind().d_in(),
-            "dataset dim {} != model d_in {}",
-            data.dim,
-            engine.kind().d_in()
-        );
-        let partition =
-            Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);
-        let sampler = BatchSampler::new(cfg.seed, engine.batch());
-        let p = engine.param_count();
-        let cost = CostModel::with_ratio(cfg.ratio, p, cfg.seed);
-
-        // Fixed eval slab: the first eval_n assigned samples (partition
-        // order is already a seeded shuffle). For logreg eval_n == the full
-        // training set, matching the paper's "training loss" axis exactly;
-        // for the NNs it is a fixed 2048-sample estimate (DESIGN.md §4).
-        let eval_n = engine.eval_n();
-        let all = partition.all_indices();
-        anyhow::ensure!(all.len() >= eval_n, "eval slab larger than dataset");
-        let idx = &all[..eval_n];
-        let mut eval_x = Vec::new();
-        data.gather_features(idx, &mut eval_x);
-        let eval_y = match &data.labels {
-            Labels::Float(_) => {
-                let mut y = Vec::new();
-                data.gather_labels_f32(idx, &mut y);
-                OwnedEval::F32(y)
-            }
-            Labels::Int(_) => {
-                let mut y = Vec::new();
-                data.gather_labels_i32(idx, &mut y);
-                OwnedEval::I32(y)
-            }
-        };
-        let eval_token = cfg.seed ^ 0xe7a1_0000 ^ (eval_n as u64) << 32;
-        Ok(Server { cfg, engine, data, partition, sampler, cost, eval_x, eval_y, eval_token })
+        ServerBuilder::new(cfg).engine(engine).build()
     }
 
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
     }
 
-    pub fn cost_model(&self) -> &CostModel {
-        &self.cost
+    /// The codec uploads go through on this server.
+    pub fn codec(&self) -> &dyn UpdateCodec {
+        self.rounds.codec()
     }
 
     /// Evaluate the training loss at `params`.
     pub fn eval(&mut self, params: &[f32]) -> crate::Result<f64> {
-        Ok(self
-            .engine
-            .eval_loss_token(params, self.eval_token, &self.eval_x, self.eval_y.as_batch())?
-            as f64)
+        self.slab.eval(self.engine, params)
     }
 
     /// Run the full K-round protocol; records the loss curve.
     pub fn run(&mut self) -> crate::Result<RunResult> {
-        let mut params = self.engine.init_params()?;
-        let p = params.len();
-        let rounds = self.cfg.rounds();
-        let mut clock = VirtualClock::new();
-        let mut curve = Curve::new(self.cfg.name.clone());
-        let mut stats = Vec::with_capacity(rounds);
-        let mut total_bits = 0u64;
-        let mut bufs = local::GatherBufs::default();
-
-        // Round-0 point: initial loss at time 0.
-        let loss0 = self.eval(&params)?;
-        curve.push(CurvePoint { round: 0, iterations: 0, time: 0.0, bits_up: 0, loss: loss0 });
-
-        for k in 0..rounds {
-            let nodes = sampler::sample_nodes(self.cfg.n_nodes, self.cfg.r, self.cfg.seed, k);
-            let lrs: Vec<f32> =
-                (0..self.cfg.tau).map(|t| self.cfg.lr.lr(k, t)).collect();
-            let mut agg = Aggregator::new(self.cfg.quantizer, p);
-            for &node in &nodes {
-                let enc = local::node_round(
-                    &self.cfg,
-                    self.engine,
-                    &self.data,
-                    self.partition.shard(node),
-                    &self.sampler,
-                    node,
-                    k,
-                    &params,
-                    &lrs,
-                    &mut bufs,
-                )?;
-                agg.push(&enc);
-            }
-            let bits: u64 = agg.upload_bits().iter().sum();
-            let compute_time =
-                self.cost
-                    .round_compute_time(&nodes, k, self.cfg.tau, self.engine.batch());
-            let comm_time = self.cost.round_comm_time(agg.upload_bits());
-            agg.apply(&mut params);
-            clock.advance(compute_time + comm_time);
-            total_bits += bits;
-            stats.push(RoundStats { round: k, compute_time, comm_time, bits_up: bits });
-
-            if (k + 1) % self.cfg.eval_every == 0 || k + 1 == rounds {
-                let loss = self.eval(&params)?;
-                curve.push(CurvePoint {
-                    round: k + 1,
-                    iterations: (k + 1) * self.cfg.tau,
-                    time: clock.now(),
-                    bits_up: total_bits,
-                    loss,
-                });
-            }
-        }
-        Ok(RunResult { curve, params, rounds: stats, total_bits })
+        self.rounds.run(&self.cfg, self.engine, &self.slab)
     }
 }
 
@@ -181,8 +158,9 @@ impl<'e> Server<'e> {
 mod tests {
     use super::*;
     use crate::config::EngineKind;
+    use crate::coordinator::transport::InProcess;
     use crate::model::{ModelKind, RustEngine};
-    use crate::quant::Quantizer;
+    use crate::quant::{CodecSpec, Coding, QsgdCodec, TopKCodec};
 
     fn small_cfg() -> ExperimentConfig {
         ExperimentConfig {
@@ -194,7 +172,7 @@ mod tests {
             r: 4,
             tau: 3,
             t_total: 30,
-            quantizer: Quantizer::qsgd(2),
+            codec: CodecSpec::qsgd(2),
             lr: crate::opt::LrSchedule::Const { eta: 0.5 },
             ratio: 100.0,
             seed: 3,
@@ -241,14 +219,47 @@ mod tests {
     }
 
     #[test]
+    fn builder_with_explicit_parts_matches_default_path() {
+        // The pluggable pipeline must reproduce the one-call path
+        // bit-for-bit for the same codec/transport choices.
+        let mut e1 = engine();
+        let a = Server::new(small_cfg(), &mut e1).unwrap().run().unwrap();
+        let mut e2 = engine();
+        let b = ServerBuilder::new(small_cfg())
+            .engine(&mut e2)
+            .codec(QsgdCodec { s: 2, coding: Coding::Naive })
+            .transport(InProcess::new())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.total_bits, b.total_bits);
+    }
+
+    #[test]
+    fn builder_codec_override_rewrites_config_spec() {
+        // A networked transport broadcasts the *config* to its workers,
+        // so an overridden codec must be reflected there too.
+        let mut eng = engine();
+        let srv = ServerBuilder::new(small_cfg())
+            .engine(&mut eng)
+            .codec(TopKCodec::new(200))
+            .build()
+            .unwrap();
+        assert_eq!(srv.config().codec, CodecSpec::top_k(200));
+        assert_eq!(srv.codec().spec(), CodecSpec::top_k(200));
+    }
+
+    #[test]
     fn quantized_uploads_cost_fewer_bits_than_fedavg() {
-        let bits_of = |q: Quantizer| {
+        let bits_of = |c: CodecSpec| {
             let mut eng = engine();
-            let cfg = small_cfg().with_quantizer(q);
+            let cfg = small_cfg().with_codec(c);
             Server::new(cfg, &mut eng).unwrap().run().unwrap().total_bits
         };
-        let fedavg = bits_of(Quantizer::Identity);
-        let fedpaq = bits_of(Quantizer::qsgd(1));
+        let fedavg = bits_of(CodecSpec::Identity);
+        let fedpaq = bits_of(CodecSpec::qsgd(1));
         assert!(
             (fedpaq as f64) < (fedavg as f64) / 10.0,
             "fedpaq {fedpaq} vs fedavg {fedavg}"
@@ -256,15 +267,37 @@ mod tests {
     }
 
     #[test]
+    fn top_k_trains_to_decreasing_loss_with_fewer_bits_than_fedavg() {
+        let run = |c: CodecSpec| {
+            let mut eng = engine();
+            let cfg = small_cfg().with_codec(c);
+            Server::new(cfg, &mut eng).unwrap().run().unwrap()
+        };
+        let topk = run(CodecSpec::top_k(200)); // keep 20% of coordinates
+        let first = topk.curve.points.first().unwrap().loss;
+        let last = topk.curve.points.last().unwrap().loss;
+        assert!(last < first * 0.95, "top-k loss did not decrease: {first} -> {last}");
+        let fedavg = run(CodecSpec::Identity);
+        assert!(
+            (topk.total_bits as f64) < (fedavg.total_bits as f64) / 2.0,
+            "top-k {} vs fedavg {}",
+            topk.total_bits,
+            fedavg.total_bits
+        );
+    }
+
+    #[test]
     fn fedavg_tau1_full_part_is_parallel_sgd() {
-        // With identity quantization, tau=1, r=n the update must equal the
+        use crate::coordinator::local;
+        use crate::data::{BatchSampler, FederatedDataset, Partition};
+        // With identity uploads, tau=1, r=n the update must equal the
         // average of the r single-step SGD updates — check one round by
         // replaying it manually.
         let cfg = ExperimentConfig {
             r: 8,
             tau: 1,
             t_total: 1,
-            quantizer: Quantizer::Identity,
+            codec: CodecSpec::Identity,
             ..small_cfg()
         };
         let mut eng = engine();

@@ -1,0 +1,228 @@
+//! The [`Transport`] seam: how a round's local work gets executed and how
+//! its uploads come back.
+//!
+//! The [`RoundEngine`](super::RoundEngine) drives the FedPAQ protocol
+//! (`sample → local work → aggregate → apply`) against this trait, so the
+//! same round logic runs in-process (the simulation path, with §5 virtual
+//! time) or across real sockets ([`crate::net::Tcp`], with wall-clock
+//! time) — the duplicated loops the coordinator and net layers used to
+//! carry are gone.
+//!
+//! A transport is handed the *leader-local* engine: in-process transports
+//! reuse it to run the sampled nodes' local SGD; networked transports
+//! ignore it (their workers own engines in other processes).
+
+use super::local::{self, GatherBufs};
+use crate::config::ExperimentConfig;
+use crate::data::{BatchSampler, FederatedDataset, Partition};
+use crate::model::Engine;
+use crate::quant::{Encoded, UpdateCodec};
+use std::sync::Arc;
+
+/// Everything a transport needs to execute one round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundCtx<'a> {
+    /// Round index `k`.
+    pub round: usize,
+    /// The sampled participant set `S_k`, in sampling order.
+    pub nodes: &'a [usize],
+    /// Current global model `x_k` to broadcast.
+    pub params: &'a [f32],
+    /// Per-local-step stepsizes for this round.
+    pub lrs: &'a [f32],
+}
+
+/// How the round pipeline reaches its nodes.
+///
+/// Implementations must return uploads **in `ctx.nodes` order** — the
+/// engine aggregates in node order so the in-process and distributed
+/// paths produce bit-identical models for equal seeds.
+pub trait Transport {
+    /// Human label for logs.
+    fn name(&self) -> &'static str;
+
+    /// Whether round results are charged to the paper's §5 virtual cost
+    /// model (simulated transports) or to real wall-clock time.
+    fn virtual_time(&self) -> bool;
+
+    /// Whether this transport's remote ends rebuild their codec from the
+    /// broadcast config (networked transports) rather than sharing the
+    /// leader's codec instance. When `true`, `ServerBuilder` rejects
+    /// codec-instance overrides — a trait object cannot travel to the
+    /// workers, so the config's tagged spec is the only source of truth.
+    fn rebuilds_codec_from_config(&self) -> bool {
+        false
+    }
+
+    /// Build per-run state (worlds, connections) before round 0.
+    fn setup(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<()>;
+
+    /// Execute one round's local work on every node in `ctx.nodes`,
+    /// returning their encoded uploads in node order.
+    fn round(
+        &mut self,
+        ctx: &RoundCtx<'_>,
+        codec: &dyn UpdateCodec,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<Vec<Encoded>>;
+
+    /// Tear down after the last round.
+    fn shutdown(&mut self) -> crate::Result<()> {
+        Ok(())
+    }
+}
+
+/// Today's simulation path: every virtual node runs sequentially on the
+/// leader's own engine, and time is charged to the §5 cost model.
+#[derive(Debug, Default)]
+pub struct InProcess {
+    /// Pre-built dataset/partition (from `engine::build_world` on the
+    /// same config this transport will be set up with), so a run shares
+    /// one world between eval slab and training instead of building two.
+    preset: Option<(Arc<FederatedDataset>, Partition)>,
+    world: Option<World>,
+    bufs: GatherBufs,
+}
+
+#[derive(Debug)]
+struct World {
+    cfg: ExperimentConfig,
+    data: Arc<FederatedDataset>,
+    partition: Partition,
+    sampler: BatchSampler,
+}
+
+impl InProcess {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed the transport with an already-built world. Must come from
+    /// [`build_world`](super::engine::build_world) on the same config
+    /// later passed to `setup` — `ServerBuilder` uses this to construct
+    /// the federated world exactly once per run.
+    pub fn with_world(data: Arc<FederatedDataset>, partition: Partition) -> Self {
+        InProcess { preset: Some((data, partition)), ..Self::default() }
+    }
+}
+
+impl Transport for InProcess {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn virtual_time(&self) -> bool {
+        true
+    }
+
+    fn setup(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<()> {
+        let (data, partition) = match self.preset.take() {
+            Some(world) => world,
+            None => super::engine::build_world(cfg, engine)?,
+        };
+        let sampler = BatchSampler::new(cfg.seed, engine.batch());
+        self.world = Some(World { cfg: cfg.clone(), data, partition, sampler });
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        ctx: &RoundCtx<'_>,
+        codec: &dyn UpdateCodec,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<Vec<Encoded>> {
+        let w = self
+            .world
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("InProcess::round before setup"))?;
+        let mut uploads = Vec::with_capacity(ctx.nodes.len());
+        for &node in ctx.nodes {
+            uploads.push(local::node_round(
+                &w.cfg,
+                codec,
+                engine,
+                &w.data,
+                w.partition.shard(node),
+                &w.sampler,
+                node,
+                ctx.round,
+                ctx.params,
+                ctx.lrs,
+                &mut self.bufs,
+            )?);
+        }
+        Ok(uploads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::RustEngine;
+    use crate::opt::LrSchedule;
+    use crate::quant::CodecSpec;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "transport-test".into(),
+            model: "logreg".into(),
+            dataset: crate::data::DatasetKind::Mnist08,
+            n_nodes: 4,
+            per_node: 30,
+            r: 2,
+            tau: 2,
+            t_total: 4,
+            codec: CodecSpec::qsgd(2),
+            lr: LrSchedule::Const { eta: 0.3 },
+            ratio: 100.0,
+            seed: 9,
+            eval_every: 1,
+            engine: crate::config::EngineKind::Rust,
+            partition: crate::data::PartitionKind::Iid,
+        }
+    }
+
+    #[test]
+    fn in_process_rounds_are_deterministic_and_node_ordered() {
+        let cfg = tiny_cfg();
+        let codec = cfg.codec.build().unwrap();
+        let mut engine =
+            RustEngine::new(crate::model::ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 120)
+                .unwrap();
+        let params = engine.init_params().unwrap();
+        let run_once = |engine: &mut RustEngine| {
+            let mut t = InProcess::new();
+            t.setup(&cfg, engine).unwrap();
+            let ctx = RoundCtx { round: 0, nodes: &[2, 0], params: &params, lrs: &[0.3, 0.3] };
+            t.round(&ctx, codec.as_ref(), engine).unwrap()
+        };
+        let a = run_once(&mut engine);
+        let b = run_once(&mut engine);
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.buf.words(), y.buf.words());
+            assert_eq!(x.bits(), y.bits());
+        }
+    }
+
+    #[test]
+    fn round_before_setup_errors() {
+        let cfg = tiny_cfg();
+        let codec = cfg.codec.build().unwrap();
+        let mut engine =
+            RustEngine::new(crate::model::ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 120)
+                .unwrap();
+        let params = vec![0f32; 785];
+        let ctx = RoundCtx { round: 0, nodes: &[0], params: &params, lrs: &[0.1] };
+        let mut t = InProcess::new();
+        assert!(t.round(&ctx, codec.as_ref(), &mut engine).is_err());
+    }
+}

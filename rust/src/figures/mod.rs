@@ -8,12 +8,12 @@
 //! see EXPERIMENTS.md for the recorded shapes.
 
 use crate::config::{EngineKind, ExperimentConfig};
-use crate::coordinator::Server;
+use crate::coordinator::ServerBuilder;
 use crate::data::DatasetKind;
 use crate::metrics::FigureData;
 use crate::model::{Engine, ModelKind, RustEngine};
 use crate::opt::LrSchedule;
-use crate::quant::Quantizer;
+use crate::quant::CodecSpec;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -60,7 +60,7 @@ fn quant_series(base: &ExperimentConfig, tau: usize, r: usize) -> Vec<Experiment
             base.clone()
                 .with_tau(tau)
                 .with_r(r)
-                .with_quantizer(Quantizer::qsgd(s))
+                .with_codec(CodecSpec::qsgd(s))
                 .with_name(format!("FedPAQ s={s}"))
         })
         .collect();
@@ -68,7 +68,7 @@ fn quant_series(base: &ExperimentConfig, tau: usize, r: usize) -> Vec<Experiment
         base.clone()
             .with_tau(tau)
             .with_r(r)
-            .with_quantizer(Quantizer::Identity)
+            .with_codec(CodecSpec::Identity)
             .with_name("FedAvg (no quant)"),
     );
     v
@@ -80,7 +80,7 @@ fn r_series(base: &ExperimentConfig, s: u32, tau: usize, rs: &[usize]) -> Vec<Ex
             base.clone()
                 .with_tau(tau)
                 .with_r(r)
-                .with_quantizer(Quantizer::qsgd(s))
+                .with_codec(CodecSpec::qsgd(s))
                 .with_name(format!("r={r}"))
         })
         .collect()
@@ -92,7 +92,7 @@ fn tau_series(base: &ExperimentConfig, s: u32, r: usize, taus: &[usize]) -> Vec<
             base.clone()
                 .with_tau(tau)
                 .with_r(r)
-                .with_quantizer(Quantizer::qsgd(s))
+                .with_codec(CodecSpec::qsgd(s))
                 .with_name(format!("tau={tau}"))
         })
         .collect()
@@ -109,17 +109,17 @@ fn bench_series(
         base.clone()
             .with_tau(tau)
             .with_r(r)
-            .with_quantizer(Quantizer::qsgd(s))
+            .with_codec(CodecSpec::qsgd(s))
             .with_name("FedPAQ"),
         base.clone()
             .with_tau(fedavg.1)
             .with_r(fedavg.0)
-            .with_quantizer(Quantizer::Identity)
+            .with_codec(CodecSpec::Identity)
             .with_name("FedAvg"),
         base.clone()
             .with_tau(1)
             .with_r(qsgd_r)
-            .with_quantizer(Quantizer::qsgd(s))
+            .with_codec(CodecSpec::qsgd(s))
             .with_name("QSGD"),
     ]
 }
@@ -237,13 +237,13 @@ pub fn all_figures() -> Vec<FigureSpec> {
                 .with_tau(10)
                 .with_r(20)
                 .with_lr(LrSchedule::Const { eta: 0.25 })
-                .with_quantizer(Quantizer::Qsgd { s: 4, coding: crate::quant::Coding::Naive })
+                .with_codec(CodecSpec::Qsgd { s: 4, coding: crate::quant::Coding::Naive })
                 .with_name("s=4 naive"),
             base.clone()
                 .with_tau(10)
                 .with_r(20)
                 .with_lr(LrSchedule::Const { eta: 0.25 })
-                .with_quantizer(Quantizer::Qsgd { s: 4, coding: crate::quant::Coding::Elias })
+                .with_codec(CodecSpec::Qsgd { s: 4, coding: crate::quant::Coding::Elias })
                 .with_name("s=4 elias"),
         ],
     });
@@ -311,7 +311,7 @@ impl Runner {
         }
         cfg.engine = self.engine_kind.clone();
         let engine = self.engine_for(&cfg.model.clone())?;
-        Server::new(cfg, engine.as_mut())?.run()
+        ServerBuilder::new(cfg).engine(engine.as_mut()).build()?.run()
     }
 
     /// Run a whole figure, returning its curve bundle.
@@ -371,7 +371,7 @@ mod tests {
         // QSGD is tau=1 by definition.
         assert_eq!(f.configs[2].tau, 1);
         // FedAvg is unquantized by definition.
-        assert_eq!(f.configs[1].quantizer, Quantizer::Identity);
+        assert_eq!(f.configs[1].codec, CodecSpec::Identity);
     }
 
     #[test]

@@ -4,21 +4,52 @@
 //! Federated Learning Method with Periodic Averaging and Quantization*
 //! (Reisizadeh, Mokhtari, Hassani, Jadbabaie, Pedarsani — AISTATS 2020).
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! ## Composable round pipeline
+//!
+//! A training run is a composition of four pluggable parts, assembled by
+//! [`coordinator::ServerBuilder`] and driven by one shared
+//! [`coordinator::RoundEngine`] loop (`sample → local work → aggregate →
+//! apply`):
+//!
+//! * **[`config::ExperimentConfig`]** — the experiment: model, data, the
+//!   FedPAQ knobs `(n, r, τ)`, seeds, and a tagged codec spec
+//!   ([`quant::CodecSpec`]). JSON in, JSON out; a config + seed fully
+//!   determines the run.
+//! * **[`model::Engine`]** — who does the math:
+//!   [`runtime::PjrtEngine`] (AOT-lowered JAX/Pallas HLO via PJRT) or the
+//!   pure-rust [`model::RustEngine`] oracle.
+//! * **[`quant::UpdateCodec`]** — how uploads are compressed: identity
+//!   (FedAvg), QSGD with naive or Elias-ω level coding (the paper), top-k
+//!   sparsification with index coding, or any external impl of the trait
+//!   (external impls run in-process; distributed workers rebuild codecs
+//!   from the config's tagged spec).
+//! * **[`coordinator::Transport`]** — where node work runs:
+//!   [`coordinator::InProcess`] (the simulation path, time charged to the
+//!   paper's §5 virtual cost model) or [`net::Tcp`] (real worker
+//!   processes over sockets, wall-clock time). Same codecs, same RNG
+//!   streams — equal seeds give bit-identical models either way.
+//!
+//! ```ignore
+//! let mut engine = RustEngine::new(kind, batch, eval_n)?;
+//! let result = ServerBuilder::new(cfg)
+//!     .engine(&mut engine)
+//!     .codec(TopKCodec::new(100))   // optional override of cfg.codec (in-process
+//!     .transport(InProcess::new())  //  transports; for net::Tcp::new(addr, n),
+//!     .build()?                     //  set cfg.codec to a built-in spec instead)
+//!     .run()?;
+//! ```
+//!
+//! ## Three-layer architecture (see `DESIGN.md`)
 //!
 //! * **Layer 3 (this crate)** — the federated coordinator: node sampling,
-//!   periodic averaging rounds, quantized message passing, the paper's §5
-//!   communication/computation cost model, baselines (FedAvg, QSGD), a real
-//!   TCP leader/worker mode, and the figure-regeneration harness.
+//!   periodic averaging rounds, pluggable update compression, the paper's
+//!   §5 communication/computation cost model, baselines (FedAvg, QSGD), a
+//!   real TCP leader/worker mode, and the figure-regeneration harness.
 //! * **Layer 2** — JAX model programs (`python/compile/model.py`), AOT
 //!   lowered once to HLO text and executed here through PJRT
 //!   ([`runtime`]); python never runs on the training path.
 //! * **Layer 1** — Pallas kernels (dense matmul + the QSGD quantizer)
 //!   called from the L2 programs.
-//!
-//! The crate is usable as a library: build a [`config::ExperimentConfig`],
-//! construct an engine ([`runtime::PjrtEngine`] or the pure-rust
-//! [`model::RustEngine`]), and drive [`coordinator::Server`].
 
 pub mod config;
 pub mod coordinator;

@@ -16,7 +16,7 @@ use fedpaq::config::{EngineKind, ExperimentConfig};
 use fedpaq::data::DatasetKind;
 use fedpaq::figures::{all_figures, figure, Runner};
 use fedpaq::opt::LrSchedule;
-use fedpaq::quant::{Coding, Quantizer};
+use fedpaq::quant::{CodecSpec, Coding};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -27,7 +27,8 @@ USAGE:
   fedpaq figure <id|all> [--out DIR] [--engine pjrt|rust] [--t N]
   fedpaq train [--config FILE.json] [--model NAME] [--dataset D] [--nodes N]
                [--per-node M] [--r R] [--tau TAU] [--t T] [--s S] [--elias]
-               [--lr ETA] [--ratio X] [--seed SEED] [--engine pjrt|rust]
+               [--topk PERMILLE] [--lr ETA] [--ratio X] [--seed SEED]
+               [--engine pjrt|rust]
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
   fedpaq worker [--connect ADDR]
   fedpaq quantize-check [--s S] [--seed SEED]
@@ -138,8 +139,35 @@ fn main() -> anyhow::Result<()> {
                 let r: usize = flags.parse_num("r", 25usize)?;
                 let tau: usize = flags.parse_num("tau", 5usize)?;
                 let elias = flags.get("elias").is_some();
+                let coding = if elias { Coding::Elias } else { Coding::Naive };
+                // Codec selection: --topk wins, then --s 0 = identity
+                // (FedAvg), otherwise QSGD at --s levels.
+                let codec = if let Some(k) = flags.get("topk") {
+                    CodecSpec::TopK {
+                        k_permille: k
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--topk {k}: {e}"))?,
+                        coding,
+                    }
+                } else if s == 0 {
+                    CodecSpec::Identity
+                } else {
+                    CodecSpec::Qsgd { s, coding }
+                };
+                let codec_label = match codec {
+                    CodecSpec::Identity => "fedavg".to_string(),
+                    CodecSpec::Qsgd { s, coding: Coding::Naive } => format!("s={s}"),
+                    CodecSpec::Qsgd { s, coding: Coding::Elias } => format!("s={s}+elias"),
+                    CodecSpec::TopK { k_permille, coding: Coding::Naive } => {
+                        format!("topk={k_permille}")
+                    }
+                    CodecSpec::TopK { k_permille, coding: Coding::Elias } => {
+                        format!("topk={k_permille}+elias")
+                    }
+                    CodecSpec::External { id } => format!("ext={id}"),
+                };
                 ExperimentConfig {
-                    name: format!("{model} s={s} r={r} tau={tau}"),
+                    name: format!("{model} {codec_label} r={r} tau={tau}"),
                     model,
                     dataset: DatasetKind::parse(&flags.get_or("dataset", "mnist08"))?,
                     n_nodes: flags.parse_num("nodes", 50usize)?,
@@ -147,14 +175,7 @@ fn main() -> anyhow::Result<()> {
                     r,
                     tau,
                     t_total: flags.parse_num("t", 100usize)?,
-                    quantizer: if s == 0 {
-                        Quantizer::Identity
-                    } else {
-                        Quantizer::Qsgd {
-                            s,
-                            coding: if elias { Coding::Elias } else { Coding::Naive },
-                        }
-                    },
+                    codec,
                     lr: LrSchedule::Const { eta: flags.parse_num("lr", 0.1f32)? },
                     ratio: flags.parse_num("ratio", 100.0f64)?,
                     seed: flags.parse_num("seed", 42u64)?,

@@ -1,36 +1,13 @@
-//! Leader process: accepts workers, broadcasts the config, then drives the
-//! FedPAQ rounds over TCP, measuring *real* wall-clock per round.
-//!
-//! Fan-out/fan-in is pipelined with blocking sockets: all `Work` frames
-//! for a round are written first (worker processes run concurrently), then
-//! updates are collected. There is no deadlock cycle — a worker always
-//! drains its request before producing its (small) reply, and replies park
-//! in kernel socket buffers until the leader reads them.
+//! Leader entry point: the distributed protocol is just the shared
+//! [`RoundEngine`](crate::coordinator::RoundEngine) driven through the
+//! [`Tcp`](super::Tcp) transport — the round loop itself lives in
+//! `coordinator::engine`, identical to the simulation path.
 
-use super::proto::{recv_to_leader, send_to_worker, ToLeader, ToWorker};
+use super::transport::Tcp;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{aggregate::Aggregator, sampler, RoundStats, RunResult};
-use crate::data::{Labels, Partition};
-use crate::metrics::{Curve, CurvePoint};
-use crate::model::{Engine, LabelBatch};
-use std::net::{TcpListener, TcpStream};
+use crate::coordinator::{EvalSlab, RoundEngine, RunResult};
+use crate::model::Engine;
 use std::path::Path;
-use std::time::Instant;
-
-struct WorkerConn {
-    rd: TcpStream,
-    wr: TcpStream,
-}
-
-fn accept_worker(listener: &TcpListener) -> crate::Result<WorkerConn> {
-    let (stream, peer) = listener.accept()?;
-    stream.set_nodelay(true)?;
-    let mut rd = stream.try_clone()?;
-    let join = recv_to_leader(&mut rd)?;
-    anyhow::ensure!(matches!(join, ToLeader::Join), "expected Join from {peer}");
-    eprintln!("leader: worker joined from {peer}");
-    Ok(WorkerConn { rd, wr: stream })
-}
 
 /// Run the distributed protocol with `n_workers` workers expected on
 /// `bind`. The leader also evaluates the loss curve locally on `engine`.
@@ -44,113 +21,8 @@ pub fn run_leader(
     _artifacts: &Path,
 ) -> crate::Result<RunResult> {
     let cfg = cfg.validated()?;
-    anyhow::ensure!(n_workers >= 1, "need at least one worker");
-    let listener = TcpListener::bind(bind)?;
-    eprintln!("leader: listening on {}", listener.local_addr()?);
-    let mut workers = Vec::with_capacity(n_workers);
-    for _ in 0..n_workers {
-        workers.push(accept_worker(&listener)?);
-    }
-    // Broadcast setup; await Ready from everyone (engines compile now).
-    for w in workers.iter_mut() {
-        send_to_worker(&mut w.wr, &ToWorker::Setup { cfg: cfg.clone() })?;
-    }
-    for w in workers.iter_mut() {
-        let msg = recv_to_leader(&mut w.rd)?;
-        anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
-    }
-    eprintln!("leader: {n_workers} workers ready");
-
-    // Local eval world (same construction as the sim server).
-    let n_samples = cfg.n_nodes * cfg.per_node;
-    let data = crate::data::cached_generate(cfg.dataset, cfg.seed, n_samples);
-    let partition = Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);
-    let eval_n = engine.eval_n();
-    let all = partition.all_indices();
-    anyhow::ensure!(all.len() >= eval_n, "eval slab larger than dataset");
-    let idx = &all[..eval_n];
-    let mut eval_x = Vec::new();
-    data.gather_features(idx, &mut eval_x);
-    let mut eval_f = Vec::new();
-    let mut eval_i = Vec::new();
-    let float_labels = matches!(data.labels, Labels::Float(_));
-    if float_labels {
-        data.gather_labels_f32(idx, &mut eval_f);
-    } else {
-        data.gather_labels_i32(idx, &mut eval_i);
-    }
-
-    let mut params = engine.init_params()?;
-    let p = params.len();
-    let rounds = cfg.rounds();
-    let mut curve = Curve::new(cfg.name.clone());
-    let mut stats = Vec::new();
-    let mut total_bits = 0u64;
-    let t0 = Instant::now();
-    let eval = |engine: &mut dyn Engine, params: &[f32]| -> crate::Result<f64> {
-        let y = if float_labels { LabelBatch::F32(&eval_f) } else { LabelBatch::I32(&eval_i) };
-        Ok(engine.eval_loss_token(params, 1, &eval_x, y)? as f64)
-    };
-    let loss0 = eval(engine, &params)?;
-    curve.push(CurvePoint { round: 0, iterations: 0, time: 0.0, bits_up: 0, loss: loss0 });
-
-    for k in 0..rounds {
-        let round_t0 = Instant::now();
-        let nodes = sampler::sample_nodes(cfg.n_nodes, cfg.r, cfg.seed, k);
-        let lrs: Vec<f32> = (0..cfg.tau).map(|t| cfg.lr.lr(k, t)).collect();
-        // Fan the r virtual nodes out round-robin across workers.
-        for (j, &node) in nodes.iter().enumerate() {
-            let w = &mut workers[j % n_workers];
-            send_to_worker(
-                &mut w.wr,
-                &ToWorker::Work {
-                    round: k as u64,
-                    node: node as u64,
-                    params: params.clone(),
-                    lrs: lrs.clone(),
-                },
-            )?;
-        }
-        // Collect all updates; aggregate in *node order* for bit-stable
-        // parity with the sim engine.
-        let mut updates: Vec<Option<crate::quant::Encoded>> = vec![None; nodes.len()];
-        for (j, _) in nodes.iter().enumerate() {
-            let w = &mut workers[j % n_workers];
-            match recv_to_leader(&mut w.rd)? {
-                ToLeader::Update { round, node, enc } => {
-                    anyhow::ensure!(round as usize == k, "round mismatch");
-                    let pos = nodes
-                        .iter()
-                        .position(|&n| n == node as usize)
-                        .ok_or_else(|| anyhow::anyhow!("unknown node {node}"))?;
-                    updates[pos] = Some(enc);
-                }
-                other => anyhow::bail!("unexpected message {other:?}"),
-            }
-        }
-        let mut agg = Aggregator::new(cfg.quantizer, p);
-        for enc in updates.iter().flatten() {
-            agg.push(enc);
-        }
-        anyhow::ensure!(agg.count() == nodes.len(), "missing updates");
-        let bits: u64 = agg.upload_bits().iter().sum();
-        total_bits += bits;
-        agg.apply(&mut params);
-        let dt = round_t0.elapsed().as_secs_f64();
-        stats.push(RoundStats { round: k, compute_time: dt, comm_time: 0.0, bits_up: bits });
-        if (k + 1) % cfg.eval_every == 0 || k + 1 == rounds {
-            let loss = eval(engine, &params)?;
-            curve.push(CurvePoint {
-                round: k + 1,
-                iterations: (k + 1) * cfg.tau,
-                time: t0.elapsed().as_secs_f64(),
-                bits_up: total_bits,
-                loss,
-            });
-        }
-    }
-    for w in workers.iter_mut() {
-        send_to_worker(&mut w.wr, &ToWorker::Shutdown)?;
-    }
-    Ok(RunResult { curve, params, rounds: stats, total_bits })
+    let slab = EvalSlab::build(&cfg, engine)?;
+    let mut rounds =
+        RoundEngine::new(cfg.codec.build()?, Box::new(Tcp::new(bind, n_workers)));
+    rounds.run(&cfg, engine, &slab)
 }

@@ -1,10 +1,14 @@
 //! Real distributed mode: a TCP leader/worker runtime for FedPAQ.
 //!
-//! The simulation engine ([`crate::coordinator::Server`]) models time; this
-//! module actually *distributes* the protocol across processes, with the
-//! exact same codecs and RNG streams, so the aggregated models match the
-//! sim bit-for-bit for equal configs/seeds (modulo float summation order,
-//! which we fix by aggregating uploads in node order).
+//! The round loop is NOT duplicated here: [`Tcp`] implements the
+//! coordinator's [`Transport`](crate::coordinator::Transport) seam, and
+//! [`run_leader`] drives the shared
+//! [`RoundEngine`](crate::coordinator::RoundEngine) through it. The
+//! simulation engine models time; this module actually *distributes* the
+//! protocol across processes, with the exact same codecs and RNG streams,
+//! so the aggregated models match the sim bit-for-bit for equal
+//! configs/seeds (modulo float summation order, which we fix by
+//! aggregating uploads in node order).
 //!
 //! Protocol (length-prefixed hand-rolled binary frames over TCP, see [`proto`]):
 //!
@@ -18,11 +22,14 @@
 //!
 //! Each worker impersonates the *virtual nodes* assigned to it (the paper's
 //! `n` is decoupled from the number of worker processes), regenerates its
-//! shard locally from the seeded config, and never sees other shards.
+//! shard locally from the seeded config, builds its codec from the
+//! config's tagged spec, and never sees other shards.
 
 pub mod leader;
 pub mod proto;
+pub mod transport;
 pub mod worker;
 
 pub use leader::run_leader;
+pub use transport::Tcp;
 pub use worker::run_worker;

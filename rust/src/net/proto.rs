@@ -6,7 +6,7 @@
 //! `vec<T>` = u64 len + elements; f32 slices are bulk-copied.
 
 use crate::config::ExperimentConfig;
-use crate::quant::{bitstream::BitBuf, Coding, Encoded, Quantizer};
+use crate::quant::{bitstream::BitBuf, CodecSpec, Coding, Encoded};
 use std::io::{Read, Write};
 
 /// Hard cap on frame size (a full-precision 248K-param upload is ~1 MiB;
@@ -151,49 +151,71 @@ impl<'a> Cursor<'a> {
 
 // ---------------- domain codecs ----------------
 
-fn write_quantizer(b: &mut Buf, q: &Quantizer) {
-    match q {
-        Quantizer::Identity => b.u8(0),
-        Quantizer::Qsgd { s, coding } => {
+fn coding_tag(coding: &Coding) -> u8 {
+    match coding {
+        Coding::Naive => 0,
+        Coding::Elias => 1,
+    }
+}
+
+fn read_coding(c: &mut Cursor<'_>) -> crate::Result<Coding> {
+    Ok(match c.u8()? {
+        0 => Coding::Naive,
+        1 => Coding::Elias,
+        x => anyhow::bail!("bad coding tag {x}"),
+    })
+}
+
+fn write_spec(b: &mut Buf, spec: &CodecSpec) {
+    match spec {
+        CodecSpec::Identity => b.u8(0),
+        CodecSpec::Qsgd { s, coding } => {
             b.u8(1);
             b.u32(*s);
-            b.u8(match coding {
-                Coding::Naive => 0,
-                Coding::Elias => 1,
-            });
+            b.u8(coding_tag(coding));
+        }
+        CodecSpec::TopK { k_permille, coding } => {
+            b.u8(2);
+            b.u32(*k_permille as u32);
+            b.u8(coding_tag(coding));
+        }
+        CodecSpec::External { id } => {
+            b.u8(3);
+            b.u32(*id);
         }
     }
 }
 
-fn read_quantizer(c: &mut Cursor<'_>) -> crate::Result<Quantizer> {
+fn read_spec(c: &mut Cursor<'_>) -> crate::Result<CodecSpec> {
     Ok(match c.u8()? {
-        0 => Quantizer::Identity,
+        0 => CodecSpec::Identity,
         1 => {
             let s = c.u32()?;
-            let coding = match c.u8()? {
-                0 => Coding::Naive,
-                1 => Coding::Elias,
-                x => anyhow::bail!("bad coding tag {x}"),
-            };
-            Quantizer::Qsgd { s, coding }
+            CodecSpec::Qsgd { s, coding: read_coding(c)? }
         }
-        x => anyhow::bail!("bad quantizer tag {x}"),
+        2 => {
+            let k = c.u32()?;
+            anyhow::ensure!(k <= 1000, "bad top-k permille {k}");
+            CodecSpec::TopK { k_permille: k as u16, coding: read_coding(c)? }
+        }
+        3 => CodecSpec::External { id: c.u32()? },
+        x => anyhow::bail!("bad codec tag {x}"),
     })
 }
 
 fn write_encoded(b: &mut Buf, e: &Encoded) {
-    write_quantizer(b, &e.quantizer);
+    write_spec(b, &e.spec);
     b.u64(e.p as u64);
     b.u64(e.buf.len_bits());
     b.u64s(e.buf.words());
 }
 
 fn read_encoded(c: &mut Cursor<'_>) -> crate::Result<Encoded> {
-    let quantizer = read_quantizer(c)?;
+    let spec = read_spec(c)?;
     let p = c.u64()? as usize;
     let len = c.u64()?;
     let words = c.u64s()?;
-    Ok(Encoded { buf: BitBuf::from_parts(words, len)?, p, quantizer })
+    Ok(Encoded { buf: BitBuf::from_parts(words, len)?, p, spec })
 }
 
 impl ToWorker {
@@ -313,6 +335,7 @@ pub fn recv_to_leader<R: Read>(r: &mut R) -> crate::Result<ToLeader> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{TopKCodec, UpdateCodec};
     use crate::util::rng::Rng;
 
     #[test]
@@ -345,15 +368,31 @@ mod tests {
 
     #[test]
     fn update_roundtrip_preserves_bits() {
-        let q = Quantizer::qsgd(3);
+        let q = CodecSpec::qsgd(3).build().unwrap();
         let x: Vec<f32> = (0..300).map(|i| (i as f32 * 0.7).sin()).collect();
         let enc = q.encode(&x, &mut Rng::seed_from_u64(1));
-        let dec_before = q.decode(&enc);
+        let dec_before = q.decode(&enc).unwrap();
         let msg = ToLeader::Update { round: 9, node: 4, enc };
         match ToLeader::decode(&msg.encode()).unwrap() {
             ToLeader::Update { round, node, enc } => {
                 assert_eq!((round, node), (9, 4));
-                assert_eq!(q.decode(&enc), dec_before);
+                assert_eq!(q.decode(&enc).unwrap(), dec_before);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn top_k_update_roundtrips_with_spec() {
+        let q = TopKCodec::new(250);
+        let x: Vec<f32> = (0..96).map(|i| (i as f32 * 0.3).cos()).collect();
+        let enc = q.encode(&x, &mut Rng::seed_from_u64(2));
+        let dec_before = q.decode(&enc).unwrap();
+        let msg = ToLeader::Update { round: 1, node: 2, enc };
+        match ToLeader::decode(&msg.encode()).unwrap() {
+            ToLeader::Update { enc, .. } => {
+                assert_eq!(enc.spec, q.spec());
+                assert_eq!(q.decode(&enc).unwrap(), dec_before);
             }
             _ => panic!(),
         }
@@ -362,12 +401,13 @@ mod tests {
     #[test]
     fn framing_over_a_pipe() {
         // In-memory "stream" via Vec<u8>.
+        let q = CodecSpec::qsgd(1).build().unwrap();
         let mut wire = Vec::new();
         for i in 0..5u64 {
             send_frame(&mut wire, &ToLeader::Update {
                 round: i,
                 node: i * 2,
-                enc: Quantizer::qsgd(1).encode(&[0.5; 16], &mut Rng::seed_from_u64(i)),
+                enc: q.encode(&[0.5; 16], &mut Rng::seed_from_u64(i)),
             }
             .encode())
             .unwrap();

@@ -1,0 +1,142 @@
+//! The networked [`Transport`]: leader-side fan-out/fan-in over TCP.
+//!
+//! Wraps the [`proto`](super::proto) wire protocol behind the
+//! coordinator's [`Transport`] seam, so the exact same
+//! [`RoundEngine`](crate::coordinator::RoundEngine) loop that drives the
+//! in-process simulation also drives a real worker cluster — no
+//! duplicated round logic.
+//!
+//! Fan-out/fan-in is pipelined with blocking sockets: all `Work` frames
+//! for a round are written first (worker processes run concurrently), then
+//! updates are collected. There is no deadlock cycle — a worker always
+//! drains its request before producing its (small) reply, and replies park
+//! in kernel socket buffers until the leader reads them.
+
+use super::proto::{recv_to_leader, send_to_worker, ToLeader, ToWorker};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{RoundCtx, Transport};
+use crate::model::Engine;
+use crate::quant::{Encoded, UpdateCodec};
+use std::net::{TcpListener, TcpStream};
+
+struct WorkerConn {
+    rd: TcpStream,
+    wr: TcpStream,
+}
+
+fn accept_worker(listener: &TcpListener) -> crate::Result<WorkerConn> {
+    let (stream, peer) = listener.accept()?;
+    stream.set_nodelay(true)?;
+    let mut rd = stream.try_clone()?;
+    let join = recv_to_leader(&mut rd)?;
+    anyhow::ensure!(matches!(join, ToLeader::Join), "expected Join from {peer}");
+    eprintln!("leader: worker joined from {peer}");
+    Ok(WorkerConn { rd, wr: stream })
+}
+
+/// Leader half of the TCP execution mode: accepts `n_workers` workers on
+/// `bind`, broadcasts the config, then round-robins the sampled virtual
+/// nodes across them each round. Rounds are charged wall-clock time.
+pub struct Tcp {
+    bind: String,
+    n_workers: usize,
+    workers: Vec<WorkerConn>,
+}
+
+impl Tcp {
+    pub fn new(bind: impl Into<String>, n_workers: usize) -> Self {
+        Tcp { bind: bind.into(), n_workers, workers: Vec::new() }
+    }
+}
+
+impl Transport for Tcp {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn virtual_time(&self) -> bool {
+        false
+    }
+
+    fn rebuilds_codec_from_config(&self) -> bool {
+        true
+    }
+
+    fn setup(
+        &mut self,
+        cfg: &ExperimentConfig,
+        _engine: &mut dyn Engine,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(self.n_workers >= 1, "need at least one worker");
+        let listener = TcpListener::bind(&self.bind)?;
+        eprintln!("leader: listening on {}", listener.local_addr()?);
+        self.workers.clear();
+        for _ in 0..self.n_workers {
+            self.workers.push(accept_worker(&listener)?);
+        }
+        // Broadcast setup; await Ready from everyone (engines compile now).
+        for w in self.workers.iter_mut() {
+            send_to_worker(&mut w.wr, &ToWorker::Setup { cfg: cfg.clone() })?;
+        }
+        for w in self.workers.iter_mut() {
+            let msg = recv_to_leader(&mut w.rd)?;
+            anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
+        }
+        eprintln!("leader: {} workers ready", self.n_workers);
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        ctx: &RoundCtx<'_>,
+        _codec: &dyn UpdateCodec,
+        _engine: &mut dyn Engine,
+    ) -> crate::Result<Vec<Encoded>> {
+        anyhow::ensure!(!self.workers.is_empty(), "Tcp::round before setup");
+        // Fan the r virtual nodes out round-robin across workers.
+        for (j, &node) in ctx.nodes.iter().enumerate() {
+            let w = &mut self.workers[j % self.n_workers];
+            send_to_worker(
+                &mut w.wr,
+                &ToWorker::Work {
+                    round: ctx.round as u64,
+                    node: node as u64,
+                    params: ctx.params.to_vec(),
+                    lrs: ctx.lrs.to_vec(),
+                },
+            )?;
+        }
+        // Collect all updates; return them in *node order* for bit-stable
+        // parity with the in-process transport.
+        let mut updates: Vec<Option<Encoded>> = vec![None; ctx.nodes.len()];
+        for (j, _) in ctx.nodes.iter().enumerate() {
+            let w = &mut self.workers[j % self.n_workers];
+            match recv_to_leader(&mut w.rd)? {
+                ToLeader::Update { round, node, enc } => {
+                    anyhow::ensure!(round as usize == ctx.round, "round mismatch");
+                    let pos = ctx
+                        .nodes
+                        .iter()
+                        .position(|&n| n == node as usize)
+                        .ok_or_else(|| anyhow::anyhow!("unknown node {node}"))?;
+                    anyhow::ensure!(
+                        updates[pos].is_none(),
+                        "duplicate update for node {node}"
+                    );
+                    updates[pos] = Some(enc);
+                }
+                other => anyhow::bail!("unexpected message {other:?}"),
+            }
+        }
+        let uploads: Vec<Encoded> = updates.into_iter().flatten().collect();
+        anyhow::ensure!(uploads.len() == ctx.nodes.len(), "missing updates");
+        Ok(uploads)
+    }
+
+    fn shutdown(&mut self) -> crate::Result<()> {
+        for w in self.workers.iter_mut() {
+            send_to_worker(&mut w.wr, &ToWorker::Shutdown)?;
+        }
+        Ok(())
+    }
+}

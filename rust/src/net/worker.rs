@@ -39,9 +39,12 @@ pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
     let mut wr = stream;
     send_to_leader(&mut wr, &ToLeader::Join)?;
 
-    // World state, built on Setup.
+    // World state, built on Setup. The codec is instantiated once from
+    // the config's tagged spec and reused for every Work request.
+    #[allow(clippy::type_complexity)]
     let mut world: Option<(
         ExperimentConfig,
+        Box<dyn crate::quant::UpdateCodec>,
         Box<dyn Engine>,
         FederatedDataset,
         Partition,
@@ -54,20 +57,22 @@ pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
         match msg {
             ToWorker::Setup { cfg } => {
                 let engine = build_engine(&cfg, artifacts)?;
+                let codec = cfg.codec.build()?;
                 let n_samples = cfg.n_nodes * cfg.per_node;
                 let data = FederatedDataset::generate(cfg.dataset, cfg.seed, n_samples);
                 let partition =
                     Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);
                 let sampler = BatchSampler::new(cfg.seed, engine.batch());
-                world = Some((cfg, engine, data, partition, sampler));
+                world = Some((cfg, codec, engine, data, partition, sampler));
                 send_to_leader(&mut wr, &ToLeader::Ready)?;
             }
             ToWorker::Work { round, node, params, lrs } => {
-                let (cfg, engine, data, partition, sampler) = world
+                let (cfg, codec, engine, data, partition, sampler) = world
                     .as_mut()
                     .ok_or_else(|| anyhow::anyhow!("Work before Setup"))?;
                 let enc = local::node_round(
                     cfg,
+                    codec.as_ref(),
                     engine.as_mut(),
                     data,
                     partition.shard(node as usize),

@@ -1,134 +1,183 @@
-//! Quantized message passing (paper §3.3) — the third FedPAQ module.
+//! Pluggable update compression (paper §3.3) — the third FedPAQ module.
 //!
-//! Implements the QSGD low-precision quantizer of Example 1 with a
-//! bit-exact wire codec, so the §5 cost model can charge the *actual*
-//! number of uploaded bits `|Q(p, s)|`, plus the identity codec used by
-//! the FedAvg baseline (full-precision uploads, `32·p` bits).
+//! The codec layer is a trait seam, not a closed enum: every upload
+//! compressor implements the object-safe [`UpdateCodec`] trait
+//! (`encode` / `decode_into` / `analytic_bits` / `variance_q`), and the
+//! rest of the system — aggregation, transports, the cost model — only
+//! ever sees `&dyn UpdateCodec`. Built-in codecs:
+//!
+//! * [`IdentityCodec`] — full-precision f32 uploads (the FedAvg baseline,
+//!   `32·p` bits);
+//! * [`QsgdCodec`] — the QSGD low-precision quantizer of paper Example 1,
+//!   with either the paper's naive fixed-width level coding or QSGD's
+//!   Elias-ω recursive coding;
+//! * [`TopKCodec`] — magnitude top-k sparsification with index coding
+//!   (fixed-width or Elias-ω delta-coded indices), the simplest member of
+//!   the sparsifier family surveyed in PAPERS.md.
+//!
+//! Configs and wire frames carry a [`CodecSpec`] — a small, `Copy`,
+//! serializable tag that names a built-in codec ([`CodecSpec::build`]
+//! instantiates it). Custom codecs outside this module plug in through
+//! `ServerBuilder::codec` without touching the coordinator; they run on
+//! in-process transports (networked workers rebuild their codec from
+//! the config's tagged spec, which only names built-ins).
 //!
 //! Wire format (little-endian bit packing, see [`bitstream`]):
 //!
 //! ```text
-//! [ norm: f32 ]  then per coordinate i in 0..p:
+//! identity:  [ f32 ] * p
+//! qsgd:      [ norm: f32 ]  then per coordinate i in 0..p:
 //!   naive coding:  [ sign: 1 bit ][ level: ceil(log2(s+1)) bits ]
 //!   elias coding:  [ sign: 1 bit ][ EliasOmega(level + 1) ]
+//! top_k:     per kept coordinate (ascending index order):
+//!   naive coding:  [ index: ceil(log2(p)) bits ][ value: f32 ]
+//!   elias coding:  [ EliasOmega(index gap) ][ value: f32 ]
 //! ```
 //!
-//! The dequantized coordinate is `norm * sign_i * level_i / s`, exactly the
-//! value the L1 Pallas kernel produces — parity is enforced by an
-//! integration test through the exported `quantize4096` artifact.
+//! The dequantized QSGD coordinate is `norm * sign_i * level_i / s`,
+//! exactly the value the L1 Pallas kernel produces — parity is enforced by
+//! an integration test through the exported `quantize4096` artifact.
 
 pub mod bitstream;
 pub mod elias;
 
-use bitstream::{BitBuf, BitWriter};
 use crate::util::rng::Rng;
+use bitstream::{BitBuf, BitWriter};
 
-/// Which level-entropy coding the QSGD codec uses on the wire.
+/// Which level/index entropy coding a codec uses on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Coding {
-    /// Fixed-width levels: `1 + ceil(log2(s+1))` bits/coordinate. This is
-    /// the paper's accounting (`s=1` → 2 bits vs `F=32` unquantized).
+    /// Fixed-width fields. For QSGD this is `1 + ceil(log2(s+1))`
+    /// bits/coordinate — the paper's accounting (`s=1` → 2 bits vs `F=32`
+    /// unquantized). For top-k it is `ceil(log2(p))` bits/index.
     #[default]
     Naive,
-    /// QSGD's Elias-ω recursive coding of `level+1` — shorter when most
-    /// levels are zero (large `s`, sparse-ish updates).
+    /// Elias-ω recursive coding (QSGD §3.1) — shorter when most levels are
+    /// zero (QSGD at large `s`) or indices are dense (top-k at large `k`).
     Elias,
 }
 
-/// Quantizer configuration: what a node applies to `x_{k,τ} − x_k`.
+/// Serializable description of a built-in codec: what configs and wire
+/// frames carry, and what [`Encoded`] buffers are tagged with so a decode
+/// against the wrong configuration is rejected instead of misread.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Quantizer {
-    /// No quantization (FedAvg baseline): full f32 upload.
+pub enum CodecSpec {
+    /// No compression (FedAvg baseline): full f32 upload.
     Identity,
     /// QSGD low-precision quantizer with `s` levels (paper Example 1).
     Qsgd { s: u32, coding: Coding },
+    /// Keep the `max(1, p·k_permille/1000)` largest-magnitude coordinates.
+    TopK { k_permille: u16, coding: Coding },
+    /// An out-of-tree codec. Custom [`UpdateCodec`] impls return this
+    /// from `spec()` with a stable, impl-chosen `id`, so their buffers
+    /// are tagged distinctly — decode-mismatch checks still work —
+    /// without impersonating a built-in. [`CodecSpec::build`] cannot
+    /// rebuild one (the instance itself travels through
+    /// `ServerBuilder::codec`, in-process only).
+    External { id: u32 },
 }
 
-impl Quantizer {
+impl CodecSpec {
     /// QSGD with `s` levels and the paper's naive fixed-width accounting.
     pub fn qsgd(s: u32) -> Self {
-        Quantizer::Qsgd { s, coding: Coding::Naive }
+        CodecSpec::Qsgd { s, coding: Coding::Naive }
     }
 
-    /// Variance parameter `q` from Assumption 1:
-    /// `E||Q(x)−x||² ≤ q‖x‖²` with `q = min(p/s², √p/s)` for QSGD and
-    /// `q = 0` for the identity.
+    /// Top-k sparsification keeping `k_permille`/1000 of the coordinates,
+    /// with fixed-width index coding.
+    pub fn top_k(k_permille: u16) -> Self {
+        CodecSpec::TopK { k_permille, coding: Coding::Naive }
+    }
+
+    /// Instantiate the built-in codec this spec names. Errors for
+    /// [`CodecSpec::External`] — an external codec exists only as an
+    /// instance and must be passed through `ServerBuilder::codec`.
+    pub fn build(&self) -> crate::Result<Box<dyn UpdateCodec>> {
+        Ok(match *self {
+            CodecSpec::Identity => Box::new(IdentityCodec),
+            CodecSpec::Qsgd { s, coding } => Box::new(QsgdCodec { s, coding }),
+            CodecSpec::TopK { k_permille, coding } => {
+                Box::new(TopKCodec { k_permille, coding })
+            }
+            CodecSpec::External { id } => anyhow::bail!(
+                "external codec id={id} cannot be rebuilt from its spec; \
+                 pass the codec instance via ServerBuilder::codec (in-process only)"
+            ),
+        })
+    }
+
+    /// Variance/contraction parameter `q` of the codec (Assumption 1);
+    /// convenience delegator to [`UpdateCodec::variance_q`]. `NaN` for
+    /// [`CodecSpec::External`], whose behavior this crate cannot know.
     pub fn variance_q(&self, p: usize) -> f64 {
-        match *self {
-            Quantizer::Identity => 0.0,
-            Quantizer::Qsgd { s, .. } => {
-                let p = p as f64;
-                let s = s as f64;
-                (p / (s * s)).min(p.sqrt() / s)
-            }
+        match self.build() {
+            Ok(codec) => codec.variance_q(p),
+            Err(_) => f64::NAN,
         }
     }
+}
 
-    /// Analytic upload size in bits for a length-`p` vector under the
-    /// *naive* coding (Elias size is data-dependent; use the encoded
-    /// buffer's true length for that).
-    pub fn upload_bits(&self, p: usize) -> u64 {
-        match *self {
-            Quantizer::Identity => 32 * p as u64,
-            Quantizer::Qsgd { s, .. } => {
-                32 + (p as u64) * (1 + level_bits(s) as u64)
-            }
-        }
+/// An upload compressor: everything the round pipeline needs from one.
+///
+/// Object-safe by design — aggregation and transports hold
+/// `&dyn UpdateCodec` / `Box<dyn UpdateCodec>`, so new compressors
+/// (sparsifiers, adaptive-level quantizers, entropy coders) plug in
+/// without touching the coordinator. Implementations must be
+/// deterministic given `(x, rng)` — both execution modes (in-process sim
+/// and TCP) rely on replaying identical uploads from identical seeds.
+pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
+    /// The serializable tag identifying this codec's configuration.
+    /// Encodes carry it; decodes verify it.
+    fn spec(&self) -> CodecSpec;
+
+    /// Compress and bit-pack `x` for the wire.
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded;
+
+    /// Decode an upload into `out` (cleared and refilled to `enc.p`
+    /// values). Rejects buffers produced by a different codec config.
+    ///
+    /// Takes a caller-owned buffer so the aggregation hot path can reuse
+    /// one scratch allocation across all uploads of a run.
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()>;
+
+    /// Exact upload size in bits for a length-`p` vector, when it is
+    /// data-independent (fixed-width codings). `None` for data-dependent
+    /// sizes (Elias codings) — use the encoded buffer's true
+    /// [`Encoded::bits`] there.
+    fn analytic_bits(&self, p: usize) -> Option<u64>;
+
+    /// Variance parameter `q` from Assumption 1: `E‖Q(x)−x‖² ≤ q‖x‖²`.
+    /// For QSGD this is `min(p/s², √p/s)`; for the identity `0`. Biased
+    /// contractions (top-k) report their worst-case contraction factor
+    /// `1 − k/p` here, which bounds the same error ratio.
+    fn variance_q(&self, p: usize) -> f64;
+
+    /// Decode into a fresh vector (allocating convenience wrapper).
+    fn decode(&self, enc: &Encoded) -> crate::Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decode_into(enc, &mut out)?;
+        Ok(out)
     }
 
-    /// Quantize and encode `x` to the wire. Returns the encoded buffer.
-    pub fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
-        match *self {
-            Quantizer::Identity => {
-                let mut w = BitWriter::new();
-                for &v in x {
-                    w.write_f32(v);
-                }
-                Encoded { buf: w.finish(), p: x.len(), quantizer: *self }
-            }
-            Quantizer::Qsgd { s, coding } => encode_qsgd(x, s, coding, rng),
-        }
-    }
-
-    /// Decode an upload back to a dense f32 vector.
-    pub fn decode(&self, enc: &Encoded) -> Vec<f32> {
-        assert_eq!(
-            enc.quantizer, *self,
-            "decoding with a mismatched quantizer config"
-        );
-        match *self {
-            Quantizer::Identity => {
-                let mut r = enc.buf.reader();
-                (0..enc.p).map(|_| r.read_f32()).collect()
-            }
-            Quantizer::Qsgd { s, coding } => decode_qsgd(enc, s, coding),
-        }
-    }
-
-    /// Convenience: quantization noise injection without the wire —
-    /// `decode(encode(x))`. The sim engine uses this in-process, the TCP
-    /// mode ships the [`Encoded`] bytes instead; both paths share the
-    /// exact same codec so results are identical for equal seeds.
-    pub fn apply(&self, x: &[f32], rng: &mut Rng) -> (Vec<f32>, u64) {
+    /// Compression noise injection without the wire — `decode(encode(x))`
+    /// plus the exact wire bit count. Both execution modes share the same
+    /// codec, so results are identical for equal seeds whether or not the
+    /// bytes actually travel.
+    fn apply(&self, x: &[f32], rng: &mut Rng) -> crate::Result<(Vec<f32>, u64)> {
         let enc = self.encode(x, rng);
-        let bits = enc.buf.len_bits();
-        (self.decode(&enc), bits)
+        let bits = enc.bits();
+        Ok((self.decode(&enc)?, bits))
     }
 }
 
-/// Fixed-width bits needed for a level in `0..=s`.
-pub fn level_bits(s: u32) -> u32 {
-    32 - s.leading_zeros() // ceil(log2(s+1)) for s >= 1
-}
-
-/// A quantized, encoded model update as it travels to the server.
+/// A compressed, bit-packed model update as it travels to the server.
 #[derive(Debug, Clone)]
 pub struct Encoded {
     pub buf: BitBuf,
     /// Number of coordinates.
     pub p: usize,
-    /// Codec that produced this buffer (checked at decode time).
-    pub quantizer: Quantizer,
+    /// Codec configuration that produced this buffer (checked at decode).
+    pub spec: CodecSpec,
 }
 
 impl Encoded {
@@ -137,48 +186,279 @@ impl Encoded {
     }
 }
 
-fn encode_qsgd(x: &[f32], s: u32, coding: Coding, rng: &mut Rng) -> Encoded {
-    assert!(s >= 1, "QSGD needs at least one level");
-    let norm = l2_norm(x);
-    let mut w = BitWriter::new();
-    w.write_f32(norm);
-    let nb = level_bits(s);
-    let sf = s as f32;
-    for &v in x {
-        let sign = v < 0.0;
-        let level = if norm > 0.0 {
-            let a = v.abs() / norm * sf; // in [0, s]
-            let lo = a.floor();
-            let up = rng.gen_f32() < (a - lo);
-            (lo as u32 + up as u32).min(s)
-        } else {
-            0
-        };
-        w.write_bit(sign);
-        match coding {
-            Coding::Naive => w.write_bits(level as u64, nb),
-            Coding::Elias => elias::encode_omega(&mut w, level as u64 + 1),
-        }
+// ---------------- identity ----------------
+
+/// Full-precision passthrough: the FedAvg baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityCodec;
+
+impl UpdateCodec for IdentityCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Identity
     }
-    Encoded { buf: w.finish(), p: x.len(), quantizer: Quantizer::Qsgd { s, coding } }
+
+    fn encode(&self, x: &[f32], _rng: &mut Rng) -> Encoded {
+        let mut w = BitWriter::new();
+        for &v in x {
+            w.write_f32(v);
+        }
+        Encoded { buf: w.finish(), p: x.len(), spec: self.spec() }
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        let mut r = enc.buf.reader();
+        out.clear();
+        out.reserve(enc.p);
+        for _ in 0..enc.p {
+            out.push(r.read_f32());
+        }
+        Ok(())
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        Some(32 * p as u64)
+    }
+
+    fn variance_q(&self, _p: usize) -> f64 {
+        0.0
+    }
 }
 
-fn decode_qsgd(enc: &Encoded, s: u32, coding: Coding) -> Vec<f32> {
-    let mut r = enc.buf.reader();
-    let norm = r.read_f32();
-    let nb = level_bits(s);
-    let sf = s as f32;
-    let mut out = Vec::with_capacity(enc.p);
-    for _ in 0..enc.p {
-        let sign = r.read_bit();
-        let level = match coding {
-            Coding::Naive => r.read_bits(nb),
-            Coding::Elias => elias::decode_omega(&mut r) - 1,
-        } as f32;
-        let mag = norm * level / sf;
-        out.push(if sign { -mag } else { mag });
+// ---------------- QSGD ----------------
+
+/// QSGD low-precision quantizer with `s` levels (paper Example 1).
+#[derive(Debug, Clone, Copy)]
+pub struct QsgdCodec {
+    pub s: u32,
+    pub coding: Coding,
+}
+
+impl QsgdCodec {
+    pub fn new(s: u32) -> Self {
+        QsgdCodec { s, coding: Coding::Naive }
     }
-    out
+}
+
+impl UpdateCodec for QsgdCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Qsgd { s: self.s, coding: self.coding }
+    }
+
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
+        let (s, coding) = (self.s, self.coding);
+        assert!(s >= 1, "QSGD needs at least one level");
+        let norm = l2_norm(x);
+        let mut w = BitWriter::new();
+        w.write_f32(norm);
+        let nb = level_bits(s);
+        let sf = s as f32;
+        for &v in x {
+            let sign = v < 0.0;
+            let level = if norm > 0.0 {
+                let a = v.abs() / norm * sf; // in [0, s]
+                let lo = a.floor();
+                let up = rng.gen_f32() < (a - lo);
+                (lo as u32 + up as u32).min(s)
+            } else {
+                0
+            };
+            w.write_bit(sign);
+            match coding {
+                Coding::Naive => w.write_bits(level as u64, nb),
+                Coding::Elias => elias::encode_omega(&mut w, level as u64 + 1),
+            }
+        }
+        Encoded { buf: w.finish(), p: x.len(), spec: self.spec() }
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        let (s, coding) = (self.s, self.coding);
+        let mut r = enc.buf.reader();
+        let norm = r.read_f32();
+        let nb = level_bits(s);
+        let sf = s as f32;
+        out.clear();
+        out.reserve(enc.p);
+        for _ in 0..enc.p {
+            let sign = r.read_bit();
+            let level = match coding {
+                Coding::Naive => r.read_bits(nb),
+                Coding::Elias => elias::decode_omega(&mut r) - 1,
+            } as f32;
+            let mag = norm * level / sf;
+            out.push(if sign { -mag } else { mag });
+        }
+        Ok(())
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        match self.coding {
+            Coding::Naive => Some(32 + (p as u64) * (1 + level_bits(self.s) as u64)),
+            Coding::Elias => None,
+        }
+    }
+
+    fn variance_q(&self, p: usize) -> f64 {
+        let p = p as f64;
+        let s = self.s as f64;
+        (p / (s * s)).min(p.sqrt() / s)
+    }
+}
+
+// ---------------- top-k sparsification ----------------
+
+/// Magnitude top-k sparsification: keep the `k = max(1, p·k_permille/1000)`
+/// largest-|·| coordinates at full precision, drop the rest.
+///
+/// A *biased* contraction (`E‖Q(x)−x‖² ≤ (1−k/p)‖x‖²`), deterministic
+/// given `x` (ties broken toward the lower index). Index coding is either
+/// fixed-width `ceil(log2 p)` bits or Elias-ω over ascending index gaps.
+#[derive(Debug, Clone, Copy)]
+pub struct TopKCodec {
+    pub k_permille: u16,
+    pub coding: Coding,
+}
+
+impl TopKCodec {
+    pub fn new(k_permille: u16) -> Self {
+        TopKCodec { k_permille, coding: Coding::Naive }
+    }
+
+    /// Number of kept coordinates for a length-`p` vector.
+    pub fn k_of(&self, p: usize) -> usize {
+        if p == 0 {
+            0
+        } else {
+            (p * self.k_permille as usize / 1000).clamp(1, p)
+        }
+    }
+}
+
+/// Fixed-width bits needed to address a coordinate in `0..p`.
+fn index_bits(p: usize) -> u32 {
+    if p <= 1 {
+        0
+    } else {
+        64 - ((p - 1) as u64).leading_zeros()
+    }
+}
+
+impl UpdateCodec for TopKCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::TopK { k_permille: self.k_permille, coding: self.coding }
+    }
+
+    fn encode(&self, x: &[f32], _rng: &mut Rng) -> Encoded {
+        let p = x.len();
+        let k = self.k_of(p);
+        let mut order: Vec<u32> = (0..p as u32).collect();
+        if k < p {
+            // Partial select: |x| descending, index ascending on ties, so
+            // the kept set is deterministic across runs and platforms.
+            order.select_nth_unstable_by(k, |&a, &b| {
+                x[b as usize]
+                    .abs()
+                    .total_cmp(&x[a as usize].abs())
+                    .then(a.cmp(&b))
+            });
+        }
+        order.truncate(k);
+        order.sort_unstable();
+        let mut w = BitWriter::new();
+        let nb = index_bits(p);
+        let mut prev: u64 = 0;
+        for (j, &i) in order.iter().enumerate() {
+            match self.coding {
+                Coding::Naive => w.write_bits(i as u64, nb),
+                Coding::Elias => {
+                    // Gaps are >= 1: first gap is index+1, then deltas of a
+                    // strictly ascending sequence.
+                    let gap = if j == 0 { i as u64 + 1 } else { i as u64 - prev };
+                    elias::encode_omega(&mut w, gap);
+                    prev = i as u64;
+                }
+            }
+            w.write_f32(x[i as usize]);
+        }
+        Encoded { buf: w.finish(), p, spec: self.spec() }
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        let p = enc.p;
+        let k = self.k_of(p);
+        out.clear();
+        out.resize(p, 0.0);
+        let mut r = enc.buf.reader();
+        let nb = index_bits(p);
+        let mut prev: u64 = 0;
+        for j in 0..k {
+            let i = match self.coding {
+                Coding::Naive => r.read_bits(nb),
+                Coding::Elias => {
+                    let gap = elias::decode_omega(&mut r);
+                    if j == 0 {
+                        gap - 1
+                    } else {
+                        prev + gap
+                    }
+                }
+            };
+            // The wire contract is strictly ascending unique indices;
+            // enforcing it rejects corrupt frames that would otherwise
+            // silently overwrite coordinates.
+            anyhow::ensure!(
+                j == 0 || i > prev,
+                "top-k indices not strictly ascending ({i} after {prev})"
+            );
+            prev = i;
+            let i = i as usize;
+            anyhow::ensure!(i < p, "top-k index {i} out of range 0..{p}");
+            out[i] = r.read_f32();
+        }
+        Ok(())
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        match self.coding {
+            Coding::Naive => {
+                Some(self.k_of(p) as u64 * (index_bits(p) as u64 + 32))
+            }
+            Coding::Elias => None,
+        }
+    }
+
+    /// Worst-case contraction factor `1 − k/p`, NOT an Assumption-1
+    /// certificate: top-k is biased (`E[Q(x)] ≠ x`), so the paper's
+    /// Theorem 1/2 machinery — which additionally assumes unbiasedness —
+    /// does not apply to this codec even though the error-ratio bound
+    /// `‖Q(x)−x‖² ≤ (1−k/p)‖x‖²` holds deterministically.
+    fn variance_q(&self, p: usize) -> f64 {
+        if p == 0 {
+            0.0
+        } else {
+            1.0 - self.k_of(p) as f64 / p as f64
+        }
+    }
+}
+
+// ---------------- shared helpers ----------------
+
+fn check_spec(expect: CodecSpec, enc: &Encoded) -> crate::Result<()> {
+    anyhow::ensure!(
+        enc.spec == expect,
+        "decoding with a mismatched codec config: buffer is {:?}, codec is {:?}",
+        enc.spec,
+        expect
+    );
+    Ok(())
+}
+
+/// Fixed-width bits needed for a QSGD level in `0..=s`.
+pub fn level_bits(s: u32) -> u32 {
+    32 - s.leading_zeros() // ceil(log2(s+1)) for s >= 1
 }
 
 /// l2 norm with f64 accumulation (bit-stable across call sites).
@@ -197,10 +477,11 @@ mod tests {
     #[test]
     fn identity_roundtrip_exact() {
         let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.3).collect();
-        let q = Quantizer::Identity;
-        let (y, bits) = q.apply(&x, &mut rng(0));
+        let q = IdentityCodec;
+        let (y, bits) = q.apply(&x, &mut rng(0)).unwrap();
         assert_eq!(x, y);
         assert_eq!(bits, 3200);
+        assert_eq!(q.analytic_bits(100), Some(3200));
         assert_eq!(q.variance_q(100), 0.0);
     }
 
@@ -209,10 +490,10 @@ mod tests {
         // Every decoded magnitude must be norm * l / s for integer l <= s.
         let x: Vec<f32> = (0..257).map(|i| ((i * 37) % 101) as f32 - 50.0).collect();
         for s in [1u32, 2, 5, 10, 64] {
-            let q = Quantizer::qsgd(s);
+            let q = QsgdCodec::new(s);
             let enc = q.encode(&x, &mut rng(1));
             let norm = l2_norm(&x);
-            for (i, v) in q.decode(&enc).iter().enumerate() {
+            for (i, v) in q.decode(&enc).unwrap().iter().enumerate() {
                 let lvl = v.abs() / norm * s as f32;
                 assert!(
                     (lvl - lvl.round()).abs() < 1e-4,
@@ -227,23 +508,23 @@ mod tests {
     fn qsgd_bit_accounting_naive() {
         let x = vec![0.5f32; 1000];
         for s in [1u32, 3, 10, 100] {
-            let q = Quantizer::qsgd(s);
+            let q = QsgdCodec::new(s);
             let enc = q.encode(&x, &mut rng(2));
-            assert_eq!(enc.bits(), q.upload_bits(1000), "s={s}");
+            assert_eq!(Some(enc.bits()), q.analytic_bits(1000), "s={s}");
         }
         // s=1 → 2 bits/coord + 32-bit norm.
-        assert_eq!(Quantizer::qsgd(1).upload_bits(1000), 32 + 2000);
+        assert_eq!(QsgdCodec::new(1).analytic_bits(1000), Some(32 + 2000));
     }
 
     #[test]
     fn qsgd_unbiased_empirically() {
         let x: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.17).sin()).collect();
-        let q = Quantizer::qsgd(2);
+        let q = QsgdCodec::new(2);
         let mut acc = vec![0f64; x.len()];
         let trials = 4000;
         let mut r = rng(3);
         for _ in 0..trials {
-            for (a, v) in acc.iter_mut().zip(q.apply(&x, &mut r).0) {
+            for (a, v) in acc.iter_mut().zip(q.apply(&x, &mut r).unwrap().0) {
                 *a += v as f64;
             }
         }
@@ -266,13 +547,13 @@ mod tests {
         let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.31).cos()).collect();
         let norm2 = (l2_norm(&x) as f64).powi(2);
         for s in [1u32, 4, 16] {
-            let q = Quantizer::qsgd(s);
+            let q = QsgdCodec::new(s);
             let bound = q.variance_q(p) * norm2;
             let mut err = 0.0f64;
             let trials = 2000;
             let mut r = rng(4);
             for _ in 0..trials {
-                let y = q.apply(&x, &mut r).0;
+                let y = q.apply(&x, &mut r).unwrap().0;
                 err += x
                     .iter()
                     .zip(&y)
@@ -292,30 +573,126 @@ mod tests {
         // A peaked vector has mostly level-0 coords at high s: Elias wins.
         let mut x = vec![1e-4f32; 4096];
         x[0] = 10.0;
-        let naive = Quantizer::Qsgd { s: 64, coding: Coding::Naive };
-        let elias = Quantizer::Qsgd { s: 64, coding: Coding::Elias };
+        let naive = QsgdCodec { s: 64, coding: Coding::Naive };
+        let elias_q = QsgdCodec { s: 64, coding: Coding::Elias };
         let en = naive.encode(&x, &mut rng(5));
-        let ee = elias.encode(&x, &mut rng(5));
+        let ee = elias_q.encode(&x, &mut rng(5));
         assert!(ee.bits() < en.bits(), "{} !< {}", ee.bits(), en.bits());
         // And both decode to on-grid values of the same norm scale.
-        let dn = naive.decode(&en);
-        let de = elias.decode(&ee);
+        let dn = naive.decode(&en).unwrap();
+        let de = elias_q.decode(&ee).unwrap();
         assert_eq!(dn.len(), de.len());
     }
 
     #[test]
     fn zero_vector_is_exact() {
         let x = vec![0f32; 57];
-        let q = Quantizer::qsgd(4);
-        let (y, _) = q.apply(&x, &mut rng(6));
+        let q = QsgdCodec::new(4);
+        let (y, _) = q.apply(&x, &mut rng(6)).unwrap();
         assert!(y.iter().all(|&v| v == 0.0));
     }
 
     #[test]
-    #[should_panic(expected = "mismatched quantizer")]
-    fn decode_mismatch_panics() {
+    fn decode_mismatch_is_rejected() {
         let x = vec![1f32; 8];
-        let enc = Quantizer::qsgd(2).encode(&x, &mut rng(7));
-        Quantizer::qsgd(3).decode(&enc);
+        let enc = QsgdCodec::new(2).encode(&x, &mut rng(7));
+        assert!(QsgdCodec::new(3).decode(&enc).is_err());
+        assert!(IdentityCodec.decode(&enc).is_err());
+        assert!(TopKCodec::new(500).decode(&enc).is_err());
+    }
+
+    #[test]
+    fn top_k_keeps_largest_and_zeroes_rest() {
+        let x: Vec<f32> = (0..40).map(|i| ((i as f32) * 0.7).sin() * i as f32).collect();
+        for coding in [Coding::Naive, Coding::Elias] {
+            let q = TopKCodec { k_permille: 250, coding };
+            let k = q.k_of(x.len());
+            assert_eq!(k, 10);
+            let enc = q.encode(&x, &mut rng(8));
+            let y = q.decode(&enc).unwrap();
+            assert_eq!(y.len(), x.len());
+            let kept: Vec<usize> =
+                (0..x.len()).filter(|&i| y[i] != 0.0).collect();
+            assert!(kept.len() <= k);
+            // Kept values are exact copies.
+            for &i in &kept {
+                assert_eq!(y[i], x[i], "coord {i}");
+            }
+            // Every kept magnitude >= every dropped magnitude.
+            let min_kept = kept
+                .iter()
+                .map(|&i| x[i].abs())
+                .fold(f32::INFINITY, f32::min);
+            for i in 0..x.len() {
+                if y[i] == 0.0 {
+                    assert!(
+                        x[i].abs() <= min_kept,
+                        "dropped {i} (|{}|) beats kept min {min_kept}",
+                        x[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_bit_accounting_naive() {
+        let x: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.13).cos()).collect();
+        let q = TopKCodec::new(100); // k = 100 of 1000
+        let enc = q.encode(&x, &mut rng(9));
+        // 10 index bits + 32 value bits per kept coordinate.
+        assert_eq!(enc.bits(), 100 * 42);
+        assert_eq!(q.analytic_bits(1000), Some(100 * 42));
+        // Elias size is data-dependent.
+        assert_eq!(
+            TopKCodec { k_permille: 100, coding: Coding::Elias }.analytic_bits(1000),
+            None
+        );
+    }
+
+    #[test]
+    fn top_k_variance_is_contraction_factor() {
+        let q = TopKCodec::new(250);
+        assert!((q.variance_q(1000) - 0.75).abs() < 1e-12);
+        assert_eq!(IdentityCodec.variance_q(1000), 0.0);
+    }
+
+    #[test]
+    fn spec_build_roundtrips() {
+        for spec in [
+            CodecSpec::Identity,
+            CodecSpec::qsgd(3),
+            CodecSpec::Qsgd { s: 7, coding: Coding::Elias },
+            CodecSpec::top_k(125),
+            CodecSpec::TopK { k_permille: 50, coding: Coding::Elias },
+        ] {
+            assert_eq!(spec.build().unwrap().spec(), spec);
+        }
+    }
+
+    #[test]
+    fn external_spec_is_distinct_and_not_buildable() {
+        // A custom codec tags itself External{id}: mismatch checks hold
+        // against every built-in, and the spec cannot silently rebuild
+        // into something else.
+        let ext = CodecSpec::External { id: 7 };
+        assert!(ext.build().is_err());
+        assert!(ext.variance_q(100).is_nan());
+        assert_ne!(ext, CodecSpec::Identity);
+        assert_ne!(ext, CodecSpec::External { id: 8 });
+    }
+
+    #[test]
+    fn top_k_decode_rejects_duplicate_indices() {
+        // Hand-craft a naive-coded frame carrying the same index twice.
+        let q = TopKCodec::new(500); // k = 2 of 4
+        let mut w = BitWriter::new();
+        let nb = index_bits(4);
+        w.write_bits(1, nb);
+        w.write_f32(1.5);
+        w.write_bits(1, nb); // duplicate index
+        w.write_f32(-2.5);
+        let enc = Encoded { buf: w.finish(), p: 4, spec: q.spec() };
+        assert!(q.decode(&enc).is_err());
     }
 }

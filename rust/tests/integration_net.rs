@@ -9,7 +9,7 @@ use fedpaq::figures::zoo_kind;
 use fedpaq::model::RustEngine;
 use fedpaq::net::{run_leader, run_worker};
 use fedpaq::opt::LrSchedule;
-use fedpaq::quant::Quantizer;
+use fedpaq::quant::CodecSpec;
 use std::net::TcpListener;
 use std::path::Path;
 
@@ -23,7 +23,7 @@ fn cluster_cfg(seed: u64) -> ExperimentConfig {
         r: 6,
         tau: 2,
         t_total: 10,
-        quantizer: Quantizer::qsgd(2),
+        codec: CodecSpec::qsgd(2),
         lr: LrSchedule::Const { eta: 0.4 },
         ratio: 100.0,
         seed,

@@ -11,7 +11,7 @@ use fedpaq::data::DatasetKind;
 use fedpaq::figures::{zoo_kind, Runner};
 use fedpaq::model::{Engine, LabelBatch, RustEngine};
 use fedpaq::opt::LrSchedule;
-use fedpaq::quant::{l2_norm, Quantizer};
+use fedpaq::quant::{l2_norm, CodecSpec};
 use fedpaq::runtime::{cpu_client, PjrtEngine, QuantizeKernel};
 use fedpaq::util::rng::Rng;
 use std::path::{Path, PathBuf};
@@ -208,7 +208,7 @@ fn pjrt_fedpaq_run_decreases_loss_and_matches_shape() {
         r: 10,
         tau: 5,
         t_total: 40,
-        quantizer: Quantizer::qsgd(1),
+        codec: CodecSpec::qsgd(1),
         lr: LrSchedule::Const { eta: 0.2 },
         ratio: 100.0,
         seed: 11,
@@ -235,7 +235,7 @@ fn pjrt_and_rust_engines_agree_on_full_logreg_run() {
         r: 5,
         tau: 3,
         t_total: 12,
-        quantizer: Quantizer::qsgd(2),
+        codec: CodecSpec::qsgd(2),
         lr: LrSchedule::Const { eta: 0.3 },
         ratio: 100.0,
         seed: 21,

@@ -1,0 +1,156 @@
+//! Property tests over every [`UpdateCodec`] implementation — the codec
+//! trait contract: encode→decode identity on each codec's grid, exact
+//! analytic bit accounting for fixed-width codings, and rejection of
+//! decodes against a mismatched codec configuration.
+//!
+//! (Driver: `fedpaq::util::prop` — proptest is unavailable offline.)
+
+use fedpaq::quant::{
+    l2_norm, CodecSpec, Coding, IdentityCodec, QsgdCodec, TopKCodec, UpdateCodec,
+};
+use fedpaq::util::prop::check;
+use fedpaq::util::rng::Rng;
+
+/// One of every built-in codec family/coding combination.
+fn all_codecs() -> Vec<Box<dyn UpdateCodec>> {
+    vec![
+        Box::new(IdentityCodec),
+        Box::new(QsgdCodec { s: 1, coding: Coding::Naive }),
+        Box::new(QsgdCodec { s: 7, coding: Coding::Naive }),
+        Box::new(QsgdCodec { s: 7, coding: Coding::Elias }),
+        Box::new(TopKCodec { k_permille: 100, coding: Coding::Naive }),
+        Box::new(TopKCodec { k_permille: 250, coding: Coding::Elias }),
+        Box::new(TopKCodec { k_permille: 1000, coding: Coding::Naive }),
+    ]
+}
+
+fn random_vec(rng: &mut Rng, p: usize, scale: f32) -> Vec<f32> {
+    (0..p).map(|_| (rng.gen_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Codec-specific decode contract: what "roundtrip identity on the grid"
+/// means for each family.
+fn assert_on_grid(codec: &dyn UpdateCodec, x: &[f32], y: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    match codec.spec() {
+        CodecSpec::Identity => assert_eq!(x, y, "identity must be exact"),
+        CodecSpec::Qsgd { s, .. } => {
+            let norm = l2_norm(x);
+            for (i, &v) in y.iter().enumerate() {
+                if norm == 0.0 {
+                    assert_eq!(v, 0.0);
+                    continue;
+                }
+                let lvl = v.abs() / norm * s as f32;
+                assert!(
+                    (lvl - lvl.round()).abs() < 1e-3,
+                    "coord {i}: level {lvl} off the s={s} grid"
+                );
+                assert!(lvl.round() as u32 <= s, "coord {i}: level beyond s");
+            }
+        }
+        CodecSpec::External { .. } => {
+            unreachable!("all_codecs() yields only built-in codecs")
+        }
+        CodecSpec::TopK { .. } => {
+            // Kept coordinates are exact copies; dropped ones are zero and
+            // no kept-zero coordinate may hide a larger dropped one.
+            let kept: Vec<usize> = (0..x.len()).filter(|&i| y[i] != 0.0).collect();
+            for &i in &kept {
+                assert_eq!(y[i], x[i], "kept coord {i} not exact");
+            }
+            let min_kept =
+                kept.iter().map(|&i| x[i].abs()).fold(f32::INFINITY, f32::min);
+            for i in 0..x.len() {
+                if y[i] == 0.0 && !kept.is_empty() {
+                    assert!(
+                        x[i].abs() <= min_kept + 1e-12,
+                        "dropped coord {i} (|{}|) larger than kept min {min_kept}",
+                        x[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_every_codec_roundtrips_on_its_grid() {
+    check(120, 0xc0dec_a, |rng| {
+        let p = rng.gen_range(1, 1500);
+        let x = random_vec(rng, p, 5.0);
+        for codec in all_codecs() {
+            let enc = codec.encode(&x, &mut rng.clone());
+            assert_eq!(enc.p, p);
+            assert_eq!(enc.spec, codec.spec());
+            let y = codec.decode(&enc).unwrap_or_else(|e| {
+                panic!("{:?} failed to decode its own encode: {e}", codec.spec())
+            });
+            assert_on_grid(codec.as_ref(), &x, &y);
+        }
+    });
+}
+
+#[test]
+fn prop_fixed_width_codings_match_analytic_bits() {
+    check(120, 0xc0dec_b, |rng| {
+        let p = rng.gen_range(1, 3000);
+        let x = random_vec(rng, p, 2.0);
+        for codec in all_codecs() {
+            let enc = codec.encode(&x, &mut rng.clone());
+            match codec.analytic_bits(p) {
+                // Fixed-width codings: the wire size is data-independent
+                // and must match the analytic accounting exactly.
+                Some(bits) => assert_eq!(
+                    enc.bits(),
+                    bits,
+                    "{:?}: encoded {} != analytic {bits}",
+                    codec.spec(),
+                    enc.bits()
+                ),
+                // Elias codings are data-dependent; only sanity-bound them.
+                None => assert!(enc.bits() > 0 || p == 0),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decode_config_mismatch_is_rejected() {
+    check(60, 0xc0dec_c, |rng| {
+        let p = rng.gen_range(1, 400);
+        let x = random_vec(rng, p, 1.0);
+        let codecs = all_codecs();
+        for (i, a) in codecs.iter().enumerate() {
+            let enc = a.encode(&x, &mut rng.clone());
+            for (j, b) in codecs.iter().enumerate() {
+                let got = b.decode(&enc);
+                if i == j {
+                    assert!(got.is_ok(), "{:?} rejected its own encode", a.spec());
+                } else {
+                    assert!(
+                        got.is_err(),
+                        "{:?} decoded a buffer produced by {:?}",
+                        b.spec(),
+                        a.spec()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decode_into_reuses_buffer_and_matches_decode() {
+    check(60, 0xc0dec_d, |rng| {
+        let p = rng.gen_range(1, 800);
+        let x = random_vec(rng, p, 3.0);
+        let mut scratch: Vec<f32> = Vec::new();
+        for codec in all_codecs() {
+            let enc = codec.encode(&x, &mut rng.clone());
+            codec.decode_into(&enc, &mut scratch).unwrap();
+            assert_eq!(scratch.len(), p);
+            assert_eq!(scratch, codec.decode(&enc).unwrap(), "{:?}", codec.spec());
+        }
+    });
+}

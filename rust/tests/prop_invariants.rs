@@ -7,7 +7,7 @@
 use fedpaq::config::ExperimentConfig;
 use fedpaq::coordinator::sampler::sample_nodes;
 use fedpaq::data::{BatchSampler, Partition};
-use fedpaq::quant::{bitstream::BitWriter, elias, l2_norm, Coding, Quantizer};
+use fedpaq::quant::{bitstream::BitWriter, elias, l2_norm, CodecSpec, Coding, QsgdCodec, UpdateCodec};
 use fedpaq::util::json::Json;
 use fedpaq::util::prop::check;
 use fedpaq::util::rng::Rng;
@@ -22,13 +22,13 @@ fn prop_qsgd_decode_encode_levels_and_bits() {
         let p = rng.gen_range(1, 3000);
         let s = rng.gen_range(1, 40) as u32;
         let x = random_vec(rng, p, 10.0);
-        let q = Quantizer::qsgd(s);
+        let q = QsgdCodec::new(s);
         let enc = q.encode(&x, &mut rng.clone());
         // Exact bit accounting under naive coding.
-        assert_eq!(enc.bits(), q.upload_bits(p));
+        assert_eq!(Some(enc.bits()), q.analytic_bits(p));
         // Decoded values on the quantization grid, |level| <= s.
         let norm = l2_norm(&x);
-        for (i, v) in q.decode(&enc).iter().enumerate() {
+        for (i, v) in q.decode(&enc).unwrap().iter().enumerate() {
             if norm == 0.0 {
                 assert_eq!(*v, 0.0);
                 continue;
@@ -52,8 +52,8 @@ fn prop_qsgd_error_within_deterministic_bound() {
         let p = rng.gen_range(1, 800);
         let s = rng.gen_range(1, 16) as u32;
         let x = random_vec(rng, p, 3.0);
-        let q = Quantizer::qsgd(s);
-        let (dec, _) = q.apply(&x, &mut rng.clone());
+        let q = QsgdCodec::new(s);
+        let (dec, _) = q.apply(&x, &mut rng.clone()).unwrap();
         let bin = l2_norm(&x) / s as f32 + 1e-5;
         for (i, (&xi, &qi)) in x.iter().zip(&dec).enumerate() {
             assert!(
@@ -95,13 +95,13 @@ fn prop_elias_coded_upload_decodes_identically() {
         let p = rng.gen_range(1, 500);
         let s = rng.gen_range(1, 64) as u32;
         let x = random_vec(rng, p, 1.0);
-        let naive = Quantizer::Qsgd { s, coding: Coding::Naive };
-        let elias_q = Quantizer::Qsgd { s, coding: Coding::Elias };
+        let naive = QsgdCodec { s, coding: Coding::Naive };
+        let elias_q = QsgdCodec { s, coding: Coding::Elias };
         // Same RNG stream -> same stochastic levels -> identical decode.
         let seed = rng.next_u64();
         let en = naive.encode(&x, &mut Rng::seed_from_u64(seed));
         let ee = elias_q.encode(&x, &mut Rng::seed_from_u64(seed));
-        assert_eq!(naive.decode(&en), elias_q.decode(&ee));
+        assert_eq!(naive.decode(&en).unwrap(), elias_q.decode(&ee).unwrap());
     });
 }
 
@@ -166,12 +166,16 @@ fn prop_config_json_roundtrip() {
         cfg.t_total = cfg.tau * rng.gen_range(1, 50);
         cfg.seed = rng.next_u64();
         cfg.ratio = rng.gen_f64() * 1000.0 + 1.0;
-        cfg.quantizer = match rng.gen_range(0, 3) {
-            0 => Quantizer::Identity,
-            1 => Quantizer::qsgd(rng.gen_range(1, 100) as u32),
-            _ => Quantizer::Qsgd {
+        cfg.codec = match rng.gen_range(0, 4) {
+            0 => CodecSpec::Identity,
+            1 => CodecSpec::qsgd(rng.gen_range(1, 100) as u32),
+            2 => CodecSpec::Qsgd {
                 s: rng.gen_range(1, 100) as u32,
                 coding: Coding::Elias,
+            },
+            _ => CodecSpec::TopK {
+                k_permille: rng.gen_range(1, 1001) as u16,
+                coding: if rng.gen_bool(0.5) { Coding::Elias } else { Coding::Naive },
             },
         };
         let cfg = cfg.validated().unwrap();
@@ -238,12 +242,12 @@ fn prop_wire_messages_roundtrip() {
             }
             _ => panic!(),
         }
-        let q = Quantizer::qsgd(rng.gen_range(1, 16) as u32);
+        let q = QsgdCodec::new(rng.gen_range(1, 16) as u32);
         let enc = q.encode(&random_vec(rng, p, 2.0), &mut rng.clone());
-        let want = q.decode(&enc);
+        let want = q.decode(&enc).unwrap();
         let up = ToLeader::Update { round: 1, node: 2, enc };
         match ToLeader::decode(&up.encode()).unwrap() {
-            ToLeader::Update { enc, .. } => assert_eq!(q.decode(&enc), want),
+            ToLeader::Update { enc, .. } => assert_eq!(q.decode(&enc).unwrap(), want),
             _ => panic!(),
         }
     });

@@ -1,0 +1,126 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, covering the
+//! API subset this repository uses: [`Error`], [`Result`], and the
+//! `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Exists so the workspace builds with zero registry access (this
+//! environment is fully offline). The semantics match real `anyhow` for
+//! everything the codebase does: `?`-conversion from any
+//! `std::error::Error + Send + Sync + 'static`, `Display`/`Debug`
+//! rendering of the message, and formatted construction. Error *chains*,
+//! downcasting and backtraces are intentionally out of scope — swap the
+//! path dependency for crates.io `anyhow = "1"` to get them.
+
+use std::fmt;
+
+/// A string-backed error value.
+///
+/// Deliberately does **not** implement `std::error::Error` (mirroring
+/// real `anyhow::Error`), which is what makes the blanket
+/// `From<E: std::error::Error>` impl below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints errors via Debug; show
+        // the plain message like real anyhow does.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "boom");
+        let e: Error = "17x".parse::<u64>().unwrap_err().into();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let v = 3;
+        let e = anyhow!("value {v} bad");
+        assert_eq!(e.to_string(), "value 3 bad");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x={x} too big");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x=12 too big");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+    }
+}

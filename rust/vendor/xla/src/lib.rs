@@ -1,0 +1,159 @@
+//! Stub of the `xla` (PJRT C API) binding surface used by this
+//! repository, for environments without the native XLA/PJRT toolchain.
+//!
+//! Every type the [`fedpaq`] runtime layer touches exists here with the
+//! same signatures, so the whole workspace **compiles and links with no
+//! native dependency**; attempting to actually *use* PJRT fails at
+//! runtime from the single entry point ([`PjRtClient::cpu`]) with a
+//! clear message. The pure-rust engine, coordinator, codecs and TCP
+//! runtime never reach this crate's error path.
+//!
+//! To run the real AOT-HLO path, replace the `xla = { path = ... }`
+//! dependency with the actual PJRT bindings exposing this same surface.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type surfaced by every stubbed operation.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT backend unavailable (built against the in-tree xla stub; \
+         use --engine rust, or link the real xla bindings)"
+    )))
+}
+
+/// Element types transferable to device buffers.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn scalar(_v: f32) -> Self {
+        Literal { _priv: () }
+    }
+
+    pub fn vec1(_v: &[f32]) -> Self {
+        Literal { _priv: () }
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        unavailable("Literal::get_first_element")
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text here).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// On-device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle (the single stub entry point — fails on creation).
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+}

@@ -51,6 +51,10 @@ fn main() -> anyhow::Result<()> {
         eval_every: 10,
         engine: EngineKind::Pjrt,
         partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: false,
+        buffer_size: 0,
+        max_staleness: 8,
+        staleness_rule: Default::default(),
     }
     .validated()?;
 

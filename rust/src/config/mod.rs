@@ -31,9 +31,32 @@
 //! [`ServerBuilder::transport`](crate::coordinator::ServerBuilder::transport).
 //! Both modes replay identical uploads from the same config + seed.
 //!
+//! ## Buffered-async rounds
+//!
+//! The *round protocol* (synchronous barrier vs FedBuff-style buffered
+//! async) **is** an experiment parameter — it changes what the model
+//! trains on — so it lives here:
+//!
+//! ```json
+//! "async_rounds": true,
+//! "buffer_size": 4,
+//! "max_staleness": 8,
+//! "staleness_rule": {"type": "uniform"}          // or
+//! "staleness_rule": {"type": "polynomial", "a": 1.0}
+//! ```
+//!
+//! `buffer_size` is how many uploads the server buffers before committing
+//! an averaged update (`0` means `|S_k| = r`, a full barrier's worth);
+//! uploads staler than `max_staleness` server versions are dropped; the
+//! `staleness_rule` maps an upload's staleness `s` to its aggregation
+//! weight (`uniform` → 1; `polynomial` → `(1+s)^-a`, so `a = 1` is the
+//! classic `1/(1+s)` damping). All four fields default to the synchronous
+//! protocol when absent, so pre-async config files parse unchanged.
+//!
 //! Serialization goes through the in-tree JSON module (`util::json`);
 //! see `configs/` for example files.
 
+use crate::coordinator::aggregate::StalenessRule;
 use crate::data::{DatasetKind, PartitionKind};
 use crate::opt::LrSchedule;
 use crate::quant::{CodecSpec, Coding};
@@ -84,12 +107,32 @@ pub struct ExperimentConfig {
     /// How samples are assigned to nodes (paper: iid; Dirichlet is the
     /// heterogeneity-extension ablation).
     pub partition: PartitionKind,
+    /// Run FedBuff-style buffered-async rounds instead of the paper's
+    /// synchronous barrier (simulated transports only).
+    pub async_rounds: bool,
+    /// Async mode: uploads buffered per server commit. `0` means
+    /// `|S_k| = r` (a full barrier's worth — the synchronous limit).
+    pub buffer_size: usize,
+    /// Async mode: drop uploads staler than this many server versions.
+    pub max_staleness: usize,
+    /// Async mode: staleness → aggregation-weight damping rule.
+    pub staleness_rule: StalenessRule,
 }
 
 impl ExperimentConfig {
-    /// Rounds `K = ceil(T/τ)`.
+    /// Rounds `K = ceil(T/τ)` — server commits in async mode.
     pub fn rounds(&self) -> usize {
         self.t_total.div_ceil(self.tau)
+    }
+
+    /// The resolved async commit threshold: `buffer_size`, with `0`
+    /// meaning the full sampled set `r`.
+    pub fn effective_buffer_size(&self) -> usize {
+        if self.buffer_size == 0 {
+            self.r
+        } else {
+            self.buffer_size
+        }
     }
 
     /// Validate internal consistency; returns self for chaining.
@@ -121,6 +164,18 @@ impl ExperimentConfig {
         if let PartitionKind::Dirichlet { alpha } = self.partition {
             anyhow::ensure!(alpha > 0.0, "dirichlet alpha must be positive");
         }
+        anyhow::ensure!(
+            self.buffer_size <= self.r,
+            "buffer_size={} must be <= r={} (0 = full barrier)",
+            self.buffer_size,
+            self.r
+        );
+        if let StalenessRule::Polynomial { a } = self.staleness_rule {
+            anyhow::ensure!(
+                a.is_finite() && a > 0.0,
+                "polynomial staleness rule needs a finite exponent a > 0, got {a}"
+            );
+        }
         Ok(self)
     }
 
@@ -143,6 +198,10 @@ impl ExperimentConfig {
             eval_every: 1,
             engine: EngineKind::Pjrt,
             partition: PartitionKind::Iid,
+            async_rounds: false,
+            buffer_size: 0,
+            max_staleness: 8,
+            staleness_rule: StalenessRule::Uniform,
         }
     }
 
@@ -165,6 +224,10 @@ impl ExperimentConfig {
             eval_every: 1,
             engine: EngineKind::Pjrt,
             partition: PartitionKind::Iid,
+            async_rounds: false,
+            buffer_size: 0,
+            max_staleness: 8,
+            staleness_rule: StalenessRule::Uniform,
         }
     }
 
@@ -241,6 +304,21 @@ impl ExperimentConfig {
                     PartitionKind::Dirichlet { alpha } => Json::obj(vec![
                         ("type", Json::str("dirichlet")),
                         ("alpha", Json::num(alpha)),
+                    ]),
+                },
+            ),
+            ("async_rounds", Json::Bool(self.async_rounds)),
+            ("buffer_size", Json::num(self.buffer_size as f64)),
+            ("max_staleness", Json::num(self.max_staleness as f64)),
+            (
+                "staleness_rule",
+                match self.staleness_rule {
+                    StalenessRule::Uniform => {
+                        Json::obj(vec![("type", Json::str("uniform"))])
+                    }
+                    StalenessRule::Polynomial { a } => Json::obj(vec![
+                        ("type", Json::str("polynomial")),
+                        ("a", Json::num(a)),
                     ]),
                 },
             ),
@@ -329,6 +407,19 @@ impl ExperimentConfig {
                     other => anyhow::bail!("unknown partition type {other:?}"),
                 },
             },
+            // Async knobs all default to the synchronous protocol, so
+            // pre-async config files parse unchanged.
+            async_rounds: j.get("async_rounds").and_then(Json::as_bool).unwrap_or(false),
+            buffer_size: j.get("buffer_size").and_then(Json::as_usize).unwrap_or(0),
+            max_staleness: j.get("max_staleness").and_then(Json::as_usize).unwrap_or(8),
+            staleness_rule: match j.get("staleness_rule") {
+                None => StalenessRule::Uniform,
+                Some(rule) => match rule.req_str("type")? {
+                    "uniform" => StalenessRule::Uniform,
+                    "polynomial" => StalenessRule::Polynomial { a: rule.req_f64("a")? },
+                    other => anyhow::bail!("unknown staleness rule {other:?}"),
+                },
+            },
         }
         .validated()
     }
@@ -381,6 +472,20 @@ impl ExperimentConfig {
         self.partition = partition;
         self
     }
+
+    /// Enable buffered-async rounds with the given commit threshold
+    /// (`0` = full barrier's worth) and staleness cap.
+    pub fn with_async(mut self, buffer_size: usize, max_staleness: usize) -> Self {
+        self.async_rounds = true;
+        self.buffer_size = buffer_size;
+        self.max_staleness = max_staleness;
+        self
+    }
+
+    pub fn with_staleness_rule(mut self, rule: StalenessRule) -> Self {
+        self.staleness_rule = rule;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -419,6 +524,23 @@ mod tests {
     }
 
     #[test]
+    fn invalid_async_knobs_rejected() {
+        // buffer_size beyond the sampled set is meaningless.
+        let c = ExperimentConfig::fig1_logreg_base().with_async(26, 8).with_r(25);
+        assert!(c.validated().is_err());
+        // Polynomial damping needs a positive finite exponent.
+        for a in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let c = ExperimentConfig::fig1_logreg_base()
+                .with_staleness_rule(StalenessRule::Polynomial { a });
+            assert!(c.validated().is_err(), "a={a} accepted");
+        }
+        // The synchronous sentinel (0 = full barrier) stays valid.
+        let c = ExperimentConfig::fig1_logreg_base().with_async(0, 0);
+        assert_eq!(c.effective_buffer_size(), 25);
+        c.validated().unwrap();
+    }
+
+    #[test]
     fn json_roundtrip() {
         for cfg in [
             ExperimentConfig::fig1_nn_base().with_tau(7).with_r(13),
@@ -430,6 +552,10 @@ mod tests {
                 .with_codec(CodecSpec::TopK { k_permille: 125, coding: Coding::Elias }),
             ExperimentConfig::fig1_logreg_base()
                 .with_codec(CodecSpec::External { id: 41 }),
+            ExperimentConfig::fig1_logreg_base().with_async(4, 16),
+            ExperimentConfig::fig1_logreg_base()
+                .with_async(7, 0)
+                .with_staleness_rule(StalenessRule::Polynomial { a: 0.5 }),
         ] {
             let j = cfg.to_json();
             let back = ExperimentConfig::from_json(&j).unwrap();
@@ -444,12 +570,38 @@ mod tests {
     #[test]
     fn example_config_files_parse() {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs");
-        for f in
-            ["fedpaq_qsgd_logreg.json", "topk_logreg.json", "legacy_quantizer_key.json"]
-        {
+        for f in [
+            "fedpaq_qsgd_logreg.json",
+            "topk_logreg.json",
+            "legacy_quantizer_key.json",
+            "async_fedbuff_logreg.json",
+        ] {
             ExperimentConfig::from_json_file(&dir.join(f))
                 .unwrap_or_else(|e| panic!("{f}: {e}"));
         }
+        let async_cfg =
+            ExperimentConfig::from_json_file(&dir.join("async_fedbuff_logreg.json")).unwrap();
+        assert!(async_cfg.async_rounds);
+        assert_eq!(async_cfg.effective_buffer_size(), 4);
+    }
+
+    #[test]
+    fn pre_async_configs_parse_to_synchronous_defaults() {
+        // A config JSON written before the async fields existed must land
+        // on the synchronous protocol.
+        let mut j = ExperimentConfig::fig1_logreg_base().to_json();
+        if let Json::Obj(map) = &mut j {
+            for key in ["async_rounds", "buffer_size", "max_staleness", "staleness_rule"] {
+                map.remove(key);
+            }
+        } else {
+            panic!("config JSON must be an object");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert!(!back.async_rounds);
+        assert_eq!(back.buffer_size, 0);
+        assert_eq!(back.staleness_rule, StalenessRule::Uniform);
+        assert_eq!(back, ExperimentConfig::fig1_logreg_base());
     }
 
     #[test]

@@ -1,19 +1,81 @@
-//! Server-side aggregation (Algorithm 1 line 13):
-//! `x_{k+1} = x_k + (1/r) Σ_{i∈S_k} Q(x_{k,τ}^{(i)} − x_k)`.
+//! Server-side aggregation (Algorithm 1 line 13), staleness-aware:
+//! `x_{k+1} = x_k + (1/Σw_i) Σ_{i∈B_k} w_i · Q(x_{·,τ}^{(i)} − x_·)`.
+//!
+//! For the synchronous barrier transports every upload in the batch `B_k`
+//! was trained on the current model (`staleness 0`, weight 1), and the
+//! rule above reduces exactly to the paper's uniform mean. Buffered-async
+//! transports ([`AsyncSim`](super::AsyncSim)) commit batches that mix
+//! uploads born at older server versions; a [`StalenessRule`] damps their
+//! contribution.
 
 use crate::quant::{Encoded, UpdateCodec};
 
-/// Streaming aggregator: decodes each upload and accumulates the mean
-/// update in f64 (bit-stable regardless of arrival order is NOT promised —
-/// floating addition — but f64 accumulation keeps the error ≪ f32 eps).
+/// How an upload's aggregation weight decays with its staleness `s`
+/// (the number of server versions committed since the upload's model was
+/// broadcast). Serialized in [`ExperimentConfig`](crate::config::ExperimentConfig)
+/// as `staleness_rule`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum StalenessRule {
+    /// `w(s) = 1`: plain FedBuff mean over the committed buffer.
+    #[default]
+    Uniform,
+    /// `w(s) = (1+s)^{-a}`: polynomial damping; `a = 1` is the classic
+    /// `1/(1+s)` rule, `a = 0.5` the FedBuff paper's square-root variant.
+    Polynomial { a: f64 },
+}
+
+impl StalenessRule {
+    /// `1/(1+s)` damping (`Polynomial` with `a = 1`).
+    pub fn inverse() -> Self {
+        StalenessRule::Polynomial { a: 1.0 }
+    }
+
+    /// Aggregation weight for staleness `s`. Always exactly `1.0` at
+    /// `s = 0`, so fresh uploads aggregate bit-identically to the
+    /// synchronous uniform mean under every rule.
+    pub fn weight(&self, s: usize) -> f64 {
+        match *self {
+            StalenessRule::Uniform => 1.0,
+            StalenessRule::Polynomial { a } => {
+                if s == 0 {
+                    1.0
+                } else {
+                    (1.0 + s as f64).powf(-a)
+                }
+            }
+        }
+    }
+
+    /// Human label (figure curve names, logs).
+    pub fn name(&self) -> String {
+        match *self {
+            StalenessRule::Uniform => "uniform".into(),
+            StalenessRule::Polynomial { a } => format!("poly(a={a})"),
+        }
+    }
+}
+
+/// Streaming weighted aggregator: decodes each upload and accumulates
+/// `Σ w_i · Δ_i` in f64 (bit-stable regardless of arrival order is NOT
+/// promised — floating addition — but f64 accumulation keeps the error
+/// ≪ f32 eps; transports that reorder uploads canonicalize the batch
+/// order themselves).
 ///
 /// Designed to live for a whole run: [`Aggregator::reset`] rewinds it for
 /// the next round while keeping the `sum` and decode-scratch allocations,
 /// so the per-upload hot path ([`Aggregator::push`]) allocates nothing.
+///
+/// Every public entry point ([`push`](Aggregator::push),
+/// [`push_weighted`](Aggregator::push_weighted),
+/// [`push_decoded`](Aggregator::push_decoded)) funnels through one
+/// internal accumulation path, so `count`, `weight_sum` and the
+/// per-upload `upload_bits` record can never drift apart from what
+/// [`apply`](Aggregator::apply) divides by.
 #[derive(Debug)]
 pub struct Aggregator {
     sum: Vec<f64>,
     count: usize,
+    weight_sum: f64,
     bits: Vec<u64>,
     /// Reused decode buffer: one allocation per run, not per upload.
     scratch: Vec<f32>,
@@ -21,19 +83,76 @@ pub struct Aggregator {
 
 impl Aggregator {
     pub fn new(p: usize) -> Self {
-        Aggregator { sum: vec![0.0; p], count: 0, bits: Vec::new(), scratch: Vec::new() }
+        Aggregator {
+            sum: vec![0.0; p],
+            count: 0,
+            weight_sum: 0.0,
+            bits: Vec::new(),
+            scratch: Vec::new(),
+        }
     }
 
     /// Rewind for the next round, keeping all allocations.
     pub fn reset(&mut self) {
         self.sum.iter_mut().for_each(|s| *s = 0.0);
         self.count = 0;
+        self.weight_sum = 0.0;
         self.bits.clear();
     }
 
-    /// Decode and absorb one node's upload (allocation-free: decodes into
-    /// the internal scratch buffer via [`UpdateCodec::decode_into`]).
+    /// The single accumulation path: absorb `dec` with weight `weight`,
+    /// recording `bits` uplink bits. Everything that mutates the running
+    /// mean goes through here — the debug assertion pins the invariant
+    /// that one upload contributes exactly one entry to every ledger.
+    fn absorb(&mut self, dec: &[f32], bits: u64, weight: f64) -> crate::Result<()> {
+        anyhow::ensure!(
+            dec.len() == self.sum.len(),
+            "upload dimension mismatch: {} != {}",
+            dec.len(),
+            self.sum.len()
+        );
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "aggregation weight must be finite and positive, got {weight}"
+        );
+        if weight == 1.0 {
+            // Keep the uniform path bit-identical to the historical
+            // unweighted mean (multiplying by 1.0 is exact, but skipping
+            // the multiply entirely makes the intent auditable).
+            for (s, &v) in self.sum.iter_mut().zip(dec) {
+                *s += v as f64;
+            }
+        } else {
+            for (s, &v) in self.sum.iter_mut().zip(dec) {
+                *s += v as f64 * weight;
+            }
+        }
+        self.bits.push(bits);
+        self.count += 1;
+        self.weight_sum += weight;
+        debug_assert_eq!(
+            self.bits.len(),
+            self.count,
+            "aggregator ledgers out of sync"
+        );
+        Ok(())
+    }
+
+    /// Decode and absorb one node's upload at weight 1 (allocation-free:
+    /// decodes into the internal scratch buffer via
+    /// [`UpdateCodec::decode_into`]).
     pub fn push(&mut self, codec: &dyn UpdateCodec, enc: &Encoded) -> crate::Result<()> {
+        self.push_weighted(codec, enc, 1.0)
+    }
+
+    /// Decode and absorb one upload at an explicit staleness weight
+    /// (see [`StalenessRule::weight`]).
+    pub fn push_weighted(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        enc: &Encoded,
+        weight: f64,
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             enc.p == self.sum.len(),
             "upload dimension mismatch: {} != {}",
@@ -41,31 +160,33 @@ impl Aggregator {
             self.sum.len()
         );
         codec.decode_into(enc, &mut self.scratch)?;
-        for (s, &v) in self.sum.iter_mut().zip(&self.scratch) {
-            *s += v as f64;
-        }
-        self.bits.push(enc.bits());
-        self.count += 1;
-        Ok(())
+        // Move scratch out to appease the borrow checker without copying.
+        let scratch = std::mem::take(&mut self.scratch);
+        let r = self.absorb(&scratch, enc.bits(), weight);
+        self.scratch = scratch;
+        r
     }
 
-    /// Absorb an already-decoded update, skipping the wire decode — for
-    /// embedders and custom transports whose uploads arrive dequantized
-    /// (the arithmetic result is identical by construction when the
-    /// decoded values come from the same codec). The built-in round
-    /// pipeline always carries [`Encoded`] buffers and uses
-    /// [`Aggregator::push`].
+    /// Absorb an already-decoded update at weight 1, skipping the wire
+    /// decode — for embedders and custom transports whose uploads arrive
+    /// dequantized (the arithmetic result is identical by construction
+    /// when the decoded values come from the same codec). Funnels through
+    /// the same internal path as [`Aggregator::push`], so mixing the two
+    /// on one batch keeps `count`/`weight_sum`/`upload_bits` consistent
+    /// with what [`Aggregator::apply`] divides by.
     pub fn push_decoded(&mut self, dec: &[f32], bits: u64) {
-        assert_eq!(dec.len(), self.sum.len());
-        for (s, &v) in self.sum.iter_mut().zip(dec) {
-            *s += v as f64;
-        }
-        self.bits.push(bits);
-        self.count += 1;
+        self.absorb(dec, bits, 1.0)
+            .expect("push_decoded: dimension mismatch");
     }
 
     pub fn count(&self) -> usize {
         self.count
+    }
+
+    /// Sum of the absorbed weights (the normalizer [`Aggregator::apply`]
+    /// divides by). Equals `count` when every push was weight-1.
+    pub fn weight_sum(&self) -> f64 {
+        self.weight_sum
     }
 
     /// Per-upload bit sizes (for the §5 communication-time model).
@@ -73,12 +194,13 @@ impl Aggregator {
         &self.bits
     }
 
-    /// Apply the averaged update to `params`. Errors (instead of
+    /// Apply the weighted-mean update to `params`. Errors (instead of
     /// panicking) when no uploads arrived, so a round where every sampled
     /// node failed cannot abort a long run — the engine skips it instead.
     pub fn apply(&mut self, params: &mut [f32]) -> crate::Result<()> {
         anyhow::ensure!(self.count > 0, "no uploads to aggregate");
-        let inv = 1.0 / self.count as f64;
+        debug_assert_eq!(self.bits.len(), self.count, "aggregator ledgers out of sync");
+        let inv = 1.0 / self.weight_sum;
         for (p, &s) in params.iter_mut().zip(&self.sum) {
             *p = (*p as f64 + s * inv) as f32;
         }
@@ -105,6 +227,38 @@ mod tests {
     }
 
     #[test]
+    fn weighted_aggregation_is_weighted_mean() {
+        let q = IdentityCodec;
+        let mut agg = Aggregator::new(1);
+        let mut rng = Rng::seed_from_u64(0);
+        // weight 1 on 4.0, weight 0.5 on 1.0: (4 + 0.5) / 1.5 = 3.0
+        agg.push_weighted(&q, &q.encode(&[4.0], &mut rng), 1.0).unwrap();
+        agg.push_weighted(&q, &q.encode(&[1.0], &mut rng), 0.5).unwrap();
+        assert_eq!(agg.weight_sum(), 1.5);
+        let mut params = vec![0.0f32];
+        agg.apply(&mut params).unwrap();
+        assert!((params[0] - 3.0).abs() < 1e-6, "{}", params[0]);
+    }
+
+    #[test]
+    fn unit_weights_match_legacy_uniform_mean_bitwise() {
+        let q = QsgdCodec::new(2);
+        let xs = [vec![0.5f32, -1.5, 2.0, 0.0], vec![1.0f32, 0.25, -0.125, 3.0]];
+        let mut a = Aggregator::new(4);
+        let mut b = Aggregator::new(4);
+        for (i, x) in xs.iter().enumerate() {
+            let enc = q.encode(x, &mut Rng::seed_from_u64(i as u64));
+            a.push(&q, &enc).unwrap();
+            b.push_weighted(&q, &enc, 1.0).unwrap();
+        }
+        let mut pa = vec![7.0f32; 4];
+        let mut pb = vec![7.0f32; 4];
+        a.apply(&mut pa).unwrap();
+        b.apply(&mut pb).unwrap();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
     fn push_decoded_matches_push() {
         let q = QsgdCodec::new(2);
         let x = vec![0.5f32, -1.5, 2.0, 0.0];
@@ -124,6 +278,37 @@ mod tests {
     }
 
     #[test]
+    fn mixed_push_and_push_decoded_stay_consistent() {
+        // The regression the single-path refactor pins down: mixing entry
+        // points must keep count/weight_sum/bits in lockstep, so apply
+        // divides by exactly the number of absorbed uploads.
+        let q = IdentityCodec;
+        let mut rng = Rng::seed_from_u64(3);
+        let mut agg = Aggregator::new(2);
+        agg.push(&q, &q.encode(&[2.0, 4.0], &mut rng)).unwrap();
+        agg.push_decoded(&[4.0, 8.0], 64);
+        assert_eq!(agg.count(), 2);
+        assert_eq!(agg.weight_sum(), 2.0);
+        assert_eq!(agg.upload_bits().len(), 2);
+        let mut params = vec![0.0f32, 0.0];
+        agg.apply(&mut params).unwrap();
+        assert_eq!(params, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn non_positive_or_non_finite_weights_rejected() {
+        let q = IdentityCodec;
+        let mut rng = Rng::seed_from_u64(0);
+        let mut agg = Aggregator::new(1);
+        let enc = q.encode(&[1.0], &mut rng);
+        assert!(agg.push_weighted(&q, &enc, 0.0).is_err());
+        assert!(agg.push_weighted(&q, &enc, -1.0).is_err());
+        assert!(agg.push_weighted(&q, &enc, f64::NAN).is_err());
+        assert_eq!(agg.count(), 0);
+        assert!(agg.upload_bits().is_empty());
+    }
+
+    #[test]
     fn empty_apply_is_an_error_not_a_panic() {
         let mut agg = Aggregator::new(2);
         assert!(agg.apply(&mut [0.0, 0.0]).is_err());
@@ -140,6 +325,7 @@ mod tests {
         agg.apply(&mut first).unwrap();
         agg.reset();
         assert_eq!(agg.count(), 0);
+        assert_eq!(agg.weight_sum(), 0.0);
         assert!(agg.upload_bits().is_empty());
         let mut again = vec![0f32; 64];
         let mut rng2 = Rng::seed_from_u64(1);
@@ -154,5 +340,25 @@ mod tests {
         let mut agg = Aggregator::new(8);
         assert!(agg.push(&QsgdCodec::new(3), &enc).is_err());
         assert_eq!(agg.count(), 0);
+    }
+
+    #[test]
+    fn staleness_rules_weight_as_documented() {
+        assert_eq!(StalenessRule::Uniform.weight(0), 1.0);
+        assert_eq!(StalenessRule::Uniform.weight(100), 1.0);
+        let inv = StalenessRule::inverse();
+        assert_eq!(inv.weight(0), 1.0);
+        assert!((inv.weight(1) - 0.5).abs() < 1e-12);
+        assert!((inv.weight(3) - 0.25).abs() < 1e-12);
+        let sqrt = StalenessRule::Polynomial { a: 0.5 };
+        assert_eq!(sqrt.weight(0), 1.0);
+        assert!((sqrt.weight(3) - 0.5).abs() < 1e-12);
+        // Monotone non-increasing in s for every rule.
+        for rule in [StalenessRule::Uniform, inv, sqrt] {
+            for s in 0..20 {
+                assert!(rule.weight(s + 1) <= rule.weight(s));
+                assert!(rule.weight(s) > 0.0);
+            }
+        }
     }
 }

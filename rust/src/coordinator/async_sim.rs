@@ -1,0 +1,440 @@
+//! [`AsyncSim`]: the buffered-async (FedBuff-style) simulated transport.
+//!
+//! The synchronous [`InProcess`](super::InProcess) barrier charges every
+//! round the *slowest* sampled node's compute time — one straggler stalls
+//! all of `S_k`, exactly the systems bottleneck FedPAQ's partial
+//! participation is meant to relieve. `AsyncSim` removes the barrier:
+//!
+//! * Every dispatched node finishes its τ local steps at its own
+//!   [`CostModel::node_compute_time`] draw; uploads land in a server-side
+//!   buffer ordered by **virtual completion time** (a discrete-event
+//!   simulation over the §5 cost model).
+//! * The server **commits** — averages the buffer into the model and bumps
+//!   its version `k` — as soon as [`buffer_size`](ExperimentConfig::buffer_size)
+//!   uploads arrive. Stragglers keep running across commits; their uploads
+//!   surface in later commit batches carrying `staleness = k − k_origin`.
+//! * Uploads staler than [`max_staleness`](ExperimentConfig::max_staleness)
+//!   are dropped at arrival (the node is immediately re-dispatched on the
+//!   current model, keeping `r` jobs in flight), and committed batches are
+//!   averaged under the config's
+//!   [`StalenessRule`](super::aggregate::StalenessRule) by the engine.
+//!
+//! ## Scheduling model
+//!
+//! Version 0 dispatches the full sampled set `S_0` (`r` jobs). Each commit
+//! consumes exactly `buffer_size` uploads and refills the same number of
+//! jobs — the first `buffer_size` entries of `S_{k+1}` (a partial
+//! Fisher–Yates prefix, itself a uniform sample) — so exactly `r` jobs are
+//! in flight at every instant, matching FedBuff's concurrency parameter
+//! `M_c = r`. A virtual node sampled into overlapping waves holds several
+//! outstanding jobs; each job's batch/quantizer RNG streams are keyed by
+//! `(seed, node, version)`, the same coordinates the synchronous path
+//! uses for round `k`.
+//!
+//! ## Time accounting
+//!
+//! Per commit the transport reports `compute_time` = (arrival of the
+//! buffer-filling upload) − (previous commit, post-uplink) and
+//! `comm_time` = Σ committed bits / BW (the batch serializes through the
+//! base station exactly as in §5). Dropped-stale uploads are charged no
+//! uplink time — the simulation models them as discarded, a deliberate
+//! simplification documented here so the tradeoff curves read correctly.
+//!
+//! ## Exact synchronous degeneration
+//!
+//! With `buffer_size == |S_k|` and `max_staleness == 0`, every commit
+//! waits for exactly the wave it dispatched, the trigger arrival is the
+//! wave's straggler (`max` over `S_k`), the batch sorts back into
+//! sampling order, and every weight is 1 — the run is **bit-identical**
+//! to [`InProcess`](super::InProcess) (asserted by
+//! `rust/tests/async_rounds.rs`).
+
+use super::local::GatherBufs;
+use super::transport::{CommitTiming, RoundCtx, RoundOutcome, Transport, Upload, World};
+use crate::config::ExperimentConfig;
+use crate::data::{FederatedDataset, Partition};
+use crate::model::Engine;
+use crate::quant::{Encoded, UpdateCodec};
+use crate::simtime::CostModel;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One in-flight node job: dispatched at server version `origin_round`,
+/// finishing at virtual time `finish` with upload `enc` already computed
+/// (the *result* depends only on the dispatch model/seeds; only its
+/// arrival time is simulated).
+#[derive(Debug)]
+struct Job {
+    node: usize,
+    origin_round: usize,
+    /// Position within its dispatch wave — the canonical aggregation
+    /// order inside a commit batch (sampling order, so the synchronous
+    /// degeneration aggregates bit-identically to `InProcess`).
+    slot: usize,
+    finish: f64,
+    enc: Encoded,
+}
+
+/// The buffered-async simulated transport. See the module docs.
+#[derive(Debug, Default)]
+pub struct AsyncSim {
+    preset: Option<(Arc<FederatedDataset>, Partition)>,
+    world: Option<World>,
+    bufs: GatherBufs,
+    cost: Option<CostModel>,
+    /// Virtual clock: time of the last commit, uplink included.
+    now: f64,
+    /// Server version = commits so far; mirrors the engine's round index.
+    version: usize,
+    in_flight: Vec<Job>,
+    /// Resolved commit threshold (`cfg.effective_buffer_size()`).
+    buffer_size: usize,
+    max_staleness: usize,
+    /// Stale uploads dropped so far (visible in logs at shutdown).
+    dropped: u64,
+    /// Stream counter for re-dispatch node draws after a drop.
+    redispatches: u64,
+}
+
+impl AsyncSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed with an already-built world (same contract as
+    /// [`InProcess::with_world`](super::InProcess::with_world)).
+    pub fn with_world(data: Arc<FederatedDataset>, partition: Partition) -> Self {
+        AsyncSim { preset: Some((data, partition)), ..Self::default() }
+    }
+
+    /// Total stale uploads dropped so far in this run.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn dispatch(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        engine: &mut dyn Engine,
+        node: usize,
+        slot: usize,
+        at: f64,
+        ctx: &RoundCtx<'_>,
+    ) -> crate::Result<()> {
+        let w = self.world.as_ref().expect("dispatch before setup");
+        let cost = self.cost.as_ref().expect("dispatch before setup");
+        let enc = w.node_round(
+            codec,
+            engine,
+            node,
+            ctx.round,
+            ctx.params,
+            ctx.lrs,
+            &mut self.bufs,
+        )?;
+        let finish =
+            at + cost.node_compute_time(node, ctx.round, w.cfg.tau, engine.batch());
+        self.in_flight.push(Job {
+            node,
+            origin_round: ctx.round,
+            slot,
+            finish,
+            enc,
+        });
+        Ok(())
+    }
+
+    /// Pop the next upload to arrive: minimum `(finish, origin, slot,
+    /// node)` — total order, so event processing is deterministic even
+    /// under exact time ties.
+    fn pop_next(&mut self) -> Option<Job> {
+        let idx = self
+            .in_flight
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.finish
+                    .total_cmp(&b.finish)
+                    .then(a.origin_round.cmp(&b.origin_round))
+                    .then(a.slot.cmp(&b.slot))
+                    .then(a.node.cmp(&b.node))
+            })
+            .map(|(i, _)| i)?;
+        Some(self.in_flight.swap_remove(idx))
+    }
+}
+
+impl Transport for AsyncSim {
+    fn name(&self) -> &'static str {
+        "async-sim"
+    }
+
+    fn virtual_time(&self) -> bool {
+        true
+    }
+
+    fn buffered_async(&self) -> bool {
+        true
+    }
+
+    fn setup(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<()> {
+        self.world = Some(World::build(self.preset.take(), cfg, engine)?);
+        // Same cost model the engine builds for barrier transports: equal
+        // seeds draw identical per-(node, version) straggler times.
+        let p = engine.kind().param_count();
+        self.cost = Some(CostModel::with_ratio(cfg.ratio, p, cfg.seed));
+        self.buffer_size = cfg.effective_buffer_size();
+        anyhow::ensure!(
+            (1..=cfg.r).contains(&self.buffer_size),
+            "buffer_size {} must be in 1..=r={}",
+            self.buffer_size,
+            cfg.r
+        );
+        self.max_staleness = cfg.max_staleness;
+        self.now = 0.0;
+        self.version = 0;
+        self.in_flight.clear();
+        self.dropped = 0;
+        self.redispatches = 0;
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        ctx: &RoundCtx<'_>,
+        codec: &dyn UpdateCodec,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<RoundOutcome> {
+        anyhow::ensure!(self.world.is_some(), "AsyncSim::round before setup");
+        anyhow::ensure!(
+            ctx.round == self.version,
+            "AsyncSim expects sequential rounds: got {} at version {}",
+            ctx.round,
+            self.version
+        );
+        // Refill wave at the current model: the whole sampled set at
+        // version 0, then `buffer_size` jobs per commit (exactly what the
+        // previous commit consumed), keeping r jobs in flight.
+        let wave = if ctx.round == 0 {
+            ctx.nodes.len()
+        } else {
+            self.buffer_size
+        };
+        anyhow::ensure!(wave <= ctx.nodes.len(), "sampled set smaller than wave");
+        let now = self.now;
+        for (slot, &node) in ctx.nodes[..wave].iter().enumerate() {
+            self.dispatch(codec, engine, node, slot, now, ctx)?;
+        }
+        let n_nodes = self.world.as_ref().unwrap().cfg.n_nodes;
+        let seed = self.world.as_ref().unwrap().cfg.seed;
+
+        // Discrete-event loop: absorb arrivals until the buffer fills.
+        let mut buffer: Vec<Job> = Vec::with_capacity(self.buffer_size);
+        let commit_arrival;
+        loop {
+            let job = self
+                .pop_next()
+                .ok_or_else(|| anyhow::anyhow!("async sim starved: no jobs in flight"))?;
+            let staleness = ctx.round - job.origin_round;
+            if staleness > self.max_staleness {
+                // Too stale: discard, re-dispatch the freed capacity on
+                // the current model at the arrival instant. The node draw
+                // comes from a dedicated deterministic stream; nodes that
+                // already hold a job at this version are skipped (a
+                // duplicate `(node, version)` job would replay identical
+                // RNG streams and double-count that node's update). A
+                // free node always exists: at most `r − 1` jobs are live
+                // at this point and `r ≤ n`.
+                self.dropped += 1;
+                let mut rng = Rng::from_coords(seed, &[5, self.redispatches]);
+                self.redispatches += 1;
+                let start = rng.gen_range(0, n_nodes);
+                let node = (0..n_nodes)
+                    .map(|i| (start + i) % n_nodes)
+                    .find(|&cand| {
+                        !self
+                            .in_flight
+                            .iter()
+                            .chain(buffer.iter())
+                            .any(|j| j.node == cand && j.origin_round == ctx.round)
+                    })
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no free node to re-dispatch after stale drop")
+                    })?;
+                // Slots after the wave keep replacement uploads ordered
+                // deterministically behind the wave's in any later batch.
+                let slot = ctx.nodes.len() + self.redispatches as usize;
+                let at = job.finish;
+                self.dispatch(codec, engine, node, slot, at, ctx)?;
+                continue;
+            }
+            let finish = job.finish;
+            buffer.push(job);
+            if buffer.len() == self.buffer_size {
+                commit_arrival = finish;
+                break;
+            }
+        }
+
+        // Commit: canonical aggregation order is (origin version, slot) —
+        // for a full-barrier buffer this is exactly S_k in sampling order.
+        buffer.sort_by(|a, b| {
+            a.origin_round.cmp(&b.origin_round).then(a.slot.cmp(&b.slot))
+        });
+        let cost = self.cost.as_ref().unwrap();
+        let comm_time = cost
+            .round_comm_time(&buffer.iter().map(|j| j.enc.bits()).collect::<Vec<_>>());
+        // Arrivals can predate the previous commit's uplink completing
+        // (they were in flight during it): the clock stays monotone.
+        let commit_start = commit_arrival.max(self.now);
+        let compute_time = commit_start - self.now;
+        self.now = commit_start + comm_time;
+        self.version += 1;
+        let uploads = buffer
+            .into_iter()
+            .map(|j| Upload {
+                node: j.node,
+                origin_round: j.origin_round,
+                staleness: ctx.round - j.origin_round,
+                enc: j.enc,
+            })
+            .collect();
+        Ok(RoundOutcome {
+            uploads,
+            timing: Some(CommitTiming { compute_time, comm_time }),
+        })
+    }
+
+    fn shutdown(&mut self) -> crate::Result<()> {
+        if self.dropped > 0 {
+            eprintln!(
+                "[async-sim] run complete: {} stale upload(s) dropped (max_staleness={})",
+                self.dropped, self.max_staleness
+            );
+        }
+        self.in_flight.clear();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelKind, RustEngine};
+    use crate::opt::LrSchedule;
+    use crate::quant::CodecSpec;
+
+    fn async_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "async-test".into(),
+            model: "logreg".into(),
+            dataset: crate::data::DatasetKind::Mnist08,
+            n_nodes: 8,
+            per_node: 40,
+            r: 4,
+            tau: 2,
+            t_total: 8,
+            codec: CodecSpec::qsgd(2),
+            lr: LrSchedule::Const { eta: 0.3 },
+            ratio: 100.0,
+            seed: 11,
+            eval_every: 1,
+            engine: crate::config::EngineKind::Rust,
+            partition: crate::data::PartitionKind::Iid,
+            async_rounds: true,
+            buffer_size: 2,
+            max_staleness: 4,
+            staleness_rule: Default::default(),
+        }
+    }
+
+    fn engine() -> RustEngine {
+        RustEngine::new(ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 320).unwrap()
+    }
+
+    #[test]
+    fn commits_fill_the_buffer_and_report_monotone_time() {
+        let cfg = async_cfg();
+        let codec = cfg.codec.build().unwrap();
+        let mut eng = engine();
+        let params = eng.init_params().unwrap();
+        let mut t = AsyncSim::new();
+        t.setup(&cfg, &mut eng).unwrap();
+        let mut clock = 0.0;
+        for k in 0..4 {
+            let nodes = crate::coordinator::sampler::sample_nodes(
+                cfg.n_nodes, cfg.r, cfg.seed, k,
+            );
+            let lrs = vec![0.3f32; cfg.tau];
+            let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
+            let out = t.round(&ctx, codec.as_ref(), &mut eng).unwrap();
+            assert_eq!(out.uploads.len(), 2, "commit k={k}");
+            let timing = out.timing.expect("async sim owns its timing");
+            assert!(timing.compute_time >= 0.0 && timing.comm_time > 0.0);
+            clock += timing.compute_time + timing.comm_time;
+            for u in &out.uploads {
+                assert!(u.staleness <= cfg.max_staleness);
+                assert_eq!(u.staleness, k - u.origin_round);
+            }
+        }
+        assert!(clock > 0.0);
+        // Steady state: r jobs in flight after every commit+refill cycle
+        // (wave 0 dispatched r, each commit consumed and refilled b).
+        assert_eq!(t.in_flight.len(), cfg.r - cfg.buffer_size);
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn non_sequential_round_is_rejected() {
+        let cfg = async_cfg();
+        let codec = cfg.codec.build().unwrap();
+        let mut eng = engine();
+        let params = eng.init_params().unwrap();
+        let mut t = AsyncSim::new();
+        t.setup(&cfg, &mut eng).unwrap();
+        let nodes = vec![0, 1, 2, 3];
+        let lrs = vec![0.3f32; cfg.tau];
+        let ctx = RoundCtx { round: 3, nodes: &nodes, params: &params, lrs: &lrs };
+        assert!(t.round(&ctx, codec.as_ref(), &mut eng).is_err());
+    }
+
+    #[test]
+    fn zero_staleness_cap_drops_and_redispatches() {
+        // b < r with max_staleness = 0: the leftover wave-0 stragglers
+        // must be dropped at their (stale) arrival and replaced, and the
+        // run must keep committing.
+        let cfg = ExperimentConfig { max_staleness: 0, ..async_cfg() };
+        let codec = cfg.codec.build().unwrap();
+        let mut eng = engine();
+        let params = eng.init_params().unwrap();
+        let mut t = AsyncSim::new();
+        t.setup(&cfg, &mut eng).unwrap();
+        let lrs = vec![0.3f32; cfg.tau];
+        let mut committed = std::collections::HashSet::new();
+        for k in 0..4 {
+            let nodes = crate::coordinator::sampler::sample_nodes(
+                cfg.n_nodes, cfg.r, cfg.seed, k,
+            );
+            let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
+            let out = t.round(&ctx, codec.as_ref(), &mut eng).unwrap();
+            assert_eq!(out.uploads.len(), cfg.buffer_size);
+            assert!(out.uploads.iter().all(|u| u.staleness == 0));
+            for u in &out.uploads {
+                // No (node, version) pair may ever be aggregated twice —
+                // re-dispatch must skip nodes already holding a job at
+                // the current version.
+                assert!(
+                    committed.insert((u.node, u.origin_round)),
+                    "duplicate upload for node {} at version {}",
+                    u.node,
+                    u.origin_round
+                );
+            }
+        }
+        assert!(t.dropped() > 0, "wave-0 stragglers should have been dropped");
+    }
+}

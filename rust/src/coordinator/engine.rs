@@ -1,17 +1,31 @@
-//! The [`RoundEngine`]: one implementation of the per-round FedPAQ
-//! protocol (Algorithm 1), generic over [`Transport`] and
-//! [`UpdateCodec`].
+//! The [`RoundEngine`]: one implementation of the per-commit FedPAQ
+//! protocol, generic over [`Transport`] and [`UpdateCodec`].
 //!
-//! Each round: sample `S_k` → `transport.round()` runs the nodes' local
-//! work → decode + aggregate uploads in node order → apply the averaged
-//! update → advance the clock (virtual §5 time for simulated transports,
-//! wall-clock for real ones) → evaluate on the [`EvalSlab`] schedule.
+//! Each engine iteration is one **server commit**: sample `S_k` →
+//! `transport.round()` returns a
+//! [`RoundOutcome`](super::transport::RoundOutcome) (the committed
+//! uploads, stamped with their origin version) → decode + aggregate under
+//! the config's [`StalenessRule`](super::aggregate::StalenessRule)
+//! weights → apply the weighted-mean update → advance the clock →
+//! evaluate on the [`EvalSlab`] schedule.
 //!
-//! A round that yields zero uploads is *not* fatal: it is logged,
-//! charged zero time, and the model carries over unchanged. The
-//! built-in transports never produce one — they error out on node
-//! failure instead — so this skip path is the seam for transports that
-//! *drop* failed nodes (the async rounds on the ROADMAP).
+//! The engine no longer assumes one commit = one full barrier:
+//!
+//! * **Barrier transports** ([`InProcess`](super::InProcess),
+//!   [`crate::net::Tcp`]) return the whole sampled round at staleness 0
+//!   with no self-reported timing; the engine charges the §5 barrier
+//!   model (straggler max + serialized uplink) or wall-clock, exactly as
+//!   the synchronous protocol prescribes.
+//! * **Buffered-async transports** ([`super::AsyncSim`]) return each
+//!   commit's buffer with per-upload staleness and their own
+//!   [`CommitTiming`](super::transport::CommitTiming); the engine charges
+//!   the transport's event clock instead of a barrier.
+//!
+//! A commit that yields zero uploads is *not* fatal: it is logged,
+//! charged zero time, and the model carries over unchanged. The built-in
+//! transports never produce one — they error out (barrier) or block until
+//! the buffer fills (async) — so this skip path is the seam for custom
+//! transports that drop failed nodes outright.
 
 use super::aggregate::Aggregator;
 use super::local::OwnedLabels;
@@ -188,14 +202,23 @@ impl RoundEngine {
             let nodes = sampler::sample_nodes(cfg.n_nodes, cfg.r, cfg.seed, k);
             let lrs: Vec<f32> = (0..cfg.tau).map(|t| cfg.lr.lr(k, t)).collect();
             let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
-            let uploads = self.transport.round(&ctx, self.codec.as_ref(), engine)?;
+            let outcome = self.transport.round(&ctx, self.codec.as_ref(), engine)?;
             agg.reset();
-            for enc in &uploads {
-                agg.push(self.codec.as_ref(), enc)?;
+            for u in &outcome.uploads {
+                let w = cfg.staleness_rule.weight(u.staleness);
+                agg.push_weighted(self.codec.as_ref(), &u.enc, w)?;
             }
             let bits: u64 = agg.upload_bits().iter().sum();
-            let (compute_time, comm_time) = match &mut timing {
-                Timing::Virtual { cost, clock } => {
+            let (compute_time, comm_time) = match (&mut timing, outcome.timing) {
+                // The transport ran its own (virtual) event clock for
+                // this commit — charge its figures verbatim.
+                (Timing::Virtual { clock, .. }, Some(t)) => {
+                    clock.advance(t.compute_time + t.comm_time);
+                    (t.compute_time, t.comm_time)
+                }
+                // Barrier commit under the §5 model: the round waits for
+                // the slowest sampled node, then uploads serialize.
+                (Timing::Virtual { cost, clock }, None) => {
                     let (ct, mt) = if agg.count() > 0 {
                         (
                             cost.round_compute_time(&nodes, k, cfg.tau, engine.batch()),
@@ -207,7 +230,7 @@ impl RoundEngine {
                     clock.advance(ct + mt);
                     (ct, mt)
                 }
-                Timing::Wall { .. } => {
+                (Timing::Wall { .. }, _) => {
                     let ct = if agg.count() > 0 {
                         round_t0.elapsed().as_secs_f64()
                     } else {

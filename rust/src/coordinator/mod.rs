@@ -1,40 +1,58 @@
 //! Layer-3 coordinator: the FedPAQ training protocol (paper Algorithm 1)
 //! as a *composition of pluggable parts*.
 //!
-//! One round of the protocol is
+//! One server **commit** of the protocol is
 //!
 //! 1. sample `r` of `n` nodes uniformly without replacement ([`sampler`]);
-//! 2. broadcast the current model `x_k` to the sampled nodes;
+//! 2. broadcast the current model `x_k` to the dispatched nodes;
 //! 3. each node runs `τ` local SGD steps on its own shard ([`local`]);
 //! 4. each node uploads `Q(x_{k,τ}^{(i)} − x_k)` compressed by an
 //!    [`UpdateCodec`](crate::quant::UpdateCodec);
-//! 5. server sets `x_{k+1} = x_k + (1/r) Σ Q(Δ_i)` ([`aggregate`]);
+//! 5. server sets `x_{k+1} = x_k + (1/Σw) Σ w_s · Q(Δ_i)` ([`aggregate`],
+//!    with `w_s` a per-upload staleness weight — identically 1 on the
+//!    synchronous path, matching the paper exactly);
 //! 6. the clock advances — §5 virtual time ([`crate::simtime`]) for
 //!    simulated transports, wall-clock for networked ones.
 //!
 //! The pieces compose through two seams:
 //!
-//! * **[`transport::Transport`]** — *where* steps 2–4 execute:
-//!   [`transport::InProcess`] runs every virtual node on the leader's own
-//!   engine (the simulation path), [`crate::net::Tcp`] fans the same work
-//!   out to worker processes over sockets. Same codecs, same RNG streams:
-//!   equal seeds give bit-identical models either way.
+//! * **[`transport::Transport`]** — *where and when* steps 2–4 execute.
+//!   The transports split along the sync/async axis:
+//!
+//!   | transport | protocol | time axis |
+//!   |---|---|---|
+//!   | [`transport::InProcess`] | synchronous barrier (Algorithm 1) | §5 virtual |
+//!   | [`crate::net::Tcp`] | synchronous barrier, worker processes | wall-clock |
+//!   | [`async_sim::AsyncSim`] | buffered async (FedBuff-style) | §5 virtual, event-driven |
+//!
+//!   The barrier transports wait for every sampled node, so a commit *is*
+//!   a round of Algorithm 1; equal seeds give bit-identical models
+//!   in-process or over sockets. `AsyncSim` commits as soon as
+//!   `buffer_size` uploads arrive (stragglers surface later, damped by a
+//!   [`aggregate::StalenessRule`]) and degenerates bit-exactly to the
+//!   synchronous run at `buffer_size == r`, `max_staleness == 0`.
 //! * **[`crate::quant::UpdateCodec`]** — *how* step 4 compresses uploads.
 //!
-//! [`engine::RoundEngine`] drives the loop; [`server::ServerBuilder`]
-//! assembles `config × engine × codec × transport` and
-//! [`server::Server`] keeps the historical one-call entry point.
+//! [`engine::RoundEngine`] drives the per-commit loop;
+//! [`server::ServerBuilder`] assembles `config × engine × codec ×
+//! transport` (picking `AsyncSim` automatically when
+//! `cfg.async_rounds` is set) and [`server::Server`] keeps the
+//! historical one-call entry point.
 //!
 //! Baselines fall out of the same pipeline: **FedAvg** = identity codec,
-//! **QSGD** = `τ = 1`, vanilla parallel SGD = both.
+//! **QSGD** = `τ = 1`, vanilla parallel SGD = both, **FedBuff** =
+//! `async_rounds` + identity codec.
 
 pub mod aggregate;
+pub mod async_sim;
 pub mod engine;
 pub mod local;
 pub mod sampler;
 pub mod server;
 pub mod transport;
 
+pub use aggregate::{Aggregator, StalenessRule};
+pub use async_sim::AsyncSim;
 pub use engine::{EvalSlab, RoundEngine, RoundStats, RunResult};
 pub use server::{Server, ServerBuilder};
-pub use transport::{InProcess, RoundCtx, Transport};
+pub use transport::{CommitTiming, InProcess, RoundCtx, RoundOutcome, Transport, Upload};

@@ -16,6 +16,7 @@
 //! let result = server.run()?;
 //! ```
 
+use super::async_sim::AsyncSim;
 use super::engine::{EvalSlab, RoundEngine, RunResult};
 use super::transport::{InProcess, Transport};
 use crate::config::ExperimentConfig;
@@ -63,13 +64,14 @@ impl<'e> ServerBuilder<'e> {
         self
     }
 
-    /// Override the transport (default: [`InProcess`]).
+    /// Override the transport (default: [`InProcess`], or
+    /// [`AsyncSim`] when `cfg.async_rounds` is set).
     ///
     /// The default transport shares the federated world `build()`
     /// constructs for the eval slab. An explicitly passed
     /// [`InProcess::new()`] rebuilds its own in `setup` (the dataset
     /// itself comes from the process-global cache either way); pass
-    /// [`InProcess::with_world`] to share one.
+    /// [`InProcess::with_world`] / [`AsyncSim::with_world`] to share one.
     pub fn transport(mut self, transport: impl Transport + 'static) -> Self {
         self.transport = Some(Box::new(transport));
         self
@@ -98,8 +100,20 @@ impl<'e> ServerBuilder<'e> {
         let slab = EvalSlab::from_world(&cfg, engine, &data, &partition)?;
         let transport = match self.transport {
             Some(t) => t,
+            None if cfg.async_rounds => {
+                Box::new(AsyncSim::with_world(data, partition)) as Box<dyn Transport>
+            }
             None => Box::new(InProcess::with_world(data, partition)) as Box<dyn Transport>,
         };
+        // An async-rounds config on a barrier transport would silently
+        // run the synchronous protocol while claiming FedBuff semantics;
+        // refuse the pairing instead.
+        anyhow::ensure!(
+            !cfg.async_rounds || transport.buffered_async(),
+            "cfg.async_rounds is set but the {} transport runs full barriers — \
+             use AsyncSim (or drop the explicit transport override)",
+            transport.name()
+        );
         // A codec override is a local trait object; transports whose
         // remote ends rebuild codecs from the broadcast config cannot
         // carry it, so workers would encode with a different codec than
@@ -179,6 +193,10 @@ mod tests {
             eval_every: 2,
             engine: EngineKind::Rust,
             partition: crate::data::PartitionKind::Iid,
+            async_rounds: false,
+            buffer_size: 0,
+            max_staleness: 8,
+            staleness_rule: Default::default(),
         }
     }
 
@@ -249,6 +267,23 @@ mod tests {
             .unwrap();
         assert_eq!(srv.config().codec, CodecSpec::top_k(200));
         assert_eq!(srv.codec().spec(), CodecSpec::top_k(200));
+    }
+
+    #[test]
+    fn async_config_gets_async_transport_and_rejects_barrier_override() {
+        // Default transport selection follows cfg.async_rounds …
+        let mut eng = engine();
+        let cfg = small_cfg().with_async(2, 8);
+        let res = Server::new(cfg.clone(), &mut eng).unwrap().run().unwrap();
+        assert_eq!(res.rounds.len(), 10);
+        // … and a barrier transport explicitly paired with an async
+        // config is refused instead of silently running barriers.
+        let mut eng2 = engine();
+        let err = ServerBuilder::new(cfg)
+            .engine(&mut eng2)
+            .transport(InProcess::new())
+            .build();
+        assert!(err.is_err());
     }
 
     #[test]

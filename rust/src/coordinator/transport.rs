@@ -1,12 +1,25 @@
-//! The [`Transport`] seam: how a round's local work gets executed and how
-//! its uploads come back.
+//! The [`Transport`] seam: how local work gets executed and how uploads
+//! come back to the server — *including when* they come back.
 //!
 //! The [`RoundEngine`](super::RoundEngine) drives the FedPAQ protocol
-//! (`sample → local work → aggregate → apply`) against this trait, so the
-//! same round logic runs in-process (the simulation path, with §5 virtual
-//! time) or across real sockets ([`crate::net::Tcp`], with wall-clock
-//! time) — the duplicated loops the coordinator and net layers used to
-//! carry are gone.
+//! (`sample → local work → aggregate → apply`) against this trait. One
+//! engine call = one **server commit**, but what a commit waits for is the
+//! transport's choice:
+//!
+//! * **barrier transports** ([`InProcess`] here, [`crate::net::Tcp`] over
+//!   sockets) run every sampled node to completion and return the full
+//!   round's uploads, all staleness 0 — the paper's synchronous
+//!   Algorithm 1;
+//! * **buffered-async transports** ([`super::AsyncSim`]) keep nodes
+//!   training across commits and return a batch as soon as `buffer_size`
+//!   uploads have (virtually) arrived; stragglers' uploads surface in
+//!   later commits carrying a positive staleness.
+//!
+//! To make both expressible, `round` returns a [`RoundOutcome`]: uploads
+//! stamped with the server version they trained on, plus (for transports
+//! that manage their own event clock) the per-commit virtual-time charge.
+//! Barrier transports use [`RoundOutcome::barrier`] and let the engine
+//! charge the §5 barrier cost model exactly as before.
 //!
 //! A transport is handed the *leader-local* engine: in-process transports
 //! reuse it to run the sampled nodes' local SGD; networked transports
@@ -19,24 +32,80 @@ use crate::model::Engine;
 use crate::quant::{Encoded, UpdateCodec};
 use std::sync::Arc;
 
-/// Everything a transport needs to execute one round.
+/// Everything a transport needs to execute one commit's worth of work.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundCtx<'a> {
-    /// Round index `k`.
+    /// Server version `k` (one per commit; for barrier transports this is
+    /// exactly the paper's round index).
     pub round: usize,
-    /// The sampled participant set `S_k`, in sampling order.
+    /// The sampled candidate set `S_k`, in sampling order. Barrier
+    /// transports run all of it; buffered-async transports dispatch a
+    /// prefix as their refill wave.
     pub nodes: &'a [usize],
     /// Current global model `x_k` to broadcast.
     pub params: &'a [f32],
-    /// Per-local-step stepsizes for this round.
+    /// Per-local-step stepsizes for work dispatched at this version.
     pub lrs: &'a [f32],
+}
+
+/// One node upload as it reaches the server, stamped with its origin.
+#[derive(Debug)]
+pub struct Upload {
+    /// The virtual node that produced it.
+    pub node: usize,
+    /// Server version whose model the node trained on.
+    pub origin_round: usize,
+    /// Versions committed since dispatch: `commit_round − origin_round`.
+    /// Always 0 on barrier transports.
+    pub staleness: usize,
+    /// The encoded model delta.
+    pub enc: Encoded,
+}
+
+/// Virtual-time charge for one commit, reported by transports that run
+/// their own event clock (e.g. [`super::AsyncSim`], where a commit's wait
+/// is "until the buffer fills", not "until the slowest sampled node").
+#[derive(Debug, Clone, Copy)]
+pub struct CommitTiming {
+    /// Time from the previous commit until the committing upload arrived.
+    pub compute_time: f64,
+    /// Uplink serialization time of the committed batch.
+    pub comm_time: f64,
+}
+
+/// What one `Transport::round` call hands back to the engine.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// The committed uploads, in the order they must be aggregated.
+    pub uploads: Vec<Upload>,
+    /// `Some` when the transport owns virtual-time accounting for this
+    /// commit; `None` lets the engine charge the §5 barrier model
+    /// (simulated transports) or wall-clock (networked ones).
+    pub timing: Option<CommitTiming>,
+}
+
+impl RoundOutcome {
+    /// Wrap a full barrier round's uploads (in `ctx.nodes` order, one per
+    /// sampled node): staleness 0, engine-side timing.
+    pub fn barrier(ctx: &RoundCtx<'_>, encs: Vec<Encoded>) -> Self {
+        debug_assert_eq!(encs.len(), ctx.nodes.len());
+        let uploads = ctx
+            .nodes
+            .iter()
+            .zip(encs)
+            .map(|(&node, enc)| Upload { node, origin_round: ctx.round, staleness: 0, enc })
+            .collect();
+        RoundOutcome { uploads, timing: None }
+    }
 }
 
 /// How the round pipeline reaches its nodes.
 ///
-/// Implementations must return uploads **in `ctx.nodes` order** — the
-/// engine aggregates in node order so the in-process and distributed
-/// paths produce bit-identical models for equal seeds.
+/// Barrier implementations must return uploads **in `ctx.nodes` order** —
+/// the engine aggregates in the returned order, and node order is what
+/// makes the in-process and distributed paths produce bit-identical
+/// models for equal seeds. Buffered-async implementations return commit
+/// batches in their own canonical order (see [`super::AsyncSim`]).
 pub trait Transport {
     /// Human label for logs.
     fn name(&self) -> &'static str;
@@ -54,6 +123,14 @@ pub trait Transport {
         false
     }
 
+    /// Whether this transport implements the buffered-async commit
+    /// protocol (`cfg.async_rounds`). Barrier transports return `false`;
+    /// `ServerBuilder` refuses to pair an async-rounds config with a
+    /// transport that would silently run full barriers instead.
+    fn buffered_async(&self) -> bool {
+        false
+    }
+
     /// Build per-run state (worlds, connections) before round 0.
     fn setup(
         &mut self,
@@ -61,14 +138,14 @@ pub trait Transport {
         engine: &mut dyn Engine,
     ) -> crate::Result<()>;
 
-    /// Execute one round's local work on every node in `ctx.nodes`,
-    /// returning their encoded uploads in node order.
+    /// Execute the work for one server commit and return the committed
+    /// uploads (plus self-managed timing, if any).
     fn round(
         &mut self,
         ctx: &RoundCtx<'_>,
         codec: &dyn UpdateCodec,
         engine: &mut dyn Engine,
-    ) -> crate::Result<Vec<Encoded>>;
+    ) -> crate::Result<RoundOutcome>;
 
     /// Tear down after the last round.
     fn shutdown(&mut self) -> crate::Result<()> {
@@ -76,8 +153,9 @@ pub trait Transport {
     }
 }
 
-/// Today's simulation path: every virtual node runs sequentially on the
-/// leader's own engine, and time is charged to the §5 cost model.
+/// The synchronous simulation path: every sampled virtual node runs
+/// sequentially on the leader's own engine, the commit waits for all of
+/// them (a full barrier), and time is charged to the §5 cost model.
 #[derive(Debug, Default)]
 pub struct InProcess {
     /// Pre-built dataset/partition (from `engine::build_world` on the
@@ -88,12 +166,58 @@ pub struct InProcess {
     bufs: GatherBufs,
 }
 
+/// Per-run simulated federated world, shared by the in-process transports
+/// ([`InProcess`] and [`super::AsyncSim`]).
 #[derive(Debug)]
-struct World {
-    cfg: ExperimentConfig,
-    data: Arc<FederatedDataset>,
-    partition: Partition,
-    sampler: BatchSampler,
+pub(crate) struct World {
+    pub(crate) cfg: ExperimentConfig,
+    pub(crate) data: Arc<FederatedDataset>,
+    pub(crate) partition: Partition,
+    pub(crate) sampler: BatchSampler,
+}
+
+impl World {
+    /// Build from a preset world (if any) or regenerate from the config.
+    pub(crate) fn build(
+        preset: Option<(Arc<FederatedDataset>, Partition)>,
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+    ) -> crate::Result<Self> {
+        let (data, partition) = match preset {
+            Some(world) => world,
+            None => super::engine::build_world(cfg, engine)?,
+        };
+        let sampler = BatchSampler::new(cfg.seed, engine.batch());
+        Ok(World { cfg: cfg.clone(), data, partition, sampler })
+    }
+
+    /// Run node `node`'s τ local steps at server version `round` on model
+    /// `params`, returning the encoded upload.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn node_round(
+        &self,
+        codec: &dyn UpdateCodec,
+        engine: &mut dyn Engine,
+        node: usize,
+        round: usize,
+        params: &[f32],
+        lrs: &[f32],
+        bufs: &mut GatherBufs,
+    ) -> crate::Result<Encoded> {
+        local::node_round(
+            &self.cfg,
+            codec,
+            engine,
+            &self.data,
+            self.partition.shard(node),
+            &self.sampler,
+            node,
+            round,
+            params,
+            lrs,
+            bufs,
+        )
+    }
 }
 
 impl InProcess {
@@ -124,12 +248,7 @@ impl Transport for InProcess {
         cfg: &ExperimentConfig,
         engine: &mut dyn Engine,
     ) -> crate::Result<()> {
-        let (data, partition) = match self.preset.take() {
-            Some(world) => world,
-            None => super::engine::build_world(cfg, engine)?,
-        };
-        let sampler = BatchSampler::new(cfg.seed, engine.batch());
-        self.world = Some(World { cfg: cfg.clone(), data, partition, sampler });
+        self.world = Some(World::build(self.preset.take(), cfg, engine)?);
         Ok(())
     }
 
@@ -138,20 +257,16 @@ impl Transport for InProcess {
         ctx: &RoundCtx<'_>,
         codec: &dyn UpdateCodec,
         engine: &mut dyn Engine,
-    ) -> crate::Result<Vec<Encoded>> {
+    ) -> crate::Result<RoundOutcome> {
         let w = self
             .world
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("InProcess::round before setup"))?;
         let mut uploads = Vec::with_capacity(ctx.nodes.len());
         for &node in ctx.nodes {
-            uploads.push(local::node_round(
-                &w.cfg,
+            uploads.push(w.node_round(
                 codec,
                 engine,
-                &w.data,
-                w.partition.shard(node),
-                &w.sampler,
                 node,
                 ctx.round,
                 ctx.params,
@@ -159,7 +274,7 @@ impl Transport for InProcess {
                 &mut self.bufs,
             )?);
         }
-        Ok(uploads)
+        Ok(RoundOutcome::barrier(ctx, uploads))
     }
 }
 
@@ -187,6 +302,10 @@ mod tests {
             eval_every: 1,
             engine: crate::config::EngineKind::Rust,
             partition: crate::data::PartitionKind::Iid,
+            async_rounds: false,
+            buffer_size: 0,
+            max_staleness: 8,
+            staleness_rule: Default::default(),
         }
     }
 
@@ -206,11 +325,18 @@ mod tests {
         };
         let a = run_once(&mut engine);
         let b = run_once(&mut engine);
-        assert_eq!(a.len(), 2);
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.buf.words(), y.buf.words());
-            assert_eq!(x.bits(), y.bits());
+        assert_eq!(a.uploads.len(), 2);
+        assert!(a.timing.is_none(), "barrier transports use engine timing");
+        for (x, y) in a.uploads.iter().zip(&b.uploads) {
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.staleness, 0);
+            assert_eq!(x.origin_round, 0);
+            assert_eq!(x.enc.buf.words(), y.enc.buf.words());
+            assert_eq!(x.enc.bits(), y.enc.bits());
         }
+        // Node order preserved (the bit-stability contract).
+        assert_eq!(a.uploads[0].node, 2);
+        assert_eq!(a.uploads[1].node, 0);
     }
 
     #[test]

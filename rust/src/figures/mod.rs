@@ -226,6 +226,26 @@ pub fn all_figures() -> Vec<FigureSpec> {
                 .with_name("dirichlet a=0.1"),
         ],
     });
+    // --- Extension: sync barrier vs buffered-async rounds on the Fig-1-top
+    // setup (the §5 cost model's communication–computation tradeoff, now
+    // with the straggler barrier removed). Smaller buffers commit sooner
+    // per unit virtual time but average staler, noisier updates.
+    let base = ExperimentConfig::fig1_logreg_base();
+    let damped = crate::coordinator::StalenessRule::inverse();
+    out.push(FigureSpec {
+        id: "ext_async".into(),
+        title: "EXT LogReg/MNIST: sync barrier vs buffered-async (s=1, tau=5, r=25)"
+            .into(),
+        configs: vec![
+            base.clone().with_name("sync barrier"),
+            base.clone().with_async(13, 8).with_name("async b=13"),
+            base.clone().with_async(5, 8).with_name("async b=5"),
+            base.clone()
+                .with_async(5, 8)
+                .with_staleness_rule(damped)
+                .with_name(format!("async b=5 {}", damped.name())),
+        ],
+    });
     // Coding ablation: QSGD Elias-omega wire vs the naive fixed-width wire
     // (same stochastic levels, different |Q(p,s)| on the time axis).
     let base = ExperimentConfig::fig1_nn_base();
@@ -277,12 +297,33 @@ impl Runner {
         }
     }
 
+    fn rust_engine(model: &str) -> crate::Result<Box<dyn Engine>> {
+        let (kind, batch, eval_n) = zoo_kind(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        Ok(Box::new(RustEngine::new(kind, batch, eval_n)?))
+    }
+
     fn engine_for(&mut self, model: &str) -> crate::Result<&mut Box<dyn Engine>> {
         if !self.engines.contains_key(model) {
             let engine: Box<dyn Engine> = match self.engine_kind {
                 EngineKind::Pjrt => {
                     if self.client.is_none() {
-                        self.client = Some(crate::runtime::cpu_client()?);
+                        // No PJRT runtime on this machine (e.g. the
+                        // vendored stub bindings): fall back to the
+                        // pure-rust oracle, which computes identical
+                        // math for the zoo models, instead of dying.
+                        match crate::runtime::cpu_client() {
+                            Ok(c) => self.client = Some(c),
+                            Err(e) => {
+                                eprintln!(
+                                    "warning: PJRT unavailable ({e}); \
+                                     falling back to --engine rust"
+                                );
+                                let engine = Self::rust_engine(model)?;
+                                self.engines.insert(model.to_string(), engine);
+                                return Ok(self.engines.get_mut(model).unwrap());
+                            }
+                        }
                     }
                     Box::new(crate::runtime::PjrtEngine::load(
                         self.client.as_ref().unwrap(),
@@ -290,11 +331,7 @@ impl Runner {
                         model,
                     )?)
                 }
-                EngineKind::Rust => {
-                    let (kind, batch, eval_n) = zoo_kind(model)
-                        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-                    Box::new(RustEngine::new(kind, batch, eval_n)?)
-                }
+                EngineKind::Rust => Self::rust_engine(model)?,
             };
             self.engines.insert(model.to_string(), engine);
         }
@@ -347,11 +384,11 @@ mod tests {
     #[test]
     fn all_figure_ids_unique_and_configs_valid() {
         let figs = all_figures();
-        assert_eq!(figs.len(), 22); // 4 + 4 + 4*3 + 2 extensions
+        assert_eq!(figs.len(), 23); // 4 + 4 + 4*3 + 3 extensions
         let mut ids: Vec<_> = figs.iter().map(|f| f.id.clone()).collect();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), 22);
+        assert_eq!(ids.len(), 23);
         for f in &figs {
             assert!(!f.configs.is_empty(), "{} empty", f.id);
             for c in &f.configs {

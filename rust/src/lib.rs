@@ -23,11 +23,17 @@
 //!   sparsification with index coding, or any external impl of the trait
 //!   (external impls run in-process; distributed workers rebuild codecs
 //!   from the config's tagged spec).
-//! * **[`coordinator::Transport`]** — where node work runs:
-//!   [`coordinator::InProcess`] (the simulation path, time charged to the
-//!   paper's §5 virtual cost model) or [`net::Tcp`] (real worker
-//!   processes over sockets, wall-clock time). Same codecs, same RNG
-//!   streams — equal seeds give bit-identical models either way.
+//! * **[`coordinator::Transport`]** — where *and when* node work runs.
+//!   Synchronous barriers: [`coordinator::InProcess`] (the simulation
+//!   path, time charged to the paper's §5 virtual cost model) or
+//!   [`net::Tcp`] (real worker processes over sockets, wall-clock time) —
+//!   same codecs, same RNG streams, equal seeds give bit-identical models
+//!   either way. Buffered async: [`coordinator::AsyncSim`] (FedBuff-style
+//!   event-driven simulation) commits as soon as `cfg.buffer_size`
+//!   uploads arrive; stragglers land in later commits, damped by the
+//!   config's [`coordinator::StalenessRule`], and uploads staler than
+//!   `cfg.max_staleness` are dropped. At `buffer_size == r`,
+//!   `max_staleness == 0` it reproduces the synchronous run bit-exactly.
 //!
 //! ```ignore
 //! let mut engine = RustEngine::new(kind, batch, eval_n)?;
@@ -37,6 +43,12 @@
 //!     .transport(InProcess::new())  //  transports; for net::Tcp::new(addr, n),
 //!     .build()?                     //  set cfg.codec to a built-in spec instead)
 //!     .run()?;
+//!
+//! // Buffered-async rounds: set the config knobs and the builder picks
+//! // the AsyncSim transport automatically (see configs/async_fedbuff_logreg.json).
+//! let cfg = cfg.with_async(4, 8)    // buffer_size, max_staleness
+//!     .with_staleness_rule(StalenessRule::inverse()); // w(s) = 1/(1+s)
+//! let result = ServerBuilder::new(cfg).engine(&mut engine).build()?.run()?;
 //! ```
 //!
 //! ## Three-layer architecture (see `DESIGN.md`)

@@ -29,6 +29,9 @@ USAGE:
                [--per-node M] [--r R] [--tau TAU] [--t T] [--s S] [--elias]
                [--topk PERMILLE] [--lr ETA] [--ratio X] [--seed SEED]
                [--engine pjrt|rust]
+               [--async-rounds] [--buffer-size B] [--max-staleness S]
+               [--staleness-rule uniform|polynomial] [--staleness-a A]
+  (a leading flag implies `train`: `fedpaq --async-rounds --buffer-size 4`)
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
   fedpaq worker [--connect ADDR]
   fedpaq quantize-check [--s S] [--seed SEED]
@@ -52,7 +55,7 @@ impl Flags {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Boolean flags have no value or are followed by another --flag.
-                let is_bool = matches!(key, "elias" | "fast");
+                let is_bool = matches!(key, "elias" | "fast" | "async-rounds");
                 if is_bool {
                     map.insert(key.to_string(), "true".to_string());
                     i += 1;
@@ -102,11 +105,20 @@ impl Flags {
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let Some(cmd) = argv.first().cloned() else {
+    let Some(mut cmd) = argv.first().cloned() else {
         print!("{USAGE}");
         return Ok(());
     };
-    let flags = Flags::parse(&argv[1..])?;
+    // A leading flag implies the `train` subcommand, so e.g.
+    // `fedpaq --async-rounds --buffer-size 4` just works. Help flags keep
+    // their usual meaning.
+    let flag_args: &[String] = if cmd.starts_with("--") && cmd != "--help" {
+        cmd = "train".into();
+        &argv
+    } else {
+        &argv[1..]
+    };
+    let flags = Flags::parse(flag_args)?;
     let artifacts = PathBuf::from(flags.get_or("artifacts", "artifacts"));
 
     match cmd.as_str() {
@@ -166,8 +178,21 @@ fn main() -> anyhow::Result<()> {
                     }
                     CodecSpec::External { id } => format!("ext={id}"),
                 };
-                ExperimentConfig {
-                    name: format!("{model} {codec_label} r={r} tau={tau}"),
+                let async_rounds = flags.get("async-rounds").is_some();
+                let buffer_size: usize = flags.parse_num("buffer-size", 0usize)?;
+                let max_staleness: usize = flags.parse_num("max-staleness", 8usize)?;
+                let staleness_rule = match flags.get_or("staleness-rule", "uniform").as_str()
+                {
+                    "uniform" => fedpaq::coordinator::StalenessRule::Uniform,
+                    "polynomial" | "poly" => fedpaq::coordinator::StalenessRule::Polynomial {
+                        a: flags.parse_num("staleness-a", 1.0f64)?,
+                    },
+                    other => anyhow::bail!(
+                        "--staleness-rule must be uniform|polynomial, got {other}"
+                    ),
+                };
+                let mut cfg = ExperimentConfig {
+                    name: String::new(),
                     model,
                     dataset: DatasetKind::parse(&flags.get_or("dataset", "mnist08"))?,
                     n_nodes: flags.parse_num("nodes", 50usize)?,
@@ -187,8 +212,20 @@ fn main() -> anyhow::Result<()> {
                         },
                         None => fedpaq::data::PartitionKind::Iid,
                     },
+                    async_rounds,
+                    buffer_size,
+                    max_staleness,
+                    staleness_rule,
                 }
-                .validated()?
+                .validated()?;
+                let async_label = if cfg.async_rounds {
+                    format!(" async b={}", cfg.effective_buffer_size())
+                } else {
+                    String::new()
+                };
+                cfg.name =
+                    format!("{} {codec_label} r={r} tau={tau}{async_label}", cfg.model);
+                cfg
             };
             let mut runner = Runner::new(cfg.engine.clone(), &artifacts);
             let res = runner.run_config(cfg.clone())?;

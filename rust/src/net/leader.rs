@@ -21,6 +21,13 @@ pub fn run_leader(
     _artifacts: &Path,
 ) -> crate::Result<RunResult> {
     let cfg = cfg.validated()?;
+    // The TCP transport is a barrier protocol; buffered-async rounds are
+    // simulation-only for now (ROADMAP: async over real sockets).
+    anyhow::ensure!(
+        !cfg.async_rounds,
+        "async_rounds is not supported by the TCP leader — run `fedpaq train` \
+         (the async simulation) or clear the flag"
+    );
     let slab = EvalSlab::build(&cfg, engine)?;
     let mut rounds =
         RoundEngine::new(cfg.codec.build()?, Box::new(Tcp::new(bind, n_workers)));

@@ -14,7 +14,7 @@
 
 use super::proto::{recv_to_leader, send_to_worker, ToLeader, ToWorker};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{RoundCtx, Transport};
+use crate::coordinator::{RoundCtx, RoundOutcome, Transport};
 use crate::model::Engine;
 use crate::quant::{Encoded, UpdateCodec};
 use std::net::{TcpListener, TcpStream};
@@ -91,7 +91,7 @@ impl Transport for Tcp {
         ctx: &RoundCtx<'_>,
         _codec: &dyn UpdateCodec,
         _engine: &mut dyn Engine,
-    ) -> crate::Result<Vec<Encoded>> {
+    ) -> crate::Result<RoundOutcome> {
         anyhow::ensure!(!self.workers.is_empty(), "Tcp::round before setup");
         // Fan the r virtual nodes out round-robin across workers.
         for (j, &node) in ctx.nodes.iter().enumerate() {
@@ -130,7 +130,9 @@ impl Transport for Tcp {
         }
         let uploads: Vec<Encoded> = updates.into_iter().flatten().collect();
         anyhow::ensure!(uploads.len() == ctx.nodes.len(), "missing updates");
-        Ok(uploads)
+        // A TCP round is a full barrier: every upload is staleness 0 and
+        // the engine charges wall-clock time.
+        Ok(RoundOutcome::barrier(ctx, uploads))
     }
 
     fn shutdown(&mut self) -> crate::Result<()> {

@@ -31,10 +31,19 @@ pub struct Record {
 
 impl Group {
     pub fn new(name: impl Into<String>) -> Self {
+        // FEDPAQ_BENCH_FAST=1 turns every bench into a smoke run (CI uses
+        // it to keep `rust/benches/` from rotting without paying for real
+        // measurements): few samples, tiny time budget, numbers
+        // meaningless but every bench body still executes.
+        let fast = std::env::var_os("FEDPAQ_BENCH_FAST").is_some();
         Group {
             name: name.into(),
-            sample_size: 20,
-            target_time: Duration::from_secs(2),
+            sample_size: if fast { 2 } else { 20 },
+            target_time: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_secs(2)
+            },
             results: Vec::new(),
         }
     }

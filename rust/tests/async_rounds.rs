@@ -1,0 +1,152 @@
+//! End-to-end tests for the buffered-async round protocol
+//! (`coordinator::AsyncSim`): seeded determinism, the exact synchronous
+//! degeneration (`buffer_size == |S_k|`, `max_staleness == 0` ⇒
+//! bit-identical to the `InProcess` barrier), and the straggler-relief
+//! property the mode exists for.
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::coordinator::{RunResult, Server, StalenessRule};
+use fedpaq::model::{ModelKind, RustEngine};
+use fedpaq::opt::LrSchedule;
+use fedpaq::quant::CodecSpec;
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "async-it".into(),
+        model: "logreg".into(),
+        dataset: fedpaq::data::DatasetKind::Mnist08,
+        n_nodes: 12,
+        per_node: 40,
+        r: 6,
+        tau: 3,
+        t_total: 36,
+        codec: CodecSpec::qsgd(2),
+        lr: LrSchedule::Const { eta: 0.4 },
+        ratio: 100.0,
+        seed: 17,
+        eval_every: 2,
+        engine: EngineKind::Rust,
+        partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: false,
+        buffer_size: 0,
+        max_staleness: 8,
+        staleness_rule: StalenessRule::Uniform,
+    }
+}
+
+fn engine() -> RustEngine {
+    RustEngine::new(ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 480).unwrap()
+}
+
+fn run(cfg: ExperimentConfig) -> RunResult {
+    let mut eng = engine();
+    Server::new(cfg, &mut eng).unwrap().run().unwrap()
+}
+
+/// Exact curve equality: losses, virtual times, bits and round stats.
+fn assert_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.params, b.params, "final models differ");
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.curve.points.len(), b.curve.points.len());
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(pa.round, pb.round);
+        assert_eq!(pa.loss, pb.loss, "loss differs at round {}", pa.round);
+        assert_eq!(pa.time, pb.time, "time differs at round {}", pa.round);
+        assert_eq!(pa.bits_up, pb.bits_up);
+    }
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.compute_time, rb.compute_time, "round {}", ra.round);
+        assert_eq!(ra.comm_time, rb.comm_time, "round {}", ra.round);
+        assert_eq!(ra.bits_up, rb.bits_up, "round {}", ra.round);
+    }
+}
+
+#[test]
+fn async_runs_are_deterministic_in_the_seed() {
+    let cfg = base_cfg().with_async(2, 8);
+    let a = run(cfg.clone());
+    let b = run(cfg.clone());
+    assert_identical(&a, &b);
+    let c = run(cfg.with_seed(18));
+    assert_ne!(a.params, c.params, "different seeds must differ");
+}
+
+#[test]
+fn full_buffer_zero_staleness_reproduces_sync_exactly() {
+    // The ISSUE's acceptance gate: AsyncSim with buffer_size == |S_k| and
+    // max_staleness == 0 is the synchronous protocol — every commit waits
+    // for its whole wave, batches sort back into sampling order, and all
+    // weights are 1 — so the whole RunResult must be bit-identical to the
+    // InProcess barrier, virtual times included.
+    let sync = run(base_cfg());
+    let cfg = base_cfg();
+    let r = cfg.r;
+    let asynchronous = run(cfg.with_async(r, 0));
+    assert_identical(&sync, &asynchronous);
+}
+
+#[test]
+fn full_buffer_equivalence_holds_under_every_staleness_rule() {
+    // All rules weight staleness-0 uploads at exactly 1.0, so the
+    // degeneration is rule-independent.
+    let sync = run(base_cfg());
+    for rule in [StalenessRule::inverse(), StalenessRule::Polynomial { a: 0.5 }] {
+        let cfg = base_cfg();
+        let r = cfg.r;
+        let a = run(cfg.with_async(r, 0).with_staleness_rule(rule));
+        assert_identical(&sync, &a);
+    }
+}
+
+#[test]
+fn small_buffers_commit_in_less_virtual_time_than_the_barrier() {
+    // The point of the mode: a commit waits for the buffer to fill, not
+    // for the slowest of r sampled nodes, so the same number of commits
+    // costs less virtual time end-to-end.
+    let sync = run(base_cfg());
+    let buffered = run(base_cfg().with_async(2, 8));
+    assert_eq!(sync.rounds.len(), buffered.rounds.len());
+    let t = |r: &RunResult| r.curve.points.last().unwrap().time;
+    assert!(
+        t(&buffered) < t(&sync),
+        "buffered-async should be faster: {} vs {}",
+        t(&buffered),
+        t(&sync)
+    );
+    // And it still trains.
+    let first = buffered.curve.points.first().unwrap().loss;
+    let last = buffered.curve.points.last().unwrap().loss;
+    assert!(last < first * 0.9, "async loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn staleness_damping_trains_with_stale_uploads_in_the_mix() {
+    let cfg = base_cfg()
+        .with_async(2, 12)
+        .with_staleness_rule(StalenessRule::inverse());
+    let res = run(cfg);
+    let first = res.curve.points.first().unwrap().loss;
+    let last = res.curve.points.last().unwrap().loss;
+    assert!(last < first * 0.9, "damped async did not train: {first} -> {last}");
+    // Virtual time stays strictly monotone across commits.
+    let mut t = -1.0;
+    for p in &res.curve.points {
+        assert!(p.time > t || (p.round == 0 && p.time == 0.0), "time not monotone");
+        t = p.time;
+    }
+}
+
+#[test]
+fn async_flags_round_trip_through_config_json() {
+    let cfg = base_cfg()
+        .with_async(3, 5)
+        .with_staleness_rule(StalenessRule::Polynomial { a: 1.0 });
+    let back =
+        ExperimentConfig::from_json(&fedpaq::util::json::Json::parse(
+            &cfg.to_json().to_string_pretty(),
+        )
+        .unwrap())
+        .unwrap();
+    assert_eq!(cfg, back);
+}

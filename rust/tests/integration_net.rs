@@ -30,6 +30,10 @@ fn cluster_cfg(seed: u64) -> ExperimentConfig {
         eval_every: 1,
         engine: EngineKind::Rust,
         partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: false,
+        buffer_size: 0,
+        max_staleness: 8,
+        staleness_rule: Default::default(),
     }
 }
 

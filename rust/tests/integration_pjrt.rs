@@ -215,6 +215,10 @@ fn pjrt_fedpaq_run_decreases_loss_and_matches_shape() {
         eval_every: 2,
         engine: EngineKind::Pjrt,
         partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: false,
+        buffer_size: 0,
+        max_staleness: 8,
+        staleness_rule: Default::default(),
     };
     let res = runner.run_config(cfg).unwrap();
     let first = res.curve.points.first().unwrap().loss;
@@ -242,6 +246,10 @@ fn pjrt_and_rust_engines_agree_on_full_logreg_run() {
         eval_every: 4,
         engine: EngineKind::Pjrt,
         partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: false,
+        buffer_size: 0,
+        max_staleness: 8,
+        staleness_rule: Default::default(),
     };
     let client = client();
     let mut pjrt = PjrtEngine::load(&client, &dir, "logreg").unwrap();

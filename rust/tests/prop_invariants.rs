@@ -6,6 +6,7 @@
 
 use fedpaq::config::ExperimentConfig;
 use fedpaq::coordinator::sampler::sample_nodes;
+use fedpaq::coordinator::StalenessRule;
 use fedpaq::data::{BatchSampler, Partition};
 use fedpaq::quant::{bitstream::BitWriter, elias, l2_norm, CodecSpec, Coding, QsgdCodec, UpdateCodec};
 use fedpaq::util::json::Json;
@@ -178,6 +179,18 @@ fn prop_config_json_roundtrip() {
                 coding: if rng.gen_bool(0.5) { Coding::Elias } else { Coding::Naive },
             },
         };
+        if rng.gen_bool(0.5) {
+            cfg.async_rounds = true;
+            cfg.buffer_size = rng.gen_range(0, cfg.r + 1); // 0 = full barrier
+            cfg.max_staleness = rng.gen_range(0, 20);
+            cfg.staleness_rule = if rng.gen_bool(0.5) {
+                StalenessRule::Uniform
+            } else {
+                // Quarter-step exponents are exact in f64 and in the JSON
+                // decimal round-trip.
+                StalenessRule::Polynomial { a: rng.gen_range(1, 9) as f64 * 0.25 }
+            };
+        }
         let cfg = cfg.validated().unwrap();
         let text = cfg.to_json().to_string_pretty();
         let back = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();

@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         buffer_size: 0,
         max_staleness: 8,
         staleness_rule: Default::default(),
+        agg_shards: 1,
     }
     .validated()?;
 

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Benchmark-regression gate for the BENCH_*.json files that
+`fedpaq::util::bench::Group::finish` emits (CI runs it against
+`rust/target/bench-results/BENCH_aggregate.json`).
+
+Compares the current run's `elems_per_sec` per record against a baseline
+JSON committed in-repo (`rust/benches/baseline/`) and exits non-zero when
+any record regresses by more than --max-regression (default 25%).
+
+The committed baselines are deliberately conservative *floors*, not
+point-in-time measurements: CI runs the benches under FEDPAQ_BENCH_FAST=1
+on shared runners, so absolute numbers are noisy — the gate exists to
+catch order-of-magnitude regressions (an accidental re-allocation per
+upload, a serialization of the sharded path), not 5% drifts. Tighten a
+floor by editing the baseline, or refresh all floors from a run with:
+
+    python3 python/bench_check.py CURRENT BASELINE --update
+
+which rewrites BASELINE with CURRENT's measured rates scaled by
+--update-headroom (default 0.5, i.e. new floor = half the measured rate).
+
+Baseline records whose name is missing from the current run fail the gate
+(a silently deleted bench is a coverage regression); current records
+missing from the baseline are reported but pass, so adding a bench does
+not require touching the baseline in the same commit.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_doc(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def records_of(doc):
+    # Group files are {"group": ..., "records": [...]}; tolerate a bare
+    # list so hand-written baselines can stay minimal.
+    records = doc["records"] if isinstance(doc, dict) else doc
+    out = {}
+    for r in records:
+        if r.get("elems_per_sec") is not None:
+            out[r["name"]] = float(r["elems_per_sec"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="BENCH_*.json from the run under test")
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.25,
+        help="maximum tolerated fractional throughput drop (default 0.25)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite BASELINE from CURRENT instead of checking",
+    )
+    ap.add_argument(
+        "--update-headroom",
+        type=float,
+        default=0.5,
+        help="when updating: new floor = measured rate * headroom",
+    )
+    args = ap.parse_args()
+
+    current_doc = load_doc(args.current)
+    current = records_of(current_doc)
+    if args.update:
+        group = (current_doc.get("group", "bench")
+                 if isinstance(current_doc, dict) else "bench")
+        doc = {"group": group}
+        # Keep the old baseline's policy note, if any — it documents why
+        # the floors are what they are.
+        try:
+            old = load_doc(args.baseline)
+            if isinstance(old, dict) and "_comment" in old:
+                doc["_comment"] = old["_comment"]
+        except (OSError, ValueError):
+            pass
+        doc["records"] = [
+            {"name": name, "elems_per_sec": rate * args.update_headroom}
+            for name, rate in sorted(current.items())
+        ]
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"rewrote {args.baseline} from {args.current} "
+              f"(headroom {args.update_headroom})")
+        return 0
+
+    baseline = records_of(load_doc(args.baseline))
+    if not baseline:
+        print(f"error: no comparable records in baseline {args.baseline}")
+        return 2
+
+    failures = []
+    floor_frac = 1.0 - args.max_regression
+    for name, want in sorted(baseline.items()):
+        got = current.get(name)
+        if got is None:
+            failures.append(f"{name}: present in baseline but missing from run")
+            continue
+        floor = want * floor_frac
+        verdict = "OK" if got >= floor else "REGRESSION"
+        print(f"{verdict:>10}  {name}: {got/1e6:10.1f} Melem/s "
+              f"(baseline {want/1e6:.1f}, floor {floor/1e6:.1f})")
+        if got < floor:
+            failures.append(
+                f"{name}: {got/1e6:.1f} Melem/s < floor {floor/1e6:.1f} Melem/s"
+            )
+    for name in sorted(set(current) - set(baseline)):
+        print(f"{'NEW':>10}  {name}: {current[name]/1e6:10.1f} Melem/s "
+              f"(no baseline yet)")
+
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s) beyond "
+              f"{args.max_regression:.0%}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("\nall benchmarks within the regression budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

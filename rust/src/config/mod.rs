@@ -117,6 +117,13 @@ pub struct ExperimentConfig {
     pub max_staleness: usize,
     /// Async mode: staleness → aggregation-weight damping rule.
     pub staleness_rule: StalenessRule,
+    /// Server-side aggregation shards: the parameter vector is split into
+    /// this many contiguous ranges, accumulated on scoped threads
+    /// ([`ShardPlan`](crate::coordinator::aggregate::ShardPlan)). A pure
+    /// throughput knob — results are bit-identical for every value
+    /// (see the `aggregate` module docs). `1` = the historical
+    /// single-threaded loop.
+    pub agg_shards: usize,
 }
 
 impl ExperimentConfig {
@@ -176,6 +183,7 @@ impl ExperimentConfig {
                 "polynomial staleness rule needs a finite exponent a > 0, got {a}"
             );
         }
+        anyhow::ensure!(self.agg_shards >= 1, "agg_shards must be >= 1");
         Ok(self)
     }
 
@@ -202,6 +210,7 @@ impl ExperimentConfig {
             buffer_size: 0,
             max_staleness: 8,
             staleness_rule: StalenessRule::Uniform,
+            agg_shards: 1,
         }
     }
 
@@ -228,6 +237,7 @@ impl ExperimentConfig {
             buffer_size: 0,
             max_staleness: 8,
             staleness_rule: StalenessRule::Uniform,
+            agg_shards: 1,
         }
     }
 
@@ -322,6 +332,7 @@ impl ExperimentConfig {
                     ]),
                 },
             ),
+            ("agg_shards", Json::num(self.agg_shards as f64)),
         ])
     }
 
@@ -420,6 +431,9 @@ impl ExperimentConfig {
                     other => anyhow::bail!("unknown staleness rule {other:?}"),
                 },
             },
+            // Absent in pre-sharding config files: default to the
+            // historical single-threaded accumulation.
+            agg_shards: j.get("agg_shards").and_then(Json::as_usize).unwrap_or(1),
         }
         .validated()
     }
@@ -484,6 +498,13 @@ impl ExperimentConfig {
 
     pub fn with_staleness_rule(mut self, rule: StalenessRule) -> Self {
         self.staleness_rule = rule;
+        self
+    }
+
+    /// Set the server-side aggregation shard count (`1` = the historical
+    /// single-threaded accumulation; bit-identical results either way).
+    pub fn with_agg_shards(mut self, agg_shards: usize) -> Self {
+        self.agg_shards = agg_shards;
         self
     }
 }
@@ -556,6 +577,7 @@ mod tests {
             ExperimentConfig::fig1_logreg_base()
                 .with_async(7, 0)
                 .with_staleness_rule(StalenessRule::Polynomial { a: 0.5 }),
+            ExperimentConfig::fig1_logreg_base().with_agg_shards(8),
         ] {
             let j = cfg.to_json();
             let back = ExperimentConfig::from_json(&j).unwrap();
@@ -602,6 +624,27 @@ mod tests {
         assert_eq!(back.buffer_size, 0);
         assert_eq!(back.staleness_rule, StalenessRule::Uniform);
         assert_eq!(back, ExperimentConfig::fig1_logreg_base());
+    }
+
+    #[test]
+    fn pre_sharding_configs_parse_to_one_shard() {
+        // A config JSON written before `agg_shards` existed must land on
+        // the historical single-threaded accumulation.
+        let mut j = ExperimentConfig::fig1_logreg_base().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("agg_shards");
+        } else {
+            panic!("config JSON must be an object");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.agg_shards, 1);
+        assert_eq!(back, ExperimentConfig::fig1_logreg_base());
+    }
+
+    #[test]
+    fn zero_agg_shards_rejected() {
+        let c = ExperimentConfig::fig1_logreg_base().with_agg_shards(0);
+        assert!(c.validated().is_err());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Server-side aggregation (Algorithm 1 line 13), staleness-aware:
+//! Server-side aggregation (Algorithm 1 line 13), staleness-aware and
+//! shardable:
 //! `x_{k+1} = x_k + (1/Σw_i) Σ_{i∈B_k} w_i · Q(x_{·,τ}^{(i)} − x_·)`.
 //!
 //! For the synchronous barrier transports every upload in the batch `B_k`
@@ -7,8 +8,89 @@
 //! transports ([`AsyncSim`](super::AsyncSim)) commit batches that mix
 //! uploads born at older server versions; a [`StalenessRule`] damps their
 //! contribution.
+//!
+//! ## Sharded accumulation and the determinism contract
+//!
+//! Every upload of a round funnels through this accumulator, so at
+//! multi-million-parameter scale the f64 accumulation is the server's
+//! wall-clock bottleneck once uplinks are compressed. [`ShardPlan`]
+//! splits the parameter vector into disjoint contiguous ranges and
+//! [`Aggregator::push_batch`] / [`Aggregator::apply_sharded`] drive one
+//! scoped thread per range (`std::thread::scope` — no runtime, no extra
+//! dependencies). Each shard owns `sum[lo..hi]` exclusively and replays
+//! the committed uploads **in batch order** over only its range, decoding
+//! just `lo..hi` of each upload via
+//! [`UpdateCodec::decode_range`](crate::quant::UpdateCodec::decode_range).
+//!
+//! **Determinism is a contract, not a hope:** for a fixed batch, the
+//! additions landing on any single element `sum[i]` happen in exactly the
+//! same order for *every* shard count — batch order, the same order the
+//! sequential single-shard loop uses. Floating-point addition is
+//! non-associative across *elements*, but no cross-element reassociation
+//! ever occurs: shard boundaries only partition the index space, they
+//! never reorder a given element's addition chain. Hence `--agg-shards N`
+//! produces bit-identical models to `--agg-shards 1` for all `N` (pinned
+//! by `prop_sharded_aggregation_bit_identical_to_single_shard` in
+//! `rust/tests/prop_invariants.rs` and by the CI determinism leg), and
+//! shard count is a pure throughput knob — free to differ between the
+//! machine that trained a run and the machine that replays it.
+//!
+//! The ledger invariants (`count`, `weight_sum`, one `upload_bits` entry
+//! per absorbed upload) are enforced with real `Err`s in release builds:
+//! a miscounted round aborts loudly instead of silently corrupting a
+//! long run.
 
 use crate::quant::{Encoded, UpdateCodec};
+
+/// Disjoint contiguous parameter ranges for sharded accumulation: `k`
+/// near-equal ranges covering `0..p` (the first `p mod k` ranges are one
+/// element longer). Built once per run from `cfg.agg_shards` and reused
+/// every round.
+///
+/// The requested shard count is clamped to `1..=max(p, 1)` — more shards
+/// than parameters would only spawn idle threads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Range boundaries: `bounds[i]..bounds[i+1]` is shard `i`;
+    /// `bounds[0] == 0`, `bounds.last() == p`.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    pub fn new(p: usize, shards: usize) -> Self {
+        let shards = shards.clamp(1, p.max(1));
+        let (base, extra) = (p / shards, p % shards);
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut at = 0;
+        bounds.push(at);
+        for i in 0..shards {
+            at += base + usize::from(i < extra);
+            bounds.push(at);
+        }
+        debug_assert_eq!(at, p);
+        ShardPlan { bounds }
+    }
+
+    /// Number of shards (≥ 1).
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total parameter count covered.
+    pub fn p(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Half-open range `[lo, hi)` of shard `i`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        (self.bounds[i], self.bounds[i + 1])
+    }
+
+    /// All shard ranges in order.
+    pub fn ranges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.bounds.windows(2).map(|w| (w[0], w[1]))
+    }
+}
 
 /// How an upload's aggregation weight decays with its staleness `s`
 /// (the number of server versions committed since the upload's model was
@@ -70,7 +152,14 @@ impl StalenessRule {
 /// [`push_decoded`](Aggregator::push_decoded)) funnels through one
 /// internal accumulation path, so `count`, `weight_sum` and the
 /// per-upload `upload_bits` record can never drift apart from what
-/// [`apply`](Aggregator::apply) divides by.
+/// [`apply`](Aggregator::apply) divides by — and the drift checks are
+/// real `Err`s in release builds, not just debug assertions.
+///
+/// [`Aggregator::push_batch`] is the batched, shardable entry point the
+/// round engine uses: sequential and bit-identical at one shard,
+/// fanned across scoped threads (one per [`ShardPlan`] range) above
+/// that. See the module docs for the shard-boundary determinism
+/// contract.
 #[derive(Debug)]
 pub struct Aggregator {
     sum: Vec<f64>,
@@ -100,9 +189,10 @@ impl Aggregator {
         self.bits.clear();
     }
 
-    /// The single accumulation path: absorb `dec` with weight `weight`,
-    /// recording `bits` uplink bits. Everything that mutates the running
-    /// mean goes through here — the debug assertion pins the invariant
+    /// The single streaming accumulation path: absorb `dec` with weight
+    /// `weight`, recording `bits` uplink bits. Every per-upload entry
+    /// point funnels through here ([`Aggregator::push_batch`] replays the
+    /// same arithmetic shard-wise); the ledger check pins the invariant
     /// that one upload contributes exactly one entry to every ledger.
     fn absorb(&mut self, dec: &[f32], bits: u64, weight: f64) -> crate::Result<()> {
         anyhow::ensure!(
@@ -130,10 +220,123 @@ impl Aggregator {
         self.bits.push(bits);
         self.count += 1;
         self.weight_sum += weight;
-        debug_assert_eq!(
+        // Drift here would mean `apply` divides by a normalizer that
+        // doesn't match the absorbed uploads — a silent corruption in a
+        // long run. Checked in release builds, not just debug.
+        anyhow::ensure!(
+            self.bits.len() == self.count,
+            "aggregator ledgers out of sync: {} bit records for {} uploads",
             self.bits.len(),
-            self.count,
-            "aggregator ledgers out of sync"
+            self.count
+        );
+        Ok(())
+    }
+
+    /// Absorb a whole commit batch, sharding the f64 accumulation across
+    /// `plan`'s parameter ranges on scoped threads.
+    ///
+    /// **Bit-identical to the sequential path for every shard count**:
+    /// each shard replays the uploads in batch order over only its own
+    /// `sum[lo..hi]` (decoding just that range via
+    /// [`UpdateCodec::decode_range`]), so the additions landing on any
+    /// single element happen in exactly the order the single-shard loop
+    /// would perform them — see the module docs for the full contract.
+    ///
+    /// Dimensions and weights are validated up front on every path, so a
+    /// malformed batch absorbs nothing. A *decode* failure mid-batch (a
+    /// corrupt frame that passes the cheap checks) still errors, but
+    /// leaves the aggregator partially updated — partial sums on the
+    /// sharded path, fully-absorbed earlier uploads (sums *and* ledgers)
+    /// on the sequential one — so the caller must
+    /// [`reset`](Aggregator::reset) before reusing the aggregator after
+    /// any error. The round engine never does: it treats every
+    /// aggregation error as fatal to the run.
+    pub fn push_batch(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        batch: &[(&Encoded, f64)],
+        plan: &ShardPlan,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            plan.p() == self.sum.len(),
+            "shard plan covers {} parameters, aggregator holds {}",
+            plan.p(),
+            self.sum.len()
+        );
+        // Validate the whole batch before absorbing anything, on both the
+        // sequential and the sharded path, so a malformed upload anywhere
+        // in the batch cannot leave a half-absorbed commit behind.
+        for &(enc, w) in batch {
+            anyhow::ensure!(
+                enc.p == self.sum.len(),
+                "upload dimension mismatch: {} != {}",
+                enc.p,
+                self.sum.len()
+            );
+            anyhow::ensure!(
+                w.is_finite() && w > 0.0,
+                "aggregation weight must be finite and positive, got {w}"
+            );
+        }
+        if plan.shards() == 1 || batch.is_empty() {
+            // The historical streaming path (also the hot path for tiny
+            // models, where thread spawns would dominate).
+            for &(enc, w) in batch {
+                self.push_weighted(codec, enc, w)?;
+            }
+            return Ok(());
+        }
+        // Slice `sum` into the plan's disjoint ranges so each scoped
+        // thread owns its shard exclusively.
+        let mut shards: Vec<((usize, usize), &mut [f64])> = Vec::with_capacity(plan.shards());
+        let mut rest: &mut [f64] = &mut self.sum;
+        for (lo, hi) in plan.ranges() {
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            shards.push(((lo, hi), head));
+            rest = tail;
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|((lo, hi), shard)| {
+                    s.spawn(move || -> crate::Result<()> {
+                        let mut scratch = Vec::with_capacity(hi - lo);
+                        for &(enc, w) in batch {
+                            codec.decode_range(enc, lo, hi, &mut scratch)?;
+                            if w == 1.0 {
+                                // Same exact-1.0 fast path as `absorb`.
+                                for (acc, &v) in shard.iter_mut().zip(&scratch) {
+                                    *acc += v as f64;
+                                }
+                            } else {
+                                for (acc, &v) in shard.iter_mut().zip(&scratch) {
+                                    *acc += v as f64 * w;
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("aggregation shard thread panicked"))??;
+            }
+            Ok::<(), anyhow::Error>(())
+        })?;
+        // Ledgers advance in batch order — identical to the sequential
+        // path (weight_sum is an f64 sum, so order matters for bit
+        // reproducibility too).
+        for &(enc, w) in batch {
+            self.bits.push(enc.bits());
+            self.count += 1;
+            self.weight_sum += w;
+        }
+        anyhow::ensure!(
+            self.bits.len() == self.count,
+            "aggregator ledgers out of sync: {} bit records for {} uploads",
+            self.bits.len(),
+            self.count
         );
         Ok(())
     }
@@ -198,12 +401,64 @@ impl Aggregator {
     /// panicking) when no uploads arrived, so a round where every sampled
     /// node failed cannot abort a long run — the engine skips it instead.
     pub fn apply(&mut self, params: &mut [f32]) -> crate::Result<()> {
+        self.apply_sharded(params, &ShardPlan::new(self.sum.len(), 1))
+    }
+
+    /// Sharded [`Aggregator::apply`]: the elementwise
+    /// `params[i] += sum[i]/Σw` update split across `plan`'s ranges on
+    /// scoped threads. Purely elementwise, so bit-identical for every
+    /// shard count by construction.
+    pub fn apply_sharded(&mut self, params: &mut [f32], plan: &ShardPlan) -> crate::Result<()> {
         anyhow::ensure!(self.count > 0, "no uploads to aggregate");
-        debug_assert_eq!(self.bits.len(), self.count, "aggregator ledgers out of sync");
+        // Ledger drift checks run in release builds too: dividing by a
+        // normalizer that doesn't match the absorbed uploads would
+        // silently corrupt a long run.
+        anyhow::ensure!(
+            self.bits.len() == self.count,
+            "aggregator ledgers out of sync: {} bit records for {} uploads",
+            self.bits.len(),
+            self.count
+        );
+        anyhow::ensure!(
+            self.weight_sum.is_finite() && self.weight_sum > 0.0,
+            "aggregator weight_sum drifted to {} over {} uploads",
+            self.weight_sum,
+            self.count
+        );
+        anyhow::ensure!(
+            params.len() == self.sum.len(),
+            "apply dimension mismatch: {} params, {} accumulated",
+            params.len(),
+            self.sum.len()
+        );
+        anyhow::ensure!(
+            plan.p() == self.sum.len(),
+            "shard plan covers {} parameters, aggregator holds {}",
+            plan.p(),
+            self.sum.len()
+        );
         let inv = 1.0 / self.weight_sum;
-        for (p, &s) in params.iter_mut().zip(&self.sum) {
-            *p = (*p as f64 + s * inv) as f32;
+        if plan.shards() == 1 {
+            for (p, &s) in params.iter_mut().zip(&self.sum) {
+                *p = (*p as f64 + s * inv) as f32;
+            }
+            return Ok(());
         }
+        std::thread::scope(|scope| {
+            let mut params_rest: &mut [f32] = params;
+            let mut sum_rest: &[f64] = &self.sum;
+            for (lo, hi) in plan.ranges() {
+                let (p_head, p_tail) = params_rest.split_at_mut(hi - lo);
+                let (s_head, s_tail) = sum_rest.split_at(hi - lo);
+                params_rest = p_tail;
+                sum_rest = s_tail;
+                scope.spawn(move || {
+                    for (p, &s) in p_head.iter_mut().zip(s_head) {
+                        *p = (*p as f64 + s * inv) as f32;
+                    }
+                });
+            }
+        });
         Ok(())
     }
 }
@@ -340,6 +595,112 @@ mod tests {
         let mut agg = Aggregator::new(8);
         assert!(agg.push(&QsgdCodec::new(3), &enc).is_err());
         assert_eq!(agg.count(), 0);
+    }
+
+    #[test]
+    fn shard_plan_partitions_exactly() {
+        for (p, shards) in [(10, 3), (1, 1), (7, 7), (7, 100), (0, 4), (1000, 16)] {
+            let plan = ShardPlan::new(p, shards);
+            assert!(plan.shards() >= 1);
+            assert!(plan.shards() <= shards.max(1));
+            assert_eq!(plan.p(), p);
+            let mut at = 0;
+            let mut sizes = Vec::new();
+            for (lo, hi) in plan.ranges() {
+                assert_eq!(lo, at, "p={p} shards={shards}");
+                assert!(hi >= lo);
+                sizes.push(hi - lo);
+                at = hi;
+            }
+            assert_eq!(at, p);
+            // Near-equal: sizes differ by at most one.
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "p={p} shards={shards}: {sizes:?}");
+        }
+        // Degenerate zero-shard request clamps to one shard.
+        assert_eq!(ShardPlan::new(10, 0).shards(), 1);
+    }
+
+    #[test]
+    fn push_batch_matches_sequential_for_every_shard_count() {
+        let q = QsgdCodec::new(2);
+        let p = 103; // deliberately not divisible by the shard counts
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.21).sin()).collect();
+        let mut rng = Rng::seed_from_u64(5);
+        let encs: Vec<_> = (0..5).map(|_| q.encode(&x, &mut rng)).collect();
+        let weights = [1.0, 0.5, 1.0, 0.25, 1.0];
+        let batch: Vec<(&crate::quant::Encoded, f64)> = encs.iter().zip(weights).collect();
+
+        let mut reference = Aggregator::new(p);
+        for &(enc, w) in &batch {
+            reference.push_weighted(&q, enc, w).unwrap();
+        }
+        let mut want = vec![0.5f32; p];
+        reference.apply(&mut want).unwrap();
+
+        for shards in [1usize, 2, 3, 7, 16, 103, 500] {
+            let plan = ShardPlan::new(p, shards);
+            let mut agg = Aggregator::new(p);
+            agg.push_batch(&q, &batch, &plan).unwrap();
+            assert_eq!(agg.count(), reference.count());
+            assert_eq!(agg.upload_bits(), reference.upload_bits());
+            assert_eq!(
+                agg.weight_sum().to_bits(),
+                reference.weight_sum().to_bits(),
+                "shards={shards}"
+            );
+            let mut got = vec![0.5f32; p];
+            agg.apply_sharded(&mut got, &plan).unwrap();
+            assert_eq!(got, want, "shards={shards} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn push_batch_rejects_bad_uploads_without_absorbing_any() {
+        let q = IdentityCodec;
+        let mut rng = Rng::seed_from_u64(8);
+        let good = q.encode(&[1.0, 2.0], &mut rng);
+        let wrong_dim = q.encode(&[1.0, 2.0, 3.0], &mut rng);
+        // Validation is up-front on BOTH the sequential (1-shard) and the
+        // sharded path: a bad upload anywhere in the batch absorbs
+        // nothing, even when a good upload precedes it.
+        for shards in [1usize, 2] {
+            let plan = ShardPlan::new(2, shards);
+            let mut agg = Aggregator::new(2);
+            assert!(agg
+                .push_batch(&q, &[(&good, 1.0), (&wrong_dim, 1.0)], &plan)
+                .is_err());
+            assert!(agg
+                .push_batch(&q, &[(&good, 1.0), (&good, 0.0)], &plan)
+                .is_err());
+            assert!(agg.push_batch(&q, &[(&good, f64::NAN)], &plan).is_err());
+            assert_eq!(agg.count(), 0, "shards={shards}");
+            assert_eq!(agg.weight_sum(), 0.0, "shards={shards}");
+            assert!(agg.upload_bits().is_empty(), "shards={shards}");
+            let mut params = [9.0f32, 9.0];
+            assert!(agg.apply_sharded(&mut params, &plan).is_err());
+            assert_eq!(params, [9.0, 9.0], "shards={shards}: sum leaked into apply");
+            // Plan/aggregator size mismatch is rejected too.
+            assert!(agg
+                .push_batch(&q, &[(&good, 1.0)], &ShardPlan::new(3, shards))
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn apply_sharded_rejects_mismatched_params_or_plan() {
+        let q = IdentityCodec;
+        let mut rng = Rng::seed_from_u64(9);
+        let mut agg = Aggregator::new(3);
+        agg.push(&q, &q.encode(&[1.0, 2.0, 3.0], &mut rng)).unwrap();
+        let plan = ShardPlan::new(3, 2);
+        assert!(agg.apply_sharded(&mut [0.0, 0.0], &plan).is_err());
+        assert!(agg
+            .apply_sharded(&mut [0.0, 0.0, 0.0], &ShardPlan::new(4, 2))
+            .is_err());
+        let mut ok = [0.0, 0.0, 0.0];
+        agg.apply_sharded(&mut ok, &plan).unwrap();
+        assert_eq!(ok, [1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -349,6 +349,7 @@ mod tests {
             buffer_size: 2,
             max_staleness: 4,
             staleness_rule: Default::default(),
+            agg_shards: 1,
         }
     }
 

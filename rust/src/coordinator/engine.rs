@@ -27,7 +27,7 @@
 //! the buffer fills (async) — so this skip path is the seam for custom
 //! transports that drop failed nodes outright.
 
-use super::aggregate::Aggregator;
+use super::aggregate::{Aggregator, ShardPlan};
 use super::local::OwnedLabels;
 use super::sampler;
 use super::transport::{RoundCtx, Transport};
@@ -81,6 +81,60 @@ pub struct RunResult {
     pub rounds: Vec<RoundStats>,
     /// Total uploaded bits over the run.
     pub total_bits: u64,
+}
+
+impl RunResult {
+    /// Machine-readable dump of the whole run: curve, per-round stats,
+    /// total traffic and the full final model (f32 → f64 is exact, so the
+    /// parameters survive the JSON round-trip bit-for-bit).
+    ///
+    /// For virtual-time transports the output is a deterministic function
+    /// of `(config, seed)` — the CI determinism leg diffs two of these
+    /// byte-for-byte, including across `--agg-shards` values.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let points = self
+            .curve
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("round", Json::num(p.round as f64)),
+                    ("iterations", Json::num(p.iterations as f64)),
+                    ("time", Json::num(p.time)),
+                    ("bits_up", Json::num(p.bits_up as f64)),
+                    ("loss", Json::num(p.loss)),
+                ])
+            })
+            .collect();
+        let rounds = self
+            .rounds
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::num(r.round as f64)),
+                    ("compute_time", Json::num(r.compute_time)),
+                    ("comm_time", Json::num(r.comm_time)),
+                    ("bits_up", Json::num(r.bits_up as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "curve",
+                Json::obj(vec![
+                    ("label", Json::str(&self.curve.label)),
+                    ("points", Json::Arr(points)),
+                ]),
+            ),
+            ("rounds", Json::Arr(rounds)),
+            ("total_bits", Json::num(self.total_bits as f64)),
+            (
+                "params",
+                Json::Arr(self.params.iter().map(|&v| Json::num(v as f64)).collect()),
+            ),
+        ])
+    }
 }
 
 /// The fixed evaluation slab: the first `eval_n` assigned samples
@@ -192,6 +246,13 @@ impl RoundEngine {
         let mut stats = Vec::with_capacity(rounds);
         let mut total_bits = 0u64;
         let mut agg = Aggregator::new(p);
+        // One shard plan for the whole run; `cfg.agg_shards == 1` is the
+        // historical single-threaded accumulation, larger values fan the
+        // f64 accumulate/apply across scoped threads with bit-identical
+        // results (the aggregate module's determinism contract). Every
+        // transport — InProcess, AsyncSim, and the net::Tcp leader —
+        // funnels through this one path.
+        let plan = ShardPlan::new(p, cfg.agg_shards);
 
         // Round-0 point: initial loss at time 0.
         let loss0 = slab.eval(engine, &params)?;
@@ -204,10 +265,12 @@ impl RoundEngine {
             let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
             let outcome = self.transport.round(&ctx, self.codec.as_ref(), engine)?;
             agg.reset();
-            for u in &outcome.uploads {
-                let w = cfg.staleness_rule.weight(u.staleness);
-                agg.push_weighted(self.codec.as_ref(), &u.enc, w)?;
-            }
+            let batch: Vec<(&crate::quant::Encoded, f64)> = outcome
+                .uploads
+                .iter()
+                .map(|u| (&u.enc, cfg.staleness_rule.weight(u.staleness)))
+                .collect();
+            agg.push_batch(self.codec.as_ref(), &batch, &plan)?;
             let bits: u64 = agg.upload_bits().iter().sum();
             let (compute_time, comm_time) = match (&mut timing, outcome.timing) {
                 // The transport ran its own (virtual) event clock for
@@ -240,7 +303,7 @@ impl RoundEngine {
                 }
             };
             if agg.count() > 0 {
-                agg.apply(&mut params)?;
+                agg.apply_sharded(&mut params, &plan)?;
             } else {
                 eprintln!(
                     "[{}] round {k}: no uploads from {} sampled nodes — skipping",

@@ -51,7 +51,7 @@ pub mod sampler;
 pub mod server;
 pub mod transport;
 
-pub use aggregate::{Aggregator, StalenessRule};
+pub use aggregate::{Aggregator, ShardPlan, StalenessRule};
 pub use async_sim::AsyncSim;
 pub use engine::{EvalSlab, RoundEngine, RoundStats, RunResult};
 pub use server::{Server, ServerBuilder};

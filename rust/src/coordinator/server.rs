@@ -197,6 +197,7 @@ mod tests {
             buffer_size: 0,
             max_staleness: 8,
             staleness_rule: Default::default(),
+            agg_shards: 1,
         }
     }
 
@@ -284,6 +285,29 @@ mod tests {
             .transport(InProcess::new())
             .build();
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_single_shard() {
+        // cfg.agg_shards is a pure throughput knob: the full protocol —
+        // losses, virtual times, bits, final model — must not move by a
+        // single bit when the accumulation fans out across threads.
+        let run = |shards: usize| {
+            let mut eng = engine();
+            let cfg = small_cfg().with_agg_shards(shards);
+            Server::new(cfg, &mut eng).unwrap().run().unwrap()
+        };
+        let a = run(1);
+        for shards in [2usize, 4, 7] {
+            let b = run(shards);
+            assert_eq!(a.params, b.params, "shards={shards}");
+            assert_eq!(a.total_bits, b.total_bits);
+            assert_eq!(a.curve.points.len(), b.curve.points.len());
+            for (x, y) in a.curve.points.iter().zip(&b.curve.points) {
+                assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "shards={shards}");
+                assert_eq!(x.time.to_bits(), y.time.to_bits(), "shards={shards}");
+            }
+        }
     }
 
     #[test]

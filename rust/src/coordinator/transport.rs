@@ -306,6 +306,7 @@ mod tests {
             buffer_size: 0,
             max_staleness: 8,
             staleness_rule: Default::default(),
+            agg_shards: 1,
         }
     }
 

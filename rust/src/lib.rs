@@ -35,6 +35,21 @@
 //!   `cfg.max_staleness` are dropped. At `buffer_size == r`,
 //!   `max_staleness == 0` it reproduces the synchronous run bit-exactly.
 //!
+//! ## Sharded aggregation
+//!
+//! The server-side accumulation — the one place every upload of a round
+//! funnels through — shards across disjoint parameter ranges on scoped
+//! threads when `cfg.agg_shards > 1` (CLI: `--agg-shards N`). Each shard
+//! decodes only its own coordinate range of every upload through
+//! [`quant::UpdateCodec::decode_range`] and replays the batch in order,
+//! so results are **bit-identical for every shard count** — see the
+//! [`coordinator::aggregate`] module docs for the determinism contract.
+//! All three transports (`InProcess`, `AsyncSim`, `net::Tcp`) reuse the
+//! one sharded path inside [`coordinator::RoundEngine`]. The
+//! ≥1M-parameter `aggregate` micro-bench publishes its throughput as
+//! `BENCH_aggregate.json` on every CI push, gated against
+//! `rust/benches/baseline/` by `python/bench_check.py`.
+//!
 //! ```ignore
 //! let mut engine = RustEngine::new(kind, batch, eval_n)?;
 //! let result = ServerBuilder::new(cfg)

@@ -28,11 +28,12 @@ USAGE:
   fedpaq train [--config FILE.json] [--model NAME] [--dataset D] [--nodes N]
                [--per-node M] [--r R] [--tau TAU] [--t T] [--s S] [--elias]
                [--topk PERMILLE] [--lr ETA] [--ratio X] [--seed SEED]
-               [--engine pjrt|rust]
+               [--engine pjrt|rust] [--agg-shards N] [--out-json FILE]
                [--async-rounds] [--buffer-size B] [--max-staleness S]
                [--staleness-rule uniform|polynomial] [--staleness-a A]
   (a leading flag implies `train`: `fedpaq --async-rounds --buffer-size 4`)
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
+                [--agg-shards N]
   fedpaq worker [--connect ADDR]
   fedpaq quantize-check [--s S] [--seed SEED]
   fedpaq info
@@ -143,7 +144,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "train" => {
-            let cfg = if let Some(path) = flags.get("config") {
+            let mut cfg = if let Some(path) = flags.get("config") {
                 ExperimentConfig::from_json_file(Path::new(path))?
             } else {
                 let model = flags.get_or("model", "logreg");
@@ -216,6 +217,7 @@ fn main() -> anyhow::Result<()> {
                     buffer_size,
                     max_staleness,
                     staleness_rule,
+                    agg_shards: 1,
                 }
                 .validated()?;
                 let async_label = if cfg.async_rounds {
@@ -227,6 +229,15 @@ fn main() -> anyhow::Result<()> {
                     format!("{} {codec_label} r={r} tau={tau}{async_label}", cfg.model);
                 cfg
             };
+            // Shard count is an execution knob, not an experiment
+            // parameter (results are bit-identical for every value), so
+            // the flag also overrides config files.
+            if let Some(v) = flags.get("agg-shards") {
+                cfg.agg_shards = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--agg-shards {v}: {e}"))?;
+                cfg = cfg.validated()?;
+            }
             let mut runner = Runner::new(cfg.engine.clone(), &artifacts);
             let res = runner.run_config(cfg.clone())?;
             println!("run: {}", cfg.name);
@@ -241,6 +252,13 @@ fn main() -> anyhow::Result<()> {
                     p.round, p.iterations, p.time, p.loss
                 );
             }
+            // Machine-readable RunResult dump (what the CI determinism
+            // leg byte-diffs across seeds and --agg-shards values).
+            if let Some(path) = flags.get("out-json") {
+                std::fs::write(path, res.to_json().to_string_pretty())
+                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                println!("wrote {path}");
+            }
             if let Some(dir) = flags.get("out") {
                 let mut fig = fedpaq::metrics::FigureData::new("train", &cfg.name);
                 fig.curves.push(res.curve);
@@ -249,11 +267,17 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "leader" => {
-            let cfg = match flags.get("config") {
+            let mut cfg = match flags.get("config") {
                 Some(path) => ExperimentConfig::from_json_file(Path::new(path))?,
                 None => ExperimentConfig::fig1_logreg_base(),
             }
             .with_engine(flags.engine()?);
+            if let Some(v) = flags.get("agg-shards") {
+                cfg.agg_shards = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--agg-shards {v}: {e}"))?;
+                cfg = cfg.validated()?;
+            }
             let bind = flags.get_or("bind", "127.0.0.1:7070");
             let workers: usize = flags.parse_num("workers", 2usize)?;
             let mut engine = fedpaq::net::worker::build_engine(&cfg, &artifacts)?;

@@ -1,7 +1,11 @@
 //! Leader entry point: the distributed protocol is just the shared
 //! [`RoundEngine`](crate::coordinator::RoundEngine) driven through the
 //! [`Tcp`](super::Tcp) transport — the round loop itself lives in
-//! `coordinator::engine`, identical to the simulation path.
+//! `coordinator::engine`, identical to the simulation path. That
+//! includes sharded aggregation: `cfg.agg_shards > 1` fans the leader's
+//! accumulate/apply across scoped threads with bit-identical results
+//! (the `coordinator::aggregate` determinism contract), so a distributed
+//! run and its simulated replay can use different shard counts freely.
 
 use super::transport::Tcp;
 use crate::config::ExperimentConfig;

@@ -92,6 +92,21 @@ impl BitBuf {
     pub fn reader(&self) -> BitReader<'_> {
         BitReader { buf: self, pos: 0 }
     }
+
+    /// Reader positioned at an arbitrary bit offset — the random-access
+    /// entry point fixed-width codecs use to decode a coordinate range
+    /// without scanning the prefix ([`UpdateCodec::decode_range`]
+    /// seeking).
+    ///
+    /// [`UpdateCodec::decode_range`]: crate::quant::UpdateCodec::decode_range
+    pub fn reader_at(&self, bit: u64) -> crate::Result<BitReader<'_>> {
+        anyhow::ensure!(
+            bit <= self.len,
+            "bit offset {bit} beyond stream length {}",
+            self.len
+        );
+        Ok(BitReader { buf: self, pos: bit })
+    }
 }
 
 /// Sequential bit reader over a [`BitBuf`].
@@ -171,6 +186,27 @@ mod tests {
         for i in 0..100u64 {
             assert_eq!(r.read_bits(7), i & 0x7f);
         }
+    }
+
+    #[test]
+    fn reader_at_matches_sequential_read() {
+        let mut w = BitWriter::new();
+        for i in 0..64u64 {
+            w.write_bits(i * 2654435761, 13);
+        }
+        let buf = w.finish();
+        for start in [0u64, 1, 13, 63, 64, 65, 13 * 37] {
+            let mut seq = buf.reader();
+            let mut burned = 0u64;
+            while burned < start {
+                let n = (start - burned).min(64) as u32;
+                seq.read_bits(n);
+                burned += n as u64;
+            }
+            let mut ra = buf.reader_at(start).unwrap();
+            assert_eq!(ra.read_bits(13), seq.read_bits(13), "start {start}");
+        }
+        assert!(buf.reader_at(buf.len_bits() + 1).is_err());
     }
 
     #[test]

@@ -152,6 +152,38 @@ pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
     /// `1 − k/p` here, which bounds the same error ratio.
     fn variance_q(&self, p: usize) -> f64;
 
+    /// Decode only coordinates `lo..hi` of `enc` into `out` (cleared and
+    /// refilled to exactly `hi − lo` values), **bit-identical** to slicing
+    /// a full [`UpdateCodec::decode_into`] result at `lo..hi`.
+    ///
+    /// This is the seam sharded aggregation
+    /// ([`Aggregator::push_batch`](crate::coordinator::aggregate::Aggregator::push_batch))
+    /// splits uploads on: disjoint ranges of one `Encoded` buffer are
+    /// decoded concurrently, one per shard thread, so the built-in
+    /// overrides avoid materializing all `p` coordinates per shard —
+    /// fixed-width codings seek straight to `lo`, Elias codings skip-scan
+    /// the prefix without the float reconstruction, and top-k streams
+    /// filter their sparse `(index, value)` pairs against the range.
+    ///
+    /// The provided default decodes everything and copies the slice out:
+    /// correct for any codec (it is the only behavior available for
+    /// out-of-tree [`CodecSpec::External`] impls that don't override),
+    /// just without the partial-decode savings.
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        check_range(enc.p, lo, hi)?;
+        let mut full = Vec::with_capacity(enc.p);
+        self.decode_into(enc, &mut full)?;
+        out.clear();
+        out.extend_from_slice(&full[lo..hi]);
+        Ok(())
+    }
+
     /// Decode into a fresh vector (allocating convenience wrapper).
     fn decode(&self, enc: &Encoded) -> crate::Result<Vec<f32>> {
         let mut out = Vec::new();
@@ -206,11 +238,25 @@ impl UpdateCodec for IdentityCodec {
     }
 
     fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        // One decode implementation: the full decode is the 0..p range,
+        // so the range and full paths can never drift apart.
+        self.decode_range(enc, 0, enc.p, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         check_spec(self.spec(), enc)?;
-        let mut r = enc.buf.reader();
+        check_range(enc.p, lo, hi)?;
+        // Fixed-width stream: coordinate i lives at bit 32·i exactly.
+        let mut r = enc.buf.reader_at(32 * lo as u64)?;
         out.clear();
-        out.reserve(enc.p);
-        for _ in 0..enc.p {
+        out.reserve(hi - lo);
+        for _ in lo..hi {
             out.push(r.read_f32());
         }
         Ok(())
@@ -273,15 +319,43 @@ impl UpdateCodec for QsgdCodec {
     }
 
     fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        // One decode implementation: the full decode is the 0..p range,
+        // so the range and full paths can never drift apart.
+        self.decode_range(enc, 0, enc.p, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         check_spec(self.spec(), enc)?;
+        check_range(enc.p, lo, hi)?;
         let (s, coding) = (self.s, self.coding);
-        let mut r = enc.buf.reader();
-        let norm = r.read_f32();
         let nb = level_bits(s);
         let sf = s as f32;
+        let mut r = match coding {
+            // Fixed-width fields: coordinate i starts at bit
+            // 32 + i·(1 + nb) — seek straight there.
+            Coding::Naive => enc.buf.reader_at(32 + lo as u64 * (1 + nb as u64))?,
+            // Variable-width codes can't be addressed, but the prefix can
+            // be *skipped*: advance through the first `lo` codes without
+            // reconstructing any float (the scan is pure bit reads).
+            Coding::Elias => {
+                let mut r = enc.buf.reader_at(32)?;
+                for _ in 0..lo {
+                    r.read_bit();
+                    elias::decode_omega(&mut r);
+                }
+                r
+            }
+        };
+        let norm = enc.buf.reader().read_f32();
         out.clear();
-        out.reserve(enc.p);
-        for _ in 0..enc.p {
+        out.reserve(hi - lo);
+        for _ in lo..hi {
             let sign = r.read_bit();
             let level = match coding {
                 Coding::Naive => r.read_bits(nb),
@@ -386,11 +460,29 @@ impl UpdateCodec for TopKCodec {
     }
 
     fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        // One decode implementation: the full decode is the 0..p range,
+        // so the range and full paths can never drift apart.
+        self.decode_range(enc, 0, enc.p, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         check_spec(self.spec(), enc)?;
+        check_range(enc.p, lo, hi)?;
         let p = enc.p;
         let k = self.k_of(p);
         out.clear();
-        out.resize(p, 0.0);
+        out.resize(hi - lo, 0.0);
+        // The stream is k sparse (index, value) pairs in ascending index
+        // order: scan them all (k ≪ p), keep the ones inside `lo..hi`.
+        // The full-stream scan preserves the ascending/unique/in-range
+        // frame validation for every range, so a corrupt upload is
+        // rejected identically whichever entry point sees it.
         let mut r = enc.buf.reader();
         let nb = index_bits(p);
         let mut prev: u64 = 0;
@@ -416,7 +508,10 @@ impl UpdateCodec for TopKCodec {
             prev = i;
             let i = i as usize;
             anyhow::ensure!(i < p, "top-k index {i} out of range 0..{p}");
-            out[i] = r.read_f32();
+            let v = r.read_f32();
+            if i >= lo && i < hi {
+                out[i - lo] = v;
+            }
         }
         Ok(())
     }
@@ -445,6 +540,16 @@ impl UpdateCodec for TopKCodec {
 }
 
 // ---------------- shared helpers ----------------
+
+/// Validate a [`UpdateCodec::decode_range`] request against the upload's
+/// coordinate count.
+fn check_range(p: usize, lo: usize, hi: usize) -> crate::Result<()> {
+    anyhow::ensure!(
+        lo <= hi && hi <= p,
+        "decode_range {lo}..{hi} invalid for a {p}-coordinate upload"
+    );
+    Ok(())
+}
 
 fn check_spec(expect: CodecSpec, enc: &Encoded) -> crate::Result<()> {
     anyhow::ensure!(
@@ -680,6 +785,38 @@ mod tests {
         assert!(ext.variance_q(100).is_nan());
         assert_ne!(ext, CodecSpec::Identity);
         assert_ne!(ext, CodecSpec::External { id: 8 });
+    }
+
+    #[test]
+    fn decode_range_matches_full_decode_slice() {
+        // Every built-in codec/coding, a spread of split points including
+        // the empty and full ranges and word-boundary-unfriendly offsets.
+        let p = 257;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.37).sin() * 3.0).collect();
+        let codecs: Vec<Box<dyn UpdateCodec>> = vec![
+            Box::new(IdentityCodec),
+            Box::new(QsgdCodec { s: 1, coding: Coding::Naive }),
+            Box::new(QsgdCodec { s: 5, coding: Coding::Naive }),
+            Box::new(QsgdCodec { s: 5, coding: Coding::Elias }),
+            Box::new(TopKCodec { k_permille: 200, coding: Coding::Naive }),
+            Box::new(TopKCodec { k_permille: 200, coding: Coding::Elias }),
+        ];
+        for q in &codecs {
+            let enc = q.encode(&x, &mut rng(11));
+            let full = q.decode(&enc).unwrap();
+            let mut out = Vec::new();
+            for (lo, hi) in [(0, p), (0, 0), (p, p), (0, 1), (63, 129), (200, p), (7, 8)] {
+                q.decode_range(&enc, lo, hi, &mut out)
+                    .unwrap_or_else(|e| panic!("{:?} {lo}..{hi}: {e}", q.spec()));
+                assert_eq!(out.len(), hi - lo, "{:?} {lo}..{hi}", q.spec());
+                assert_eq!(out, &full[lo..hi], "{:?} {lo}..{hi}", q.spec());
+            }
+            // Out-of-range and inverted requests are rejected.
+            assert!(q.decode_range(&enc, 0, p + 1, &mut out).is_err());
+            assert!(q.decode_range(&enc, 5, 4, &mut out).is_err());
+            // Mismatched codec configs are rejected through this entry too.
+            assert!(QsgdCodec::new(9).decode_range(&enc, 0, 1, &mut out).is_err());
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Tiny measurement harness for the `rust/benches/` targets (criterion is
 //! unavailable offline). Warmup + N timed samples, robust statistics,
-//! criterion-style terminal output, optional throughput, and a JSON record
-//! appended under `target/bench-results/` so EXPERIMENTS.md §Perf can cite
-//! exact numbers.
+//! criterion-style terminal output, optional throughput, and a
+//! machine-readable `BENCH_<group>.json` record written under
+//! `target/bench-results/` (override the directory with
+//! `FEDPAQ_BENCH_OUT`) so EXPERIMENTS.md §Perf can cite exact numbers and
+//! CI can diff throughput against the committed baselines
+//! (`rust/benches/baseline/`, checked by `python/bench_check.py`).
 
 use std::time::{Duration, Instant};
 
@@ -27,6 +30,18 @@ pub struct Record {
     pub samples: usize,
     pub iters_per_sample: u64,
     pub throughput_bytes: Option<u64>,
+    /// Elements (e.g. parameters aggregated) processed per iteration —
+    /// the unit the CI regression gate compares, since elements/second is
+    /// stable across codec bit widths while bytes/second is not.
+    pub throughput_elems: Option<u64>,
+}
+
+impl Record {
+    /// Elements processed per second (median-based; the regression-gate
+    /// metric). `None` without a [`Record::throughput_elems`] annotation.
+    pub fn elems_per_sec(&self) -> Option<f64> {
+        self.throughput_elems.map(|e| e as f64 * 1e9 / self.median_ns)
+    }
 }
 
 impl Group {
@@ -50,14 +65,26 @@ impl Group {
 
     /// Measure `f`, auto-calibrating iterations per sample.
     pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
-        self.bench_throughput(name, None, f)
+        self.bench_annotated(name, None, None, f)
     }
 
     /// Measure with a bytes-processed-per-iteration annotation.
-    pub fn bench_throughput<F: FnMut()>(
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, bytes: Option<u64>, f: F) {
+        self.bench_annotated(name, bytes, None, f)
+    }
+
+    /// Measure with an elements-processed-per-iteration annotation (the
+    /// unit the CI bench-regression gate compares).
+    pub fn bench_elems<F: FnMut()>(&mut self, name: &str, elems: u64, f: F) {
+        self.bench_annotated(name, None, Some(elems), f)
+    }
+
+    /// Measure with explicit throughput annotations.
+    pub fn bench_annotated<F: FnMut()>(
         &mut self,
         name: &str,
         bytes: Option<u64>,
+        elems: Option<u64>,
         mut f: F,
     ) {
         // Calibrate: run once, then scale to ~target_time/sample_size.
@@ -98,37 +125,50 @@ impl Group {
             samples: self.sample_size,
             iters_per_sample: iters,
             throughput_bytes: bytes,
+            throughput_elems: elems,
         };
         println!("{}", rec.render());
         self.results.push(rec);
     }
 
-    /// Print & persist the group's results; call at the end of the bench.
-    pub fn finish(self) {
-        let dir = std::path::Path::new("target/bench-results");
-        let _ = std::fs::create_dir_all(dir);
-        let path = dir.join(format!("{}.json", self.name.replace('/', "_")));
-        let arr = crate::util::json::Json::Arr(
-            self.results
-                .iter()
-                .map(|r| {
-                    crate::util::json::Json::obj(vec![
-                        ("group", crate::util::json::Json::str(&r.group)),
-                        ("name", crate::util::json::Json::str(&r.name)),
-                        ("mean_ns", crate::util::json::Json::num(r.mean_ns)),
-                        ("median_ns", crate::util::json::Json::num(r.median_ns)),
-                        ("stddev_ns", crate::util::json::Json::num(r.stddev_ns)),
-                        (
-                            "throughput_bytes",
-                            r.throughput_bytes
-                                .map(|b| crate::util::json::Json::num(b as f64))
-                                .unwrap_or(crate::util::json::Json::Null),
-                        ),
-                    ])
-                })
-                .collect(),
-        );
-        let _ = std::fs::write(path, arr.to_string_pretty());
+    /// Print & persist the group's results as
+    /// `<out>/BENCH_<group>.json`; call at the end of the bench. `out` is
+    /// `target/bench-results` unless `FEDPAQ_BENCH_OUT` overrides it.
+    /// Returns the written path (`None` if writing failed — benches keep
+    /// their measurements on stdout either way).
+    pub fn finish(self) -> Option<std::path::PathBuf> {
+        use crate::util::json::Json;
+        let dir = std::env::var_os("FEDPAQ_BENCH_OUT")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("target/bench-results"));
+        if std::fs::create_dir_all(&dir).is_err() {
+            return None;
+        }
+        let path = dir.join(format!("BENCH_{}.json", self.name.replace('/', "_")));
+        let records = self
+            .results
+            .iter()
+            .map(|r| {
+                let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("mean_ns", Json::num(r.mean_ns)),
+                    ("median_ns", Json::num(r.median_ns)),
+                    ("stddev_ns", Json::num(r.stddev_ns)),
+                    ("samples", Json::num(r.samples as f64)),
+                    ("iters_per_sample", Json::num(r.iters_per_sample as f64)),
+                    ("throughput_bytes", opt(r.throughput_bytes.map(|b| b as f64))),
+                    ("throughput_elems", opt(r.throughput_elems.map(|e| e as f64))),
+                    ("elems_per_sec", opt(r.elems_per_sec())),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("group", Json::str(&self.name)),
+            ("records", Json::Arr(records)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty()).ok()?;
+        Some(path)
     }
 }
 
@@ -158,6 +198,9 @@ impl Record {
         if let Some(b) = self.throughput_bytes {
             let gbps = b as f64 / self.mean_ns; // bytes/ns == GB/s
             line.push_str(&format!("  thrpt: {gbps:.3} GB/s"));
+        }
+        if let Some(eps) = self.elems_per_sec() {
+            line.push_str(&format!("  thrpt: {:.1} Melem/s", eps / 1e6));
         }
         line
     }

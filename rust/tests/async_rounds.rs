@@ -31,6 +31,7 @@ fn base_cfg() -> ExperimentConfig {
         buffer_size: 0,
         max_staleness: 8,
         staleness_rule: StalenessRule::Uniform,
+        agg_shards: 1,
     }
 }
 
@@ -134,6 +135,21 @@ fn staleness_damping_trains_with_stale_uploads_in_the_mix() {
     for p in &res.curve.points {
         assert!(p.time > t || (p.round == 0 && p.time == 0.0), "time not monotone");
         t = p.time;
+    }
+}
+
+#[test]
+fn sharded_async_aggregation_is_bit_identical_to_single_shard() {
+    // The sharded-aggregation contract on the async path, where staleness
+    // weights ≠ 1 exercise the weighted accumulation branch: shard count
+    // must never move a bit of the RunResult.
+    let cfg = base_cfg()
+        .with_async(2, 12)
+        .with_staleness_rule(StalenessRule::inverse());
+    let one = run(cfg.clone());
+    for shards in [2usize, 5, 16] {
+        let sharded = run(cfg.clone().with_agg_shards(shards));
+        assert_identical(&one, &sharded);
     }
 }
 

@@ -34,6 +34,7 @@ fn cluster_cfg(seed: u64) -> ExperimentConfig {
         buffer_size: 0,
         max_staleness: 8,
         staleness_rule: Default::default(),
+        agg_shards: 1,
     }
 }
 

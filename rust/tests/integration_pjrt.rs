@@ -219,6 +219,7 @@ fn pjrt_fedpaq_run_decreases_loss_and_matches_shape() {
         buffer_size: 0,
         max_staleness: 8,
         staleness_rule: Default::default(),
+        agg_shards: 1,
     };
     let res = runner.run_config(cfg).unwrap();
     let first = res.curve.points.first().unwrap().loss;
@@ -250,6 +251,7 @@ fn pjrt_and_rust_engines_agree_on_full_logreg_run() {
         buffer_size: 0,
         max_staleness: 8,
         staleness_rule: Default::default(),
+        agg_shards: 1,
     };
     let client = client();
     let mut pjrt = PjrtEngine::load(&client, &dir, "logreg").unwrap();

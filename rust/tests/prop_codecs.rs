@@ -154,3 +154,39 @@ fn prop_decode_into_reuses_buffer_and_matches_decode() {
         }
     });
 }
+
+#[test]
+fn prop_decode_range_matches_full_decode_slice() {
+    // The sharded-aggregation contract: for every codec, decoding any
+    // `lo..hi` range — including the seek/skip-scan fast paths — is
+    // bit-identical to slicing the full decode, and a disjoint cover of
+    // ranges reassembles the full decode exactly.
+    check(60, 0xc0dec_e, |rng| {
+        let p = rng.gen_range(1, 800);
+        let x = random_vec(rng, p, 3.0);
+        let mut out: Vec<f32> = Vec::new();
+        for codec in all_codecs() {
+            let enc = codec.encode(&x, &mut rng.clone());
+            let full = codec.decode(&enc).unwrap();
+            // Random ranges, plus the degenerate empty and full ones.
+            let mut lo = rng.gen_range(0, p + 1);
+            let mut hi = rng.gen_range(0, p + 1);
+            if lo > hi {
+                std::mem::swap(&mut lo, &mut hi);
+            }
+            for (lo, hi) in [(lo, hi), (0, p), (0, 0), (p, p)] {
+                codec.decode_range(&enc, lo, hi, &mut out).unwrap();
+                assert_eq!(out, &full[lo..hi], "{:?} {lo}..{hi}", codec.spec());
+            }
+            // A disjoint cover reassembles the full vector.
+            let cut_a = rng.gen_range(0, p + 1);
+            let cut_b = rng.gen_range(cut_a, p + 1);
+            let mut reassembled = Vec::with_capacity(p);
+            for (lo, hi) in [(0, cut_a), (cut_a, cut_b), (cut_b, p)] {
+                codec.decode_range(&enc, lo, hi, &mut out).unwrap();
+                reassembled.extend_from_slice(&out);
+            }
+            assert_eq!(reassembled, full, "{:?}", codec.spec());
+        }
+    });
+}

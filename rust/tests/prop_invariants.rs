@@ -6,9 +6,11 @@
 
 use fedpaq::config::ExperimentConfig;
 use fedpaq::coordinator::sampler::sample_nodes;
-use fedpaq::coordinator::StalenessRule;
+use fedpaq::coordinator::{Aggregator, ShardPlan, StalenessRule};
 use fedpaq::data::{BatchSampler, Partition};
-use fedpaq::quant::{bitstream::BitWriter, elias, l2_norm, CodecSpec, Coding, QsgdCodec, UpdateCodec};
+use fedpaq::quant::{
+    bitstream::BitWriter, elias, l2_norm, CodecSpec, Coding, Encoded, QsgdCodec, UpdateCodec,
+};
 use fedpaq::util::json::Json;
 use fedpaq::util::prop::check;
 use fedpaq::util::rng::Rng;
@@ -158,6 +160,82 @@ fn prop_batch_sampler_deterministic_and_in_range() {
 }
 
 #[test]
+fn prop_sharded_aggregation_bit_identical_to_single_shard() {
+    // The aggregate module's determinism contract: for any batch of
+    // uploads (any codec, any staleness weights), any shard count yields
+    // byte-for-byte the model the sequential single-shard loop produces —
+    // sums, ledgers and the applied parameters alike.
+    check(60, 0xfed_b4, |rng| {
+        let p = rng.gen_range(1, 2500);
+        let codec: Box<dyn UpdateCodec> = match rng.gen_range(0, 5) {
+            0 => CodecSpec::Identity,
+            1 => CodecSpec::qsgd(rng.gen_range(1, 16) as u32),
+            2 => CodecSpec::Qsgd {
+                s: rng.gen_range(1, 16) as u32,
+                coding: Coding::Elias,
+            },
+            3 => CodecSpec::TopK {
+                k_permille: rng.gen_range(1, 1001) as u16,
+                coding: Coding::Naive,
+            },
+            _ => CodecSpec::TopK {
+                k_permille: rng.gen_range(1, 1001) as u16,
+                coding: Coding::Elias,
+            },
+        }
+        .build()
+        .unwrap();
+        let rule = match rng.gen_range(0, 3) {
+            0 => StalenessRule::Uniform,
+            1 => StalenessRule::inverse(),
+            _ => StalenessRule::Polynomial { a: 0.5 },
+        };
+        let n_uploads = rng.gen_range(1, 7);
+        let uploads: Vec<(Encoded, f64)> = (0..n_uploads)
+            .map(|_| {
+                let x = random_vec(rng, p, 2.0);
+                let staleness = rng.gen_range(0, 6);
+                let enc = codec.encode(&x, &mut rng.clone());
+                rng.next_u64(); // decorrelate the per-upload RNG clones
+                (enc, rule.weight(staleness))
+            })
+            .collect();
+        let batch: Vec<(&Encoded, f64)> = uploads.iter().map(|(e, w)| (e, *w)).collect();
+        let params0 = random_vec(rng, p, 1.0);
+
+        // Reference: the sequential streaming path.
+        let mut reference = Aggregator::new(p);
+        for &(enc, w) in &batch {
+            reference.push_weighted(codec.as_ref(), enc, w).unwrap();
+        }
+        let mut want = params0.clone();
+        reference.apply(&mut want).unwrap();
+
+        for shards in [2, 3, rng.gen_range(2, 24)] {
+            let plan = ShardPlan::new(p, shards);
+            let mut agg = Aggregator::new(p);
+            agg.push_batch(codec.as_ref(), &batch, &plan).unwrap();
+            assert_eq!(agg.count(), reference.count(), "shards={shards}");
+            assert_eq!(agg.upload_bits(), reference.upload_bits());
+            assert_eq!(
+                agg.weight_sum().to_bits(),
+                reference.weight_sum().to_bits(),
+                "shards={shards}"
+            );
+            let mut got = params0.clone();
+            agg.apply_sharded(&mut got, &plan).unwrap();
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "shards={shards} param {i}: {a} != {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_config_json_roundtrip() {
     check(120, 0xfed_b1, |rng| {
         let mut cfg = ExperimentConfig::fig1_logreg_base();
@@ -179,6 +257,7 @@ fn prop_config_json_roundtrip() {
                 coding: if rng.gen_bool(0.5) { Coding::Elias } else { Coding::Naive },
             },
         };
+        cfg.agg_shards = rng.gen_range(1, 17);
         if rng.gen_bool(0.5) {
             cfg.async_rounds = true;
             cfg.buffer_size = rng.gen_range(0, cfg.r + 1); // 0 = full barrier

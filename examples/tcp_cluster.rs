@@ -45,18 +45,14 @@ fn main() -> anyhow::Result<()> {
     // Worker role: `tcp_cluster --worker <addr>`.
     if args.get(1).map(String::as_str) == Some("--worker") {
         let addr = args.get(2).cloned().unwrap_or("127.0.0.1:7071".into());
-        // The parent spawns workers before its listener is up: retry.
-        for attempt in 0..200 {
-            match fedpaq::net::run_worker(&addr, Path::new("artifacts")) {
-                Ok(()) => return Ok(()),
-                Err(e) if e.to_string().contains("connect") => {
-                    let _ = attempt;
-                    std::thread::sleep(std::time::Duration::from_millis(50));
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        anyhow::bail!("worker could not reach the leader at {addr}");
+        // The parent spawns workers before its listener is up: keep
+        // re-dialing through the shared retry helper.
+        return fedpaq::net::run_worker_retrying(
+            &addr,
+            Path::new("artifacts"),
+            Default::default(),
+            std::time::Duration::from_secs(10),
+        );
     }
 
     let n_workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);

@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Extract the time-free portion of a RunResult JSON dump.
+
+Networked runs (`fedpaq leader --out-json`) carry wall-clock `time` /
+`compute_time` / `comm_time` fields that differ between repeats; the rest
+of the dump — losses, iteration counts, uploaded bits, drop/staleness
+telemetry, and the exact final parameters — is a deterministic function
+of `(config, seed)` for the barrier protocol and for the degenerate
+buffered-async protocol (`buffer_size == r`, `max_staleness == 0`).
+
+The CI async-TCP leg byte-diffs this extraction between repeat cluster
+runs and against the in-process simulation's dump of the same config.
+
+Usage: curve_extract.py RUN_RESULT.json   (extraction on stdout)
+"""
+
+import json
+import sys
+
+
+def extract(doc):
+    return {
+        "label": doc["curve"]["label"],
+        "points": [
+            {k: p[k] for k in ("round", "iterations", "bits_up", "loss")}
+            for p in doc["curve"]["points"]
+        ],
+        "rounds": [
+            {
+                k: r[k]
+                for k in ("round", "bits_up", "dropped", "staleness_max", "staleness_mean")
+            }
+            for r in doc["rounds"]
+        ],
+        "total_bits": doc["total_bits"],
+        "params": doc["params"],
+    }
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit(__doc__.strip())
+    with open(sys.argv[1]) as f:
+        doc = json.load(f)
+    json.dump(extract(doc), sys.stdout, indent=1, sort_keys=True)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,10 @@
 //!
 //! The *round protocol* (synchronous barrier vs FedBuff-style buffered
 //! async) **is** an experiment parameter — it changes what the model
-//! trains on — so it lives here:
+//! trains on — so it lives here. Every transport serves both protocols:
+//! async configs run on [`AsyncSim`](crate::coordinator::AsyncSim) in
+//! simulation and on [`TcpAsync`](crate::net::TcpAsync) over real
+//! sockets (`fedpaq leader` picks automatically):
 //!
 //! ```json
 //! "async_rounds": true,
@@ -108,7 +111,11 @@ pub struct ExperimentConfig {
     /// heterogeneity-extension ablation).
     pub partition: PartitionKind,
     /// Run FedBuff-style buffered-async rounds instead of the paper's
-    /// synchronous barrier (simulated transports only).
+    /// synchronous barrier. Served by
+    /// [`AsyncSim`](crate::coordinator::AsyncSim) in simulation and by
+    /// [`TcpAsync`](crate::net::TcpAsync) on a real cluster — both driven
+    /// by the same event-driven
+    /// [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner).
     pub async_rounds: bool,
     /// Async mode: uploads buffered per server commit. `0` means
     /// `|S_k| = r` (a full barrier's worth — the synchronous limit).
@@ -597,6 +604,7 @@ mod tests {
             "topk_logreg.json",
             "legacy_quantizer_key.json",
             "async_fedbuff_logreg.json",
+            "async_tcp_logreg.json",
         ] {
             ExperimentConfig::from_json_file(&dir.join(f))
                 .unwrap_or_else(|e| panic!("{f}: {e}"));

@@ -1,35 +1,30 @@
-//! [`AsyncSim`]: the buffered-async (FedBuff-style) simulated transport.
+//! [`AsyncSim`]: the buffered-async (FedBuff-style) simulated transport —
+//! a **virtual-time event source** over the shared
+//! [`CommitPlanner`](super::commit_loop::CommitPlanner) commit core.
 //!
 //! The synchronous [`InProcess`](super::InProcess) barrier charges every
 //! round the *slowest* sampled node's compute time — one straggler stalls
 //! all of `S_k`, exactly the systems bottleneck FedPAQ's partial
-//! participation is meant to relieve. `AsyncSim` removes the barrier:
+//! participation is meant to relieve. The buffered-async protocol removes
+//! the barrier; since the refactor onto the event-driven commit core, this
+//! module owns only the *time* half of it:
 //!
 //! * Every dispatched node finishes its τ local steps at its own
 //!   [`CostModel::node_compute_time`] draw; uploads land in a server-side
-//!   buffer ordered by **virtual completion time** (a discrete-event
+//!   queue ordered by **virtual completion time** (a discrete-event
 //!   simulation over the §5 cost model).
-//! * The server **commits** — averages the buffer into the model and bumps
-//!   its version `k` — as soon as [`buffer_size`](ExperimentConfig::buffer_size)
-//!   uploads arrive. Stragglers keep running across commits; their uploads
-//!   surface in later commit batches carrying `staleness = k − k_origin`.
-//! * Uploads staler than [`max_staleness`](ExperimentConfig::max_staleness)
-//!   are dropped at arrival (the node is immediately re-dispatched on the
-//!   current model, keeping `r` jobs in flight), and committed batches are
-//!   averaged under the config's
+//! * Each arrival is fed to the [`CommitPlanner`] as an
+//!   [`UploadArrived`](super::commit_loop::PlannerEvent) event; the
+//!   planner owns every protocol decision — when to commit
+//!   (`buffer_size` uploads in), what to drop (`staleness >
+//!   max_staleness`), and which node to re-dispatch on freed capacity,
+//!   never duplicating a `(node, version)` job. This transport merely
+//!   executes the returned [`Decision`]s on the virtual clock.
+//! * Committed batches are averaged under the config's
 //!   [`StalenessRule`](super::aggregate::StalenessRule) by the engine.
 //!
-//! ## Scheduling model
-//!
-//! Version 0 dispatches the full sampled set `S_0` (`r` jobs). Each commit
-//! consumes exactly `buffer_size` uploads and refills the same number of
-//! jobs — the first `buffer_size` entries of `S_{k+1}` (a partial
-//! Fisher–Yates prefix, itself a uniform sample) — so exactly `r` jobs are
-//! in flight at every instant, matching FedBuff's concurrency parameter
-//! `M_c = r`. A virtual node sampled into overlapping waves holds several
-//! outstanding jobs; each job's batch/quantizer RNG streams are keyed by
-//! `(seed, node, version)`, the same coordinates the synchronous path
-//! uses for round `k`.
+//! The same planner drives [`crate::net::TcpAsync`] over real sockets —
+//! identical protocol, real arrival order, wall-clock time.
 //!
 //! ## Time accounting
 //!
@@ -47,29 +42,28 @@
 //! wave's straggler (`max` over `S_k`), the batch sorts back into
 //! sampling order, and every weight is 1 — the run is **bit-identical**
 //! to [`InProcess`](super::InProcess) (asserted by
-//! `rust/tests/async_rounds.rs`).
+//! `rust/tests/async_rounds.rs`, which also pins this refactor to the
+//! pre-planner RunResults).
 
+use super::commit_loop::{CommitPlanner, Decision, PlannerEvent};
 use super::local::GatherBufs;
-use super::transport::{CommitTiming, RoundCtx, RoundOutcome, Transport, Upload, World};
+use super::transport::{CommitTiming, RoundCtx, RoundOutcome, Transport, World};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Partition};
 use crate::model::Engine;
 use crate::quant::{Encoded, UpdateCodec};
 use crate::simtime::CostModel;
-use crate::util::rng::Rng;
 use std::sync::Arc;
 
-/// One in-flight node job: dispatched at server version `origin_round`,
+/// One in-flight node job: dispatched at server version `version`,
 /// finishing at virtual time `finish` with upload `enc` already computed
 /// (the *result* depends only on the dispatch model/seeds; only its
-/// arrival time is simulated).
+/// arrival time is simulated). `slot` is the planner's canonical batch
+/// position, reused here as the deterministic arrival tie-break.
 #[derive(Debug)]
 struct Job {
     node: usize,
-    origin_round: usize,
-    /// Position within its dispatch wave — the canonical aggregation
-    /// order inside a commit batch (sampling order, so the synchronous
-    /// degeneration aggregates bit-identically to `InProcess`).
+    version: usize,
     slot: usize,
     finish: f64,
     enc: Encoded,
@@ -84,16 +78,8 @@ pub struct AsyncSim {
     cost: Option<CostModel>,
     /// Virtual clock: time of the last commit, uplink included.
     now: f64,
-    /// Server version = commits so far; mirrors the engine's round index.
-    version: usize,
-    in_flight: Vec<Job>,
-    /// Resolved commit threshold (`cfg.effective_buffer_size()`).
-    buffer_size: usize,
-    max_staleness: usize,
-    /// Stale uploads dropped so far (visible in logs at shutdown).
-    dropped: u64,
-    /// Stream counter for re-dispatch node draws after a drop.
-    redispatches: u64,
+    planner: Option<CommitPlanner>,
+    jobs: Vec<Job>,
 }
 
 impl AsyncSim {
@@ -109,14 +95,19 @@ impl AsyncSim {
 
     /// Total stale uploads dropped so far in this run.
     pub fn dropped(&self) -> u64 {
-        self.dropped
+        self.planner.as_ref().map_or(0, CommitPlanner::dropped)
     }
 
+    /// Execute one planner `Dispatch` decision on the virtual clock: run
+    /// the node's local work now (the upload is a pure function of the
+    /// dispatch model/seeds) and schedule its arrival at `at + compute`.
+    #[allow(clippy::too_many_arguments)]
     fn dispatch(
         &mut self,
         codec: &dyn UpdateCodec,
         engine: &mut dyn Engine,
         node: usize,
+        version: usize,
         slot: usize,
         at: f64,
         ctx: &RoundCtx<'_>,
@@ -127,40 +118,33 @@ impl AsyncSim {
             codec,
             engine,
             node,
-            ctx.round,
+            version,
             ctx.params,
             ctx.lrs,
             &mut self.bufs,
         )?;
-        let finish =
-            at + cost.node_compute_time(node, ctx.round, w.cfg.tau, engine.batch());
-        self.in_flight.push(Job {
-            node,
-            origin_round: ctx.round,
-            slot,
-            finish,
-            enc,
-        });
+        let finish = at + cost.node_compute_time(node, version, w.cfg.tau, engine.batch());
+        self.jobs.push(Job { node, version, slot, finish, enc });
         Ok(())
     }
 
-    /// Pop the next upload to arrive: minimum `(finish, origin, slot,
+    /// Pop the next upload to arrive: minimum `(finish, version, slot,
     /// node)` — total order, so event processing is deterministic even
     /// under exact time ties.
     fn pop_next(&mut self) -> Option<Job> {
         let idx = self
-            .in_flight
+            .jobs
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
                 a.finish
                     .total_cmp(&b.finish)
-                    .then(a.origin_round.cmp(&b.origin_round))
+                    .then(a.version.cmp(&b.version))
                     .then(a.slot.cmp(&b.slot))
                     .then(a.node.cmp(&b.node))
             })
             .map(|(i, _)| i)?;
-        Some(self.in_flight.swap_remove(idx))
+        Some(self.jobs.swap_remove(idx))
     }
 }
 
@@ -187,19 +171,9 @@ impl Transport for AsyncSim {
         // seeds draw identical per-(node, version) straggler times.
         let p = engine.kind().param_count();
         self.cost = Some(CostModel::with_ratio(cfg.ratio, p, cfg.seed));
-        self.buffer_size = cfg.effective_buffer_size();
-        anyhow::ensure!(
-            (1..=cfg.r).contains(&self.buffer_size),
-            "buffer_size {} must be in 1..=r={}",
-            self.buffer_size,
-            cfg.r
-        );
-        self.max_staleness = cfg.max_staleness;
+        self.planner = Some(CommitPlanner::new(cfg)?);
         self.now = 0.0;
-        self.version = 0;
-        self.in_flight.clear();
-        self.dropped = 0;
-        self.redispatches = 0;
+        self.jobs.clear();
         Ok(())
     }
 
@@ -210,113 +184,78 @@ impl Transport for AsyncSim {
         engine: &mut dyn Engine,
     ) -> crate::Result<RoundOutcome> {
         anyhow::ensure!(self.world.is_some(), "AsyncSim::round before setup");
+        let planner = self.planner.as_mut().expect("planner built in setup");
         anyhow::ensure!(
-            ctx.round == self.version,
+            ctx.round == planner.version(),
             "AsyncSim expects sequential rounds: got {} at version {}",
             ctx.round,
-            self.version
+            planner.version()
         );
-        // Refill wave at the current model: the whole sampled set at
-        // version 0, then `buffer_size` jobs per commit (exactly what the
-        // previous commit consumed), keeping r jobs in flight.
-        let wave = if ctx.round == 0 {
-            ctx.nodes.len()
-        } else {
-            self.buffer_size
-        };
-        anyhow::ensure!(wave <= ctx.nodes.len(), "sampled set smaller than wave");
+        // Refill wave at the current model (planner decides its size:
+        // the whole sampled set at version 0, then `buffer_size` jobs per
+        // commit, keeping r jobs in flight).
+        let wave = planner.begin_version(ctx.nodes)?;
         let now = self.now;
-        for (slot, &node) in ctx.nodes[..wave].iter().enumerate() {
-            self.dispatch(codec, engine, node, slot, now, ctx)?;
+        for d in wave {
+            match d {
+                Decision::Dispatch { node, version, slot } => {
+                    self.dispatch(codec, engine, node, version, slot, now, ctx)?
+                }
+                other => anyhow::bail!("unexpected wave decision {other:?}"),
+            }
         }
-        let n_nodes = self.world.as_ref().unwrap().cfg.n_nodes;
-        let seed = self.world.as_ref().unwrap().cfg.seed;
 
-        // Discrete-event loop: absorb arrivals until the buffer fills.
-        let mut buffer: Vec<Job> = Vec::with_capacity(self.buffer_size);
-        let commit_arrival;
+        // Discrete-event loop: absorb arrivals until the planner commits.
         loop {
             let job = self
                 .pop_next()
                 .ok_or_else(|| anyhow::anyhow!("async sim starved: no jobs in flight"))?;
-            let staleness = ctx.round - job.origin_round;
-            if staleness > self.max_staleness {
-                // Too stale: discard, re-dispatch the freed capacity on
-                // the current model at the arrival instant. The node draw
-                // comes from a dedicated deterministic stream; nodes that
-                // already hold a job at this version are skipped (a
-                // duplicate `(node, version)` job would replay identical
-                // RNG streams and double-count that node's update). A
-                // free node always exists: at most `r − 1` jobs are live
-                // at this point and `r ≤ n`.
-                self.dropped += 1;
-                let mut rng = Rng::from_coords(seed, &[5, self.redispatches]);
-                self.redispatches += 1;
-                let start = rng.gen_range(0, n_nodes);
-                let node = (0..n_nodes)
-                    .map(|i| (start + i) % n_nodes)
-                    .find(|&cand| {
-                        !self
-                            .in_flight
-                            .iter()
-                            .chain(buffer.iter())
-                            .any(|j| j.node == cand && j.origin_round == ctx.round)
-                    })
-                    .ok_or_else(|| {
-                        anyhow::anyhow!("no free node to re-dispatch after stale drop")
-                    })?;
-                // Slots after the wave keep replacement uploads ordered
-                // deterministically behind the wave's in any later batch.
-                let slot = ctx.nodes.len() + self.redispatches as usize;
-                let at = job.finish;
-                self.dispatch(codec, engine, node, slot, at, ctx)?;
-                continue;
-            }
-            let finish = job.finish;
-            buffer.push(job);
-            if buffer.len() == self.buffer_size {
-                commit_arrival = finish;
-                break;
+            let arrival = job.finish;
+            let decisions =
+                self.planner.as_mut().unwrap().on_event(PlannerEvent::UploadArrived {
+                    node: job.node,
+                    version: job.version,
+                    enc: job.enc,
+                })?;
+            for d in decisions {
+                match d {
+                    // Discarded stale upload: charged no uplink time (see
+                    // the module docs); its replacement dispatches at the
+                    // drop's arrival instant.
+                    Decision::Drop { .. } => {}
+                    Decision::Dispatch { node, version, slot } => {
+                        self.dispatch(codec, engine, node, version, slot, arrival, ctx)?
+                    }
+                    Decision::Commit { uploads, dropped } => {
+                        let cost = self.cost.as_ref().unwrap();
+                        let comm_time = cost.round_comm_time(
+                            &uploads.iter().map(|u| u.enc.bits()).collect::<Vec<_>>(),
+                        );
+                        // Arrivals can predate the previous commit's
+                        // uplink completing (they were in flight during
+                        // it): the clock stays monotone.
+                        let commit_start = arrival.max(self.now);
+                        let compute_time = commit_start - self.now;
+                        self.now = commit_start + comm_time;
+                        return Ok(RoundOutcome {
+                            uploads,
+                            timing: Some(CommitTiming { compute_time, comm_time }),
+                            dropped,
+                        });
+                    }
+                }
             }
         }
-
-        // Commit: canonical aggregation order is (origin version, slot) —
-        // for a full-barrier buffer this is exactly S_k in sampling order.
-        buffer.sort_by(|a, b| {
-            a.origin_round.cmp(&b.origin_round).then(a.slot.cmp(&b.slot))
-        });
-        let cost = self.cost.as_ref().unwrap();
-        let comm_time = cost
-            .round_comm_time(&buffer.iter().map(|j| j.enc.bits()).collect::<Vec<_>>());
-        // Arrivals can predate the previous commit's uplink completing
-        // (they were in flight during it): the clock stays monotone.
-        let commit_start = commit_arrival.max(self.now);
-        let compute_time = commit_start - self.now;
-        self.now = commit_start + comm_time;
-        self.version += 1;
-        let uploads = buffer
-            .into_iter()
-            .map(|j| Upload {
-                node: j.node,
-                origin_round: j.origin_round,
-                staleness: ctx.round - j.origin_round,
-                enc: j.enc,
-            })
-            .collect();
-        Ok(RoundOutcome {
-            uploads,
-            timing: Some(CommitTiming { compute_time, comm_time }),
-        })
     }
 
     fn shutdown(&mut self) -> crate::Result<()> {
-        if self.dropped > 0 {
+        if self.dropped() > 0 {
             eprintln!(
-                "[async-sim] run complete: {} stale upload(s) dropped (max_staleness={})",
-                self.dropped, self.max_staleness
+                "[async-sim] run complete: {} stale upload(s) dropped",
+                self.dropped()
             );
         }
-        self.in_flight.clear();
+        self.jobs.clear();
         Ok(())
     }
 }
@@ -385,7 +324,7 @@ mod tests {
         assert!(clock > 0.0);
         // Steady state: r jobs in flight after every commit+refill cycle
         // (wave 0 dispatched r, each commit consumed and refilled b).
-        assert_eq!(t.in_flight.len(), cfg.r - cfg.buffer_size);
+        assert_eq!(t.jobs.len(), cfg.r - cfg.buffer_size);
         t.shutdown().unwrap();
     }
 
@@ -416,6 +355,7 @@ mod tests {
         t.setup(&cfg, &mut eng).unwrap();
         let lrs = vec![0.3f32; cfg.tau];
         let mut committed = std::collections::HashSet::new();
+        let mut dropped_seen = 0;
         for k in 0..4 {
             let nodes = crate::coordinator::sampler::sample_nodes(
                 cfg.n_nodes, cfg.r, cfg.seed, k,
@@ -424,6 +364,7 @@ mod tests {
             let out = t.round(&ctx, codec.as_ref(), &mut eng).unwrap();
             assert_eq!(out.uploads.len(), cfg.buffer_size);
             assert!(out.uploads.iter().all(|u| u.staleness == 0));
+            dropped_seen += out.dropped;
             for u in &out.uploads {
                 // No (node, version) pair may ever be aggregated twice —
                 // re-dispatch must skip nodes already holding a job at
@@ -437,5 +378,7 @@ mod tests {
             }
         }
         assert!(t.dropped() > 0, "wave-0 stragglers should have been dropped");
+        // Per-commit telemetry sums to the run total.
+        assert_eq!(dropped_seen, t.dropped());
     }
 }

@@ -1,0 +1,455 @@
+//! The event-driven commit core: [`CommitPlanner`], one buffered-async
+//! state machine shared by every async transport.
+//!
+//! PR 2 introduced FedBuff-style buffered commits, but the protocol logic
+//! (buffer fill, staleness caps, straggler re-dispatch, the
+//! never-duplicate-`(node, version)` invariant) lived inside the
+//! [`AsyncSim`](super::AsyncSim) discrete-event simulator, welded to its
+//! virtual clock. This module lifts that logic into a **pure, seeded
+//! state machine** with no notion of time at all: the planner consumes
+//! *events* — an upload arrived, capacity freed up — and emits
+//! *decisions* — dispatch a node, drop a stale upload, commit a batch.
+//! What "arrival" means (a virtual completion time popped from a heap, a
+//! frame read off a TCP socket) is the transport's business:
+//!
+//! ```text
+//!   AsyncSim (§5 virtual clock)  ─┐
+//!                                 ├──▶ CommitPlanner ──▶ Decisions
+//!   net::TcpAsync (real sockets) ─┘        (pure)
+//! ```
+//!
+//! Because the planner is deterministic in `(seed, event sequence)`, the
+//! simulator reproduces its pre-refactor runs bit-for-bit (pinned by
+//! `rust/tests/async_rounds.rs`), and the TCP leader inherits exactly the
+//! same protocol semantics — including the degeneration to the
+//! synchronous barrier at `buffer_size == r, max_staleness == 0`.
+//!
+//! ## Protocol invariants (enforced here, property-tested in
+//! `rust/tests/prop_commit_planner.rs`)
+//!
+//! * **No duplicate jobs.** A `(node, version)` pair is dispatched at most
+//!   once — a duplicate would replay identical RNG streams and
+//!   double-count that node's update. Re-dispatch after a stale drop
+//!   skips nodes that already hold a live job at the current version.
+//! * **Full commits.** Every [`Decision::Commit`] carries exactly
+//!   `buffer_size` uploads; only an explicit [`CommitPlanner::drain`]
+//!   (the final drain) may surface fewer.
+//! * **Staleness cap.** No upload with `staleness > max_staleness` is
+//!   ever committed — it is dropped at arrival and its capacity
+//!   immediately re-dispatched on the current model, keeping `r` jobs in
+//!   flight at every instant.
+//! * **Canonical batch order.** Commit batches sort by
+//!   `(origin version, dispatch slot)`, so a full-barrier buffer is
+//!   exactly `S_k` in sampling order — the bit-stability anchor for the
+//!   synchronous degeneration.
+
+use super::transport::Upload;
+use crate::config::ExperimentConfig;
+use crate::quant::Encoded;
+use crate::util::rng::Rng;
+
+/// What the outside world tells the planner.
+#[derive(Debug)]
+pub enum PlannerEvent {
+    /// A dispatched job's upload reached the server. `version` is the
+    /// server version whose model the node trained on (stamped on the
+    /// dispatch).
+    UploadArrived { node: usize, version: usize, enc: Encoded },
+    /// One unit of in-flight capacity was lost outside the planner's own
+    /// drop path — a transport lost the worker holding job
+    /// `(node, version)` and its upload can never arrive. The planner
+    /// retires that job (so `in_flight` stays truthful for drain logic)
+    /// and answers with a replacement [`Decision::Dispatch`] at the
+    /// current version. Because the lost upload was never delivered, the
+    /// replacement draw may legitimately re-pick the same node — the
+    /// no-duplicate invariant is about jobs that can still be counted,
+    /// and the retired one cannot.
+    CapacityFreed { node: usize, version: usize },
+}
+
+/// What the planner tells the transport to do.
+#[derive(Debug)]
+pub enum Decision {
+    /// Run node `node` on the version-`version` model. `slot` is the
+    /// job's position in the canonical batch order (wave jobs get their
+    /// sampling-order index; re-dispatched jobs sort behind every wave
+    /// job of the same version) — virtual-time transports also use it as
+    /// a deterministic tie-break for simultaneous arrivals.
+    Dispatch { node: usize, version: usize, slot: usize },
+    /// An upload exceeded `max_staleness` and was discarded (a
+    /// replacement `Dispatch` follows in the same decision batch).
+    Drop { node: usize, staleness: usize },
+    /// `buffer_size` uploads are in: commit them (in the returned order)
+    /// and bump the server version. `dropped` counts stale drops since
+    /// the previous commit (per-commit telemetry for
+    /// [`RoundStats`](super::engine::RoundStats)).
+    Commit { uploads: Vec<Upload>, dropped: u64 },
+}
+
+/// A dispatched job the planner is still waiting on.
+#[derive(Debug, Clone, Copy)]
+struct JobKey {
+    node: usize,
+    version: usize,
+    slot: usize,
+}
+
+/// An arrived upload waiting for the buffer to fill.
+#[derive(Debug)]
+struct Buffered {
+    node: usize,
+    version: usize,
+    slot: usize,
+    enc: Encoded,
+}
+
+/// The transport-agnostic buffered-commit state machine. See the module
+/// docs for the protocol it enforces.
+#[derive(Debug)]
+pub struct CommitPlanner {
+    seed: u64,
+    n_nodes: usize,
+    buffer_size: usize,
+    max_staleness: usize,
+    /// Server version = commits so far.
+    version: usize,
+    /// Sampled-set size of the current version (slot base for
+    /// re-dispatches). Always `r` with the built-in sampler.
+    wave_len: usize,
+    /// `begin_version` pending for the current version?
+    awaiting_wave: bool,
+    in_flight: Vec<JobKey>,
+    buffer: Vec<Buffered>,
+    dropped_total: u64,
+    dropped_since_commit: u64,
+    /// Stream counter for re-dispatch node draws after a drop.
+    redispatches: u64,
+}
+
+impl CommitPlanner {
+    /// Build from a validated experiment config (resolves
+    /// `effective_buffer_size`).
+    pub fn new(cfg: &ExperimentConfig) -> crate::Result<Self> {
+        Self::from_parts(
+            cfg.seed,
+            cfg.n_nodes,
+            cfg.r,
+            cfg.effective_buffer_size(),
+            cfg.max_staleness,
+        )
+    }
+
+    /// Build from raw protocol knobs (what the property tests use).
+    pub fn from_parts(
+        seed: u64,
+        n_nodes: usize,
+        r: usize,
+        buffer_size: usize,
+        max_staleness: usize,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            (1..=r).contains(&buffer_size),
+            "buffer_size {} must be in 1..=r={}",
+            buffer_size,
+            r
+        );
+        anyhow::ensure!(r <= n_nodes, "r={r} must be <= n_nodes={n_nodes}");
+        Ok(CommitPlanner {
+            seed,
+            n_nodes,
+            buffer_size,
+            max_staleness,
+            version: 0,
+            wave_len: 0,
+            awaiting_wave: true,
+            in_flight: Vec::new(),
+            buffer: Vec::new(),
+            dropped_total: 0,
+            dropped_since_commit: 0,
+            redispatches: 0,
+        })
+    }
+
+    /// Server version (= commits so far).
+    pub fn version(&self) -> usize {
+        self.version
+    }
+
+    /// Jobs dispatched but not yet arrived.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Uploads arrived but not yet committed.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Total stale uploads dropped so far in this run.
+    pub fn dropped(&self) -> u64 {
+        self.dropped_total
+    }
+
+    /// The resolved commit threshold.
+    pub fn buffer_size(&self) -> usize {
+        self.buffer_size
+    }
+
+    /// Start the current version's refill wave over the sampled set
+    /// `sampled` (in sampling order): the whole set at version 0 (`r`
+    /// jobs in flight from the first instant), then `buffer_size` jobs
+    /// per commit — exactly what the previous commit consumed — so `r`
+    /// jobs stay in flight at every instant. Returns the wave's
+    /// [`Decision::Dispatch`]es; call exactly once per version.
+    pub fn begin_version(&mut self, sampled: &[usize]) -> crate::Result<Vec<Decision>> {
+        anyhow::ensure!(
+            self.awaiting_wave,
+            "begin_version called twice for version {}",
+            self.version
+        );
+        let wave = if self.version == 0 { sampled.len() } else { self.buffer_size };
+        anyhow::ensure!(wave <= sampled.len(), "sampled set smaller than wave");
+        self.wave_len = sampled.len();
+        let mut decisions = Vec::with_capacity(wave);
+        for (slot, &node) in sampled[..wave].iter().enumerate() {
+            anyhow::ensure!(
+                !self.live_at(node, self.version),
+                "duplicate (node={node}, version={}) job in refill wave",
+                self.version
+            );
+            self.in_flight.push(JobKey { node, version: self.version, slot });
+            decisions.push(Decision::Dispatch { node, version: self.version, slot });
+        }
+        self.awaiting_wave = false;
+        Ok(decisions)
+    }
+
+    /// Feed one event; returns the decisions it triggers, in execution
+    /// order (a stale arrival yields `[Drop, Dispatch]`; a buffer-filling
+    /// arrival yields `[Commit]`).
+    pub fn on_event(&mut self, event: PlannerEvent) -> crate::Result<Vec<Decision>> {
+        match event {
+            PlannerEvent::UploadArrived { node, version, enc } => {
+                self.on_upload(node, version, enc)
+            }
+            PlannerEvent::CapacityFreed { node, version } => {
+                self.retire(node, version)?;
+                Ok(vec![self.redispatch()?])
+            }
+        }
+    }
+
+    /// Remove a dispatched-but-undelivered job from the in-flight set
+    /// (the `CapacityFreed` path); errors if no such job is live.
+    fn retire(&mut self, node: usize, version: usize) -> crate::Result<usize> {
+        let idx = self
+            .in_flight
+            .iter()
+            .position(|j| j.node == node && j.version == version)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "CapacityFreed for a job that is not in flight \
+                     (node={node}, version={version})"
+                )
+            })?;
+        Ok(self.in_flight.swap_remove(idx).slot)
+    }
+
+    /// Final drain: surface whatever is buffered (fewer than
+    /// `buffer_size` uploads) without bumping the version. The
+    /// [`RoundEngine`](super::RoundEngine) never needs this — commits
+    /// consume exact buffers — but custom drivers that stop mid-buffer
+    /// use it to not lose arrived work.
+    pub fn drain(&mut self) -> Vec<Upload> {
+        let mut batch = std::mem::take(&mut self.buffer);
+        batch.sort_by(|a, b| a.version.cmp(&b.version).then(a.slot.cmp(&b.slot)));
+        batch
+            .into_iter()
+            .map(|b| Upload {
+                node: b.node,
+                origin_round: b.version,
+                staleness: self.version - b.version,
+                enc: b.enc,
+            })
+            .collect()
+    }
+
+    fn live_at(&self, node: usize, version: usize) -> bool {
+        self.in_flight
+            .iter()
+            .any(|j| j.node == node && j.version == version)
+            || self
+                .buffer
+                .iter()
+                .any(|b| b.node == node && b.version == version)
+    }
+
+    fn on_upload(
+        &mut self,
+        node: usize,
+        version: usize,
+        enc: Encoded,
+    ) -> crate::Result<Vec<Decision>> {
+        let idx = self
+            .in_flight
+            .iter()
+            .position(|j| j.node == node && j.version == version)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "upload for unknown or already-arrived job (node={node}, \
+                     version={version}) — the (node, version) invariant forbids \
+                     duplicates"
+                )
+            })?;
+        let slot = self.in_flight.swap_remove(idx).slot;
+        let staleness = self.version.checked_sub(version).ok_or_else(|| {
+            anyhow::anyhow!(
+                "upload from future version {version} at server version {}",
+                self.version
+            )
+        })?;
+        if staleness > self.max_staleness {
+            // Too stale: discard, re-dispatch the freed capacity on the
+            // current model. The transport executes the replacement at
+            // the drop's arrival instant (or immediately, on real
+            // sockets), keeping r jobs in flight.
+            self.dropped_total += 1;
+            self.dropped_since_commit += 1;
+            return Ok(vec![Decision::Drop { node, staleness }, self.redispatch()?]);
+        }
+        self.buffer.push(Buffered { node, version, slot, enc });
+        if self.buffer.len() < self.buffer_size {
+            return Ok(Vec::new());
+        }
+        // Commit: canonical aggregation order is (origin version, slot) —
+        // for a full-barrier buffer this is exactly S_k in sampling order.
+        let mut batch = std::mem::take(&mut self.buffer);
+        batch.sort_by(|a, b| a.version.cmp(&b.version).then(a.slot.cmp(&b.slot)));
+        let commit_version = self.version;
+        let uploads = batch
+            .into_iter()
+            .map(|b| Upload {
+                node: b.node,
+                origin_round: b.version,
+                staleness: commit_version - b.version,
+                enc: b.enc,
+            })
+            .collect();
+        self.version += 1;
+        self.awaiting_wave = true;
+        let dropped = self.dropped_since_commit;
+        self.dropped_since_commit = 0;
+        Ok(vec![Decision::Commit { uploads, dropped }])
+    }
+
+    /// Pick a replacement node for one freed unit of capacity. The node
+    /// draw comes from a dedicated deterministic stream keyed off the run
+    /// seed; nodes that already hold a live job at the current version
+    /// are skipped (the no-duplicate invariant). A free node always
+    /// exists on the built-in transports: at most `r − 1` jobs are live
+    /// at this point and `r ≤ n`.
+    fn redispatch(&mut self) -> crate::Result<Decision> {
+        let mut rng = Rng::from_coords(self.seed, &[5, self.redispatches]);
+        self.redispatches += 1;
+        let start = rng.gen_range(0, self.n_nodes);
+        let node = (0..self.n_nodes)
+            .map(|i| (start + i) % self.n_nodes)
+            .find(|&cand| !self.live_at(cand, self.version))
+            .ok_or_else(|| {
+                anyhow::anyhow!("no free node to re-dispatch after stale drop")
+            })?;
+        // Slots after the wave keep replacement uploads ordered
+        // deterministically behind the wave's in any later batch.
+        let slot = self.wave_len + self.redispatches as usize;
+        self.in_flight.push(JobKey { node, version: self.version, slot });
+        Ok(Decision::Dispatch { node, version: self.version, slot })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{CodecSpec, UpdateCodec};
+
+    fn enc() -> Encoded {
+        let codec = CodecSpec::qsgd(1).build().unwrap();
+        codec.encode(&[0.25, -0.5, 1.0, 0.125], &mut Rng::seed_from_u64(7))
+    }
+
+    fn planner(r: usize, b: usize, max_s: usize) -> CommitPlanner {
+        CommitPlanner::from_parts(9, 8, r, b, max_s).unwrap()
+    }
+
+    #[test]
+    fn wave_zero_dispatches_full_set_then_buffer_size_refills() {
+        let mut p = planner(4, 2, 8);
+        let d0 = p.begin_version(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(d0.len(), 4);
+        assert_eq!(p.in_flight(), 4);
+        // Two arrivals commit; refill wave is buffer_size jobs.
+        assert!(p.on_event(PlannerEvent::UploadArrived { node: 0, version: 0, enc: enc() })
+            .unwrap()
+            .is_empty());
+        let out = p
+            .on_event(PlannerEvent::UploadArrived { node: 1, version: 0, enc: enc() })
+            .unwrap();
+        assert!(matches!(&out[..], [Decision::Commit { uploads, dropped: 0 }]
+            if uploads.len() == 2));
+        assert_eq!(p.version(), 1);
+        let d1 = p.begin_version(&[4, 5, 6, 7]).unwrap();
+        assert_eq!(d1.len(), 2);
+        assert_eq!(p.in_flight(), 4, "r jobs stay in flight");
+    }
+
+    #[test]
+    fn duplicate_arrival_is_rejected() {
+        let mut p = planner(2, 2, 8);
+        p.begin_version(&[3, 5]).unwrap();
+        p.on_event(PlannerEvent::UploadArrived { node: 3, version: 0, enc: enc() })
+            .unwrap();
+        let err = p
+            .on_event(PlannerEvent::UploadArrived { node: 3, version: 0, enc: enc() })
+            .unwrap_err();
+        assert!(err.to_string().contains("invariant"), "{err}");
+    }
+
+    #[test]
+    fn stale_upload_drops_and_redispatches_at_current_version() {
+        let mut p = planner(2, 1, 0);
+        p.begin_version(&[0, 1]).unwrap();
+        // First arrival commits (buffer 1); node 1's job is now stale.
+        let out = p
+            .on_event(PlannerEvent::UploadArrived { node: 0, version: 0, enc: enc() })
+            .unwrap();
+        assert!(matches!(&out[..], [Decision::Commit { .. }]));
+        p.begin_version(&[2, 3]).unwrap();
+        let out = p
+            .on_event(PlannerEvent::UploadArrived { node: 1, version: 0, enc: enc() })
+            .unwrap();
+        match &out[..] {
+            [Decision::Drop { node: 1, staleness: 1 }, Decision::Dispatch { version: 1, .. }] => {}
+            other => panic!("unexpected decisions {other:?}"),
+        }
+        assert_eq!(p.dropped(), 1);
+    }
+
+    #[test]
+    fn begin_version_twice_is_rejected() {
+        let mut p = planner(2, 2, 8);
+        p.begin_version(&[0, 1]).unwrap();
+        assert!(p.begin_version(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn drain_surfaces_partial_buffer_without_version_bump() {
+        let mut p = planner(4, 3, 8);
+        p.begin_version(&[0, 1, 2, 3]).unwrap();
+        p.on_event(PlannerEvent::UploadArrived { node: 2, version: 0, enc: enc() })
+            .unwrap();
+        let drained = p.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].node, 2);
+        assert_eq!(p.version(), 0);
+        assert_eq!(p.buffered(), 0);
+    }
+}

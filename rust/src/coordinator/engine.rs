@@ -16,10 +16,13 @@
 //!   with no self-reported timing; the engine charges the §5 barrier
 //!   model (straggler max + serialized uplink) or wall-clock, exactly as
 //!   the synchronous protocol prescribes.
-//! * **Buffered-async transports** ([`super::AsyncSim`]) return each
-//!   commit's buffer with per-upload staleness and their own
-//!   [`CommitTiming`](super::transport::CommitTiming); the engine charges
-//!   the transport's event clock instead of a barrier.
+//! * **Buffered-async transports** (the
+//!   [`CommitPlanner`](super::commit_loop::CommitPlanner)-driven
+//!   [`super::AsyncSim`] and [`crate::net::TcpAsync`]) return each
+//!   commit's buffer with per-upload staleness; simulated ones also
+//!   report their own [`CommitTiming`](super::transport::CommitTiming),
+//!   which the engine charges instead of a barrier (networked ones fall
+//!   through to wall-clock).
 //!
 //! A commit that yields zero uploads is *not* fatal: it is logged,
 //! charged zero time, and the model carries over unchanged. The built-in
@@ -61,13 +64,21 @@ pub(crate) fn build_world(
     Ok((data, partition))
 }
 
-/// Per-round timing/traffic record.
+/// Per-round timing/traffic record, plus the async protocol's per-commit
+/// telemetry (identically zero on barrier transports).
 #[derive(Debug, Clone, Copy)]
 pub struct RoundStats {
     pub round: usize,
     pub compute_time: f64,
     pub comm_time: f64,
     pub bits_up: u64,
+    /// Stale uploads dropped (and re-dispatched) between the previous
+    /// commit and this one.
+    pub dropped: u64,
+    /// Largest staleness stamp among this commit's uploads.
+    pub staleness_max: usize,
+    /// Mean staleness over this commit's uploads (0 for an empty commit).
+    pub staleness_mean: f64,
 }
 
 /// Output of a full training run.
@@ -90,7 +101,10 @@ impl RunResult {
     ///
     /// For virtual-time transports the output is a deterministic function
     /// of `(config, seed)` — the CI determinism leg diffs two of these
-    /// byte-for-byte, including across `--agg-shards` values.
+    /// byte-for-byte, including across `--agg-shards` values. Networked
+    /// runs carry wall-clock `time`/`compute_time` fields; CI strips
+    /// those with `python/curve_extract.py` before diffing, so the
+    /// loss/bits/params portion is still comparable byte-for-byte.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let points = self
@@ -116,6 +130,9 @@ impl RunResult {
                     ("compute_time", Json::num(r.compute_time)),
                     ("comm_time", Json::num(r.comm_time)),
                     ("bits_up", Json::num(r.bits_up as f64)),
+                    ("dropped", Json::num(r.dropped as f64)),
+                    ("staleness_max", Json::num(r.staleness_max as f64)),
+                    ("staleness_mean", Json::num(r.staleness_mean)),
                 ])
             })
             .collect();
@@ -312,7 +329,26 @@ impl RoundEngine {
                 );
             }
             total_bits += bits;
-            stats.push(RoundStats { round: k, compute_time, comm_time, bits_up: bits });
+            // Async-protocol telemetry: staleness stamps come with the
+            // uploads, drop counts with the outcome. Barrier transports
+            // report all zeros (every upload is staleness 0, none drop).
+            let staleness_max =
+                outcome.uploads.iter().map(|u| u.staleness).max().unwrap_or(0);
+            let staleness_mean = if outcome.uploads.is_empty() {
+                0.0
+            } else {
+                outcome.uploads.iter().map(|u| u.staleness as f64).sum::<f64>()
+                    / outcome.uploads.len() as f64
+            };
+            stats.push(RoundStats {
+                round: k,
+                compute_time,
+                comm_time,
+                bits_up: bits,
+                dropped: outcome.dropped,
+                staleness_max,
+                staleness_mean,
+            });
 
             if (k + 1) % cfg.eval_every == 0 || k + 1 == rounds {
                 let loss = slab.eval(engine, &params)?;

@@ -14,7 +14,7 @@
 //! 6. the clock advances — §5 virtual time ([`crate::simtime`]) for
 //!    simulated transports, wall-clock for networked ones.
 //!
-//! The pieces compose through two seams:
+//! The pieces compose through three seams:
 //!
 //! * **[`transport::Transport`]** — *where and when* steps 2–4 execute.
 //!   The transports split along the sync/async axis:
@@ -24,16 +24,26 @@
 //!   | [`transport::InProcess`] | synchronous barrier (Algorithm 1) | §5 virtual |
 //!   | [`crate::net::Tcp`] | synchronous barrier, worker processes | wall-clock |
 //!   | [`async_sim::AsyncSim`] | buffered async (FedBuff-style) | §5 virtual, event-driven |
+//!   | [`crate::net::TcpAsync`] | buffered async, worker processes | wall-clock, event-driven |
 //!
 //!   The barrier transports wait for every sampled node, so a commit *is*
 //!   a round of Algorithm 1; equal seeds give bit-identical models
-//!   in-process or over sockets. `AsyncSim` commits as soon as
-//!   `buffer_size` uploads arrive (stragglers surface later, damped by a
-//!   [`aggregate::StalenessRule`]) and degenerates bit-exactly to the
-//!   synchronous run at `buffer_size == r`, `max_staleness == 0`.
+//!   in-process or over sockets.
+//! * **[`commit_loop::CommitPlanner`]** — *what the buffered-async
+//!   protocol decides*. A pure, seeded state machine consuming events
+//!   (upload arrived, capacity freed) and emitting decisions (dispatch,
+//!   drop, commit): it owns the buffer threshold, the `max_staleness`
+//!   cap with straggler re-dispatch, and the
+//!   never-duplicate-`(node, version)` invariant. `AsyncSim` feeds it
+//!   virtual-completion-time arrivals, `net::TcpAsync` feeds it real
+//!   socket arrivals — one implementation of the commit rules for both,
+//!   and both degenerate bit-exactly to their barrier twins at
+//!   `buffer_size == r`, `max_staleness == 0`.
 //! * **[`crate::quant::UpdateCodec`]** — *how* step 4 compresses uploads.
 //!
-//! [`engine::RoundEngine`] drives the per-commit loop;
+//! [`engine::RoundEngine`] drives the per-commit loop (and surfaces the
+//! async drop/staleness telemetry in
+//! [`RoundStats`](engine::RoundStats));
 //! [`server::ServerBuilder`] assembles `config × engine × codec ×
 //! transport` (picking `AsyncSim` automatically when
 //! `cfg.async_rounds` is set) and [`server::Server`] keeps the
@@ -45,6 +55,7 @@
 
 pub mod aggregate;
 pub mod async_sim;
+pub mod commit_loop;
 pub mod engine;
 pub mod local;
 pub mod sampler;
@@ -53,6 +64,7 @@ pub mod transport;
 
 pub use aggregate::{Aggregator, ShardPlan, StalenessRule};
 pub use async_sim::AsyncSim;
+pub use commit_loop::{CommitPlanner, Decision, PlannerEvent};
 pub use engine::{EvalSlab, RoundEngine, RoundStats, RunResult};
 pub use server::{Server, ServerBuilder};
 pub use transport::{CommitTiming, InProcess, RoundCtx, RoundOutcome, Transport, Upload};

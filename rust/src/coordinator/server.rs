@@ -111,7 +111,8 @@ impl<'e> ServerBuilder<'e> {
         anyhow::ensure!(
             !cfg.async_rounds || transport.buffered_async(),
             "cfg.async_rounds is set but the {} transport runs full barriers — \
-             use AsyncSim (or drop the explicit transport override)",
+             use AsyncSim / net::TcpAsync (or drop the explicit transport \
+             override)",
             transport.name()
         );
         // A codec override is a local trait object; transports whose

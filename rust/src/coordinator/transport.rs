@@ -10,10 +10,12 @@
 //!   sockets) run every sampled node to completion and return the full
 //!   round's uploads, all staleness 0 — the paper's synchronous
 //!   Algorithm 1;
-//! * **buffered-async transports** ([`super::AsyncSim`]) keep nodes
-//!   training across commits and return a batch as soon as `buffer_size`
-//!   uploads have (virtually) arrived; stragglers' uploads surface in
-//!   later commits carrying a positive staleness.
+//! * **buffered-async transports** ([`super::AsyncSim`] on the virtual
+//!   clock, [`crate::net::TcpAsync`] on real sockets — both driven by the
+//!   shared [`CommitPlanner`](super::commit_loop::CommitPlanner) commit
+//!   core) keep nodes training across commits and return a batch as soon
+//!   as `buffer_size` uploads have arrived; stragglers' uploads surface
+//!   in later commits carrying a positive staleness.
 //!
 //! To make both expressible, `round` returns a [`RoundOutcome`]: uploads
 //! stamped with the server version they trained on, plus (for transports
@@ -82,11 +84,16 @@ pub struct RoundOutcome {
     /// commit; `None` lets the engine charge the §5 barrier model
     /// (simulated transports) or wall-clock (networked ones).
     pub timing: Option<CommitTiming>,
+    /// Stale uploads dropped (and re-dispatched) since the previous
+    /// commit — per-commit telemetry surfaced in
+    /// [`RoundStats`](super::engine::RoundStats). Always 0 on barrier
+    /// transports.
+    pub dropped: u64,
 }
 
 impl RoundOutcome {
     /// Wrap a full barrier round's uploads (in `ctx.nodes` order, one per
-    /// sampled node): staleness 0, engine-side timing.
+    /// sampled node): staleness 0, engine-side timing, no drops.
     pub fn barrier(ctx: &RoundCtx<'_>, encs: Vec<Encoded>) -> Self {
         debug_assert_eq!(encs.len(), ctx.nodes.len());
         let uploads = ctx
@@ -95,7 +102,7 @@ impl RoundOutcome {
             .zip(encs)
             .map(|(&node, enc)| Upload { node, origin_round: ctx.round, staleness: 0, enc })
             .collect();
-        RoundOutcome { uploads, timing: None }
+        RoundOutcome { uploads, timing: None, dropped: 0 }
     }
 }
 

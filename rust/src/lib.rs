@@ -28,12 +28,17 @@
 //!   path, time charged to the paper's §5 virtual cost model) or
 //!   [`net::Tcp`] (real worker processes over sockets, wall-clock time) —
 //!   same codecs, same RNG streams, equal seeds give bit-identical models
-//!   either way. Buffered async: [`coordinator::AsyncSim`] (FedBuff-style
-//!   event-driven simulation) commits as soon as `cfg.buffer_size`
-//!   uploads arrive; stragglers land in later commits, damped by the
-//!   config's [`coordinator::StalenessRule`], and uploads staler than
-//!   `cfg.max_staleness` are dropped. At `buffer_size == r`,
-//!   `max_staleness == 0` it reproduces the synchronous run bit-exactly.
+//!   either way. Buffered async: one event-driven commit core — the pure,
+//!   seeded [`coordinator::commit_loop::CommitPlanner`] — commits as soon
+//!   as `cfg.buffer_size` uploads arrive; stragglers land in later
+//!   commits, damped by the config's [`coordinator::StalenessRule`], and
+//!   uploads staler than `cfg.max_staleness` are dropped and their
+//!   capacity re-dispatched. [`coordinator::AsyncSim`] feeds the planner
+//!   virtual-completion-time arrivals (FedBuff-style simulation);
+//!   [`net::TcpAsync`] feeds it real socket arrivals, so the same
+//!   staleness-aware protocol runs barrier-free on a live cluster. At
+//!   `buffer_size == r`, `max_staleness == 0` both reproduce their
+//!   synchronous twins bit-exactly.
 //!
 //! ## Sharded aggregation
 //!
@@ -44,7 +49,8 @@
 //! [`quant::UpdateCodec::decode_range`] and replays the batch in order,
 //! so results are **bit-identical for every shard count** — see the
 //! [`coordinator::aggregate`] module docs for the determinism contract.
-//! All three transports (`InProcess`, `AsyncSim`, `net::Tcp`) reuse the
+//! All four transports (`InProcess`, `AsyncSim`, `net::Tcp`,
+//! `net::TcpAsync`) reuse the
 //! one sharded path inside [`coordinator::RoundEngine`]. The
 //! ≥1M-parameter `aggregate` micro-bench publishes its throughput as
 //! `BENCH_aggregate.json` on every CI push, gated against

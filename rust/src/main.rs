@@ -33,8 +33,10 @@ USAGE:
                [--staleness-rule uniform|polynomial] [--staleness-a A]
   (a leading flag implies `train`: `fedpaq --async-rounds --buffer-size 4`)
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
-                [--agg-shards N]
-  fedpaq worker [--connect ADDR]
+                [--agg-shards N] [--out-json FILE]
+  (an async_rounds config runs the buffered-async TcpAsync leader; others
+   run the synchronous barrier)
+  fedpaq worker [--connect ADDR] [--delay-ms N] [--retry-secs S]
   fedpaq quantize-check [--s S] [--seed SEED]
   fedpaq info
 
@@ -287,10 +289,33 @@ fn main() -> anyhow::Result<()> {
             for p in &res.curve.points {
                 println!("  k={:<4} wall={:<10.3}s loss={:.6}", p.round, p.time, p.loss);
             }
+            // Same machine-readable RunResult dump the train subcommand
+            // writes — the CI async-TCP leg extracts its time-free
+            // portion (python/curve_extract.py) and byte-diffs it.
+            if let Some(path) = flags.get("out-json") {
+                std::fs::write(path, res.to_json().to_string_pretty())
+                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                println!("wrote {path}");
+            }
         }
         "worker" => {
             let connect = flags.get_or("connect", "127.0.0.1:7070");
-            fedpaq::net::run_worker(&connect, &artifacts)?;
+            let opts = fedpaq::net::WorkerOptions {
+                work_delay: flags
+                    .get("delay-ms")
+                    .map(|v| v.parse::<u64>().map(std::time::Duration::from_millis))
+                    .transpose()
+                    .map_err(|e| anyhow::anyhow!("--delay-ms: {e}"))?,
+            };
+            // Re-dial while the leader is still coming up (makes
+            // `worker & worker & leader` launch scripts order-agnostic).
+            let retry_secs: u64 = flags.parse_num("retry-secs", 10u64)?;
+            fedpaq::net::run_worker_retrying(
+                &connect,
+                &artifacts,
+                opts,
+                std::time::Duration::from_secs(retry_secs),
+            )?;
         }
         "quantize-check" => {
             let s: u32 = flags.parse_num("s", 4u32)?;

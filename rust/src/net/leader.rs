@@ -1,15 +1,21 @@
 //! Leader entry point: the distributed protocol is just the shared
-//! [`RoundEngine`](crate::coordinator::RoundEngine) driven through the
-//! [`Tcp`](super::Tcp) transport — the round loop itself lives in
+//! [`RoundEngine`](crate::coordinator::RoundEngine) driven through a
+//! networked transport — the round loop itself lives in
 //! `coordinator::engine`, identical to the simulation path. That
 //! includes sharded aggregation: `cfg.agg_shards > 1` fans the leader's
 //! accumulate/apply across scoped threads with bit-identical results
 //! (the `coordinator::aggregate` determinism contract), so a distributed
 //! run and its simulated replay can use different shard counts freely.
+//!
+//! The config's round protocol picks the transport: synchronous configs
+//! run the barrier [`Tcp`](super::Tcp), `cfg.async_rounds` configs run
+//! the buffered-async [`TcpAsync`](super::TcpAsync) — the same
+//! [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
+//! semantics as the `AsyncSim` simulation, on real sockets.
 
-use super::transport::Tcp;
+use super::transport::{Tcp, TcpAsync};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{EvalSlab, RoundEngine, RunResult};
+use crate::coordinator::{EvalSlab, RoundEngine, RunResult, Transport};
 use crate::model::Engine;
 use std::path::Path;
 
@@ -25,15 +31,12 @@ pub fn run_leader(
     _artifacts: &Path,
 ) -> crate::Result<RunResult> {
     let cfg = cfg.validated()?;
-    // The TCP transport is a barrier protocol; buffered-async rounds are
-    // simulation-only for now (ROADMAP: async over real sockets).
-    anyhow::ensure!(
-        !cfg.async_rounds,
-        "async_rounds is not supported by the TCP leader — run `fedpaq train` \
-         (the async simulation) or clear the flag"
-    );
     let slab = EvalSlab::build(&cfg, engine)?;
-    let mut rounds =
-        RoundEngine::new(cfg.codec.build()?, Box::new(Tcp::new(bind, n_workers)));
+    let transport: Box<dyn Transport> = if cfg.async_rounds {
+        Box::new(TcpAsync::new(bind, n_workers))
+    } else {
+        Box::new(Tcp::new(bind, n_workers))
+    };
+    let mut rounds = RoundEngine::new(cfg.codec.build()?, transport);
     rounds.run(&cfg, engine, &slab)
 }

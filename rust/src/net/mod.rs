@@ -1,29 +1,47 @@
-//! Real distributed mode: a TCP leader/worker runtime for FedPAQ.
+//! Real distributed mode: TCP leader/worker runtimes for FedPAQ.
 //!
-//! The round loop is NOT duplicated here: [`Tcp`] implements the
-//! coordinator's [`Transport`](crate::coordinator::Transport) seam, and
-//! [`run_leader`] drives the shared
-//! [`RoundEngine`](crate::coordinator::RoundEngine) through it. The
-//! simulation engine models time; this module actually *distributes* the
-//! protocol across processes, with the exact same codecs and RNG streams,
-//! so the aggregated models match the sim bit-for-bit for equal
-//! configs/seeds (modulo float summation order, which we fix by
-//! aggregating uploads in node order).
+//! The round loop is NOT duplicated here: both networked leaders
+//! implement the coordinator's
+//! [`Transport`](crate::coordinator::Transport) seam, and [`run_leader`]
+//! drives the shared [`RoundEngine`](crate::coordinator::RoundEngine)
+//! through whichever one the config's round protocol selects:
 //!
-//! Protocol (length-prefixed hand-rolled binary frames over TCP, see [`proto`]):
+//! * [`Tcp`] — the synchronous barrier (paper Algorithm 1): one commit
+//!   waits for every sampled node's upload; aggregation in node order
+//!   makes a distributed run **bit-identical** to the in-process
+//!   simulation for equal configs/seeds.
+//! * [`TcpAsync`] (`cfg.async_rounds`) — the buffered-async protocol on
+//!   real sockets: the leader keeps `r` jobs in flight, stamps each
+//!   dispatch with its model version, commits as soon as `buffer_size`
+//!   uploads land, and drops/re-dispatches uploads past `max_staleness`.
+//!   Every protocol decision is delegated to the event-driven
+//!   [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner) —
+//!   the same state machine behind the
+//!   [`AsyncSim`](crate::coordinator::AsyncSim) simulation — so sim and
+//!   cluster share one implementation of the commit rules, and the
+//!   degenerate `buffer_size == r, max_staleness == 0` cluster run
+//!   reproduces the barrier run bit-for-bit.
+//!
+//! Protocol (length-prefixed hand-rolled binary frames over TCP,
+//! explicitly versioned — see [`proto`]):
 //!
 //! ```text
-//! worker -> leader   Join
-//! leader -> worker   Setup { cfg }           once, after all workers join
-//! leader -> worker   Work { round, node, params, lrs }   r msgs per round
-//! worker -> leader   Update { round, node, enc }
+//! worker -> leader   Join { proto }
+//! leader -> worker   Setup { proto, cfg }     once, after all workers join
+//! leader -> worker   Work { version, node, params, lrs }
+//! worker -> leader   Update { version, node, enc }
 //! leader -> worker   Shutdown
 //! ```
 //!
-//! Each worker impersonates the *virtual nodes* assigned to it (the paper's
-//! `n` is decoupled from the number of worker processes), regenerates its
-//! shard locally from the seeded config, builds its codec from the
-//! config's tagged spec, and never sees other shards.
+//! Every dispatch/upload carries the server **model version** it belongs
+//! to; staleness is leader-side bookkeeping (`commit − version`).
+//! Mixed-version clusters are rejected at the handshake with a clear
+//! protocol-version error ([`proto::PROTO_VERSION`]).
+//!
+//! Each worker impersonates the *virtual nodes* assigned to it (the
+//! paper's `n` is decoupled from the number of worker processes),
+//! regenerates its shard locally from the seeded config, builds its codec
+//! from the config's tagged spec, and never sees other shards.
 
 pub mod leader;
 pub mod proto;
@@ -31,5 +49,5 @@ pub mod transport;
 pub mod worker;
 
 pub use leader::run_leader;
-pub use transport::Tcp;
-pub use worker::run_worker;
+pub use transport::{Tcp, TcpAsync};
+pub use worker::{run_worker, run_worker_retrying, run_worker_with, WorkerOptions};

@@ -1,9 +1,22 @@
 //! Wire protocol: u32-LE length prefix + a hand-rolled binary codec
 //! (no serde in this environment — every message knows how to write and
-//! read itself; layouts are versioned by a magic byte per variant).
+//! read itself; layouts are versioned by a magic byte per variant plus
+//! an explicit [`PROTO_VERSION`] carried in the handshake).
 //!
 //! Layout conventions: little-endian throughout; `str` = u32 len + UTF-8;
 //! `vec<T>` = u64 len + elements; f32 slices are bulk-copied.
+//!
+//! ## Versioning
+//!
+//! v2 (the buffered-async protocol) stamps every dispatch and upload with
+//! the server **model version** it belongs to — the coordinate the
+//! [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
+//! derives staleness from (`staleness = commit version − origin
+//! version`). The v1 (pre-async) `Work`/`Update`/`Setup`/`Join` layouts
+//! used different variant tags; decoding one here fails with an explicit
+//! protocol-version error (not a byte-soup "truncated frame"), so a
+//! mixed-version cluster is rejected at the handshake instead of
+//! silently corrupting a run.
 
 use crate::config::ExperimentConfig;
 use crate::quant::{bitstream::BitBuf, CodecSpec, Coding, Encoded};
@@ -13,13 +26,34 @@ use std::io::{Read, Write};
 /// generous headroom for bigger models).
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
+/// Wire protocol version. Bumped to 2 when dispatches/uploads gained
+/// model-version stamps (the buffered-async protocol); v1 peers are
+/// rejected with a clear error at the `Join`/`Setup` handshake.
+pub const PROTO_VERSION: u32 = 2;
+
+/// The error both ends raise when a v1 (pre-async) frame shows up.
+fn protocol_version_error(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "peer sent a wire-protocol v1 (pre-async) {what} frame; this build \
+         speaks v{PROTO_VERSION}, which stamps every dispatch/upload with its \
+         model version — upgrade the older binary (leader and workers must \
+         match)"
+    )
+}
+
 /// Leader → worker messages.
 #[derive(Debug, Clone)]
 pub enum ToWorker {
     /// World description; the worker builds its engine + data from this.
-    Setup { cfg: ExperimentConfig },
-    /// Run virtual node `node` for round `round` from `params`.
-    Work { round: u64, node: u64, params: Vec<f32>, lrs: Vec<f32> },
+    /// Carries the leader's [`PROTO_VERSION`] so the worker can refuse a
+    /// mismatched leader with a clear error.
+    Setup { proto: u32, cfg: ExperimentConfig },
+    /// Run virtual node `node` from `params`, the server model at
+    /// `version`. On barrier transports `version` is the round index; on
+    /// buffered-async transports it is the commit count at dispatch time
+    /// (what staleness is measured against). Either way it keys the
+    /// node's per-`(seed, node, version)` RNG streams.
+    Work { version: u64, node: u64, params: Vec<f32>, lrs: Vec<f32> },
     /// Clean shutdown.
     Shutdown,
 }
@@ -27,12 +61,13 @@ pub enum ToWorker {
 /// Worker → leader messages.
 #[derive(Debug, Clone)]
 pub enum ToLeader {
-    /// Initial handshake.
-    Join,
+    /// Initial handshake, carrying the worker's [`PROTO_VERSION`].
+    Join { proto: u32 },
     /// Setup acknowledged (engine compiled, data generated).
     Ready,
-    /// One node's quantized upload.
-    Update { round: u64, node: u64, enc: Encoded },
+    /// One node's quantized upload, echoing the model `version` it was
+    /// dispatched at (the leader stamps `staleness = commit − version`).
+    Update { version: u64, node: u64, enc: Encoded },
 }
 
 // ---------------- primitive writers/readers ----------------
@@ -218,22 +253,33 @@ fn read_encoded(c: &mut Cursor<'_>) -> crate::Result<Encoded> {
     Ok(Encoded { buf: BitBuf::from_parts(words, len)?, p, spec })
 }
 
+// Variant tags. v1 used 0=Setup/Join, 1=Work (2=Update on ToLeader); v2
+// retired those tag values so a v1 frame is recognized — and rejected
+// with a protocol-version error — instead of being misparsed.
+const TAG_SHUTDOWN: u8 = 2;
+const TAG_SETUP_V2: u8 = 3;
+const TAG_WORK_V2: u8 = 4;
+const TAG_READY: u8 = 1;
+const TAG_JOIN_V2: u8 = 3;
+const TAG_UPDATE_V2: u8 = 4;
+
 impl ToWorker {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Buf::new();
         match self {
-            ToWorker::Setup { cfg } => {
-                b.u8(0);
+            ToWorker::Setup { proto, cfg } => {
+                b.u8(TAG_SETUP_V2);
+                b.u32(*proto);
                 b.string(&cfg.to_json().to_string_pretty());
             }
-            ToWorker::Work { round, node, params, lrs } => {
-                b.u8(1);
-                b.u64(*round);
+            ToWorker::Work { version, node, params, lrs } => {
+                b.u8(TAG_WORK_V2);
+                b.u64(*version);
                 b.u64(*node);
                 b.f32s(params);
                 b.f32s(lrs);
             }
-            ToWorker::Shutdown => b.u8(2),
+            ToWorker::Shutdown => b.u8(TAG_SHUTDOWN),
         }
         b.0
     }
@@ -241,19 +287,22 @@ impl ToWorker {
     pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
         let mut c = Cursor::new(bytes);
         let msg = match c.u8()? {
-            0 => {
+            0 => return Err(protocol_version_error("Setup")),
+            1 => return Err(protocol_version_error("Work")),
+            TAG_SETUP_V2 => {
+                let proto = c.u32()?;
                 let text = c.string()?;
                 let cfg =
                     ExperimentConfig::from_json(&crate::util::json::Json::parse(&text)?)?;
-                ToWorker::Setup { cfg }
+                ToWorker::Setup { proto, cfg }
             }
-            1 => ToWorker::Work {
-                round: c.u64()?,
+            TAG_WORK_V2 => ToWorker::Work {
+                version: c.u64()?,
                 node: c.u64()?,
                 params: c.f32s()?,
                 lrs: c.f32s()?,
             },
-            2 => ToWorker::Shutdown,
+            TAG_SHUTDOWN => ToWorker::Shutdown,
             x => anyhow::bail!("bad ToWorker tag {x}"),
         };
         anyhow::ensure!(c.i == bytes.len(), "trailing bytes in frame");
@@ -265,11 +314,14 @@ impl ToLeader {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Buf::new();
         match self {
-            ToLeader::Join => b.u8(0),
-            ToLeader::Ready => b.u8(1),
-            ToLeader::Update { round, node, enc } => {
-                b.u8(2);
-                b.u64(*round);
+            ToLeader::Join { proto } => {
+                b.u8(TAG_JOIN_V2);
+                b.u32(*proto);
+            }
+            ToLeader::Ready => b.u8(TAG_READY),
+            ToLeader::Update { version, node, enc } => {
+                b.u8(TAG_UPDATE_V2);
+                b.u64(*version);
                 b.u64(*node);
                 write_encoded(&mut b, enc);
             }
@@ -280,10 +332,12 @@ impl ToLeader {
     pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
         let mut c = Cursor::new(bytes);
         let msg = match c.u8()? {
-            0 => ToLeader::Join,
-            1 => ToLeader::Ready,
-            2 => ToLeader::Update {
-                round: c.u64()?,
+            0 => return Err(protocol_version_error("Join")),
+            2 => return Err(protocol_version_error("Update")),
+            TAG_JOIN_V2 => ToLeader::Join { proto: c.u32()? },
+            TAG_READY => ToLeader::Ready,
+            TAG_UPDATE_V2 => ToLeader::Update {
+                version: c.u64()?,
                 node: c.u64()?,
                 enc: read_encoded(&mut c)?,
             },
@@ -341,14 +395,14 @@ mod tests {
     #[test]
     fn work_roundtrip() {
         let msg = ToWorker::Work {
-            round: 3,
+            version: 3,
             node: 17,
             params: vec![1.0, -2.5, 3.25],
             lrs: vec![0.1, 0.1],
         };
         match ToWorker::decode(&msg.encode()).unwrap() {
-            ToWorker::Work { round, node, params, lrs } => {
-                assert_eq!((round, node), (3, 17));
+            ToWorker::Work { version, node, params, lrs } => {
+                assert_eq!((version, node), (3, 17));
                 assert_eq!(params, vec![1.0, -2.5, 3.25]);
                 assert_eq!(lrs, vec![0.1, 0.1]);
             }
@@ -357,12 +411,46 @@ mod tests {
     }
 
     #[test]
-    fn setup_roundtrip_carries_config() {
+    fn setup_roundtrip_carries_config_and_proto() {
         let cfg = ExperimentConfig::fig1_nn_base().with_tau(7);
-        let msg = ToWorker::Setup { cfg: cfg.clone() };
+        let msg = ToWorker::Setup { proto: PROTO_VERSION, cfg: cfg.clone() };
         match ToWorker::decode(&msg.encode()).unwrap() {
-            ToWorker::Setup { cfg: back } => assert_eq!(cfg, back),
+            ToWorker::Setup { proto, cfg: back } => {
+                assert_eq!(proto, PROTO_VERSION);
+                assert_eq!(cfg, back);
+            }
             _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn join_roundtrip_carries_proto() {
+        let msg = ToLeader::Join { proto: PROTO_VERSION };
+        match ToLeader::decode(&msg.encode()).unwrap() {
+            ToLeader::Join { proto } => assert_eq!(proto, PROTO_VERSION),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn v1_frames_fail_with_a_protocol_version_error() {
+        // v1 tag values: ToWorker 0=Setup, 1=Work; ToLeader 0=Join,
+        // 2=Update. Each must name the protocol mismatch, not garble.
+        for (bytes, decode_leader) in [
+            (vec![0u8], false),
+            (vec![1u8, 0, 0, 0, 0, 0, 0, 0, 0], false),
+            (vec![0u8], true),
+            (vec![2u8, 9, 9], true),
+        ] {
+            let err = if decode_leader {
+                ToLeader::decode(&bytes).unwrap_err().to_string()
+            } else {
+                ToWorker::decode(&bytes).unwrap_err().to_string()
+            };
+            assert!(
+                err.contains("wire-protocol v1") && err.contains("v2"),
+                "unhelpful error: {err}"
+            );
         }
     }
 
@@ -372,10 +460,10 @@ mod tests {
         let x: Vec<f32> = (0..300).map(|i| (i as f32 * 0.7).sin()).collect();
         let enc = q.encode(&x, &mut Rng::seed_from_u64(1));
         let dec_before = q.decode(&enc).unwrap();
-        let msg = ToLeader::Update { round: 9, node: 4, enc };
+        let msg = ToLeader::Update { version: 9, node: 4, enc };
         match ToLeader::decode(&msg.encode()).unwrap() {
-            ToLeader::Update { round, node, enc } => {
-                assert_eq!((round, node), (9, 4));
+            ToLeader::Update { version, node, enc } => {
+                assert_eq!((version, node), (9, 4));
                 assert_eq!(q.decode(&enc).unwrap(), dec_before);
             }
             _ => panic!(),
@@ -388,7 +476,7 @@ mod tests {
         let x: Vec<f32> = (0..96).map(|i| (i as f32 * 0.3).cos()).collect();
         let enc = q.encode(&x, &mut Rng::seed_from_u64(2));
         let dec_before = q.decode(&enc).unwrap();
-        let msg = ToLeader::Update { round: 1, node: 2, enc };
+        let msg = ToLeader::Update { version: 1, node: 2, enc };
         match ToLeader::decode(&msg.encode()).unwrap() {
             ToLeader::Update { enc, .. } => {
                 assert_eq!(enc.spec, q.spec());
@@ -405,7 +493,7 @@ mod tests {
         let mut wire = Vec::new();
         for i in 0..5u64 {
             send_frame(&mut wire, &ToLeader::Update {
-                round: i,
+                version: i,
                 node: i * 2,
                 enc: q.encode(&[0.5; 16], &mut Rng::seed_from_u64(i)),
             }
@@ -415,8 +503,8 @@ mod tests {
         let mut rd = &wire[..];
         for i in 0..5u64 {
             match recv_to_leader(&mut rd).unwrap() {
-                ToLeader::Update { round, node, .. } => {
-                    assert_eq!(round, i);
+                ToLeader::Update { version, node, .. } => {
+                    assert_eq!(version, i);
                     assert_eq!(node, i * 2);
                 }
                 _ => panic!(),
@@ -426,7 +514,7 @@ mod tests {
 
     #[test]
     fn decode_rejects_trailing_garbage() {
-        let mut bytes = ToLeader::Join.encode();
+        let mut bytes = ToLeader::Join { proto: PROTO_VERSION }.encode();
         bytes.push(0xff);
         assert!(ToLeader::decode(&bytes).is_err());
     }

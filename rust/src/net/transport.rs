@@ -1,23 +1,44 @@
-//! The networked [`Transport`]: leader-side fan-out/fan-in over TCP.
+//! The networked [`Transport`]s: leader-side fan-out/fan-in over TCP.
 //!
 //! Wraps the [`proto`](super::proto) wire protocol behind the
 //! coordinator's [`Transport`] seam, so the exact same
 //! [`RoundEngine`](crate::coordinator::RoundEngine) loop that drives the
 //! in-process simulation also drives a real worker cluster — no
-//! duplicated round logic.
+//! duplicated round logic. Two leaders share the plumbing:
 //!
-//! Fan-out/fan-in is pipelined with blocking sockets: all `Work` frames
-//! for a round are written first (worker processes run concurrently), then
-//! updates are collected. There is no deadlock cycle — a worker always
-//! drains its request before producing its (small) reply, and replies park
-//! in kernel socket buffers until the leader reads them.
+//! * [`Tcp`] — the synchronous barrier: every commit fans out all of
+//!   `S_k`, waits for every upload, and aggregates in node order
+//!   (bit-identical to the in-process sim for equal seeds).
+//! * [`TcpAsync`] — the buffered-async protocol on real sockets: the
+//!   leader keeps `r` jobs in flight, commits as soon as `buffer_size`
+//!   uploads land, stamps stragglers with their staleness and
+//!   re-dispatches drops — every protocol decision delegated to the same
+//!   [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
+//!   that drives [`AsyncSim`](crate::coordinator::AsyncSim), so there is
+//!   exactly one implementation of the buffer/staleness/re-dispatch
+//!   rules in the tree.
+//!
+//! Barrier fan-out/fan-in is pipelined with blocking sockets: all `Work`
+//! frames for a round are written first (worker processes run
+//! concurrently), then updates are collected. There is no deadlock cycle
+//! — a worker always drains its request before producing its (small)
+//! reply, and replies park in kernel socket buffers until the leader
+//! reads them. The async leader instead moves each connection's read
+//! half onto a reader thread feeding one mpsc channel, so uploads are
+//! consumed in true arrival order across workers — the real-socket
+//! analogue of `AsyncSim`'s virtual-completion-time queue.
 
-use super::proto::{recv_to_leader, send_to_worker, ToLeader, ToWorker};
+use super::proto::{
+    recv_to_leader, send_to_worker, ToLeader, ToWorker, PROTO_VERSION,
+};
 use crate::config::ExperimentConfig;
+use crate::coordinator::commit_loop::{CommitPlanner, Decision, PlannerEvent};
 use crate::coordinator::{RoundCtx, RoundOutcome, Transport};
 use crate::model::Engine;
 use crate::quant::{Encoded, UpdateCodec};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver};
+use std::thread::JoinHandle;
 
 struct WorkerConn {
     rd: TcpStream,
@@ -28,15 +49,52 @@ fn accept_worker(listener: &TcpListener) -> crate::Result<WorkerConn> {
     let (stream, peer) = listener.accept()?;
     stream.set_nodelay(true)?;
     let mut rd = stream.try_clone()?;
-    let join = recv_to_leader(&mut rd)?;
-    anyhow::ensure!(matches!(join, ToLeader::Join), "expected Join from {peer}");
+    match recv_to_leader(&mut rd)? {
+        ToLeader::Join { proto } => anyhow::ensure!(
+            proto == PROTO_VERSION,
+            "worker at {peer} speaks wire-protocol v{proto}; this leader \
+             requires v{PROTO_VERSION} — rebuild so leader and workers match"
+        ),
+        other => anyhow::bail!("expected Join from {peer}, got {other:?}"),
+    }
     eprintln!("leader: worker joined from {peer}");
     Ok(WorkerConn { rd, wr: stream })
 }
 
-/// Leader half of the TCP execution mode: accepts `n_workers` workers on
-/// `bind`, broadcasts the config, then round-robins the sampled virtual
-/// nodes across them each round. Rounds are charged wall-clock time.
+/// Accept `n_workers` workers on `bind`, run the `Join`/`Setup`/`Ready`
+/// handshake, and hand back the ready connections. Shared by both
+/// leaders.
+fn accept_cluster(
+    bind: &str,
+    n_workers: usize,
+    cfg: &ExperimentConfig,
+) -> crate::Result<Vec<WorkerConn>> {
+    anyhow::ensure!(n_workers >= 1, "need at least one worker");
+    let listener = TcpListener::bind(bind)?;
+    eprintln!("leader: listening on {}", listener.local_addr()?);
+    let mut workers = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        workers.push(accept_worker(&listener)?);
+    }
+    // Broadcast setup; await Ready from everyone (engines compile now).
+    for w in workers.iter_mut() {
+        send_to_worker(
+            &mut w.wr,
+            &ToWorker::Setup { proto: PROTO_VERSION, cfg: cfg.clone() },
+        )?;
+    }
+    for w in workers.iter_mut() {
+        let msg = recv_to_leader(&mut w.rd)?;
+        anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
+    }
+    eprintln!("leader: {n_workers} workers ready");
+    Ok(workers)
+}
+
+/// Leader half of the synchronous TCP execution mode: accepts `n_workers`
+/// workers on `bind`, broadcasts the config, then round-robins the
+/// sampled virtual nodes across them each round. Rounds are charged
+/// wall-clock time.
 pub struct Tcp {
     bind: String,
     n_workers: usize,
@@ -67,22 +125,7 @@ impl Transport for Tcp {
         cfg: &ExperimentConfig,
         _engine: &mut dyn Engine,
     ) -> crate::Result<()> {
-        anyhow::ensure!(self.n_workers >= 1, "need at least one worker");
-        let listener = TcpListener::bind(&self.bind)?;
-        eprintln!("leader: listening on {}", listener.local_addr()?);
-        self.workers.clear();
-        for _ in 0..self.n_workers {
-            self.workers.push(accept_worker(&listener)?);
-        }
-        // Broadcast setup; await Ready from everyone (engines compile now).
-        for w in self.workers.iter_mut() {
-            send_to_worker(&mut w.wr, &ToWorker::Setup { cfg: cfg.clone() })?;
-        }
-        for w in self.workers.iter_mut() {
-            let msg = recv_to_leader(&mut w.rd)?;
-            anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
-        }
-        eprintln!("leader: {} workers ready", self.n_workers);
+        self.workers = accept_cluster(&self.bind, self.n_workers, cfg)?;
         Ok(())
     }
 
@@ -99,7 +142,7 @@ impl Transport for Tcp {
             send_to_worker(
                 &mut w.wr,
                 &ToWorker::Work {
-                    round: ctx.round as u64,
+                    version: ctx.round as u64,
                     node: node as u64,
                     params: ctx.params.to_vec(),
                     lrs: ctx.lrs.to_vec(),
@@ -112,8 +155,8 @@ impl Transport for Tcp {
         for (j, _) in ctx.nodes.iter().enumerate() {
             let w = &mut self.workers[j % self.n_workers];
             match recv_to_leader(&mut w.rd)? {
-                ToLeader::Update { round, node, enc } => {
-                    anyhow::ensure!(round as usize == ctx.round, "round mismatch");
+                ToLeader::Update { version, node, enc } => {
+                    anyhow::ensure!(version as usize == ctx.round, "round mismatch");
                     let pos = ctx
                         .nodes
                         .iter()
@@ -140,5 +183,237 @@ impl Transport for Tcp {
             send_to_worker(&mut w.wr, &ToWorker::Shutdown)?;
         }
         Ok(())
+    }
+}
+
+/// Leader half of the **buffered-async** TCP execution mode: no global
+/// barrier. Dispatches are stamped with the model version they broadcast;
+/// uploads are consumed in true cross-worker arrival order (per-connection
+/// reader threads feeding one channel) and fed to the shared
+/// [`CommitPlanner`], which decides when to commit, what to drop as too
+/// stale, and which node to re-dispatch on the freed capacity. With
+/// `buffer_size == r` and `max_staleness == 0` every commit waits for its
+/// whole wave and sorts back into sampling order, so the committed model
+/// sequence is bit-identical to the barrier [`Tcp`] run — asserted by
+/// `rust/tests/tcp_async.rs` and the CI async-TCP determinism leg.
+pub struct TcpAsync {
+    bind: String,
+    n_workers: usize,
+    /// Write halves, indexed by worker; read halves live on the reader
+    /// threads after setup.
+    writers: Vec<TcpStream>,
+    arrivals: Option<Receiver<crate::Result<ToLeader>>>,
+    readers: Vec<JoinHandle<()>>,
+    planner: Option<CommitPlanner>,
+    /// Round-robin dispatch cursor (job → worker assignment; results are
+    /// assignment-independent because every upload is keyed by
+    /// `(seed, node, version)`).
+    next_worker: usize,
+}
+
+impl TcpAsync {
+    pub fn new(bind: impl Into<String>, n_workers: usize) -> Self {
+        TcpAsync {
+            bind: bind.into(),
+            n_workers,
+            writers: Vec::new(),
+            arrivals: None,
+            readers: Vec::new(),
+            planner: None,
+            next_worker: 0,
+        }
+    }
+
+    /// Total stale uploads dropped so far in this run.
+    pub fn dropped(&self) -> u64 {
+        self.planner.as_ref().map_or(0, CommitPlanner::dropped)
+    }
+
+    /// Execute one planner `Dispatch` decision: send the current model to
+    /// the next worker in the rotation.
+    fn dispatch(
+        &mut self,
+        node: usize,
+        version: usize,
+        ctx: &RoundCtx<'_>,
+    ) -> crate::Result<()> {
+        let w = self.next_worker % self.n_workers;
+        self.next_worker += 1;
+        send_to_worker(
+            &mut self.writers[w],
+            &ToWorker::Work {
+                version: version as u64,
+                node: node as u64,
+                params: ctx.params.to_vec(),
+                lrs: ctx.lrs.to_vec(),
+            },
+        )
+    }
+
+    /// Block until the next upload arrives on any connection.
+    fn next_upload(&mut self) -> crate::Result<(usize, usize, Encoded)> {
+        let rx = self
+            .arrivals
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("TcpAsync used before setup"))?;
+        let msg = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("all worker connections closed"))??;
+        match msg {
+            ToLeader::Update { version, node, enc } => {
+                Ok((node as usize, version as usize, enc))
+            }
+            other => anyhow::bail!("unexpected message {other:?}"),
+        }
+    }
+}
+
+impl Transport for TcpAsync {
+    fn name(&self) -> &'static str {
+        "tcp-async"
+    }
+
+    fn virtual_time(&self) -> bool {
+        false
+    }
+
+    fn rebuilds_codec_from_config(&self) -> bool {
+        true
+    }
+
+    fn buffered_async(&self) -> bool {
+        true
+    }
+
+    fn setup(
+        &mut self,
+        cfg: &ExperimentConfig,
+        _engine: &mut dyn Engine,
+    ) -> crate::Result<()> {
+        let workers = accept_cluster(&self.bind, self.n_workers, cfg)?;
+        self.planner = Some(CommitPlanner::new(cfg)?);
+        self.next_worker = 0;
+        self.writers.clear();
+        self.readers.clear();
+        // One reader thread per connection, all feeding one channel: the
+        // leader sees uploads in real arrival order across workers. A
+        // read error is forwarded once and the thread exits; after a
+        // clean shutdown the leader has already dropped the receiver, so
+        // the forward fails silently and the thread just ends.
+        let (tx, rx) = channel();
+        for conn in workers {
+            let WorkerConn { mut rd, wr } = conn;
+            self.writers.push(wr);
+            let tx = tx.clone();
+            self.readers.push(std::thread::spawn(move || loop {
+                match recv_to_leader(&mut rd) {
+                    Ok(msg) => {
+                        if tx.send(Ok(msg)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                }
+            }));
+        }
+        self.arrivals = Some(rx);
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        ctx: &RoundCtx<'_>,
+        _codec: &dyn UpdateCodec,
+        _engine: &mut dyn Engine,
+    ) -> crate::Result<RoundOutcome> {
+        anyhow::ensure!(!self.writers.is_empty(), "TcpAsync::round before setup");
+        {
+            let planner = self.planner.as_mut().unwrap();
+            anyhow::ensure!(
+                ctx.round == planner.version(),
+                "TcpAsync expects sequential rounds: got {} at version {}",
+                ctx.round,
+                planner.version()
+            );
+        }
+        // Refill wave at the current model (the whole sampled set at
+        // version 0, then `buffer_size` jobs per commit) — exactly r jobs
+        // in flight at every instant.
+        let wave = self.planner.as_mut().unwrap().begin_version(ctx.nodes)?;
+        for d in wave {
+            match d {
+                Decision::Dispatch { node, version, .. } => {
+                    self.dispatch(node, version, ctx)?
+                }
+                other => anyhow::bail!("unexpected wave decision {other:?}"),
+            }
+        }
+        // Event loop: absorb socket arrivals until the planner commits.
+        loop {
+            let (node, version, enc) = self.next_upload()?;
+            let decisions = self
+                .planner
+                .as_mut()
+                .unwrap()
+                .on_event(PlannerEvent::UploadArrived { node, version, enc })?;
+            for d in decisions {
+                match d {
+                    Decision::Drop { node, staleness } => {
+                        eprintln!(
+                            "[tcp-async] commit {}: dropped node {node} upload \
+                             (staleness {staleness})",
+                            ctx.round
+                        );
+                    }
+                    Decision::Dispatch { node, version, .. } => {
+                        self.dispatch(node, version, ctx)?
+                    }
+                    Decision::Commit { uploads, dropped } => {
+                        return Ok(RoundOutcome { uploads, timing: None, dropped });
+                    }
+                }
+            }
+        }
+    }
+
+    fn shutdown(&mut self) -> crate::Result<()> {
+        // Drain the straggler jobs still in flight (workers always finish
+        // a dispatched Work before reading Shutdown), discard their
+        // uploads, then release everyone. Tear-down is best-effort: a
+        // dead connection mid-drain must not leave the healthy workers
+        // blocked in recv or the reader threads unjoined — every step
+        // still runs, and the first error is reported at the end.
+        let (pending, dropped) = self
+            .planner
+            .as_ref()
+            .map_or((0, 0), |p| (p.in_flight(), p.dropped()));
+        let mut first_err = None;
+        for _ in 0..pending {
+            if let Err(e) = self.next_upload() {
+                first_err = Some(e);
+                break;
+            }
+        }
+        if dropped > 0 {
+            eprintln!("[tcp-async] run complete: {dropped} stale upload(s) dropped");
+        }
+        for w in self.writers.iter_mut() {
+            if let Err(e) = send_to_worker(w, &ToWorker::Shutdown) {
+                first_err.get_or_insert(e);
+            }
+        }
+        // Dropping the receiver lets reader threads exit as soon as their
+        // socket closes; join to not leak threads past the run.
+        self.arrivals = None;
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }

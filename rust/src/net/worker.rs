@@ -2,8 +2,19 @@
 //! `Setup` config, then services `Work` requests until `Shutdown`.
 //! Blocking I/O — each worker is its own OS process with its own PJRT
 //! client, so there is nothing to multiplex inside one worker.
+//!
+//! The worker is **protocol-agnostic about rounds**: every `Work` frame
+//! carries the model version its params belong to, and the worker keys
+//! its RNG streams off `(seed, node, version)` — identical under the
+//! barrier leader (version = round index) and the buffered-async leader
+//! (version = commit count at dispatch). Staleness is entirely the
+//! leader's bookkeeping; a straggling worker just answers late and the
+//! [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
+//! stamps or drops the upload on arrival.
 
-use super::proto::{recv_to_worker, send_to_leader, ToLeader, ToWorker};
+use super::proto::{
+    recv_to_worker, send_to_leader, ToLeader, ToWorker, PROTO_VERSION,
+};
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::coordinator::local::{self, GatherBufs};
 use crate::data::{BatchSampler, FederatedDataset, Partition};
@@ -11,6 +22,7 @@ use crate::figures::zoo_kind;
 use crate::model::{Engine, RustEngine};
 use std::net::TcpStream;
 use std::path::Path;
+use std::time::Duration;
 
 /// Build the engine a worker (or leader) uses for `cfg`.
 pub fn build_engine(
@@ -30,14 +42,76 @@ pub fn build_engine(
     })
 }
 
-/// Worker main loop. Returns after a clean `Shutdown`.
+/// Knobs for [`run_worker_with`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerOptions {
+    /// Sleep this long before computing each `Work` request — a
+    /// deterministic straggler injector for async-protocol tests and
+    /// heterogeneity experiments (`fedpaq worker --delay-ms N`). The
+    /// upload *content* is unaffected (it depends only on seeds), only
+    /// its arrival time.
+    pub work_delay: Option<Duration>,
+}
+
+/// Worker main loop with default options. Returns after a clean
+/// `Shutdown`.
 pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
+    run_worker_with(addr, artifacts, WorkerOptions::default())
+}
+
+/// Worker main loop. Returns after a clean `Shutdown`.
+pub fn run_worker_with(
+    addr: &str,
+    artifacts: &Path,
+    opts: WorkerOptions,
+) -> crate::Result<()> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    serve(stream, artifacts, opts)
+}
+
+/// [`run_worker_with`], but keep re-dialing a not-yet-listening leader
+/// until `retry_for` elapses — the one retry implementation shared by
+/// the CLI, tests and launch scripts, keyed on the *dial* failing
+/// (structurally, not by error-message matching). Errors after the
+/// connection is established are never retried.
+pub fn run_worker_retrying(
+    addr: &str,
+    artifacts: &Path,
+    opts: WorkerOptions,
+    retry_for: Duration,
+) -> crate::Result<()> {
+    // Only transient dial failures are worth retrying — a leader that is
+    // not (yet) accepting. Permanent errors (bad address, unresolvable
+    // host) surface on the first attempt instead of burning the window.
+    let transient = |e: &std::io::Error| {
+        matches!(
+            e.kind(),
+            std::io::ErrorKind::ConnectionRefused
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::TimedOut
+        )
+    };
+    let deadline = std::time::Instant::now() + retry_for;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) if transient(&e) && std::time::Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => return Err(anyhow::anyhow!("connect {addr}: {e}")),
+        }
+    };
+    serve(stream, artifacts, opts)
+}
+
+/// The post-connect worker protocol loop.
+fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Result<()> {
     stream.set_nodelay(true)?;
     let mut rd = stream.try_clone()?;
     let mut wr = stream;
-    send_to_leader(&mut wr, &ToLeader::Join)?;
+    send_to_leader(&mut wr, &ToLeader::Join { proto: PROTO_VERSION })?;
 
     // World state, built on Setup. The codec is instantiated once from
     // the config's tagged spec and reused for every Work request.
@@ -55,7 +129,12 @@ pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
     loop {
         let msg = recv_to_worker(&mut rd)?;
         match msg {
-            ToWorker::Setup { cfg } => {
+            ToWorker::Setup { proto, cfg } => {
+                anyhow::ensure!(
+                    proto == PROTO_VERSION,
+                    "leader speaks wire-protocol v{proto}; this worker requires \
+                     v{PROTO_VERSION} — rebuild so leader and workers match"
+                );
                 let engine = build_engine(&cfg, artifacts)?;
                 let codec = cfg.codec.build()?;
                 let n_samples = cfg.n_nodes * cfg.per_node;
@@ -66,7 +145,10 @@ pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
                 world = Some((cfg, codec, engine, data, partition, sampler));
                 send_to_leader(&mut wr, &ToLeader::Ready)?;
             }
-            ToWorker::Work { round, node, params, lrs } => {
+            ToWorker::Work { version, node, params, lrs } => {
+                if let Some(delay) = opts.work_delay {
+                    std::thread::sleep(delay);
+                }
                 let (cfg, codec, engine, data, partition, sampler) = world
                     .as_mut()
                     .ok_or_else(|| anyhow::anyhow!("Work before Setup"))?;
@@ -78,12 +160,12 @@ pub fn run_worker(addr: &str, artifacts: &Path) -> crate::Result<()> {
                     partition.shard(node as usize),
                     sampler,
                     node as usize,
-                    round as usize,
+                    version as usize,
                     &params,
                     &lrs,
                     &mut bufs,
                 )?;
-                send_to_leader(&mut wr, &ToLeader::Update { round, node, enc })?;
+                send_to_leader(&mut wr, &ToLeader::Update { version, node, enc })?;
             }
             ToWorker::Shutdown => return Ok(()),
         }

@@ -7,7 +7,7 @@ use fedpaq::coordinator::Server;
 use fedpaq::data::DatasetKind;
 use fedpaq::figures::zoo_kind;
 use fedpaq::model::RustEngine;
-use fedpaq::net::{run_leader, run_worker};
+use fedpaq::net::{run_leader, run_worker_retrying};
 use fedpaq::opt::LrSchedule;
 use fedpaq::quant::CodecSpec;
 use std::net::TcpListener;
@@ -53,20 +53,14 @@ fn run_cluster(cfg: &ExperimentConfig, n_workers: usize) -> fedpaq::coordinator:
         .map(|_| {
             let addr = addr.clone();
             std::thread::spawn(move || {
-                // Retry until the leader is listening.
-                for _ in 0..100 {
-                    match run_worker(&addr, Path::new("artifacts")) {
-                        Ok(()) => return,
-                        Err(e) => {
-                            if e.to_string().contains("connect") {
-                                std::thread::sleep(std::time::Duration::from_millis(20));
-                                continue;
-                            }
-                            panic!("worker failed: {e}");
-                        }
-                    }
-                }
-                panic!("worker could not connect");
+                // Keep re-dialing until the leader is listening.
+                run_worker_retrying(
+                    &addr,
+                    Path::new("artifacts"),
+                    Default::default(),
+                    std::time::Duration::from_secs(30),
+                )
+                .unwrap_or_else(|e| panic!("worker failed: {e}"));
             })
         })
         .collect();

@@ -1,0 +1,221 @@
+//! Property tests for the event-driven commit core
+//! (`coordinator::commit_loop::CommitPlanner`) driven **in isolation** —
+//! no clock, no sockets, just random event interleavings over random
+//! protocol knobs. The invariants under test are exactly the ones both
+//! `AsyncSim` and `net::TcpAsync` rely on:
+//!
+//! * no `(node, version)` job is ever dispatched twice;
+//! * every commit carries exactly `buffer_size` uploads (only the final
+//!   `drain` may surface fewer);
+//! * no committed upload exceeds `max_staleness`, and every stamp equals
+//!   `commit version − origin version`;
+//! * commit batches come back in canonical origin-version order with `r`
+//!   jobs back in flight after the refill wave.
+
+use fedpaq::coordinator::commit_loop::{CommitPlanner, Decision, PlannerEvent};
+use fedpaq::coordinator::Upload;
+use fedpaq::quant::{CodecSpec, Encoded, UpdateCodec};
+use fedpaq::util::prop::check;
+use fedpaq::util::rng::Rng;
+use std::collections::HashSet;
+
+fn enc(rng: &mut Rng) -> Encoded {
+    let codec = CodecSpec::qsgd(1).build().unwrap();
+    let x: Vec<f32> = (0..4).map(|_| rng.gen_f32() - 0.5).collect();
+    codec.encode(&x, rng)
+}
+
+/// Sample `r` distinct nodes from `0..n` (order randomized).
+fn sample(rng: &mut Rng, n: usize, r: usize) -> Vec<usize> {
+    let mut all: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut all);
+    all.truncate(r);
+    all
+}
+
+/// Fold a decision batch into the test's book-keeping: track every
+/// dispatch (asserting the no-duplicate invariant), check drops exceed
+/// the cap, and hand back the committed uploads if one fired.
+fn record(
+    decisions: Vec<Decision>,
+    max_staleness: usize,
+    outstanding: &mut Vec<(usize, usize)>,
+    dispatched: &mut HashSet<(usize, usize)>,
+) -> Option<Vec<Upload>> {
+    let mut committed = None;
+    for d in decisions {
+        match d {
+            Decision::Dispatch { node, version, .. } => {
+                assert!(
+                    dispatched.insert((node, version)),
+                    "duplicate (node={node}, version={version}) dispatch"
+                );
+                outstanding.push((node, version));
+            }
+            Decision::Drop { staleness, .. } => {
+                assert!(
+                    staleness > max_staleness,
+                    "dropped an upload within the staleness cap"
+                );
+            }
+            Decision::Commit { uploads, .. } => {
+                assert!(committed.is_none(), "two commits in one decision batch");
+                committed = Some(uploads);
+            }
+        }
+    }
+    committed
+}
+
+#[test]
+fn prop_random_interleavings_uphold_the_commit_invariants() {
+    check(120, 0xfed_cc1, |rng| {
+        let n_nodes = rng.gen_range(2, 12);
+        let r = rng.gen_range(1, n_nodes + 1);
+        let buffer_size = rng.gen_range(1, r + 1);
+        let max_staleness = rng.gen_range(0, 4);
+        let seed = rng.next_u64();
+        let mut planner =
+            CommitPlanner::from_parts(seed, n_nodes, r, buffer_size, max_staleness)
+                .unwrap();
+
+        // Outstanding dispatched jobs the "transport" may deliver next,
+        // and every (node, version) ever dispatched (the invariant set).
+        let mut outstanding: Vec<(usize, usize)> = Vec::new();
+        let mut dispatched: HashSet<(usize, usize)> = HashSet::new();
+        let versions = rng.gen_range(2, 6);
+
+        for k in 0..versions {
+            assert_eq!(planner.version(), k);
+            let sampled = sample(rng, n_nodes, r);
+            let wave = planner.begin_version(&sampled).unwrap();
+            let expected_wave = if k == 0 { r } else { buffer_size };
+            assert_eq!(wave.len(), expected_wave, "refill wave size");
+            assert!(record(wave, max_staleness, &mut outstanding, &mut dispatched)
+                .is_none());
+            assert_eq!(
+                planner.in_flight() + planner.buffered(),
+                r,
+                "r jobs in flight after every refill"
+            );
+
+            // Deliver outstanding uploads in random order until commit.
+            let committed = loop {
+                assert!(!outstanding.is_empty(), "planner starved before commit");
+                let i = rng.gen_range(0, outstanding.len());
+                let (node, version) = outstanding.swap_remove(i);
+                let decisions = planner
+                    .on_event(PlannerEvent::UploadArrived { node, version, enc: enc(rng) })
+                    .unwrap();
+                if let Some(uploads) =
+                    record(decisions, max_staleness, &mut outstanding, &mut dispatched)
+                {
+                    break uploads;
+                }
+            };
+
+            // Full commits only, canonically ordered, staleness capped
+            // and stamped against this commit's version.
+            assert_eq!(committed.len(), buffer_size, "short commit");
+            let mut prev_origin = 0;
+            for u in &committed {
+                assert!(u.staleness <= max_staleness, "staleness cap violated");
+                assert_eq!(u.staleness, k - u.origin_round, "bad staleness stamp");
+                assert!(u.origin_round >= prev_origin, "batch not in origin order");
+                prev_origin = u.origin_round;
+            }
+        }
+
+        // Final drain: deliver a few more arrivals without filling the
+        // buffer, then drain — strictly fewer than buffer_size uploads
+        // surface, all stamped against the current version, and the
+        // buffer empties.
+        let wave = planner.begin_version(&sample(rng, n_nodes, r)).unwrap();
+        assert!(record(wave, max_staleness, &mut outstanding, &mut dispatched).is_none());
+        let deliver = rng.gen_range(0, buffer_size);
+        let mut fed = 0;
+        while fed < deliver && !outstanding.is_empty() {
+            let i = rng.gen_range(0, outstanding.len());
+            let (node, version) = outstanding.swap_remove(i);
+            let decisions = planner
+                .on_event(PlannerEvent::UploadArrived { node, version, enc: enc(rng) })
+                .unwrap();
+            assert!(
+                record(decisions, max_staleness, &mut outstanding, &mut dispatched)
+                    .is_none(),
+                "commit fired below buffer_size"
+            );
+            fed += 1;
+        }
+        let buffered = planner.buffered();
+        assert!(buffered < planner.buffer_size());
+        let drained = planner.drain();
+        assert_eq!(drained.len(), buffered);
+        assert_eq!(planner.buffered(), 0);
+        for u in &drained {
+            assert_eq!(u.staleness, planner.version() - u.origin_round);
+        }
+    });
+}
+
+#[test]
+fn prop_duplicate_and_future_arrivals_are_rejected() {
+    check(60, 0xfed_cc2, |rng| {
+        let n_nodes = rng.gen_range(2, 10);
+        let r = rng.gen_range(2, n_nodes + 1);
+        let buffer_size = rng.gen_range(2, r + 1); // ≥ 2 so one arrival never commits
+        let mut planner =
+            CommitPlanner::from_parts(rng.next_u64(), n_nodes, r, buffer_size, 8).unwrap();
+        let sampled: Vec<usize> = (0..n_nodes).collect();
+        planner.begin_version(&sampled[..r]).unwrap();
+        let node = sampled[rng.gen_range(0, r)];
+        planner
+            .on_event(PlannerEvent::UploadArrived { node, version: 0, enc: enc(rng) })
+            .unwrap();
+        // Same (node, version) again: the invariant must reject it.
+        let err = planner
+            .on_event(PlannerEvent::UploadArrived { node, version: 0, enc: enc(rng) })
+            .unwrap_err();
+        assert!(err.to_string().contains("invariant"), "{err}");
+        // An upload claiming a future version is equally impossible.
+        let err = planner
+            .on_event(PlannerEvent::UploadArrived {
+                node,
+                version: planner.version() + 3,
+                enc: enc(rng),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown"), "{err}");
+    });
+}
+
+#[test]
+fn capacity_freed_retires_the_lost_job_and_redispatches() {
+    // Deterministic check of the external CapacityFreed event: the lost
+    // job leaves the in-flight set (so transport drain counts stay
+    // truthful), exactly one replacement is dispatched at the current
+    // version, and the replacement never duplicates a *live* job.
+    let mut planner = CommitPlanner::from_parts(7, 6, 4, 2, 1).unwrap();
+    planner.begin_version(&[0, 1, 2, 3]).unwrap();
+    assert_eq!(planner.in_flight(), 4);
+    let decisions = planner
+        .on_event(PlannerEvent::CapacityFreed { node: 2, version: 0 })
+        .unwrap();
+    let picked = match &decisions[..] {
+        [Decision::Dispatch { node, version: 0, .. }] => *node,
+        other => panic!("unexpected {other:?}"),
+    };
+    // Nodes 0, 1, 3 still hold live version-0 jobs; only the retired
+    // node 2 (its upload can never be counted) or an idle node is a
+    // legal replacement.
+    assert!(
+        !matches!(picked, 0 | 1 | 3),
+        "replacement duplicated live job (node {picked}, version 0)"
+    );
+    assert_eq!(planner.in_flight(), 4, "capacity stays constant");
+    // Reporting a job that was never dispatched is an error, not a
+    // silent extra dispatch.
+    assert!(planner
+        .on_event(PlannerEvent::CapacityFreed { node: 5, version: 3 })
+        .is_err());
+}

@@ -314,7 +314,7 @@ fn prop_wire_messages_roundtrip() {
     check(150, 0xfed_b3, |rng| {
         let p = rng.gen_range(1, 400);
         let msg = ToWorker::Work {
-            round: rng.next_u64() % 1000,
+            version: rng.next_u64() % 1000,
             node: rng.next_u64() % 50,
             params: random_vec(rng, p, 1.0),
             lrs: {
@@ -324,10 +324,10 @@ fn prop_wire_messages_roundtrip() {
         };
         match (ToWorker::decode(&msg.encode()).unwrap(), &msg) {
             (
-                ToWorker::Work { round, node, params, lrs },
-                ToWorker::Work { round: r2, node: n2, params: p2, lrs: l2 },
+                ToWorker::Work { version, node, params, lrs },
+                ToWorker::Work { version: v2, node: n2, params: p2, lrs: l2 },
             ) => {
-                assert_eq!(round, *r2);
+                assert_eq!(version, *v2);
                 assert_eq!(node, *n2);
                 assert_eq!(&params, p2);
                 assert_eq!(&lrs, l2);
@@ -337,7 +337,7 @@ fn prop_wire_messages_roundtrip() {
         let q = QsgdCodec::new(rng.gen_range(1, 16) as u32);
         let enc = q.encode(&random_vec(rng, p, 2.0), &mut rng.clone());
         let want = q.decode(&enc).unwrap();
-        let up = ToLeader::Update { round: 1, node: 2, enc };
+        let up = ToLeader::Update { version: 1, node: 2, enc };
         match ToLeader::decode(&up.encode()).unwrap() {
             ToLeader::Update { enc, .. } => assert_eq!(q.decode(&enc).unwrap(), want),
             _ => panic!(),

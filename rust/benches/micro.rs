@@ -36,6 +36,46 @@ fn quantizer_codec() {
     g.finish();
 }
 
+/// Per-codec encode/decode throughput over a 2^20-parameter vector — one
+/// row per (direction, codec family member), emitted as
+/// `BENCH_codecs.json` and gated by CI against the committed floors in
+/// `rust/benches/baseline/BENCH_codecs.json` (python/bench_check.py), so
+/// a codec that silently falls off a cliff fails the bench job by name.
+fn codec_suite() {
+    let mut g = Group::new("codecs");
+    let p: usize = 1 << 20;
+    let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.37).sin() * 0.01).collect();
+    for (label, spec) in [
+        ("identity", CodecSpec::Identity),
+        ("qsgd_s1", CodecSpec::qsgd(1)),
+        ("qsgd_s7_elias", CodecSpec::Qsgd { s: 7, coding: Coding::Elias }),
+        ("topk_100", CodecSpec::top_k(100)),
+        ("randk_100_seeded", CodecSpec::rand_k(100)),
+        ("randk_100_elias", CodecSpec::RandK { k_permille: 100, seeded: false }),
+        ("adaptive_b4", CodecSpec::adaptive(4)),
+        ("ef_topk_100", CodecSpec::error_feedback(CodecSpec::top_k(100))),
+        ("ef_qsgd_s1", CodecSpec::error_feedback(CodecSpec::qsgd(1))),
+    ] {
+        let q = spec.build().unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        // Encode throughput. Stateful codecs pay their residual update
+        // here too — that cost is part of the codec, so it is gated.
+        g.bench_elems(&format!("encode/{label}"), p as u64, || {
+            let enc = q.encode_node(0, black_box(&x), &mut rng);
+            black_box(enc);
+        });
+        // Decode throughput against one representative frame, into a
+        // reused buffer (the aggregation hot path's shape).
+        let enc = q.encode(&x, &mut Rng::seed_from_u64(8));
+        let mut out: Vec<f32> = Vec::new();
+        g.bench_elems(&format!("decode/{label}"), p as u64, || {
+            q.decode_into(black_box(&enc), &mut out).unwrap();
+            black_box(&out);
+        });
+    }
+    g.finish();
+}
+
 fn aggregation() {
     let mut g = Group::new("aggregate");
     let p = 92_027;
@@ -109,6 +149,7 @@ fn sampling_and_gather() {
 
 fn main() {
     quantizer_codec();
+    codec_suite();
     aggregation();
     sampling_and_gather();
 }

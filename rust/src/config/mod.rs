@@ -15,11 +15,15 @@
 //! {"type": "identity"}
 //! {"type": "qsgd",  "s": 4, "coding": "naive" | "elias"}
 //! {"type": "top_k", "k_permille": 100, "coding": "naive" | "elias"}
+//! {"type": "rand_k", "k_permille": 100, "seeded": true | false}
+//! {"type": "adaptive_qsgd", "bits_per_coord": 4, "coding": "naive" | "elias"}
+//! {"type": "error_feedback", "inner": {"type": "top_k", ...}}
 //! ```
 //!
-//! The legacy key `quantizer` is accepted as an alias of `codec`, so
-//! pre-redesign config files keep working. Codecs beyond the built-ins
-//! plug in programmatically through
+//! `error_feedback` nests one level of any non-wrapper codec (see
+//! `validated`); the legacy key `quantizer` is accepted as an alias of
+//! `codec`, so pre-redesign config files keep working. Codecs beyond the
+//! built-ins plug in programmatically through
 //! [`ServerBuilder::codec`](crate::coordinator::ServerBuilder::codec).
 //!
 //! ## Transport knobs
@@ -74,6 +78,142 @@ pub enum EngineKind {
     Pjrt,
     /// Pure-rust oracle (logreg/MLP only; no PJRT startup).
     Rust,
+}
+
+/// Validate a config's codec spec, recursively for wrappers.
+/// `allow_wrapper` is true only at the top level: `error_feedback` nests
+/// exactly one level (EF-of-EF has no defined semantics — there is only
+/// one residual stream per node), and its inner codec must be a concrete
+/// built-in (`external` has no instance for workers to rebuild).
+fn validate_codec(spec: &CodecSpec, allow_wrapper: bool) -> crate::Result<()> {
+    match spec {
+        CodecSpec::Qsgd { s, .. } => {
+            anyhow::ensure!(*s >= 1, "QSGD needs s >= 1");
+        }
+        CodecSpec::TopK { k_permille, .. } => {
+            anyhow::ensure!(
+                (1..=1000).contains(k_permille),
+                "top-k needs k_permille in 1..=1000, got {k_permille}"
+            );
+        }
+        CodecSpec::RandK { k_permille, .. } => {
+            anyhow::ensure!(
+                (1..=1000).contains(k_permille),
+                "rand-k needs k_permille in 1..=1000, got {k_permille}"
+            );
+        }
+        CodecSpec::AdaptiveQsgd { bits_per_coord, .. } => {
+            anyhow::ensure!(
+                (2..=32).contains(bits_per_coord),
+                "adaptive QSGD needs bits_per_coord in 2..=32 (1 sign bit + \
+                 at least 1 level bit), got {bits_per_coord}"
+            );
+        }
+        CodecSpec::ErrorFeedback { inner } => {
+            anyhow::ensure!(
+                allow_wrapper,
+                "error_feedback cannot nest inside another error_feedback"
+            );
+            anyhow::ensure!(
+                !matches!(**inner, CodecSpec::External { .. }),
+                "error_feedback cannot wrap an external codec (no instance \
+                 to rebuild from the config)"
+            );
+            validate_codec(inner, false)?;
+        }
+        CodecSpec::Identity | CodecSpec::External { .. } => {}
+    }
+    Ok(())
+}
+
+/// Serialize a codec spec to its tagged JSON object (recursively for
+/// wrappers). Inverse of [`codec_from_json`].
+fn codec_to_json(spec: &CodecSpec) -> Json {
+    let coding_str = |coding: &Coding| {
+        Json::str(match coding {
+            Coding::Naive => "naive",
+            Coding::Elias => "elias",
+        })
+    };
+    match spec {
+        CodecSpec::Identity => Json::obj(vec![("type", Json::str("identity"))]),
+        CodecSpec::Qsgd { s, coding } => Json::obj(vec![
+            ("type", Json::str("qsgd")),
+            ("s", Json::num(*s as f64)),
+            ("coding", coding_str(coding)),
+        ]),
+        CodecSpec::TopK { k_permille, coding } => Json::obj(vec![
+            ("type", Json::str("top_k")),
+            ("k_permille", Json::num(*k_permille as f64)),
+            ("coding", coding_str(coding)),
+        ]),
+        CodecSpec::RandK { k_permille, seeded } => Json::obj(vec![
+            ("type", Json::str("rand_k")),
+            ("k_permille", Json::num(*k_permille as f64)),
+            ("seeded", Json::Bool(*seeded)),
+        ]),
+        CodecSpec::AdaptiveQsgd { bits_per_coord, coding } => Json::obj(vec![
+            ("type", Json::str("adaptive_qsgd")),
+            ("bits_per_coord", Json::num(*bits_per_coord as f64)),
+            ("coding", coding_str(coding)),
+        ]),
+        CodecSpec::ErrorFeedback { inner } => Json::obj(vec![
+            ("type", Json::str("error_feedback")),
+            ("inner", codec_to_json(inner)),
+        ]),
+        CodecSpec::External { id } => Json::obj(vec![
+            ("type", Json::str("external")),
+            ("id", Json::num(*id as f64)),
+        ]),
+    }
+}
+
+/// Parse a tagged codec JSON object (recursively for wrappers).
+/// Structural limits (EF nesting depth, inner-codec legality) are
+/// enforced by `validated`, not here, so error messages name the policy
+/// rather than a parse failure.
+fn codec_from_json(q: &Json) -> crate::Result<CodecSpec> {
+    let coding = || match q.get("coding").and_then(Json::as_str).unwrap_or("naive") {
+        "elias" => Coding::Elias,
+        _ => Coding::Naive,
+    };
+    Ok(match q.req_str("type")? {
+        "identity" => CodecSpec::Identity,
+        "qsgd" => {
+            let s = q.req_usize("s")?;
+            anyhow::ensure!(s <= u32::MAX as usize, "qsgd s {s} out of range");
+            CodecSpec::Qsgd { s: s as u32, coding: coding() }
+        }
+        "top_k" => {
+            // Range-check before narrowing: `as u16` would wrap
+            // out-of-range values into plausible configs.
+            let k = q.req_usize("k_permille")?;
+            anyhow::ensure!(k <= 1000, "top-k k_permille {k} out of range 0..=1000");
+            CodecSpec::TopK { k_permille: k as u16, coding: coding() }
+        }
+        "rand_k" => {
+            let k = q.req_usize("k_permille")?;
+            anyhow::ensure!(k <= 1000, "rand-k k_permille {k} out of range 0..=1000");
+            // Seeded (index-free) mode is the default, matching
+            // CodecSpec::rand_k.
+            let seeded = q.get("seeded").and_then(Json::as_bool).unwrap_or(true);
+            CodecSpec::RandK { k_permille: k as u16, seeded }
+        }
+        "adaptive_qsgd" => {
+            let b = q.req_usize("bits_per_coord")?;
+            anyhow::ensure!(b <= u8::MAX as usize, "bits_per_coord {b} out of range");
+            CodecSpec::AdaptiveQsgd { bits_per_coord: b as u8, coding: coding() }
+        }
+        "error_feedback" => {
+            CodecSpec::ErrorFeedback { inner: Box::new(codec_from_json(q.req("inner")?)?) }
+        }
+        "external" => {
+            let id = q.req_usize("id")?;
+            anyhow::ensure!(id <= u32::MAX as usize, "external id {id} out of range");
+            CodecSpec::External { id: id as u32 }
+        }
+        other => anyhow::bail!("unknown codec type {other:?}"),
+    })
 }
 
 /// Full description of one federated training run.
@@ -163,18 +303,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.per_node >= 1, "per_node must be >= 1");
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!(self.ratio > 0.0, "ratio must be positive");
-        match self.codec {
-            CodecSpec::Qsgd { s, .. } => {
-                anyhow::ensure!(s >= 1, "QSGD needs s >= 1");
-            }
-            CodecSpec::TopK { k_permille, .. } => {
-                anyhow::ensure!(
-                    (1..=1000).contains(&k_permille),
-                    "top-k needs k_permille in 1..=1000, got {k_permille}"
-                );
-            }
-            CodecSpec::Identity | CodecSpec::External { .. } => {}
-        }
+        validate_codec(&self.codec, true)?;
         if let PartitionKind::Dirichlet { alpha } = self.partition {
             anyhow::ensure!(alpha > 0.0, "dirichlet alpha must be positive");
         }
@@ -251,29 +380,7 @@ impl ExperimentConfig {
     // ---------------- JSON (de)serialization ----------------
 
     pub fn to_json(&self) -> Json {
-        let coding_str = |coding: &Coding| {
-            Json::str(match coding {
-                Coding::Naive => "naive",
-                Coding::Elias => "elias",
-            })
-        };
-        let codec = match self.codec {
-            CodecSpec::Identity => Json::obj(vec![("type", Json::str("identity"))]),
-            CodecSpec::Qsgd { s, ref coding } => Json::obj(vec![
-                ("type", Json::str("qsgd")),
-                ("s", Json::num(s as f64)),
-                ("coding", coding_str(coding)),
-            ]),
-            CodecSpec::TopK { k_permille, ref coding } => Json::obj(vec![
-                ("type", Json::str("top_k")),
-                ("k_permille", Json::num(k_permille as f64)),
-                ("coding", coding_str(coding)),
-            ]),
-            CodecSpec::External { id } => Json::obj(vec![
-                ("type", Json::str("external")),
-                ("id", Json::num(id as f64)),
-            ]),
-        };
+        let codec = codec_to_json(&self.codec);
         let lr = match self.lr {
             LrSchedule::Const { eta } => Json::obj(vec![
                 ("type", Json::str("const")),
@@ -344,39 +451,13 @@ impl ExperimentConfig {
     }
 
     pub fn from_json(j: &Json) -> crate::Result<Self> {
-        let codec = {
-            // `codec` is the current key; `quantizer` is the legacy alias
-            // kept so pre-redesign config files parse unchanged.
-            let q = j
-                .get("codec")
+        // `codec` is the current key; `quantizer` is the legacy alias
+        // kept so pre-redesign config files parse unchanged.
+        let codec = codec_from_json(
+            j.get("codec")
                 .or_else(|| j.get("quantizer"))
-                .ok_or_else(|| anyhow::anyhow!("missing JSON field \"codec\""))?;
-            let coding = || match q.get("coding").and_then(Json::as_str).unwrap_or("naive") {
-                "elias" => Coding::Elias,
-                _ => Coding::Naive,
-            };
-            match q.req_str("type")? {
-                "identity" => CodecSpec::Identity,
-                "qsgd" => {
-                    let s = q.req_usize("s")?;
-                    anyhow::ensure!(s <= u32::MAX as usize, "qsgd s {s} out of range");
-                    CodecSpec::Qsgd { s: s as u32, coding: coding() }
-                }
-                "top_k" => {
-                    // Range-check before narrowing: `as u16` would wrap
-                    // out-of-range values into plausible configs.
-                    let k = q.req_usize("k_permille")?;
-                    anyhow::ensure!(k <= 1000, "top-k k_permille {k} out of range 0..=1000");
-                    CodecSpec::TopK { k_permille: k as u16, coding: coding() }
-                }
-                "external" => {
-                    let id = q.req_usize("id")?;
-                    anyhow::ensure!(id <= u32::MAX as usize, "external id {id} out of range");
-                    CodecSpec::External { id: id as u32 }
-                }
-                other => anyhow::bail!("unknown codec type {other:?}"),
-            }
-        };
+                .ok_or_else(|| anyhow::anyhow!("missing JSON field \"codec\""))?,
+        )?;
         let lr = {
             let l = j.req("lr")?;
             match l.req_str("type")? {
@@ -552,6 +633,35 @@ mod tests {
     }
 
     #[test]
+    fn invalid_new_codec_specs_rejected() {
+        let base = || ExperimentConfig::fig1_logreg_base();
+        // rand-k permille bounds.
+        assert!(base().with_codec(CodecSpec::rand_k(0)).validated().is_err());
+        assert!(base()
+            .with_codec(CodecSpec::RandK { k_permille: 1001, seeded: true })
+            .validated()
+            .is_err());
+        // adaptive budget needs at least sign + one level bit.
+        assert!(base().with_codec(CodecSpec::adaptive(1)).validated().is_err());
+        assert!(base().with_codec(CodecSpec::adaptive(33)).validated().is_err());
+        assert!(base().with_codec(CodecSpec::adaptive(2)).validated().is_ok());
+        // EF nesting and EF-of-external are policy errors.
+        let nested = CodecSpec::error_feedback(CodecSpec::error_feedback(
+            CodecSpec::qsgd(1),
+        ));
+        assert!(base().with_codec(nested).validated().is_err());
+        let ef_ext = CodecSpec::error_feedback(CodecSpec::External { id: 9 });
+        assert!(base().with_codec(ef_ext).validated().is_err());
+        // EF inner params are validated recursively.
+        let ef_bad = CodecSpec::error_feedback(CodecSpec::top_k(0));
+        assert!(base().with_codec(ef_bad).validated().is_err());
+        assert!(base()
+            .with_codec(CodecSpec::error_feedback(CodecSpec::qsgd(1)))
+            .validated()
+            .is_ok());
+    }
+
+    #[test]
     fn invalid_async_knobs_rejected() {
         // buffer_size beyond the sampled set is meaningless.
         let c = ExperimentConfig::fig1_logreg_base().with_async(26, 8).with_r(25);
@@ -580,6 +690,18 @@ mod tests {
                 .with_codec(CodecSpec::TopK { k_permille: 125, coding: Coding::Elias }),
             ExperimentConfig::fig1_logreg_base()
                 .with_codec(CodecSpec::External { id: 41 }),
+            ExperimentConfig::fig1_logreg_base().with_codec(CodecSpec::rand_k(150)),
+            ExperimentConfig::fig1_logreg_base()
+                .with_codec(CodecSpec::RandK { k_permille: 75, seeded: false }),
+            ExperimentConfig::fig1_logreg_base().with_codec(CodecSpec::adaptive(4)),
+            ExperimentConfig::fig1_logreg_base().with_codec(CodecSpec::AdaptiveQsgd {
+                bits_per_coord: 6,
+                coding: Coding::Elias,
+            }),
+            ExperimentConfig::fig1_logreg_base()
+                .with_codec(CodecSpec::error_feedback(CodecSpec::top_k(100))),
+            ExperimentConfig::fig1_logreg_base()
+                .with_codec(CodecSpec::error_feedback(CodecSpec::rand_k(100))),
             ExperimentConfig::fig1_logreg_base().with_async(4, 16),
             ExperimentConfig::fig1_logreg_base()
                 .with_async(7, 0)
@@ -605,10 +727,17 @@ mod tests {
             "legacy_quantizer_key.json",
             "async_fedbuff_logreg.json",
             "async_tcp_logreg.json",
+            "ef_randk_logreg.json",
         ] {
             ExperimentConfig::from_json_file(&dir.join(f))
                 .unwrap_or_else(|e| panic!("{f}: {e}"));
         }
+        let ef_cfg =
+            ExperimentConfig::from_json_file(&dir.join("ef_randk_logreg.json")).unwrap();
+        assert_eq!(
+            ef_cfg.codec,
+            CodecSpec::error_feedback(CodecSpec::rand_k(100))
+        );
         let async_cfg =
             ExperimentConfig::from_json_file(&dir.join("async_fedbuff_logreg.json")).unwrap();
         assert!(async_cfg.async_rounds);

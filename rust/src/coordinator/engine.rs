@@ -248,6 +248,10 @@ impl RoundEngine {
         slab: &EvalSlab,
     ) -> crate::Result<RunResult> {
         self.transport.setup(cfg, engine)?;
+        // Stateful codecs (error feedback) carry per-node memory; a run
+        // starts from zero residuals even when the codec instance is
+        // reused across runs (the trait's reset semantics).
+        self.codec.reset_state();
         let mut params = engine.init_params()?;
         let p = params.len();
         let rounds = cfg.rounds();

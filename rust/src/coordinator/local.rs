@@ -77,7 +77,12 @@ pub fn gather_local_batches(
 }
 
 /// Full node round: local SGD then compress-and-encode the delta through
-/// the run's [`UpdateCodec`].
+/// the run's [`UpdateCodec`] — via [`UpdateCodec::encode_node`], so
+/// stateful codecs (error feedback) key their per-node memory correctly
+/// on both execution modes: the sim funnels every node through one codec
+/// instance here, and the TCP worker calls the same function with its
+/// own per-process instance (node → worker assignment is pinned by node
+/// id, so a node's residual stream never splits across workers).
 ///
 /// Returns the encoded upload (and its exact bit size via `enc.bits()`).
 #[allow(clippy::too_many_arguments)]
@@ -102,7 +107,7 @@ pub fn node_round(
         .map(|(&a, &b)| a - b)
         .collect();
     let mut qrng = quant_rng(cfg.seed, node, round);
-    Ok(codec.encode(&delta, &mut qrng))
+    Ok(codec.encode_node(node, &delta, &mut qrng))
 }
 
 /// Quantizer RNG stream for `(seed, node, round)` — shared with the TCP

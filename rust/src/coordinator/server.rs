@@ -125,6 +125,33 @@ impl<'e> ServerBuilder<'e> {
              its codec from cfg.codec; set a built-in spec there instead",
             transport.name()
         );
+        // The same transports need cfg.codec itself to be rebuildable by
+        // their workers: an External tag (anywhere, including inside an
+        // error-feedback wrapper) names an instance that cannot travel.
+        // Reject at build time with the policy named, instead of letting
+        // every worker fail at Setup.
+        anyhow::ensure!(
+            !transport.rebuilds_codec_from_config() || cfg.codec.rebuildable(),
+            "cfg.codec {:?} contains an external codec, which the {} \
+             transport's workers cannot rebuild from the broadcast config — \
+             use a built-in spec (external codecs are in-process only)",
+            cfg.codec,
+            transport.name()
+        );
+        // Stateful codecs compose with buffered-async rounds, but with a
+        // semantic caveat worth surfacing: error-feedback residuals are
+        // debited at encode time, so an upload later dropped as too
+        // stale loses its mass outright (as any codec's dropped upload
+        // does) instead of being re-sent through the memory.
+        if cfg.async_rounds && cfg.codec.is_stateful() && cfg.effective_buffer_size() < cfg.r
+        {
+            eprintln!(
+                "warning: stateful codec {:?} under buffered-async rounds — \
+                 residual memory debited for uploads dropped past \
+                 max_staleness={} is lost, not re-sent",
+                cfg.codec, cfg.max_staleness
+            );
+        }
         let codec = match self.codec {
             Some(codec) => codec,
             None => cfg.codec.build()?,
@@ -309,6 +336,52 @@ mod tests {
                 assert_eq!(x.time.to_bits(), y.time.to_bits(), "shards={shards}");
             }
         }
+    }
+
+    #[test]
+    fn unrebuildable_codec_rejected_on_rebuilding_transports() {
+        // Tcp rebuilds codecs from the broadcast config on the workers;
+        // an External tag (bare or EF-wrapped via codec override) names
+        // an instance that cannot travel. build() must fail fast —
+        // before any socket work (Tcp connects in setup, not new).
+        let mut eng = engine();
+        let cfg = small_cfg().with_codec(CodecSpec::External { id: 7 });
+        let err = ServerBuilder::new(cfg)
+            .engine(&mut eng)
+            .transport(crate::net::Tcp::new("127.0.0.1:0", 1))
+            .build();
+        assert!(err.is_err());
+        // The same spec on an in-process transport fails too — but only
+        // because External has no instance to build, which is the
+        // historical behavior (overrides via .codec() still work there).
+        let mut eng2 = engine();
+        let cfg = small_cfg().with_codec(CodecSpec::External { id: 7 });
+        assert!(ServerBuilder::new(cfg).engine(&mut eng2).build().is_err());
+    }
+
+    #[test]
+    fn stateful_codec_runs_and_shards_bit_identically() {
+        // EF(rand-k) through the whole pipeline: per-node residual state
+        // in the sim, sharded aggregation decoding ranges through the
+        // wrapper. Loss must decrease and agg_shards must stay a pure
+        // throughput knob.
+        let ef = CodecSpec::error_feedback(CodecSpec::rand_k(200));
+        let run = |shards: usize| {
+            let mut eng = engine();
+            let cfg = small_cfg().with_codec(ef.clone()).with_agg_shards(shards);
+            Server::new(cfg, &mut eng).unwrap().run().unwrap()
+        };
+        let a = run(1);
+        let first = a.curve.points.first().unwrap().loss;
+        let last = a.curve.points.last().unwrap().loss;
+        assert!(last < first * 0.9, "EF(rand-k) did not train: {first} -> {last}");
+        let b = run(4);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.total_bits, b.total_bits);
+        // And repeat runs are bit-identical (the determinism the CI
+        // codec leg byte-diffs).
+        let c = run(1);
+        assert_eq!(a.params, c.params);
     }
 
     #[test]

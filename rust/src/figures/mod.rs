@@ -246,6 +246,39 @@ pub fn all_figures() -> Vec<FigureSpec> {
                 .with_name(format!("async b=5 {}", damped.name())),
         ],
     });
+    // --- Extension: the full codec family on one workload — loss vs
+    // uploaded bits (CurvePoint.bits_up is the x-axis that matters here).
+    // One curve per family member: the FedAvg baseline, fixed and
+    // adaptive QSGD, both sparsifier families, and error-feedback
+    // wrappers showing the memory correcting the sparsifiers' bias.
+    let base = ExperimentConfig::fig1_logreg_base();
+    out.push(FigureSpec {
+        id: "ext_codecs".into(),
+        title: "EXT LogReg/MNIST: codec family, loss vs uploaded bits \
+                (tau=5, r=25)"
+            .into(),
+        configs: vec![
+            base.clone().with_codec(CodecSpec::Identity).with_name("FedAvg (32b)"),
+            base.clone().with_codec(CodecSpec::qsgd(1)).with_name("QSGD s=1"),
+            base.clone()
+                .with_codec(CodecSpec::Qsgd {
+                    s: 4,
+                    coding: crate::quant::Coding::Elias,
+                })
+                .with_name("QSGD s=4 elias"),
+            base.clone().with_codec(CodecSpec::top_k(100)).with_name("top-k 10%"),
+            base.clone().with_codec(CodecSpec::rand_k(100)).with_name("rand-k 10%"),
+            base.clone()
+                .with_codec(CodecSpec::adaptive(4))
+                .with_name("adaptive 4b"),
+            base.clone()
+                .with_codec(CodecSpec::error_feedback(CodecSpec::top_k(100)))
+                .with_name("ef+top-k 10%"),
+            base.clone()
+                .with_codec(CodecSpec::error_feedback(CodecSpec::rand_k(100)))
+                .with_name("ef+rand-k 10%"),
+        ],
+    });
     // Coding ablation: QSGD Elias-omega wire vs the naive fixed-width wire
     // (same stochastic levels, different |Q(p,s)| on the time axis).
     let base = ExperimentConfig::fig1_nn_base();
@@ -384,11 +417,11 @@ mod tests {
     #[test]
     fn all_figure_ids_unique_and_configs_valid() {
         let figs = all_figures();
-        assert_eq!(figs.len(), 23); // 4 + 4 + 4*3 + 3 extensions
+        assert_eq!(figs.len(), 24); // 4 + 4 + 4*3 + 4 extensions
         let mut ids: Vec<_> = figs.iter().map(|f| f.id.clone()).collect();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), 23);
+        assert_eq!(ids.len(), 24);
         for f in &figs {
             assert!(!f.configs.is_empty(), "{} empty", f.id);
             for c in &f.configs {
@@ -409,6 +442,20 @@ mod tests {
         assert_eq!(f.configs[2].tau, 1);
         // FedAvg is unquantized by definition.
         assert_eq!(f.configs[1].codec, CodecSpec::Identity);
+    }
+
+    #[test]
+    fn ext_codecs_sweeps_every_family() {
+        let f = figure("ext_codecs").unwrap();
+        let families: std::collections::HashSet<&str> = f
+            .configs
+            .iter()
+            .map(|c| c.codec.family())
+            .collect();
+        for fam in ["identity", "qsgd", "topk", "randk", "adaptive_qsgd", "error_feedback"]
+        {
+            assert!(families.contains(fam), "ext_codecs missing {fam}");
+        }
     }
 
     #[test]

@@ -19,10 +19,18 @@
 //!   [`runtime::PjrtEngine`] (AOT-lowered JAX/Pallas HLO via PJRT) or the
 //!   pure-rust [`model::RustEngine`] oracle.
 //! * **[`quant::UpdateCodec`]** — how uploads are compressed: identity
-//!   (FedAvg), QSGD with naive or Elias-ω level coding (the paper), top-k
-//!   sparsification with index coding, or any external impl of the trait
+//!   (FedAvg), QSGD with naive or Elias-ω level coding (the paper),
+//!   adaptive-level QSGD driven by a bits-per-coordinate budget, top-k
+//!   and seeded random-k sparsification (the latter ships no index
+//!   payload), a stateful per-node error-feedback wrapper
+//!   ([`quant::ErrorFeedbackCodec`]), or any external impl of the trait
 //!   (external impls run in-process; distributed workers rebuild codecs
-//!   from the config's tagged spec).
+//!   from the config's tagged spec — node → worker assignment is pinned
+//!   by node id so worker-side codec state stays coherent). The `quant`
+//!   module doc is the codec-author guide; a CI conformance matrix runs
+//!   the shared property suites once per codec family
+//!   (`FEDPAQ_CODEC_FILTER`), and per-codec encode/decode throughput is
+//!   bench-gated (`BENCH_codecs.json` vs `rust/benches/baseline/`).
 //! * **[`coordinator::Transport`]** — where *and when* node work runs.
 //!   Synchronous barriers: [`coordinator::InProcess`] (the simulation
 //!   path, time charged to the paper's §5 virtual cost model) or

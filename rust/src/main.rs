@@ -27,10 +27,14 @@ USAGE:
   fedpaq figure <id|all> [--out DIR] [--engine pjrt|rust] [--t N]
   fedpaq train [--config FILE.json] [--model NAME] [--dataset D] [--nodes N]
                [--per-node M] [--r R] [--tau TAU] [--t T] [--s S] [--elias]
-               [--topk PERMILLE] [--lr ETA] [--ratio X] [--seed SEED]
+               [--topk PERMILLE] [--rand-k PERMILLE] [--adaptive-bits B]
+               [--ef] [--lr ETA] [--ratio X] [--seed SEED]
                [--engine pjrt|rust] [--agg-shards N] [--out-json FILE]
                [--async-rounds] [--buffer-size B] [--max-staleness S]
                [--staleness-rule uniform|polynomial] [--staleness-a A]
+  (codec pick: --topk > --rand-k > --adaptive-bits > --s; --s 0 = identity;
+   --elias selects Elias coding, and for --rand-k the explicit-index mode;
+   --ef wraps the picked codec in per-node error feedback)
   (a leading flag implies `train`: `fedpaq --async-rounds --buffer-size 4`)
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
                 [--agg-shards N] [--out-json FILE]
@@ -58,7 +62,7 @@ impl Flags {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Boolean flags have no value or are followed by another --flag.
-                let is_bool = matches!(key, "elias" | "fast" | "async-rounds");
+                let is_bool = matches!(key, "elias" | "fast" | "async-rounds" | "ef");
                 if is_bool {
                     map.insert(key.to_string(), "true".to_string());
                     i += 1;
@@ -103,6 +107,30 @@ impl Flags {
             "rust" => Ok(EngineKind::Rust),
             other => anyhow::bail!("--engine must be pjrt|rust, got {other}"),
         }
+    }
+}
+
+/// Short human label for a codec spec (run names, figure curve labels).
+fn codec_label(codec: &CodecSpec) -> String {
+    let coded = |label: String, coding: &Coding| match coding {
+        Coding::Naive => label,
+        Coding::Elias => format!("{label}+elias"),
+    };
+    match codec {
+        CodecSpec::Identity => "fedavg".to_string(),
+        CodecSpec::Qsgd { s, coding } => coded(format!("s={s}"), coding),
+        CodecSpec::TopK { k_permille, coding } => {
+            coded(format!("topk={k_permille}"), coding)
+        }
+        CodecSpec::RandK { k_permille, seeded: true } => format!("randk={k_permille}"),
+        CodecSpec::RandK { k_permille, seeded: false } => {
+            format!("randk={k_permille}+elias")
+        }
+        CodecSpec::AdaptiveQsgd { bits_per_coord, coding } => {
+            coded(format!("adaptive={bits_per_coord}b"), coding)
+        }
+        CodecSpec::ErrorFeedback { inner } => format!("ef+{}", codec_label(inner)),
+        CodecSpec::External { id } => format!("ext={id}"),
     }
 }
 
@@ -155,13 +183,31 @@ fn main() -> anyhow::Result<()> {
                 let tau: usize = flags.parse_num("tau", 5usize)?;
                 let elias = flags.get("elias").is_some();
                 let coding = if elias { Coding::Elias } else { Coding::Naive };
-                // Codec selection: --topk wins, then --s 0 = identity
-                // (FedAvg), otherwise QSGD at --s levels.
-                let codec = if let Some(k) = flags.get("topk") {
+                // Codec selection: --topk wins, then --rand-k, then
+                // --adaptive-bits, then --s 0 = identity (FedAvg),
+                // otherwise QSGD at --s levels. --ef wraps the result in
+                // per-node error feedback.
+                let base_codec = if let Some(k) = flags.get("topk") {
                     CodecSpec::TopK {
                         k_permille: k
                             .parse()
                             .map_err(|e| anyhow::anyhow!("--topk {k}: {e}"))?,
+                        coding,
+                    }
+                } else if let Some(k) = flags.get("rand-k") {
+                    // --elias selects the explicit Elias-index fallback;
+                    // the default seeded mode ships no index payload.
+                    CodecSpec::RandK {
+                        k_permille: k
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--rand-k {k}: {e}"))?,
+                        seeded: !elias,
+                    }
+                } else if let Some(b) = flags.get("adaptive-bits") {
+                    CodecSpec::AdaptiveQsgd {
+                        bits_per_coord: b
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--adaptive-bits {b}: {e}"))?,
                         coding,
                     }
                 } else if s == 0 {
@@ -169,18 +215,12 @@ fn main() -> anyhow::Result<()> {
                 } else {
                     CodecSpec::Qsgd { s, coding }
                 };
-                let codec_label = match codec {
-                    CodecSpec::Identity => "fedavg".to_string(),
-                    CodecSpec::Qsgd { s, coding: Coding::Naive } => format!("s={s}"),
-                    CodecSpec::Qsgd { s, coding: Coding::Elias } => format!("s={s}+elias"),
-                    CodecSpec::TopK { k_permille, coding: Coding::Naive } => {
-                        format!("topk={k_permille}")
-                    }
-                    CodecSpec::TopK { k_permille, coding: Coding::Elias } => {
-                        format!("topk={k_permille}+elias")
-                    }
-                    CodecSpec::External { id } => format!("ext={id}"),
+                let codec = if flags.get("ef").is_some() {
+                    CodecSpec::error_feedback(base_codec)
+                } else {
+                    base_codec
                 };
+                let codec_label = codec_label(&codec);
                 let async_rounds = flags.get("async-rounds").is_some();
                 let buffer_size: usize = flags.parse_num("buffer-size", 0usize)?;
                 let max_staleness: usize = flags.parse_num("max-staleness", 8usize)?;

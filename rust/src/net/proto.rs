@@ -218,10 +218,32 @@ fn write_spec(b: &mut Buf, spec: &CodecSpec) {
             b.u8(3);
             b.u32(*id);
         }
+        CodecSpec::RandK { k_permille, seeded } => {
+            b.u8(4);
+            b.u32(*k_permille as u32);
+            b.u8(*seeded as u8);
+        }
+        CodecSpec::AdaptiveQsgd { bits_per_coord, coding } => {
+            b.u8(5);
+            b.u8(*bits_per_coord);
+            b.u8(coding_tag(coding));
+        }
+        CodecSpec::ErrorFeedback { inner } => {
+            b.u8(6);
+            write_spec(b, inner);
+        }
     }
 }
 
 fn read_spec(c: &mut Cursor<'_>) -> crate::Result<CodecSpec> {
+    read_spec_depth(c, 0)
+}
+
+fn read_spec_depth(c: &mut Cursor<'_>, depth: usize) -> crate::Result<CodecSpec> {
+    // Wrapper tags recurse; configs allow exactly one nesting level
+    // (depth 1 = the inside of one wrapper), so anything deeper on the
+    // wire is a malformed or adversarial frame.
+    anyhow::ensure!(depth <= 1, "codec spec nested deeper than the protocol allows");
     Ok(match c.u8()? {
         0 => CodecSpec::Identity,
         1 => {
@@ -234,6 +256,30 @@ fn read_spec(c: &mut Cursor<'_>) -> crate::Result<CodecSpec> {
             CodecSpec::TopK { k_permille: k as u16, coding: read_coding(c)? }
         }
         3 => CodecSpec::External { id: c.u32()? },
+        4 => {
+            let k = c.u32()?;
+            anyhow::ensure!(k <= 1000, "bad rand-k permille {k}");
+            let seeded = match c.u8()? {
+                0 => false,
+                1 => true,
+                x => anyhow::bail!("bad rand-k seeded flag {x}"),
+            };
+            CodecSpec::RandK { k_permille: k as u16, seeded }
+        }
+        5 => {
+            // Same bounds config validation enforces (2..=32): a forged
+            // or corrupt byte fails here with a parse error instead of
+            // surfacing later as a confusing decode-side mismatch.
+            let b = c.u8()?;
+            anyhow::ensure!(
+                (2..=32).contains(&b),
+                "bad adaptive-QSGD bits_per_coord {b}"
+            );
+            CodecSpec::AdaptiveQsgd { bits_per_coord: b, coding: read_coding(c)? }
+        }
+        6 => CodecSpec::ErrorFeedback {
+            inner: Box::new(read_spec_depth(c, depth + 1)?),
+        },
         x => anyhow::bail!("bad codec tag {x}"),
     })
 }
@@ -468,6 +514,35 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn new_codec_specs_roundtrip_on_the_wire() {
+        // RandK / AdaptiveQsgd / EF-wrapped tags survive the frame codec
+        // byte-exactly (EF frames are inner-tagged — what travels in an
+        // Update — but Setup configs carry the wrapper spec via JSON, and
+        // write_spec/read_spec must handle both shapes).
+        for spec in [
+            CodecSpec::rand_k(100),
+            CodecSpec::RandK { k_permille: 250, seeded: false },
+            CodecSpec::adaptive(4),
+            CodecSpec::AdaptiveQsgd { bits_per_coord: 6, coding: Coding::Elias },
+            CodecSpec::error_feedback(CodecSpec::rand_k(50)),
+        ] {
+            let mut b = Buf::new();
+            write_spec(&mut b, &spec);
+            let back = read_spec(&mut Cursor::new(&b.0)).unwrap();
+            assert_eq!(back, spec);
+        }
+        // Exactly one wrapper level is the policy (matching config
+        // validation): a doubly-nested EF spec is rejected at depth 2,
+        // not merely at some absurd depth.
+        let double = CodecSpec::error_feedback(CodecSpec::error_feedback(
+            CodecSpec::qsgd(1),
+        ));
+        let mut b = Buf::new();
+        write_spec(&mut b, &double);
+        assert!(read_spec(&mut Cursor::new(&b.0)).is_err());
     }
 
     #[test]

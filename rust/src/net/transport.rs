@@ -27,6 +27,19 @@
 //! half onto a reader thread feeding one mpsc channel, so uploads are
 //! consumed in true arrival order across workers — the real-socket
 //! analogue of `AsyncSim`'s virtual-completion-time queue.
+//!
+//! ## Node → worker assignment is pinned by node id
+//!
+//! Both leaders dispatch virtual node `i`'s work to worker
+//! `i % n_workers` — a *stable* assignment across rounds, never a
+//! positional or round-robin rotation. Stateless codecs cannot tell the
+//! difference (every upload is a pure function of `(seed, node,
+//! version)`), but stateful codecs keep per-node memory on the worker
+//! side ([`ErrorFeedbackCodec`](crate::quant::ErrorFeedbackCodec)
+//! residuals, keyed by node inside each worker's codec instance): pinning
+//! guarantees one worker owns a given node's entire residual stream, so
+//! a distributed error-feedback run reproduces the in-process simulation
+//! bit-for-bit instead of fragmenting memory across processes.
 
 use super::proto::{
     recv_to_leader, send_to_worker, ToLeader, ToWorker, PROTO_VERSION,
@@ -136,9 +149,14 @@ impl Transport for Tcp {
         _engine: &mut dyn Engine,
     ) -> crate::Result<RoundOutcome> {
         anyhow::ensure!(!self.workers.is_empty(), "Tcp::round before setup");
-        // Fan the r virtual nodes out round-robin across workers.
-        for (j, &node) in ctx.nodes.iter().enumerate() {
-            let w = &mut self.workers[j % self.n_workers];
+        // Fan the r virtual nodes out by their *stable* assignment
+        // (node % n_workers — see the module docs): per-round counts can
+        // skew, but a node's stateful codec memory always lives on one
+        // worker.
+        let mut counts = vec![0usize; self.n_workers];
+        for &node in ctx.nodes {
+            counts[node % self.n_workers] += 1;
+            let w = &mut self.workers[node % self.n_workers];
             send_to_worker(
                 &mut w.wr,
                 &ToWorker::Work {
@@ -149,26 +167,29 @@ impl Transport for Tcp {
                 },
             )?;
         }
-        // Collect all updates; return them in *node order* for bit-stable
-        // parity with the in-process transport.
+        // Collect each worker's replies (answered in its dispatch order);
+        // return them in *node order* for bit-stable parity with the
+        // in-process transport.
         let mut updates: Vec<Option<Encoded>> = vec![None; ctx.nodes.len()];
-        for (j, _) in ctx.nodes.iter().enumerate() {
-            let w = &mut self.workers[j % self.n_workers];
-            match recv_to_leader(&mut w.rd)? {
-                ToLeader::Update { version, node, enc } => {
-                    anyhow::ensure!(version as usize == ctx.round, "round mismatch");
-                    let pos = ctx
-                        .nodes
-                        .iter()
-                        .position(|&n| n == node as usize)
-                        .ok_or_else(|| anyhow::anyhow!("unknown node {node}"))?;
-                    anyhow::ensure!(
-                        updates[pos].is_none(),
-                        "duplicate update for node {node}"
-                    );
-                    updates[pos] = Some(enc);
+        for (wi, &count) in counts.iter().enumerate() {
+            for _ in 0..count {
+                let w = &mut self.workers[wi];
+                match recv_to_leader(&mut w.rd)? {
+                    ToLeader::Update { version, node, enc } => {
+                        anyhow::ensure!(version as usize == ctx.round, "round mismatch");
+                        let pos = ctx
+                            .nodes
+                            .iter()
+                            .position(|&n| n == node as usize)
+                            .ok_or_else(|| anyhow::anyhow!("unknown node {node}"))?;
+                        anyhow::ensure!(
+                            updates[pos].is_none(),
+                            "duplicate update for node {node}"
+                        );
+                        updates[pos] = Some(enc);
+                    }
+                    other => anyhow::bail!("unexpected message {other:?}"),
                 }
-                other => anyhow::bail!("unexpected message {other:?}"),
             }
         }
         let uploads: Vec<Encoded> = updates.into_iter().flatten().collect();
@@ -205,10 +226,6 @@ pub struct TcpAsync {
     arrivals: Option<Receiver<crate::Result<ToLeader>>>,
     readers: Vec<JoinHandle<()>>,
     planner: Option<CommitPlanner>,
-    /// Round-robin dispatch cursor (job → worker assignment; results are
-    /// assignment-independent because every upload is keyed by
-    /// `(seed, node, version)`).
-    next_worker: usize,
 }
 
 impl TcpAsync {
@@ -220,7 +237,6 @@ impl TcpAsync {
             arrivals: None,
             readers: Vec::new(),
             planner: None,
-            next_worker: 0,
         }
     }
 
@@ -230,15 +246,16 @@ impl TcpAsync {
     }
 
     /// Execute one planner `Dispatch` decision: send the current model to
-    /// the next worker in the rotation.
+    /// the node's pinned worker (`node % n_workers` — see the module
+    /// docs; a worker's jobs queue in its socket and run serially, which
+    /// keeps any stateful codec memory for its nodes in one process).
     fn dispatch(
         &mut self,
         node: usize,
         version: usize,
         ctx: &RoundCtx<'_>,
     ) -> crate::Result<()> {
-        let w = self.next_worker % self.n_workers;
-        self.next_worker += 1;
+        let w = node % self.n_workers;
         send_to_worker(
             &mut self.writers[w],
             &ToWorker::Work {
@@ -292,7 +309,6 @@ impl Transport for TcpAsync {
     ) -> crate::Result<()> {
         let workers = accept_cluster(&self.bind, self.n_workers, cfg)?;
         self.planner = Some(CommitPlanner::new(cfg)?);
-        self.next_worker = 0;
         self.writers.clear();
         self.readers.clear();
         // One reader thread per connection, all feeding one channel: the

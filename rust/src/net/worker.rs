@@ -11,6 +11,17 @@
 //! leader's bookkeeping; a straggling worker just answers late and the
 //! [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
 //! stamps or drops the upload on arrival.
+//!
+//! The worker **owns the per-node codec state** of the nodes it serves:
+//! its codec instance is rebuilt from the `Setup` config's tagged spec
+//! and explicitly reset (the
+//! [`UpdateCodec::reset_state`](crate::quant::UpdateCodec::reset_state)
+//! semantics), then lives across `Work` requests — so a stateful codec's
+//! memory (e.g. [`ErrorFeedbackCodec`](crate::quant::ErrorFeedbackCodec)
+//! residuals, keyed by node id inside the instance) accumulates exactly
+//! as in the simulation. This is sound because both leaders pin node →
+//! worker assignment by node id (see [`super::transport`]): a node's
+//! whole residual stream stays in one process.
 
 use super::proto::{
     recv_to_worker, send_to_leader, ToLeader, ToWorker, PROTO_VERSION,
@@ -137,6 +148,11 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
                 );
                 let engine = build_engine(&cfg, artifacts)?;
                 let codec = cfg.codec.build()?;
+                // A run starts with no per-node codec memory — explicit,
+                // even though the instance is fresh, because this is the
+                // worker-side half of the trait's reset contract (the
+                // leader-side half runs in RoundEngine::run).
+                codec.reset_state();
                 let n_samples = cfg.n_nodes * cfg.per_node;
                 let data = FederatedDataset::generate(cfg.dataset, cfg.seed, n_samples);
                 let partition =

@@ -1,0 +1,258 @@
+//! Adaptive-level QSGD ([`AdaptiveQsgdCodec`]): the level count `s` is
+//! not a fixed dial but is derived per encode from a target upload
+//! budget of `bits_per_coord` bits per coordinate — header included —
+//! and written into the frame header, so every frame is self-describing.
+//!
+//! Under naive fixed-width coding a QSGD coordinate costs
+//! `1 + ceil(log2(s+1))` bits, so `u` usable bits per coordinate afford
+//! `s = 2^(u−1) − 1` levels (sign takes one bit, the rest address the
+//! level). The codec charges the 64-bit header (`s` + norm) against the
+//! budget *before* flooring to whole per-coordinate bits — strict
+//! never-exceed accounting, so any nonzero header cost rounds one level
+//! bit away (`u = b − 1` once `p > 64`, smaller still for short vectors,
+//! which pay the header hardest — the "adaptive" in the name). `s = 1`
+//! is the floor: a budget too small to afford even FedPAQ's 2-bit
+//! coordinates still produces a valid (if slightly over-budget) frame
+//! rather than failing.
+//!
+//! The quantization itself is exactly [`QsgdCodec`](super::QsgdCodec)'s
+//! stochastic rounding at the derived `s` — literally the same code
+//! (`qsgd_encode_body` / `qsgd_decode_range_body` in the parent module),
+//! so grid, RNG consumption, and corrupt-frame handling cannot drift —
+//! only the header (and the `s`-selection rule) differ.
+
+use super::bitstream::BitWriter;
+use super::{
+    check_range, check_spec, l2_norm, level_bits, qsgd_decode_range_body,
+    qsgd_encode_body, Coding, CodecSpec, Encoded, UpdateCodec,
+};
+use crate::util::rng::Rng;
+
+/// Frame header: `s` (32 bits) then the f32 norm.
+const HEADER_BITS: u64 = 64;
+
+/// QSGD with a per-encode level count chosen from a bit budget.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveQsgdCodec {
+    /// Target upload size in bits per coordinate, header included.
+    pub bits_per_coord: u8,
+    pub coding: Coding,
+}
+
+impl AdaptiveQsgdCodec {
+    pub fn new(bits_per_coord: u8) -> Self {
+        AdaptiveQsgdCodec { bits_per_coord, coding: Coding::Naive }
+    }
+
+    /// The level count a length-`p` encode uses: the largest `s` whose
+    /// naive fixed-width cost fits the per-coordinate budget after the
+    /// 64-bit header is amortized, floored at `s = 1`.
+    pub fn s_for(&self, p: usize) -> u32 {
+        if p == 0 {
+            return 1;
+        }
+        let total = self.bits_per_coord as u64 * p as u64;
+        let usable = total.saturating_sub(HEADER_BITS) / p as u64;
+        // One bit goes to the sign; the rest address levels 0..=s.
+        let lb = usable.saturating_sub(1).min(31) as u32;
+        if lb == 0 {
+            1
+        } else {
+            (1u32 << lb) - 1
+        }
+    }
+}
+
+impl UpdateCodec for AdaptiveQsgdCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::AdaptiveQsgd {
+            bits_per_coord: self.bits_per_coord,
+            coding: self.coding,
+        }
+    }
+
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
+        let s = self.s_for(x.len());
+        let norm = l2_norm(x);
+        let mut w = BitWriter::new();
+        w.write_bits(s as u64, 32);
+        w.write_f32(norm);
+        qsgd_encode_body(&mut w, x, norm, s, self.coding, rng);
+        Encoded { buf: w.finish(), p: x.len(), spec: self.spec() }
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        // One decode implementation: the full decode is the 0..p range,
+        // so the range and full paths can never drift apart.
+        self.decode_range(enc, 0, enc.p, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_range(enc.p, lo, hi)?;
+        anyhow::ensure!(
+            enc.buf.len_bits() >= HEADER_BITS,
+            "adaptive-QSGD frame truncated: {} bits, header needs {HEADER_BITS}",
+            enc.buf.len_bits()
+        );
+        let mut hr = enc.buf.reader();
+        let s = hr.read_bits(32) as u32;
+        let norm = hr.read_f32();
+        // The header's s must be the one this dial derives for p: a
+        // mismatch means a corrupt frame or a forged header, either of
+        // which would silently land decodes on the wrong grid.
+        anyhow::ensure!(
+            s == self.s_for(enc.p),
+            "adaptive-QSGD header s={s} does not match the dial's s={} for \
+             p={}",
+            self.s_for(enc.p),
+            enc.p
+        );
+        qsgd_decode_range_body(enc, HEADER_BITS, norm, s, self.coding, lo, hi, out)
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        match self.coding {
+            Coding::Naive => {
+                Some(HEADER_BITS + p as u64 * (1 + level_bits(self.s_for(p)) as u64))
+            }
+            Coding::Elias => None,
+        }
+    }
+
+    /// Assumption-1 variance at the level count a length-`p` encode
+    /// derives: `min(p/s², √p/s)` — identical to fixed-`s` QSGD at
+    /// `s = s_for(p)`.
+    fn variance_q(&self, p: usize) -> f64 {
+        let s = self.s_for(p) as f64;
+        let p = p as f64;
+        (p / (s * s)).min(p.sqrt() / s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn level_choice_tracks_the_budget() {
+        // Strict never-exceed accounting: the 64-bit header always costs
+        // one whole per-coordinate bit after flooring (p > 64), so b
+        // budget bits buy u = b-1 usable bits ⇒ s = 2^(b-2) - 1, floored
+        // at s = 1.
+        let p = 10_000;
+        for (b, want_s) in [(2u8, 1u32), (3, 1), (4, 3), (5, 7), (8, 63)] {
+            let q = AdaptiveQsgdCodec::new(b);
+            assert_eq!(q.s_for(p), want_s, "b={b}");
+        }
+        // Tiny vectors pay the header: the same dial picks a smaller s.
+        let q = AdaptiveQsgdCodec::new(4);
+        assert!(q.s_for(20) < q.s_for(10_000));
+        // The floor: s is never below 1.
+        assert_eq!(AdaptiveQsgdCodec::new(2).s_for(3), 1);
+    }
+
+    #[test]
+    fn frame_header_carries_s_and_bits_match_analytic() {
+        let x: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.17).sin()).collect();
+        for b in [3u8, 4, 6, 10] {
+            let q = AdaptiveQsgdCodec::new(b);
+            let enc = q.encode(&x, &mut rng(1));
+            assert_eq!(
+                enc.buf.reader().read_bits(32) as u32,
+                q.s_for(1000),
+                "b={b}"
+            );
+            assert_eq!(Some(enc.bits()), q.analytic_bits(1000), "b={b}");
+            // Budget respected once the header is amortizable (p=1000).
+            assert!(
+                enc.bits() <= b as u64 * 1000,
+                "b={b}: {} bits > budget {}",
+                enc.bits(),
+                b as u64 * 1000
+            );
+        }
+    }
+
+    #[test]
+    fn decodes_on_the_derived_grid() {
+        let x: Vec<f32> = (0..257).map(|i| ((i * 31) % 97) as f32 - 48.0).collect();
+        for coding in [Coding::Naive, Coding::Elias] {
+            let q = AdaptiveQsgdCodec { bits_per_coord: 5, coding };
+            let s = q.s_for(x.len());
+            let enc = q.encode(&x, &mut rng(2));
+            let norm = l2_norm(&x);
+            for (i, v) in q.decode(&enc).unwrap().iter().enumerate() {
+                let lvl = v.abs() / norm * s as f32;
+                assert!(
+                    (lvl - lvl.round()).abs() < 1e-3,
+                    "coord {i} level {lvl} off the s={s} grid ({coding:?})"
+                );
+                assert!(lvl.round() as u32 <= s);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_fixed_qsgd_at_the_derived_s() {
+        // Same rng stream + same s ⇒ identical decoded values: the
+        // adaptive codec IS QSGD once s is pinned.
+        let x: Vec<f32> = (0..500).map(|i| ((i as f32) * 0.29).cos()).collect();
+        let q = AdaptiveQsgdCodec::new(4);
+        let s = q.s_for(x.len());
+        let fixed = super::super::QsgdCodec::new(s);
+        let ea = q.encode(&x, &mut rng(3));
+        let ef = fixed.encode(&x, &mut rng(3));
+        assert_eq!(q.decode(&ea).unwrap(), fixed.decode(&ef).unwrap());
+    }
+
+    #[test]
+    fn forged_or_truncated_headers_are_rejected() {
+        let x = vec![1.0f32; 64];
+        let q = AdaptiveQsgdCodec::new(4);
+        let enc = q.encode(&x, &mut rng(4));
+        // Forge the header's s (keep everything else).
+        let mut w = BitWriter::new();
+        w.write_bits(u64::from(q.s_for(64)) + 1, 32);
+        let mut r = enc.buf.reader();
+        r.read_bits(32);
+        for _ in 0..(enc.buf.len_bits() - 32) {
+            w.write_bit(r.read_bit());
+        }
+        let forged = Encoded { buf: w.finish(), p: 64, spec: q.spec() };
+        assert!(q.decode(&forged).is_err());
+        // Truncated below the header.
+        let mut w = BitWriter::new();
+        w.write_bits(3, 20);
+        let stub = Encoded { buf: w.finish(), p: 64, spec: q.spec() };
+        assert!(q.decode(&stub).is_err());
+        // Dial mismatch is a spec mismatch.
+        assert!(AdaptiveQsgdCodec::new(6).decode(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_range_matches_full_decode_slice() {
+        let p = 311;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.41).sin() * 4.0).collect();
+        for coding in [Coding::Naive, Coding::Elias] {
+            let q = AdaptiveQsgdCodec { bits_per_coord: 4, coding };
+            let enc = q.encode(&x, &mut rng(5));
+            let full = q.decode(&enc).unwrap();
+            let mut out = Vec::new();
+            for (lo, hi) in [(0, p), (0, 0), (p, p), (7, 8), (100, 222), (250, p)] {
+                q.decode_range(&enc, lo, hi, &mut out).unwrap();
+                assert_eq!(out, &full[lo..hi], "{coding:?} {lo}..{hi}");
+            }
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Error feedback ([`ErrorFeedbackCodec`]): the EF-SGD / EF21-style
+//! memory wrapper. Each node keeps a residual `e` of everything its
+//! compressor has thrown away so far; round `t` compresses the
+//! *corrected* update `x_t + e_{t-1}` and banks the new compression
+//! error:
+//!
+//! ```text
+//! c_t = x_t + e_{t-1}
+//! enc = inner.encode(c_t)            (what travels)
+//! e_t = c_t − inner.decode(enc)      (what the server missed)
+//! ```
+//!
+//! Error feedback famously repairs *biased* compressors (top-k, rand-k
+//! without scaling) — the compressed-away mass is not lost, only delayed
+//! — and tightens variance for unbiased ones. For a lossless inner codec
+//! the residual is exactly zero forever (pinned by a property test).
+//!
+//! One honest caveat under buffered-async rounds: the residual is
+//! debited at **encode** time, assuming the server applies the upload.
+//! An upload the [`CommitPlanner`](crate::coordinator::commit_loop)
+//! later drops as too stale loses its mass outright — exactly as a
+//! dropped upload does under *any* codec — rather than re-entering the
+//! memory. EF protects against what the compressor throws away, not
+//! against what the async protocol discards; `ServerBuilder` logs a
+//! warning for the combination.
+//!
+//! ## Transparency
+//!
+//! The wrapper changes what is *encoded*, never the wire format: frames
+//! carry the inner codec's [`CodecSpec`] tag ([`UpdateCodec::wire_spec`]
+//! is the inner's), and every decode-side method (`decode_into`,
+//! `decode_range`, `analytic_bits`, `variance_q`) delegates verbatim —
+//! the server aggregates EF uploads exactly as it would the inner
+//! codec's, sharded `decode_range` fast paths included.
+//!
+//! ## State ownership
+//!
+//! Residuals are per-node state behind interior mutability, keyed by the
+//! `node` passed to [`UpdateCodec::encode_node`] (the module docs'
+//! statefulness rules). In the in-process sim one instance holds every
+//! node's residual; on a TCP cluster each worker process owns the
+//! residuals of the nodes it serves — sound because the leaders pin
+//! `node → worker` assignment by node id. [`UpdateCodec::reset_state`]
+//! drops all residuals; the round engine calls it at run start and
+//! workers call it on `Setup`.
+
+use super::{CodecSpec, Encoded, UpdateCodec};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// The node key [`UpdateCodec::encode`] (the node-less entry point) uses:
+/// direct `encode` calls still get one coherent residual stream instead
+/// of silently skipping the memory.
+const ANON_NODE: usize = usize::MAX;
+
+/// Stateful error-feedback wrapper around any [`UpdateCodec`].
+///
+/// Build directly over a concrete inner codec
+/// (`ErrorFeedbackCodec::new(TopKCodec::new(100))`) or from a config
+/// spec via [`CodecSpec::build`], which wraps a boxed inner.
+#[derive(Debug)]
+pub struct ErrorFeedbackCodec<C: UpdateCodec> {
+    inner: C,
+    /// node → residual memory (lazily sized to the node's first update).
+    residuals: Mutex<HashMap<usize, Vec<f32>>>,
+}
+
+impl<C: UpdateCodec> ErrorFeedbackCodec<C> {
+    pub fn new(inner: C) -> Self {
+        ErrorFeedbackCodec { inner, residuals: Mutex::new(HashMap::new()) }
+    }
+
+    /// The wrapped codec.
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    /// A copy of `node`'s current residual memory (`None` before the
+    /// node's first encode). Test/telemetry accessor.
+    pub fn residual(&self, node: usize) -> Option<Vec<f32>> {
+        self.residuals.lock().unwrap().get(&node).cloned()
+    }
+}
+
+impl<C: UpdateCodec> UpdateCodec for ErrorFeedbackCodec<C> {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::ErrorFeedback { inner: Box::new(self.inner.spec()) }
+    }
+
+    /// EF is wire-transparent: frames carry the inner codec's tag.
+    fn wire_spec(&self) -> CodecSpec {
+        self.inner.wire_spec()
+    }
+
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
+        self.encode_node(ANON_NODE, x, rng)
+    }
+
+    fn encode_node(&self, node: usize, x: &[f32], rng: &mut Rng) -> Encoded {
+        let mut map = self.residuals.lock().unwrap();
+        let res = map.entry(node).or_insert_with(|| vec![0.0; x.len()]);
+        // A dimension change mid-run means a different model: stale
+        // memory is meaningless, start it over.
+        if res.len() != x.len() {
+            *res = vec![0.0; x.len()];
+        }
+        let corrected: Vec<f32> =
+            x.iter().zip(res.iter()).map(|(&v, &e)| v + e).collect();
+        let enc = self.inner.encode(&corrected, rng);
+        let decoded = self
+            .inner
+            .decode(&enc)
+            .expect("inner codec failed to decode its own encode");
+        for ((e, &c), &d) in res.iter_mut().zip(&corrected).zip(&decoded) {
+            *e = c - d;
+        }
+        enc
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn state_bytes(&self) -> u64 {
+        let map = self.residuals.lock().unwrap();
+        map.values().map(|v| (v.len() * 4) as u64).sum()
+    }
+
+    fn reset_state(&self) {
+        self.residuals.lock().unwrap().clear();
+        self.inner.reset_state();
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        self.inner.decode_into(enc, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        self.inner.decode_range(enc, lo, hi, out)
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        self.inner.analytic_bits(p)
+    }
+
+    fn variance_q(&self, p: usize) -> f64 {
+        self.inner.variance_q(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{IdentityCodec, QsgdCodec, TopKCodec};
+    use super::*;
+
+    fn rng(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn identity_inner_keeps_residuals_exactly_zero() {
+        // Lossless inner ⇒ no memory, ever — bit-exact zeros.
+        let q = ErrorFeedbackCodec::new(IdentityCodec);
+        let mut r = rng(1);
+        for round in 0..5 {
+            for node in [0usize, 3, 7] {
+                let x: Vec<f32> =
+                    (0..33).map(|i| ((i + round * 7) as f32 * 0.3).sin()).collect();
+                let enc = q.encode_node(node, &x, &mut r);
+                assert_eq!(q.decode(&enc).unwrap(), x);
+                let res = q.residual(node).unwrap();
+                assert!(
+                    res.iter().all(|&e| e == 0.0),
+                    "round {round} node {node}: nonzero residual"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_is_exactly_corrected_minus_decoded() {
+        let q = ErrorFeedbackCodec::new(TopKCodec::new(300));
+        let x1: Vec<f32> = (0..40).map(|i| (i as f32 * 0.7).sin() * 2.0).collect();
+        let mut r = rng(2);
+        let e1 = q.encode_node(5, &x1, &mut r);
+        let d1 = q.decode(&e1).unwrap();
+        let res1 = q.residual(5).unwrap();
+        for i in 0..40 {
+            assert_eq!(res1[i], x1[i] - d1[i], "coord {i} (round 1, e0 = 0)");
+        }
+        // Round 2 compresses x2 + res1 — the banked error is re-sent.
+        let x2: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).cos()).collect();
+        let e2 = q.encode_node(5, &x2, &mut r);
+        let d2 = q.decode(&e2).unwrap();
+        let res2 = q.residual(5).unwrap();
+        for i in 0..40 {
+            let corrected = x2[i] + res1[i];
+            assert_eq!(res2[i], corrected - d2[i], "coord {i} (round 2)");
+        }
+    }
+
+    #[test]
+    fn nodes_have_independent_memory() {
+        let q = ErrorFeedbackCodec::new(QsgdCodec::new(1));
+        let x: Vec<f32> = (0..20).map(|i| i as f32 * 0.1).collect();
+        let mut r = rng(3);
+        let _ = q.encode_node(1, &x, &mut r);
+        assert!(q.residual(1).is_some());
+        assert!(q.residual(2).is_none());
+        // state_bytes counts every node's residual; reset drops them all.
+        let _ = q.encode_node(2, &x, &mut r);
+        assert_eq!(q.state_bytes(), 2 * 20 * 4);
+        q.reset_state();
+        assert_eq!(q.state_bytes(), 0);
+        assert!(q.residual(1).is_none());
+    }
+
+    #[test]
+    fn delegates_wire_spec_bits_variance_and_decode() {
+        let inner = QsgdCodec::new(3);
+        let q = ErrorFeedbackCodec::new(inner);
+        assert_eq!(q.wire_spec(), inner.spec());
+        assert_eq!(
+            q.spec(),
+            CodecSpec::ErrorFeedback { inner: Box::new(inner.spec()) }
+        );
+        assert_eq!(q.analytic_bits(500), inner.analytic_bits(500));
+        assert_eq!(q.variance_q(500), inner.variance_q(500));
+        assert!(q.stateful() && !inner.stateful());
+        // Frames are inner-tagged and decodable by the bare inner codec.
+        let x: Vec<f32> = (0..100).map(|i| (i as f32 * 0.2).sin()).collect();
+        let enc = q.encode_node(0, &x, &mut rng(4));
+        assert_eq!(enc.spec, inner.spec());
+        assert_eq!(inner.decode(&enc).unwrap(), q.decode(&enc).unwrap());
+    }
+
+    #[test]
+    fn ef_over_topk_recovers_dropped_mass_over_rounds() {
+        // The EF motivation in one invariant: summing the decoded uploads
+        // of a *constant* update stream converges toward the true sum —
+        // the dropped coordinates surface in later rounds via the
+        // residual — while bare top-k loses the same mass every round.
+        let x: Vec<f32> = (0..32)
+            .map(|i| if i < 4 { 10.0 } else { 0.5 + (i as f32) * 0.01 })
+            .collect();
+        let rounds = 100;
+        let ef = ErrorFeedbackCodec::new(TopKCodec::new(125)); // k=4 of 32
+        let bare = TopKCodec::new(125);
+        let mut sum_ef = vec![0f64; 32];
+        let mut sum_bare = vec![0f64; 32];
+        let mut r = rng(5);
+        for _ in 0..rounds {
+            let ef_dec = ef.decode(&ef.encode_node(0, &x, &mut r)).unwrap();
+            for (s, v) in sum_ef.iter_mut().zip(ef_dec) {
+                *s += v as f64;
+            }
+            let bare_dec = bare.decode(&bare.encode(&x, &mut r)).unwrap();
+            for (s, v) in sum_bare.iter_mut().zip(bare_dec) {
+                *s += v as f64;
+            }
+        }
+        let want: Vec<f64> = x.iter().map(|&v| v as f64 * rounds as f64).collect();
+        let l2 = |a: &[f64], b: &[f64]| {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let err_ef = l2(&sum_ef, &want);
+        let err_bare = l2(&sum_bare, &want);
+        // EF's total error equals the final residual norm (telescoping:
+        // Σ decoded = Σ x − e_T), which stays bounded as rounds grow;
+        // bare top-k drops the same mass every round, so its error grows
+        // linearly in the round count.
+        assert!(
+            err_ef < err_bare / 3.0,
+            "EF error {err_ef} not ≪ bare top-k error {err_bare}"
+        );
+    }
+}

@@ -47,6 +47,31 @@ pub fn decode_omega(r: &mut BitReader<'_>) -> u64 {
     }
 }
 
+/// [`decode_omega`] with underrun checking: a truncated or empty stream
+/// returns an explicit error instead of reading past the end (release
+/// builds have no bounds assertion on [`BitReader::read_bits`], so the
+/// unchecked decoder would read zero padding and fabricate a value).
+/// The sparsifier index decoders use this so a corrupt frame is rejected
+/// identically on every coding path.
+pub fn try_decode_omega(r: &mut BitReader<'_>) -> crate::Result<u64> {
+    let mut n: u64 = 1;
+    loop {
+        anyhow::ensure!(r.remaining() >= 1, "Elias-omega code truncated");
+        if !r.read_bit() {
+            return Ok(n);
+        }
+        // A group longer than 63 bits cannot encode a u64 value; a claim
+        // of one is frame corruption (and would overflow the shift below).
+        anyhow::ensure!(n < 64, "Elias-omega group of {n} bits is corrupt");
+        anyhow::ensure!(r.remaining() >= n, "Elias-omega code truncated");
+        let mut v: u64 = 1;
+        for _ in 0..n {
+            v = (v << 1) | r.read_bit() as u64;
+        }
+        n = v;
+    }
+}
+
 /// Bit length of the Elias-ω code of `n` (without encoding).
 pub fn omega_len(mut n: u64) -> u64 {
     assert!(n >= 1);
@@ -92,6 +117,34 @@ mod tests {
         for &v in &vals {
             assert_eq!(decode_omega(&mut r), v);
         }
+    }
+
+    #[test]
+    fn try_decode_matches_unchecked_and_rejects_truncation() {
+        let vals = [1u64, 2, 5, 100, 65_536, 1 << 40];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            encode_omega(&mut w, v);
+        }
+        let buf = w.finish();
+        let mut r = buf.reader();
+        for &v in &vals {
+            assert_eq!(try_decode_omega(&mut r).unwrap(), v);
+        }
+        // Empty stream: explicit error, not a fabricated value.
+        let empty = BitWriter::new().finish();
+        assert!(try_decode_omega(&mut empty.reader()).is_err());
+        // Truncated mid-code: drop the terminal bit of a long code.
+        let mut w = BitWriter::new();
+        encode_omega(&mut w, 100_000);
+        let full = w.finish();
+        let mut w = BitWriter::new();
+        let mut r = full.reader();
+        for _ in 0..full.len_bits() - 1 {
+            w.write_bit(r.read_bit());
+        }
+        let cut = w.finish();
+        assert!(try_decode_omega(&mut cut.reader()).is_err());
     }
 
     #[test]

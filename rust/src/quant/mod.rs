@@ -1,10 +1,78 @@
-//! Pluggable update compression (paper §3.3) — the third FedPAQ module.
+//! Pluggable update compression (paper §3.3) — the third FedPAQ module,
+//! written as a **codec-author guide**: everything a new [`UpdateCodec`]
+//! implementation must honor lives in this doc.
 //!
-//! The codec layer is a trait seam, not a closed enum: every upload
-//! compressor implements the object-safe [`UpdateCodec`] trait
-//! (`encode` / `decode_into` / `analytic_bits` / `variance_q`), and the
-//! rest of the system — aggregation, transports, the cost model — only
-//! ever sees `&dyn UpdateCodec`. Built-in codecs:
+//! ## The trait contract
+//!
+//! Every upload compressor implements the object-safe [`UpdateCodec`]
+//! trait; the rest of the system — aggregation, transports, the cost
+//! model — only ever sees `&dyn UpdateCodec`. A conforming codec must:
+//!
+//! 1. **Round-trip on its own grid.** `decode(encode(x))` succeeds and
+//!    lands on the codec's reconstruction grid (exact for identity, the
+//!    `norm·l/s` grid for QSGD-family codecs, exact-or-zero for
+//!    sparsifiers). Encodes are deterministic in `(x, rng, per-node
+//!    state)`: both execution modes (in-process sim and TCP workers)
+//!    replay identical uploads from identical seeds.
+//! 2. **Tag frames with a spec.** [`UpdateCodec::wire_spec`] (defaults to
+//!    [`UpdateCodec::spec`]) is stamped on every [`Encoded`]; decodes
+//!    reject mismatched tags instead of misreading bits. Transparent
+//!    wrappers like [`ErrorFeedbackCodec`] stamp the *inner* codec's spec
+//!    — their wire format IS the inner format — while `spec()` still
+//!    names the wrapper for configs.
+//! 3. **Account bits honestly.** [`UpdateCodec::analytic_bits`] returns
+//!    the exact data-independent wire size for fixed-width codings and
+//!    `None` when the size is data-dependent (Elias codings); the
+//!    property suite asserts `encoded.bits()` matches.
+//! 4. **Implement `decode_range` honestly.** Decoding `lo..hi` must be
+//!    bit-identical to slicing a full decode — that is what sharded
+//!    aggregation splits uploads on — and should *not* materialize all
+//!    `p` coordinates: fixed-width codings seek straight to `lo`
+//!    ([`bitstream::BitBuf::reader_at`]), Elias codings skip-scan the
+//!    prefix without float reconstruction, sparsifiers filter their
+//!    `(index, value)` stream or binary-search their known index set.
+//!    The provided decode-then-slice default is correct but pays the
+//!    full decode; only out-of-tree codecs should rely on it.
+//! 5. **Reject corrupt frames identically on every path.** Truncated,
+//!    empty, or non-canonical frames (non-ascending sparsifier indices,
+//!    QSGD levels beyond `s`) return an explicit `Err` from *both*
+//!    `decode_into` and every `decode_range`, on every coding — never a
+//!    panic, never silently fabricated zeros (release builds do not
+//!    bounds-check raw bit reads, so validate sizes up front or use
+//!    [`elias::try_decode_omega`]). Validation extent: fixed-width
+//!    codings check their exact data-independent frame size up front,
+//!    so every range rejects a bad frame; variable-width codings check
+//!    every bit and value bound they traverse (prefix skip + range)
+//!    plus the trailing bits whenever the range reaches `p` (which
+//!    `decode_into` always does); sparsifier scans validate the full
+//!    stream from any range. A bad value hiding in an *untraversed*
+//!    fixed-width field is caught by whichever decode touches it — the
+//!    full decode always does.
+//!
+//! ## Statefulness rules
+//!
+//! Codecs are `&self` and shared across nodes. A codec whose encode
+//! depends on accumulated per-node memory (e.g. [`ErrorFeedbackCodec`]
+//! residuals) must:
+//!
+//! * key its state by the `node` passed to [`UpdateCodec::encode_node`]
+//!   (the entry point the round pipeline calls; stateless codecs keep the
+//!   default, which ignores the node and calls `encode`), behind interior
+//!   mutability;
+//! * report `true` from [`UpdateCodec::stateful`] and its live memory
+//!   from [`UpdateCodec::state_bytes`];
+//! * drop all state in [`UpdateCodec::reset_state`] — the
+//!   [`RoundEngine`](crate::coordinator::RoundEngine) calls it at run
+//!   start, and TCP workers call it on `Setup`, so a reused instance
+//!   never leaks one run's memory into the next.
+//!
+//! Decode stays stateless (the server side holds no per-node memory), so
+//! statefulness never affects aggregation or `decode_range` sharding.
+//! On TCP clusters each worker process owns the residuals of the nodes
+//! it serves; the leaders pin `node → worker` assignment by node id
+//! (see [`crate::net`]) so that ownership is stable across rounds.
+//!
+//! ## Built-in codecs
 //!
 //! * [`IdentityCodec`] — full-precision f32 uploads (the FedAvg baseline,
 //!   `32·p` bits);
@@ -12,17 +80,27 @@
 //!   with either the paper's naive fixed-width level coding or QSGD's
 //!   Elias-ω recursive coding;
 //! * [`TopKCodec`] — magnitude top-k sparsification with index coding
-//!   (fixed-width or Elias-ω delta-coded indices), the simplest member of
-//!   the sparsifier family surveyed in PAPERS.md.
+//!   (fixed-width or Elias-ω delta-coded indices);
+//! * [`RandKCodec`] — seeded random-k sparsification: the kept set is
+//!   regenerated from a 64-bit frame-header seed, so the seeded mode
+//!   ships **no index payload** (explicit Elias-ω delta indices as the
+//!   fallback mode); decoded values are scaled by `p/k` so the codec is
+//!   unbiased;
+//! * [`AdaptiveQsgdCodec`] — QSGD whose level count is chosen per encode
+//!   from a `bits_per_coord` budget, with the chosen `s` written into the
+//!   frame header;
+//! * [`ErrorFeedbackCodec`] — a stateful wrapper adding each round's
+//!   compression error back into the node's next update (EF-SGD style
+//!   residual memory).
 //!
-//! Configs and wire frames carry a [`CodecSpec`] — a small, `Copy`,
-//! serializable tag that names a built-in codec ([`CodecSpec::build`]
-//! instantiates it). Custom codecs outside this module plug in through
-//! `ServerBuilder::codec` without touching the coordinator; they run on
-//! in-process transports (networked workers rebuild their codec from
-//! the config's tagged spec, which only names built-ins).
+//! Configs and wire frames carry a [`CodecSpec`] — a small, serializable
+//! tag naming a built-in codec ([`CodecSpec::build`] instantiates it,
+//! recursively for wrappers). Custom codecs outside this module plug in
+//! through `ServerBuilder::codec` without touching the coordinator; they
+//! run on in-process transports (networked workers rebuild their codec
+//! from the config's tagged spec, which only names built-ins).
 //!
-//! Wire format (little-endian bit packing, see [`bitstream`]):
+//! ## Wire formats (little-endian bit packing, see [`bitstream`])
 //!
 //! ```text
 //! identity:  [ f32 ] * p
@@ -32,14 +110,41 @@
 //! top_k:     per kept coordinate (ascending index order):
 //!   naive coding:  [ index: ceil(log2(p)) bits ][ value: f32 ]
 //!   elias coding:  [ EliasOmega(index gap) ][ value: f32 ]
+//! rand_k:
+//!   seeded mode:   [ index_seed: 64 bits ] then [ value: f32 ] * k
+//!                  (indices regenerated from the seed at decode)
+//!   explicit mode: [ EliasOmega(index gap) ][ value: f32 ] * k
+//! adaptive_qsgd: [ s: 32 bits ][ norm: f32 ] then per-coordinate
+//!                sign+level exactly as qsgd at the header's s
+//! error_feedback: the inner codec's format, unchanged
 //! ```
 //!
 //! The dequantized QSGD coordinate is `norm * sign_i * level_i / s`,
 //! exactly the value the L1 Pallas kernel produces — parity is enforced by
 //! an integration test through the exported `quantize4096` artifact.
+//!
+//! ## How the CI conformance matrix picks codecs up
+//!
+//! The shared property suites (`rust/tests/prop_codecs.rs`,
+//! `rust/tests/prop_invariants.rs`) iterate every built-in codec and
+//! honor the `FEDPAQ_CODEC_FILTER` environment variable (a
+//! comma-separated list of [`CodecSpec::family`] names, e.g.
+//! `FEDPAQ_CODEC_FILTER=randk`): CI runs one test invocation per family,
+//! so a broken codec fails its *own* job in the matrix instead of hiding
+//! in one blob of test output. A new codec joins the matrix by (a)
+//! returning a family name from `CodecSpec::family`, (b) appearing in the
+//! suites' `all_codecs()` lists, and (c) being added to the
+//! `codec-conformance` matrix in `.github/workflows/ci.yml`.
 
+pub mod adaptive;
 pub mod bitstream;
+pub mod ef;
 pub mod elias;
+pub mod randk;
+
+pub use adaptive::AdaptiveQsgdCodec;
+pub use ef::ErrorFeedbackCodec;
+pub use randk::RandKCodec;
 
 use crate::util::rng::Rng;
 use bitstream::{BitBuf, BitWriter};
@@ -60,7 +165,10 @@ pub enum Coding {
 /// Serializable description of a built-in codec: what configs and wire
 /// frames carry, and what [`Encoded`] buffers are tagged with so a decode
 /// against the wrong configuration is rejected instead of misread.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// Not `Copy` (the [`CodecSpec::ErrorFeedback`] wrapper boxes its inner
+/// spec); clone freely — the tag is a few bytes.
+#[derive(Debug, Clone, PartialEq)]
 pub enum CodecSpec {
     /// No compression (FedAvg baseline): full f32 upload.
     Identity,
@@ -68,6 +176,19 @@ pub enum CodecSpec {
     Qsgd { s: u32, coding: Coding },
     /// Keep the `max(1, p·k_permille/1000)` largest-magnitude coordinates.
     TopK { k_permille: u16, coding: Coding },
+    /// Keep `max(1, p·k_permille/1000)` uniformly random coordinates,
+    /// scaled by `p/k` (unbiased). `seeded` regenerates the index set
+    /// from a 64-bit frame-header seed (no index payload on the wire);
+    /// otherwise indices ship explicitly as Elias-ω delta codes.
+    RandK { k_permille: u16, seeded: bool },
+    /// QSGD whose level count is derived per encode from a target upload
+    /// budget of `bits_per_coord` bits per coordinate (header included);
+    /// the chosen `s` is written into the frame header.
+    AdaptiveQsgd { bits_per_coord: u8, coding: Coding },
+    /// Error-feedback wrapper: per-node residual memory added back into
+    /// the next round's update before compressing with `inner`. The wire
+    /// format — and every frame's tag — is the inner codec's.
+    ErrorFeedback { inner: Box<CodecSpec> },
     /// An out-of-tree codec. Custom [`UpdateCodec`] impls return this
     /// from `spec()` with a stable, impl-chosen `id`, so their buffers
     /// are tagged distinctly — decode-mismatch checks still work —
@@ -89,15 +210,81 @@ impl CodecSpec {
         CodecSpec::TopK { k_permille, coding: Coding::Naive }
     }
 
-    /// Instantiate the built-in codec this spec names. Errors for
-    /// [`CodecSpec::External`] — an external codec exists only as an
-    /// instance and must be passed through `ServerBuilder::codec`.
+    /// Seeded random-k sparsification keeping `k_permille`/1000 of the
+    /// coordinates (no index payload on the wire).
+    pub fn rand_k(k_permille: u16) -> Self {
+        CodecSpec::RandK { k_permille, seeded: true }
+    }
+
+    /// Adaptive-level QSGD targeting `bits_per_coord` bits/coordinate,
+    /// naive fixed-width level coding.
+    pub fn adaptive(bits_per_coord: u8) -> Self {
+        CodecSpec::AdaptiveQsgd { bits_per_coord, coding: Coding::Naive }
+    }
+
+    /// Error-feedback wrapper around `inner`.
+    pub fn error_feedback(inner: CodecSpec) -> Self {
+        CodecSpec::ErrorFeedback { inner: Box::new(inner) }
+    }
+
+    /// The codec family name — the unit of the CI conformance matrix
+    /// (`FEDPAQ_CODEC_FILTER`, see the module docs) and of test/figure
+    /// labels.
+    pub fn family(&self) -> &'static str {
+        match self {
+            CodecSpec::Identity => "identity",
+            CodecSpec::Qsgd { .. } => "qsgd",
+            CodecSpec::TopK { .. } => "topk",
+            CodecSpec::RandK { .. } => "randk",
+            CodecSpec::AdaptiveQsgd { .. } => "adaptive_qsgd",
+            CodecSpec::ErrorFeedback { .. } => "error_feedback",
+            CodecSpec::External { .. } => "external",
+        }
+    }
+
+    /// Whether [`CodecSpec::build`] can reconstruct this codec (i.e. the
+    /// spec names built-ins all the way down). `false` exactly when an
+    /// [`CodecSpec::External`] tag appears anywhere — networked
+    /// transports, whose workers rebuild codecs from the broadcast
+    /// config, refuse unrebuildable specs up front.
+    pub fn rebuildable(&self) -> bool {
+        match self {
+            CodecSpec::External { .. } => false,
+            CodecSpec::ErrorFeedback { inner } => inner.rebuildable(),
+            _ => true,
+        }
+    }
+
+    /// Whether the built codec keeps per-node state across rounds
+    /// (see the module docs' statefulness rules).
+    pub fn is_stateful(&self) -> bool {
+        matches!(self, CodecSpec::ErrorFeedback { .. })
+    }
+
+    /// Instantiate the built-in codec this spec names (recursively for
+    /// wrappers). Errors for [`CodecSpec::External`] — an external codec
+    /// exists only as an instance and must be passed through
+    /// `ServerBuilder::codec`.
     pub fn build(&self) -> crate::Result<Box<dyn UpdateCodec>> {
-        Ok(match *self {
+        Ok(match self {
             CodecSpec::Identity => Box::new(IdentityCodec),
-            CodecSpec::Qsgd { s, coding } => Box::new(QsgdCodec { s, coding }),
+            CodecSpec::Qsgd { s, coding } => {
+                Box::new(QsgdCodec { s: *s, coding: *coding })
+            }
             CodecSpec::TopK { k_permille, coding } => {
-                Box::new(TopKCodec { k_permille, coding })
+                Box::new(TopKCodec { k_permille: *k_permille, coding: *coding })
+            }
+            CodecSpec::RandK { k_permille, seeded } => {
+                Box::new(RandKCodec { k_permille: *k_permille, seeded: *seeded })
+            }
+            CodecSpec::AdaptiveQsgd { bits_per_coord, coding } => {
+                Box::new(AdaptiveQsgdCodec {
+                    bits_per_coord: *bits_per_coord,
+                    coding: *coding,
+                })
+            }
+            CodecSpec::ErrorFeedback { inner } => {
+                Box::new(ErrorFeedbackCodec::new(inner.build()?))
             }
             CodecSpec::External { id } => anyhow::bail!(
                 "external codec id={id} cannot be rebuilt from its spec; \
@@ -117,6 +304,20 @@ impl CodecSpec {
     }
 }
 
+/// Whether `family` is enabled under the `FEDPAQ_CODEC_FILTER`
+/// environment variable (comma-separated [`CodecSpec::family`] names; an
+/// unset or empty variable enables everything). The shared property
+/// suites consult this so the CI conformance matrix can run one codec
+/// family per job.
+pub fn family_enabled(family: &str) -> bool {
+    match std::env::var("FEDPAQ_CODEC_FILTER") {
+        Ok(filter) if !filter.trim().is_empty() => filter
+            .split(',')
+            .any(|t| t.trim().eq_ignore_ascii_case(family)),
+        _ => true,
+    }
+}
+
 /// An upload compressor: everything the round pipeline needs from one.
 ///
 /// Object-safe by design — aggregation and transports hold
@@ -127,11 +328,47 @@ impl CodecSpec {
 /// and TCP) rely on replaying identical uploads from identical seeds.
 pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
     /// The serializable tag identifying this codec's configuration.
-    /// Encodes carry it; decodes verify it.
     fn spec(&self) -> CodecSpec;
+
+    /// The tag stamped on encoded frames — what decodes verify. Equal to
+    /// [`UpdateCodec::spec`] except for *transparent wrappers*
+    /// ([`ErrorFeedbackCodec`]), whose frames are in the inner codec's
+    /// wire format and carry the inner codec's tag.
+    fn wire_spec(&self) -> CodecSpec {
+        self.spec()
+    }
 
     /// Compress and bit-pack `x` for the wire.
     fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded;
+
+    /// Node-aware encode: the entry point the round pipeline calls
+    /// (`coordinator::local::node_round`, on both the sim and the TCP
+    /// worker). Stateless codecs keep this default, which ignores the
+    /// node; stateful codecs ([`ErrorFeedbackCodec`]) key their per-node
+    /// memory on it. See the module docs' statefulness rules.
+    fn encode_node(&self, node: usize, x: &[f32], rng: &mut Rng) -> Encoded {
+        let _ = node;
+        self.encode(x, rng)
+    }
+
+    /// Whether [`UpdateCodec::encode_node`] consults accumulated
+    /// per-node state (and so whether call *history* matters, not just
+    /// the current arguments).
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    /// Bytes of per-node state currently held across all nodes. Always
+    /// `0` for stateless codecs.
+    fn state_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Drop all per-node state, returning the codec to its
+    /// freshly-constructed condition. Called by the round engine at run
+    /// start and by TCP workers on `Setup`; a no-op for stateless
+    /// codecs.
+    fn reset_state(&self) {}
 
     /// Decode an upload into `out` (cleared and refilled to `enc.p`
     /// values). Rejects buffers produced by a different codec config.
@@ -199,6 +436,64 @@ pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
         let enc = self.encode(x, rng);
         let bits = enc.bits();
         Ok((self.decode(&enc)?, bits))
+    }
+}
+
+/// Full delegation for boxed codecs, so wrappers generic over
+/// `C: UpdateCodec` (e.g. [`ErrorFeedbackCodec`]) can hold a
+/// `Box<dyn UpdateCodec>` built from a [`CodecSpec`]. Every method —
+/// including the defaulted ones — forwards to the boxed impl, so a
+/// built-in's `decode_range` seek/skip fast path and statefulness
+/// semantics survive the indirection.
+impl UpdateCodec for Box<dyn UpdateCodec> {
+    fn spec(&self) -> CodecSpec {
+        (**self).spec()
+    }
+
+    fn wire_spec(&self) -> CodecSpec {
+        (**self).wire_spec()
+    }
+
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
+        (**self).encode(x, rng)
+    }
+
+    fn encode_node(&self, node: usize, x: &[f32], rng: &mut Rng) -> Encoded {
+        (**self).encode_node(node, x, rng)
+    }
+
+    fn stateful(&self) -> bool {
+        (**self).stateful()
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (**self).state_bytes()
+    }
+
+    fn reset_state(&self) {
+        (**self).reset_state()
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        (**self).decode_into(enc, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        (**self).decode_range(enc, lo, hi, out)
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        (**self).analytic_bits(p)
+    }
+
+    fn variance_q(&self, p: usize) -> f64 {
+        (**self).variance_q(p)
     }
 }
 
@@ -286,35 +581,143 @@ impl QsgdCodec {
     }
 }
 
+/// Shared QSGD-family encode body ([`QsgdCodec`] and
+/// [`AdaptiveQsgdCodec`]): the per-coordinate stochastic rounding and
+/// sign+level emission, appended after whatever header the caller has
+/// already written. One implementation, so the two codecs' quantization
+/// grids and RNG consumption can never drift apart.
+pub(crate) fn qsgd_encode_body(
+    w: &mut BitWriter,
+    x: &[f32],
+    norm: f32,
+    s: u32,
+    coding: Coding,
+    rng: &mut Rng,
+) {
+    assert!(s >= 1, "QSGD needs at least one level");
+    let nb = level_bits(s);
+    let sf = s as f32;
+    for &v in x {
+        let sign = v < 0.0;
+        let level = if norm > 0.0 {
+            let a = v.abs() / norm * sf; // in [0, s]
+            let lo = a.floor();
+            let up = rng.gen_f32() < (a - lo);
+            (lo as u32 + up as u32).min(s)
+        } else {
+            0
+        };
+        w.write_bit(sign);
+        match coding {
+            Coding::Naive => w.write_bits(level as u64, nb),
+            Coding::Elias => elias::encode_omega(w, level as u64 + 1),
+        }
+    }
+}
+
+/// Shared QSGD-family range-decode body: seek (fixed-width) or checked
+/// skip-scan (Elias) past `header_bits` plus `lo` coordinates, then
+/// reconstruct `lo..hi` at `norm`/`s`. Corrupt-frame handling per the
+/// module-doc contract: the naive coding validates its exact
+/// data-independent frame size up front (so every range rejects a
+/// truncated/oversized frame), the Elias coding checks every bit it
+/// traverses plus the trailing bits whenever the range reaches `p`, and
+/// every level a path *reads* — the Elias prefix skip included — is
+/// bounded by `s` (a valid encode never emits one beyond it; the naive
+/// seek path reads only the requested range, so a bad level hiding in
+/// an untraversed fixed-width field is caught by whichever decode
+/// touches it, `decode_into` always being one).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn qsgd_decode_range_body(
+    enc: &Encoded,
+    header_bits: u64,
+    norm: f32,
+    s: u32,
+    coding: Coding,
+    lo: usize,
+    hi: usize,
+    out: &mut Vec<f32>,
+) -> crate::Result<()> {
+    let nb = level_bits(s);
+    let sf = s as f32;
+    let mut r = match coding {
+        // Fixed-width fields: coordinate i starts at bit
+        // header + i·(1 + nb) — seek straight there.
+        Coding::Naive => {
+            let expect = header_bits + enc.p as u64 * (1 + nb as u64);
+            anyhow::ensure!(
+                enc.buf.len_bits() == expect,
+                "QSGD frame truncated or oversized: {} bits, expected {expect}",
+                enc.buf.len_bits()
+            );
+            enc.buf.reader_at(header_bits + lo as u64 * (1 + nb as u64))?
+        }
+        // Variable-width codes can't be addressed, but the prefix can
+        // be *skipped*: advance through the first `lo` codes without
+        // reconstructing any float (the scan is pure checked bit reads —
+        // the level bound costs nothing extra, so the skipped prefix is
+        // validated as strictly as the decoded range).
+        Coding::Elias => {
+            let mut r = enc.buf.reader_at(header_bits)?;
+            for _ in 0..lo {
+                anyhow::ensure!(
+                    r.remaining() >= 1,
+                    "QSGD frame truncated in the skipped prefix"
+                );
+                r.read_bit();
+                let level = elias::try_decode_omega(&mut r)? - 1;
+                anyhow::ensure!(
+                    level <= s as u64,
+                    "QSGD level {level} beyond s={s}: corrupt frame"
+                );
+            }
+            r
+        }
+    };
+    out.clear();
+    out.reserve(hi - lo);
+    for _ in lo..hi {
+        let (sign, level) = match coding {
+            Coding::Naive => (r.read_bit(), r.read_bits(nb)),
+            Coding::Elias => {
+                anyhow::ensure!(
+                    r.remaining() >= 1,
+                    "QSGD frame truncated mid-coordinate"
+                );
+                let sign = r.read_bit();
+                (sign, elias::try_decode_omega(&mut r)? - 1)
+            }
+        };
+        anyhow::ensure!(
+            level <= s as u64,
+            "QSGD level {level} beyond s={s}: corrupt frame"
+        );
+        let mag = norm * level as f32 / sf;
+        out.push(if sign { -mag } else { mag });
+    }
+    // A range that reaches the end has traversed the whole level stream,
+    // so trailing garbage is detectable (the naive coding's exact-size
+    // check already covers it for every range).
+    if coding == Coding::Elias && hi == enc.p {
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "QSGD frame truncated or oversized: {} trailing bits",
+            r.remaining()
+        );
+    }
+    Ok(())
+}
+
 impl UpdateCodec for QsgdCodec {
     fn spec(&self) -> CodecSpec {
         CodecSpec::Qsgd { s: self.s, coding: self.coding }
     }
 
     fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
-        let (s, coding) = (self.s, self.coding);
-        assert!(s >= 1, "QSGD needs at least one level");
         let norm = l2_norm(x);
         let mut w = BitWriter::new();
         w.write_f32(norm);
-        let nb = level_bits(s);
-        let sf = s as f32;
-        for &v in x {
-            let sign = v < 0.0;
-            let level = if norm > 0.0 {
-                let a = v.abs() / norm * sf; // in [0, s]
-                let lo = a.floor();
-                let up = rng.gen_f32() < (a - lo);
-                (lo as u32 + up as u32).min(s)
-            } else {
-                0
-            };
-            w.write_bit(sign);
-            match coding {
-                Coding::Naive => w.write_bits(level as u64, nb),
-                Coding::Elias => elias::encode_omega(&mut w, level as u64 + 1),
-            }
-        }
+        qsgd_encode_body(&mut w, x, norm, self.s, self.coding, rng);
         Encoded { buf: w.finish(), p: x.len(), spec: self.spec() }
     }
 
@@ -333,38 +736,12 @@ impl UpdateCodec for QsgdCodec {
     ) -> crate::Result<()> {
         check_spec(self.spec(), enc)?;
         check_range(enc.p, lo, hi)?;
-        let (s, coding) = (self.s, self.coding);
-        let nb = level_bits(s);
-        let sf = s as f32;
-        let mut r = match coding {
-            // Fixed-width fields: coordinate i starts at bit
-            // 32 + i·(1 + nb) — seek straight there.
-            Coding::Naive => enc.buf.reader_at(32 + lo as u64 * (1 + nb as u64))?,
-            // Variable-width codes can't be addressed, but the prefix can
-            // be *skipped*: advance through the first `lo` codes without
-            // reconstructing any float (the scan is pure bit reads).
-            Coding::Elias => {
-                let mut r = enc.buf.reader_at(32)?;
-                for _ in 0..lo {
-                    r.read_bit();
-                    elias::decode_omega(&mut r);
-                }
-                r
-            }
-        };
+        anyhow::ensure!(
+            enc.buf.len_bits() >= 32,
+            "QSGD frame truncated: missing norm header"
+        );
         let norm = enc.buf.reader().read_f32();
-        out.clear();
-        out.reserve(hi - lo);
-        for _ in lo..hi {
-            let sign = r.read_bit();
-            let level = match coding {
-                Coding::Naive => r.read_bits(nb),
-                Coding::Elias => elias::decode_omega(&mut r) - 1,
-            } as f32;
-            let mag = norm * level / sf;
-            out.push(if sign { -mag } else { mag });
-        }
-        Ok(())
+        qsgd_decode_range_body(enc, 32, norm, self.s, self.coding, lo, hi, out)
     }
 
     fn analytic_bits(&self, p: usize) -> Option<u64> {
@@ -419,6 +796,77 @@ fn index_bits(p: usize) -> u32 {
     }
 }
 
+/// Shared sparse-stream wire logic, encode side: `(Elias-ω delta index,
+/// f32 value)` pairs over an ascending `idx` set — the format
+/// [`TopKCodec`]'s Elias mode and [`RandKCodec`]'s explicit mode both
+/// speak, implemented once so their index coding cannot drift.
+pub(crate) fn sparse_encode_elias(w: &mut BitWriter, idx: &[u32], x: &[f32]) {
+    // Gaps are >= 1: first gap is index+1, then deltas of a strictly
+    // ascending sequence.
+    let mut prev: u64 = 0;
+    for (j, &i) in idx.iter().enumerate() {
+        let gap = if j == 0 { i as u64 + 1 } else { i as u64 - prev };
+        elias::encode_omega(w, gap);
+        prev = i as u64;
+        w.write_f32(x[i as usize]);
+    }
+}
+
+/// Shared sparse-stream decode: scan all `k` Elias-delta pairs (k ≪ p,
+/// and the full scan preserves the ascending/unique/in-range/truncation
+/// validation for *every* range), placing in-window values into `out`
+/// (length `hi − lo`), scaled by `scale`. `what` names the codec in
+/// errors.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sparse_decode_elias(
+    enc: &Encoded,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    out: &mut [f32],
+    what: &str,
+) -> crate::Result<()> {
+    debug_assert_eq!(out.len(), hi - lo);
+    let p = enc.p;
+    let mut r = enc.buf.reader();
+    let mut prev: u64 = 0;
+    for j in 0..k {
+        let gap = elias::try_decode_omega(&mut r).map_err(|e| {
+            anyhow::anyhow!(
+                "{what} frame truncated or oversized: {e} (k={k}, Elias indices)"
+            )
+        })?;
+        let i = if j == 0 { gap - 1 } else { prev + gap };
+        // The wire contract is strictly ascending unique indices;
+        // enforcing it rejects corrupt frames that would otherwise
+        // silently overwrite coordinates.
+        anyhow::ensure!(
+            j == 0 || i > prev,
+            "{what} indices not strictly ascending ({i} after {prev})"
+        );
+        prev = i;
+        let i = i as usize;
+        anyhow::ensure!(i < p, "{what} index {i} out of range 0..{p}");
+        anyhow::ensure!(
+            r.remaining() >= 32,
+            "{what} frame truncated or oversized: value {j} of {k} cut short"
+        );
+        let v = r.read_f32();
+        if i >= lo && i < hi {
+            // Exact-1.0 fast path: unscaled codecs (top-k) reproduce the
+            // stored bit pattern verbatim, NaN payloads included.
+            out[i - lo] = if scale == 1.0 { v } else { scale * v };
+        }
+    }
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "{what} frame truncated or oversized: {} trailing bits after {k} pairs",
+        r.remaining()
+    );
+    Ok(())
+}
+
 impl UpdateCodec for TopKCodec {
     fn spec(&self) -> CodecSpec {
         CodecSpec::TopK { k_permille: self.k_permille, coding: self.coding }
@@ -441,20 +889,15 @@ impl UpdateCodec for TopKCodec {
         order.truncate(k);
         order.sort_unstable();
         let mut w = BitWriter::new();
-        let nb = index_bits(p);
-        let mut prev: u64 = 0;
-        for (j, &i) in order.iter().enumerate() {
-            match self.coding {
-                Coding::Naive => w.write_bits(i as u64, nb),
-                Coding::Elias => {
-                    // Gaps are >= 1: first gap is index+1, then deltas of a
-                    // strictly ascending sequence.
-                    let gap = if j == 0 { i as u64 + 1 } else { i as u64 - prev };
-                    elias::encode_omega(&mut w, gap);
-                    prev = i as u64;
+        match self.coding {
+            Coding::Naive => {
+                let nb = index_bits(p);
+                for &i in &order {
+                    w.write_bits(i as u64, nb);
+                    w.write_f32(x[i as usize]);
                 }
             }
-            w.write_f32(x[i as usize]);
+            Coding::Elias => sparse_encode_elias(&mut w, &order, x),
         }
         Encoded { buf: w.finish(), p, spec: self.spec() }
     }
@@ -480,38 +923,42 @@ impl UpdateCodec for TopKCodec {
         out.resize(hi - lo, 0.0);
         // The stream is k sparse (index, value) pairs in ascending index
         // order: scan them all (k ≪ p), keep the ones inside `lo..hi`.
-        // The full-stream scan preserves the ascending/unique/in-range
-        // frame validation for every range, so a corrupt upload is
-        // rejected identically whichever entry point sees it.
-        let mut r = enc.buf.reader();
-        let nb = index_bits(p);
-        let mut prev: u64 = 0;
-        for j in 0..k {
-            let i = match self.coding {
-                Coding::Naive => r.read_bits(nb),
-                Coding::Elias => {
-                    let gap = elias::decode_omega(&mut r);
-                    if j == 0 {
-                        gap - 1
-                    } else {
-                        prev + gap
+        // The full-stream scan preserves the ascending/unique/in-range/
+        // truncation validation for every range, so a corrupt upload is
+        // rejected identically whichever entry point sees it (the fixed-
+        // width and Elias paths used to disagree here; the Elias scan is
+        // now the shared `sparse_decode_elias`).
+        match self.coding {
+            Coding::Naive => {
+                let nb = index_bits(p);
+                // Exact data-independent frame size, checked up front.
+                let expect = k as u64 * (nb as u64 + 32);
+                anyhow::ensure!(
+                    enc.buf.len_bits() == expect,
+                    "top-k frame truncated or oversized: {} bits, expected \
+                     {expect} (k={k}, fixed-width indices)",
+                    enc.buf.len_bits()
+                );
+                let mut r = enc.buf.reader();
+                let mut prev: u64 = 0;
+                for j in 0..k {
+                    let i = r.read_bits(nb);
+                    // Strictly ascending unique indices — same wire
+                    // contract the Elias path enforces.
+                    anyhow::ensure!(
+                        j == 0 || i > prev,
+                        "top-k indices not strictly ascending ({i} after {prev})"
+                    );
+                    prev = i;
+                    let i = i as usize;
+                    anyhow::ensure!(i < p, "top-k index {i} out of range 0..{p}");
+                    let v = r.read_f32();
+                    if i >= lo && i < hi {
+                        out[i - lo] = v;
                     }
                 }
-            };
-            // The wire contract is strictly ascending unique indices;
-            // enforcing it rejects corrupt frames that would otherwise
-            // silently overwrite coordinates.
-            anyhow::ensure!(
-                j == 0 || i > prev,
-                "top-k indices not strictly ascending ({i} after {prev})"
-            );
-            prev = i;
-            let i = i as usize;
-            anyhow::ensure!(i < p, "top-k index {i} out of range 0..{p}");
-            let v = r.read_f32();
-            if i >= lo && i < hi {
-                out[i - lo] = v;
             }
+            Coding::Elias => sparse_decode_elias(enc, k, lo, hi, 1.0, out, "top-k")?,
         }
         Ok(())
     }
@@ -543,7 +990,7 @@ impl UpdateCodec for TopKCodec {
 
 /// Validate a [`UpdateCodec::decode_range`] request against the upload's
 /// coordinate count.
-fn check_range(p: usize, lo: usize, hi: usize) -> crate::Result<()> {
+pub(crate) fn check_range(p: usize, lo: usize, hi: usize) -> crate::Result<()> {
     anyhow::ensure!(
         lo <= hi && hi <= p,
         "decode_range {lo}..{hi} invalid for a {p}-coordinate upload"
@@ -551,7 +998,7 @@ fn check_range(p: usize, lo: usize, hi: usize) -> crate::Result<()> {
     Ok(())
 }
 
-fn check_spec(expect: CodecSpec, enc: &Encoded) -> crate::Result<()> {
+pub(crate) fn check_spec(expect: CodecSpec, enc: &Encoded) -> crate::Result<()> {
     anyhow::ensure!(
         enc.spec == expect,
         "decoding with a mismatched codec config: buffer is {:?}, codec is {:?}",
@@ -770,8 +1217,116 @@ mod tests {
             CodecSpec::Qsgd { s: 7, coding: Coding::Elias },
             CodecSpec::top_k(125),
             CodecSpec::TopK { k_permille: 50, coding: Coding::Elias },
+            CodecSpec::rand_k(100),
+            CodecSpec::RandK { k_permille: 250, seeded: false },
+            CodecSpec::adaptive(4),
+            CodecSpec::AdaptiveQsgd { bits_per_coord: 6, coding: Coding::Elias },
+            CodecSpec::error_feedback(CodecSpec::qsgd(2)),
+            CodecSpec::error_feedback(CodecSpec::rand_k(100)),
         ] {
             assert_eq!(spec.build().unwrap().spec(), spec);
+        }
+    }
+
+    #[test]
+    fn spec_families_and_rebuildability() {
+        assert_eq!(CodecSpec::Identity.family(), "identity");
+        assert_eq!(CodecSpec::qsgd(1).family(), "qsgd");
+        assert_eq!(CodecSpec::top_k(10).family(), "topk");
+        assert_eq!(CodecSpec::rand_k(10).family(), "randk");
+        assert_eq!(CodecSpec::adaptive(4).family(), "adaptive_qsgd");
+        let ef = CodecSpec::error_feedback(CodecSpec::qsgd(1));
+        assert_eq!(ef.family(), "error_feedback");
+        assert!(ef.is_stateful() && ef.rebuildable());
+        assert!(!CodecSpec::qsgd(1).is_stateful());
+        assert!(!CodecSpec::External { id: 3 }.rebuildable());
+        assert!(
+            !CodecSpec::error_feedback(CodecSpec::External { id: 3 }).rebuildable()
+        );
+        // An EF spec wrapping External cannot build (no inner instance).
+        assert!(CodecSpec::error_feedback(CodecSpec::External { id: 3 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn qsgd_truncated_or_forged_frames_are_rejected_on_both_codings() {
+        // The shared qsgd_decode_range_body contract (also covering
+        // AdaptiveQsgdCodec): truncated, padded, and beyond-s-level
+        // frames are explicit errors, not fabricated values — release
+        // builds don't bounds-assert raw bit reads, so the unchecked
+        // decoder used to read zero padding and "succeed".
+        let x: Vec<f32> = (0..50).map(|i| (i as f32 * 0.3).sin()).collect();
+        for coding in [Coding::Naive, Coding::Elias] {
+            let q = QsgdCodec { s: 5, coding };
+            let full = q.encode(&x, &mut rng(21));
+            // Empty frame claiming 50 coordinates.
+            let empty = Encoded { buf: BitWriter::new().finish(), p: 50, spec: q.spec() };
+            assert!(q.decode(&empty).is_err(), "{coding:?}: empty accepted");
+            // Truncated mid-stream.
+            let mut w = BitWriter::new();
+            let mut r = full.buf.reader();
+            for _ in 0..full.buf.len_bits() / 2 {
+                w.write_bit(r.read_bit());
+            }
+            let cut = Encoded { buf: w.finish(), p: 50, spec: q.spec() };
+            assert!(q.decode(&cut).is_err(), "{coding:?}: truncated accepted");
+            // Trailing garbage past the last coordinate.
+            let mut w = BitWriter::new();
+            let mut r = full.buf.reader();
+            for _ in 0..full.buf.len_bits() {
+                w.write_bit(r.read_bit());
+            }
+            w.write_bit(true);
+            let padded = Encoded { buf: w.finish(), p: 50, spec: q.spec() };
+            assert!(q.decode(&padded).is_err(), "{coding:?}: trailing accepted");
+        }
+        // An Elias code claiming a level beyond s is rejected, not scaled
+        // into a giant magnitude.
+        let q = QsgdCodec { s: 2, coding: Coding::Elias };
+        let mut w = BitWriter::new();
+        w.write_f32(1.0);
+        for _ in 0..3 {
+            w.write_bit(false);
+            elias::encode_omega(&mut w, 9); // level 8 > s=2
+        }
+        let forged = Encoded { buf: w.finish(), p: 3, spec: q.spec() };
+        assert!(q.decode(&forged).is_err(), "beyond-s level accepted");
+    }
+
+    #[test]
+    fn top_k_truncated_frames_error_identically_on_both_codings() {
+        // Regression: the fixed-width path used to validate nothing about
+        // the frame size while the Elias path read fabricated zero bits
+        // past the end — empty/truncated frames must be an explicit Err
+        // (never a panic, never silent zeros) on BOTH index codings.
+        let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.7).sin() + 1.0).collect();
+        for coding in [Coding::Naive, Coding::Elias] {
+            let q = TopKCodec { k_permille: 250, coding };
+            // Empty frame claiming p=40 coordinates.
+            let empty = Encoded { buf: BitWriter::new().finish(), p: 40, spec: q.spec() };
+            assert!(q.decode(&empty).is_err(), "{coding:?}: empty accepted");
+            let mut out = Vec::new();
+            assert!(q.decode_range(&empty, 0, 40, &mut out).is_err());
+            assert!(q.decode_range(&empty, 0, 0, &mut out).is_err(), "{coding:?}");
+            // Frame truncated mid-stream: cut the real encode in half.
+            let full = q.encode(&x, &mut rng(13));
+            let mut w = BitWriter::new();
+            let mut r = full.buf.reader();
+            for _ in 0..full.buf.len_bits() / 2 {
+                w.write_bit(r.read_bit());
+            }
+            let cut = Encoded { buf: w.finish(), p: 40, spec: q.spec() };
+            assert!(q.decode(&cut).is_err(), "{coding:?}: truncated accepted");
+            // Frame with trailing garbage bits.
+            let mut w = BitWriter::new();
+            let mut r = full.buf.reader();
+            for _ in 0..full.buf.len_bits() {
+                w.write_bit(r.read_bit());
+            }
+            w.write_bits(0b101, 3);
+            let padded = Encoded { buf: w.finish(), p: 40, spec: q.spec() };
+            assert!(q.decode(&padded).is_err(), "{coding:?}: trailing accepted");
         }
     }
 
@@ -800,6 +1355,11 @@ mod tests {
             Box::new(QsgdCodec { s: 5, coding: Coding::Elias }),
             Box::new(TopKCodec { k_permille: 200, coding: Coding::Naive }),
             Box::new(TopKCodec { k_permille: 200, coding: Coding::Elias }),
+            Box::new(RandKCodec { k_permille: 200, seeded: true }),
+            Box::new(RandKCodec { k_permille: 200, seeded: false }),
+            Box::new(AdaptiveQsgdCodec { bits_per_coord: 4, coding: Coding::Naive }),
+            Box::new(AdaptiveQsgdCodec { bits_per_coord: 5, coding: Coding::Elias }),
+            CodecSpec::error_feedback(CodecSpec::qsgd(3)).build().unwrap(),
         ];
         for q in &codecs {
             let enc = q.encode(&x, &mut rng(11));

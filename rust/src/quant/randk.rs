@@ -1,0 +1,346 @@
+//! Random-k sparsification ([`RandKCodec`]): keep `k` uniformly random
+//! coordinates, scaled by `p/k` so the compressor is **unbiased**
+//! (`E[Q(x)] = x`, Assumption 1 applies with `q = p/k − 1`).
+//!
+//! Two index codings share one value stream:
+//!
+//! * **seeded** (the default): the kept set is a deterministic function
+//!   of a 64-bit `index_seed` drawn from the caller's quantizer RNG and
+//!   written into the frame header — decode regenerates the identical
+//!   set, so the wire carries **no index payload** at all
+//!   (`64 + 32·k` bits, exactly);
+//! * **explicit**: indices ship as Elias-ω delta codes over the
+//!   ascending sequence, exactly like [`TopKCodec`](super::TopKCodec)'s
+//!   Elias mode — the fallback when frames must be self-contained.
+//!
+//! Both modes select the same set for the same RNG state, so switching
+//! the coding changes only the wire size, never the training trajectory.
+
+use super::bitstream::BitWriter;
+use super::{
+    check_range, check_spec, sparse_decode_elias, sparse_encode_elias, CodecSpec, Encoded,
+    UpdateCodec,
+};
+use crate::util::rng::Rng;
+
+/// Random-k sparsification keeping `max(1, p·k_permille/1000)` uniformly
+/// random coordinates at full precision, scaled by `p/k` at decode.
+#[derive(Debug, Clone, Copy)]
+pub struct RandKCodec {
+    pub k_permille: u16,
+    /// `true`: regenerate indices from the frame-header seed (no index
+    /// payload). `false`: explicit Elias-ω delta-coded indices.
+    pub seeded: bool,
+}
+
+impl RandKCodec {
+    /// Seeded random-k keeping `k_permille`/1000 of the coordinates.
+    pub fn new(k_permille: u16) -> Self {
+        RandKCodec { k_permille, seeded: true }
+    }
+
+    /// Number of kept coordinates for a length-`p` vector.
+    pub fn k_of(&self, p: usize) -> usize {
+        if p == 0 {
+            0
+        } else {
+            (p * self.k_permille as usize / 1000).clamp(1, p)
+        }
+    }
+
+    /// The unbiasing scale `p/k` applied to kept values at decode.
+    fn scale(&self, p: usize) -> f32 {
+        let k = self.k_of(p);
+        if k == 0 {
+            1.0
+        } else {
+            p as f32 / k as f32
+        }
+    }
+}
+
+/// The deterministic kept set for `(index_seed, p, k)`: `k` distinct
+/// indices in `0..p`, ascending. Floyd's sampling (k RNG draws, exact
+/// uniformity over k-subsets) with an order-independent final sort, so
+/// encode and decode — possibly on different machines — regenerate the
+/// identical set. This function IS the seeded wire contract: changing it
+/// invalidates every in-flight seeded rand-k frame.
+pub fn rand_k_indices(index_seed: u64, p: usize, k: usize) -> Vec<u32> {
+    debug_assert!(k <= p);
+    let mut rng = Rng::seed_from_u64(index_seed);
+    let mut chosen = std::collections::HashSet::with_capacity(k);
+    let mut out = Vec::with_capacity(k);
+    for j in (p - k)..p {
+        let t = rng.gen_below(j as u64 + 1) as u32;
+        // Floyd: take t unless already taken, then take j itself.
+        let pick = if chosen.insert(t) { t } else { j as u32 };
+        if pick != t {
+            chosen.insert(pick);
+        }
+        out.push(pick);
+    }
+    out.sort_unstable();
+    out
+}
+
+impl UpdateCodec for RandKCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::RandK { k_permille: self.k_permille, seeded: self.seeded }
+    }
+
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Encoded {
+        let p = x.len();
+        let k = self.k_of(p);
+        // Both modes burn exactly one u64 of the caller's stream for the
+        // index seed, so seeded and explicit encodes of the same state
+        // keep identical downstream RNG positions (and identical sets).
+        let index_seed = rng.next_u64();
+        let idx = rand_k_indices(index_seed, p, k);
+        let mut w = BitWriter::new();
+        if self.seeded {
+            w.write_bits(index_seed, 64);
+            for &i in &idx {
+                w.write_f32(x[i as usize]);
+            }
+        } else {
+            // Explicit fallback: the same Elias delta-index pair stream
+            // top-k's Elias mode speaks (shared implementation).
+            sparse_encode_elias(&mut w, &idx, x);
+        }
+        Encoded { buf: w.finish(), p, spec: self.spec() }
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {
+        // One decode implementation: the full decode is the 0..p range,
+        // so the range and full paths can never drift apart.
+        self.decode_range(enc, 0, enc.p, out)
+    }
+
+    fn decode_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_range(enc.p, lo, hi)?;
+        let p = enc.p;
+        let k = self.k_of(p);
+        let scale = self.scale(p);
+        out.clear();
+        out.resize(hi - lo, 0.0);
+        if self.seeded {
+            // Exact data-independent frame size: validate up front (the
+            // truncated-frame contract), then the index set is known
+            // before any value is read — binary-search the kept indices
+            // falling in `lo..hi` and seek straight to their values.
+            let expect = 64 + 32 * k as u64;
+            anyhow::ensure!(
+                enc.buf.len_bits() == expect,
+                "rand-k frame truncated or oversized: {} bits, expected {expect} \
+                 (k={k}, seeded indices)",
+                enc.buf.len_bits()
+            );
+            let index_seed = enc.buf.reader().read_bits(64);
+            let idx = rand_k_indices(index_seed, p, k);
+            let j_lo = idx.partition_point(|&i| (i as usize) < lo);
+            let j_hi = idx.partition_point(|&i| (i as usize) < hi);
+            let mut r = enc.buf.reader_at(64 + 32 * j_lo as u64)?;
+            for &i in &idx[j_lo..j_hi] {
+                out[i as usize - lo] = scale * r.read_f32();
+            }
+        } else {
+            // Explicit Elias indices: the shared full-stream scan (same
+            // validation and truncation errors as top-k's Elias mode),
+            // with the unbiasing scale applied to in-window values.
+            sparse_decode_elias(enc, k, lo, hi, scale, out, "rand-k")?;
+        }
+        Ok(())
+    }
+
+    fn analytic_bits(&self, p: usize) -> Option<u64> {
+        if self.seeded {
+            Some(64 + 32 * self.k_of(p) as u64)
+        } else {
+            // Elias index sizes depend on the (random) gaps.
+            None
+        }
+    }
+
+    /// `q = p/k − 1`: the exact Assumption-1 variance of the unbiased
+    /// `(p/k)`-scaled random-k sparsifier (sampling without replacement),
+    /// so the paper's Theorem 1/2 machinery applies directly.
+    fn variance_q(&self, p: usize) -> f64 {
+        let k = self.k_of(p);
+        if p == 0 || k == 0 {
+            0.0
+        } else {
+            p as f64 / k as f64 - 1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn indices_deterministic_distinct_ascending_in_range() {
+        for (p, k) in [(10, 3), (1, 1), (100, 100), (1000, 1), (257, 64)] {
+            let a = rand_k_indices(7, p, k);
+            let b = rand_k_indices(7, p, k);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), k);
+            for w in a.windows(2) {
+                assert!(w[0] < w[1], "not strictly ascending: {a:?}");
+            }
+            assert!(a.iter().all(|&i| (i as usize) < p));
+            if k < p {
+                assert_ne!(a, rand_k_indices(8, p, k), "seed-insensitive");
+            }
+        }
+    }
+
+    #[test]
+    fn index_selection_is_uniform_ish() {
+        // Every coordinate should be kept with probability ~k/p.
+        let (p, k, trials) = (50usize, 10usize, 4000);
+        let mut counts = vec![0usize; p];
+        for t in 0..trials {
+            for i in rand_k_indices(t as u64, p, k) {
+                counts[i as usize] += 1;
+            }
+        }
+        let expect = trials * k / p; // 800
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (expect * 7 / 10..=expect * 13 / 10).contains(&c),
+                "coord {i}: kept {c} of ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_scales_kept_and_zeroes_rest() {
+        let x: Vec<f32> = (0..200).map(|i| ((i as f32) * 0.3).sin() + 0.01).collect();
+        for seeded in [true, false] {
+            let q = RandKCodec { k_permille: 150, seeded };
+            let k = q.k_of(x.len());
+            assert_eq!(k, 30);
+            let enc = q.encode(&x, &mut rng(1));
+            let y = q.decode(&enc).unwrap();
+            let scale = x.len() as f32 / k as f32;
+            let kept: Vec<usize> = (0..x.len()).filter(|&i| y[i] != 0.0).collect();
+            assert_eq!(kept.len(), k, "seeded={seeded}");
+            for &i in &kept {
+                assert_eq!(y[i], scale * x[i], "coord {i} seeded={seeded}");
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_and_explicit_keep_the_same_set_for_the_same_rng() {
+        let x: Vec<f32> = (0..300).map(|i| (i as f32 * 0.11).cos()).collect();
+        let s = RandKCodec { k_permille: 100, seeded: true };
+        let e = RandKCodec { k_permille: 100, seeded: false };
+        let es = s.encode(&x, &mut rng(5));
+        let ee = e.encode(&x, &mut rng(5));
+        assert_eq!(s.decode(&es).unwrap(), e.decode(&ee).unwrap());
+        // The seeded wire is index-free: 64 + 32k bits exactly.
+        assert_eq!(es.bits(), 64 + 32 * 30);
+        assert_eq!(s.analytic_bits(300), Some(64 + 32 * 30));
+        assert_eq!(e.analytic_bits(300), None);
+    }
+
+    #[test]
+    fn unbiased_empirically() {
+        let x: Vec<f32> = (0..40).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let q = RandKCodec::new(250); // k = 10 of 40
+        let mut acc = vec![0f64; x.len()];
+        let trials = 6000;
+        let mut r = rng(9);
+        for _ in 0..trials {
+            for (a, v) in acc.iter_mut().zip(q.apply(&x, &mut r).unwrap().0) {
+                *a += v as f64;
+            }
+        }
+        for (i, (&xi, &ai)) in x.iter().zip(acc.iter()).enumerate() {
+            let mean = ai / trials as f64;
+            // sd of one sample ≈ |x_i|·sqrt(p/k−1) ≤ 2; 5σ/√trials bound.
+            let tol = 5.0 * 2.0 / (trials as f64).sqrt();
+            assert!(
+                (mean - xi as f64).abs() < tol,
+                "coord {i}: mean {mean} vs {xi} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_bound_holds_empirically() {
+        let p = 64;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.23).cos()).collect();
+        let norm2 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        let q = RandKCodec::new(125); // k = 8, q = 7
+        let bound = q.variance_q(p) * norm2;
+        let mut err = 0.0f64;
+        let trials = 3000;
+        let mut r = rng(11);
+        for _ in 0..trials {
+            let y = q.apply(&x, &mut r).unwrap().0;
+            err += x
+                .iter()
+                .zip(&y)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let mean_err = err / trials as f64;
+        assert!(
+            mean_err <= bound * 1.05 + 1e-9,
+            "measured {mean_err} > bound {bound}"
+        );
+    }
+
+    #[test]
+    fn truncated_frames_error_on_both_modes() {
+        let x: Vec<f32> = (0..60).map(|i| i as f32 * 0.1 + 1.0).collect();
+        for seeded in [true, false] {
+            let q = RandKCodec { k_permille: 200, seeded };
+            let empty = Encoded {
+                buf: BitWriter::new().finish(),
+                p: 60,
+                spec: q.spec(),
+            };
+            assert!(q.decode(&empty).is_err(), "seeded={seeded}: empty accepted");
+            let full = q.encode(&x, &mut rng(3));
+            let mut w = BitWriter::new();
+            let mut r = full.buf.reader();
+            for _ in 0..full.buf.len_bits() / 2 {
+                w.write_bit(r.read_bit());
+            }
+            let cut = Encoded { buf: w.finish(), p: 60, spec: q.spec() };
+            assert!(q.decode(&cut).is_err(), "seeded={seeded}: truncated accepted");
+        }
+    }
+
+    #[test]
+    fn decode_range_matches_full_decode_slice() {
+        let p = 233;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.19).sin() * 2.0).collect();
+        for seeded in [true, false] {
+            let q = RandKCodec { k_permille: 300, seeded };
+            let enc = q.encode(&x, &mut rng(21));
+            let full = q.decode(&enc).unwrap();
+            let mut out = Vec::new();
+            for (lo, hi) in [(0, p), (0, 0), (p, p), (0, 1), (50, 121), (200, p)] {
+                q.decode_range(&enc, lo, hi, &mut out).unwrap();
+                assert_eq!(out, &full[lo..hi], "seeded={seeded} {lo}..{hi}");
+            }
+            assert!(q.decode_range(&enc, 0, p + 1, &mut out).is_err());
+        }
+    }
+}

@@ -100,6 +100,31 @@ fn distributed_matches_simulation_exactly() {
 }
 
 #[test]
+fn distributed_error_feedback_matches_simulation_exactly() {
+    // The stateful-codec contract over real sockets: each worker owns the
+    // residual memory of the nodes it serves (node → worker assignment is
+    // pinned by node id), so a distributed EF(rand-k) run — 10 rounds,
+    // nodes resampled and revisited across rounds — reproduces the
+    // single-instance in-process simulation bit-for-bit.
+    let mut cfg = cluster_cfg(33);
+    cfg.codec = CodecSpec::error_feedback(CodecSpec::rand_k(200));
+    let dist = run_cluster(&cfg, 2);
+
+    let (kind, batch, eval_n) = zoo_kind("logreg").unwrap();
+    let mut engine = RustEngine::new(kind, batch, eval_n).unwrap();
+    let sim = Server::new(cfg, &mut engine).unwrap().run().unwrap();
+
+    assert_eq!(dist.total_bits, sim.total_bits);
+    let max_diff = dist
+        .params
+        .iter()
+        .zip(&sim.params)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert_eq!(max_diff, 0.0, "distributed EF != simulated EF");
+}
+
+#[test]
 fn worker_count_does_not_change_results() {
     let cfg = cluster_cfg(32);
     let one = run_cluster(&cfg, 1);

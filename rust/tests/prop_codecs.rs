@@ -1,19 +1,29 @@
 //! Property tests over every [`UpdateCodec`] implementation — the codec
 //! trait contract: encode→decode identity on each codec's grid, exact
-//! analytic bit accounting for fixed-width codings, and rejection of
-//! decodes against a mismatched codec configuration.
+//! analytic bit accounting for fixed-width codings, rejection of decodes
+//! against a mismatched codec configuration, `decode_range` ≡
+//! full-decode-slice, and the error-feedback statefulness laws.
+//!
+//! The CI **codec-conformance matrix** runs this suite once per codec
+//! family with `FEDPAQ_CODEC_FILTER=<family>` (see
+//! [`fedpaq::quant::family_enabled`]): `all_codecs()` and the
+//! family-specific tests below honor the filter, so a broken codec names
+//! itself in the job list.
 //!
 //! (Driver: `fedpaq::util::prop` — proptest is unavailable offline.)
 
 use fedpaq::quant::{
-    l2_norm, CodecSpec, Coding, IdentityCodec, QsgdCodec, TopKCodec, UpdateCodec,
+    family_enabled, l2_norm, AdaptiveQsgdCodec, CodecSpec, Coding, ErrorFeedbackCodec,
+    IdentityCodec, QsgdCodec, RandKCodec, TopKCodec, UpdateCodec,
 };
 use fedpaq::util::prop::check;
 use fedpaq::util::rng::Rng;
 
-/// One of every built-in codec family/coding combination.
+/// One of every built-in codec family/coding combination, restricted to
+/// the families `FEDPAQ_CODEC_FILTER` enables (all, when unset). Fresh
+/// instances per call, so stateful codecs start with empty memory.
 fn all_codecs() -> Vec<Box<dyn UpdateCodec>> {
-    vec![
+    let codecs: Vec<Box<dyn UpdateCodec>> = vec![
         Box::new(IdentityCodec),
         Box::new(QsgdCodec { s: 1, coding: Coding::Naive }),
         Box::new(QsgdCodec { s: 7, coding: Coding::Naive }),
@@ -21,7 +31,25 @@ fn all_codecs() -> Vec<Box<dyn UpdateCodec>> {
         Box::new(TopKCodec { k_permille: 100, coding: Coding::Naive }),
         Box::new(TopKCodec { k_permille: 250, coding: Coding::Elias }),
         Box::new(TopKCodec { k_permille: 1000, coding: Coding::Naive }),
-    ]
+        Box::new(RandKCodec { k_permille: 100, seeded: true }),
+        Box::new(RandKCodec { k_permille: 250, seeded: false }),
+        Box::new(RandKCodec { k_permille: 1000, seeded: true }),
+        Box::new(AdaptiveQsgdCodec { bits_per_coord: 4, coding: Coding::Naive }),
+        Box::new(AdaptiveQsgdCodec { bits_per_coord: 6, coding: Coding::Elias }),
+        // Error-feedback wrappers over each sparsifier family + QSGD.
+        // Their wire_spec (= inner spec) must not collide with any bare
+        // codec above, so the mismatch property stays meaningful.
+        Box::new(ErrorFeedbackCodec::new(QsgdCodec { s: 3, coding: Coding::Naive })),
+        Box::new(ErrorFeedbackCodec::new(TopKCodec {
+            k_permille: 150,
+            coding: Coding::Naive,
+        })),
+        Box::new(ErrorFeedbackCodec::new(RandKCodec { k_permille: 300, seeded: true })),
+    ];
+    codecs
+        .into_iter()
+        .filter(|c| family_enabled(c.spec().family()))
+        .collect()
 }
 
 fn random_vec(rng: &mut Rng, p: usize, scale: f32) -> Vec<f32> {
@@ -29,28 +57,20 @@ fn random_vec(rng: &mut Rng, p: usize, scale: f32) -> Vec<f32> {
 }
 
 /// Codec-specific decode contract: what "roundtrip identity on the grid"
-/// means for each family.
+/// means for each family. Keyed on the **wire spec** — for transparent
+/// wrappers (error feedback with empty memory) the frame is the inner
+/// codec's frame of `x`, so the inner grid relation must hold.
 fn assert_on_grid(codec: &dyn UpdateCodec, x: &[f32], y: &[f32]) {
     assert_eq!(x.len(), y.len());
-    match codec.spec() {
+    match codec.wire_spec() {
         CodecSpec::Identity => assert_eq!(x, y, "identity must be exact"),
-        CodecSpec::Qsgd { s, .. } => {
-            let norm = l2_norm(x);
-            for (i, &v) in y.iter().enumerate() {
-                if norm == 0.0 {
-                    assert_eq!(v, 0.0);
-                    continue;
-                }
-                let lvl = v.abs() / norm * s as f32;
-                assert!(
-                    (lvl - lvl.round()).abs() < 1e-3,
-                    "coord {i}: level {lvl} off the s={s} grid"
-                );
-                assert!(lvl.round() as u32 <= s, "coord {i}: level beyond s");
-            }
+        CodecSpec::Qsgd { s, .. } => assert_qsgd_grid(x, y, s),
+        CodecSpec::AdaptiveQsgd { bits_per_coord, coding } => {
+            let s = AdaptiveQsgdCodec { bits_per_coord, coding }.s_for(x.len());
+            assert_qsgd_grid(x, y, s);
         }
-        CodecSpec::External { .. } => {
-            unreachable!("all_codecs() yields only built-in codecs")
+        CodecSpec::External { .. } | CodecSpec::ErrorFeedback { .. } => {
+            unreachable!("all_codecs() frames carry concrete built-in wire specs")
         }
         CodecSpec::TopK { .. } => {
             // Kept coordinates are exact copies; dropped ones are zero and
@@ -71,6 +91,37 @@ fn assert_on_grid(codec: &dyn UpdateCodec, x: &[f32], y: &[f32]) {
                 }
             }
         }
+        CodecSpec::RandK { k_permille, .. } => {
+            // Kept coordinates are the original values scaled by exactly
+            // p/k (one f32 multiply); the rest decode to zero.
+            let p = x.len();
+            let k = RandKCodec { k_permille, seeded: true }.k_of(p);
+            let scale = p as f32 / k as f32;
+            let mut kept = 0;
+            for i in 0..p {
+                if y[i] != 0.0 {
+                    kept += 1;
+                    assert_eq!(y[i], scale * x[i], "coord {i} not scale*x");
+                }
+            }
+            assert!(kept <= k, "{kept} nonzero coords > k={k}");
+        }
+    }
+}
+
+fn assert_qsgd_grid(x: &[f32], y: &[f32], s: u32) {
+    let norm = l2_norm(x);
+    for (i, &v) in y.iter().enumerate() {
+        if norm == 0.0 {
+            assert_eq!(v, 0.0);
+            continue;
+        }
+        let lvl = v.abs() / norm * s as f32;
+        assert!(
+            (lvl - lvl.round()).abs() < 1e-3,
+            "coord {i}: level {lvl} off the s={s} grid"
+        );
+        assert!(lvl.round() as u32 <= s, "coord {i}: level beyond s");
     }
 }
 
@@ -82,7 +133,7 @@ fn prop_every_codec_roundtrips_on_its_grid() {
         for codec in all_codecs() {
             let enc = codec.encode(&x, &mut rng.clone());
             assert_eq!(enc.p, p);
-            assert_eq!(enc.spec, codec.spec());
+            assert_eq!(enc.spec, codec.wire_spec());
             let y = codec.decode(&enc).unwrap_or_else(|e| {
                 panic!("{:?} failed to decode its own encode: {e}", codec.spec())
             });
@@ -121,12 +172,15 @@ fn prop_decode_config_mismatch_is_rejected() {
         let p = rng.gen_range(1, 400);
         let x = random_vec(rng, p, 1.0);
         let codecs = all_codecs();
-        for (i, a) in codecs.iter().enumerate() {
+        for a in codecs.iter() {
             let enc = a.encode(&x, &mut rng.clone());
-            for (j, b) in codecs.iter().enumerate() {
+            for b in codecs.iter() {
                 let got = b.decode(&enc);
-                if i == j {
-                    assert!(got.is_ok(), "{:?} rejected its own encode", a.spec());
+                // Transparent wrappers share their inner's wire format:
+                // acceptance is keyed on the frame tag, not the config
+                // identity.
+                if a.wire_spec() == b.wire_spec() {
+                    assert!(got.is_ok(), "{:?} rejected {:?}'s frame", b.spec(), a.spec());
                 } else {
                     assert!(
                         got.is_err(),
@@ -187,6 +241,113 @@ fn prop_decode_range_matches_full_decode_slice() {
                 reassembled.extend_from_slice(&out);
             }
             assert_eq!(reassembled, full, "{:?}", codec.spec());
+        }
+    });
+}
+
+// ---------------- error-feedback statefulness laws ----------------
+
+#[test]
+fn prop_error_feedback_identity_residuals_are_exactly_zero() {
+    // Lossless inner codec ⇒ no compression error ⇒ the residual memory
+    // is bit-exact zero after every round, for every node — and the
+    // wrapped encode therefore equals the bare identity encode.
+    if !family_enabled("error_feedback") {
+        return;
+    }
+    check(40, 0xc0dec_f, |rng| {
+        let ef = ErrorFeedbackCodec::new(IdentityCodec);
+        let p = rng.gen_range(1, 600);
+        for round in 0..4 {
+            for node in [0usize, 2, 9] {
+                let x = random_vec(rng, p, 4.0);
+                let enc = ef.encode_node(node, &x, &mut rng.clone());
+                assert_eq!(ef.decode(&enc).unwrap(), x, "round {round} node {node}");
+                let res = ef.residual(node).unwrap();
+                assert!(
+                    res.iter().all(|&e| e == 0.0),
+                    "round {round} node {node}: nonzero identity residual"
+                );
+            }
+        }
+        assert_eq!(ef.state_bytes(), 3 * p as u64 * 4);
+        ef.reset_state();
+        assert_eq!(ef.state_bytes(), 0);
+    });
+}
+
+#[test]
+fn prop_error_feedback_delegates_bits_variance_and_range_decode() {
+    if !family_enabled("error_feedback") {
+        return;
+    }
+    check(40, 0xc0dec_10, |rng| {
+        let p = rng.gen_range(1, 800);
+        let inners: Vec<Box<dyn UpdateCodec>> = vec![
+            Box::new(QsgdCodec { s: rng.gen_range(1, 12) as u32, coding: Coding::Naive }),
+            Box::new(TopKCodec {
+                k_permille: rng.gen_range(1, 1001) as u16,
+                coding: Coding::Elias,
+            }),
+            Box::new(RandKCodec {
+                k_permille: rng.gen_range(1, 1001) as u16,
+                seeded: true,
+            }),
+        ];
+        for inner in inners {
+            let spec = inner.spec();
+            let (b_inner, q_inner) = (inner.analytic_bits(p), inner.variance_q(p));
+            let ef = ErrorFeedbackCodec::new(inner);
+            // analytic_bits / variance_q / wire_spec delegate verbatim.
+            assert_eq!(ef.analytic_bits(p), b_inner, "{spec:?}");
+            assert_eq!(ef.variance_q(p), q_inner, "{spec:?}");
+            assert_eq!(ef.wire_spec(), spec);
+            assert_eq!(ef.spec(), CodecSpec::ErrorFeedback { inner: Box::new(spec) });
+            // decode_range delegates to the inner fast path bit-exactly.
+            let x = random_vec(rng, p, 2.0);
+            let enc = ef.encode_node(1, &x, &mut rng.clone());
+            let full = ef.decode(&enc).unwrap();
+            let mid = rng.gen_range(0, p + 1);
+            let mut out = Vec::new();
+            ef.decode_range(&enc, 0, mid, &mut out).unwrap();
+            assert_eq!(out, &full[..mid]);
+        }
+    });
+}
+
+#[test]
+fn prop_error_feedback_residual_law_and_determinism() {
+    // The EF recurrence: e_t = (x_t + e_{t-1}) − decode(enc_t), exactly,
+    // per node — and two fresh wrappers replaying the same history
+    // produce bit-identical frames (what sim/TCP bit-parity rests on).
+    if !family_enabled("error_feedback") {
+        return;
+    }
+    check(30, 0xc0dec_11, |rng| {
+        let p = rng.gen_range(1, 300);
+        let a = ErrorFeedbackCodec::new(TopKCodec {
+            k_permille: rng.gen_range(1, 1001) as u16,
+            coding: Coding::Naive,
+        });
+        let b = ErrorFeedbackCodec::new(TopKCodec {
+            k_permille: a.inner().k_permille,
+            coding: Coding::Naive,
+        });
+        let node = rng.gen_range(0, 50);
+        let mut prev_res = vec![0.0f32; p];
+        for _ in 0..4 {
+            let x = random_vec(rng, p, 3.0);
+            let seed = rng.next_u64();
+            let ea = a.encode_node(node, &x, &mut Rng::seed_from_u64(seed));
+            let eb = b.encode_node(node, &x, &mut Rng::seed_from_u64(seed));
+            assert_eq!(ea.buf.words(), eb.buf.words(), "history divergence");
+            assert_eq!(ea.bits(), eb.bits());
+            let dec = a.decode(&ea).unwrap();
+            let res = a.residual(node).unwrap();
+            for i in 0..p {
+                assert_eq!(res[i], (x[i] + prev_res[i]) - dec[i], "coord {i}");
+            }
+            prev_res = res;
         }
     });
 }

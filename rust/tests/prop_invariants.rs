@@ -2,14 +2,19 @@
 //! (driver: `fedpaq::util::prop` — proptest is unavailable offline).
 //!
 //! Each `check(N, seed, ..)` runs N random cases; failures print a
-//! replayable per-case seed.
+//! replayable per-case seed. Codec-touching properties honor
+//! `FEDPAQ_CODEC_FILTER` (the CI conformance matrix, see the `quant`
+//! module docs): family-specific tests skip when their family is
+//! filtered out, and the sharded-aggregation property draws its codec
+//! pool from the enabled families only.
 
 use fedpaq::config::ExperimentConfig;
 use fedpaq::coordinator::sampler::sample_nodes;
 use fedpaq::coordinator::{Aggregator, ShardPlan, StalenessRule};
 use fedpaq::data::{BatchSampler, Partition};
 use fedpaq::quant::{
-    bitstream::BitWriter, elias, l2_norm, CodecSpec, Coding, Encoded, QsgdCodec, UpdateCodec,
+    bitstream::BitWriter, elias, family_enabled, l2_norm, CodecSpec, Coding, Encoded,
+    QsgdCodec, UpdateCodec,
 };
 use fedpaq::util::json::Json;
 use fedpaq::util::prop::check;
@@ -21,6 +26,9 @@ fn random_vec(rng: &mut Rng, p: usize, scale: f32) -> Vec<f32> {
 
 #[test]
 fn prop_qsgd_decode_encode_levels_and_bits() {
+    if !family_enabled("qsgd") {
+        return;
+    }
     check(200, 0xfed_aa, |rng| {
         let p = rng.gen_range(1, 3000);
         let s = rng.gen_range(1, 40) as u32;
@@ -51,6 +59,9 @@ fn prop_qsgd_decode_encode_levels_and_bits() {
 fn prop_qsgd_error_within_deterministic_bound() {
     // |Q_i(x) - x_i| <= norm/s always (one quantization bin), since the
     // stochastic rounding picks an adjacent level.
+    if !family_enabled("qsgd") {
+        return;
+    }
     check(150, 0xfed_ab, |rng| {
         let p = rng.gen_range(1, 800);
         let s = rng.gen_range(1, 16) as u32;
@@ -94,6 +105,9 @@ fn prop_elias_roundtrip_arbitrary_u64() {
 
 #[test]
 fn prop_elias_coded_upload_decodes_identically() {
+    if !family_enabled("qsgd") {
+        return;
+    }
     check(100, 0xfed_ad, |rng| {
         let p = rng.gen_range(1, 500);
         let s = rng.gen_range(1, 64) as u32;
@@ -165,26 +179,50 @@ fn prop_sharded_aggregation_bit_identical_to_single_shard() {
     // uploads (any codec, any staleness weights), any shard count yields
     // byte-for-byte the model the sequential single-shard loop produces —
     // sums, ledgers and the applied parameters alike.
-    check(60, 0xfed_b4, |rng| {
-        let p = rng.gen_range(1, 2500);
-        let codec: Box<dyn UpdateCodec> = match rng.gen_range(0, 5) {
-            0 => CodecSpec::Identity,
-            1 => CodecSpec::qsgd(rng.gen_range(1, 16) as u32),
-            2 => CodecSpec::Qsgd {
-                s: rng.gen_range(1, 16) as u32,
-                coding: Coding::Elias,
-            },
-            3 => CodecSpec::TopK {
+    // One spec constructor per family member; the conformance matrix's
+    // filter narrows the pool (and skips the test if nothing is left).
+    type SpecGen = fn(&mut Rng) -> CodecSpec;
+    let all: [SpecGen; 9] = [
+        |_| CodecSpec::Identity,
+        |rng| CodecSpec::qsgd(rng.gen_range(1, 16) as u32),
+        |rng| CodecSpec::Qsgd { s: rng.gen_range(1, 16) as u32, coding: Coding::Elias },
+        |rng| CodecSpec::TopK {
+            k_permille: rng.gen_range(1, 1001) as u16,
+            coding: Coding::Naive,
+        },
+        |rng| CodecSpec::TopK {
+            k_permille: rng.gen_range(1, 1001) as u16,
+            coding: Coding::Elias,
+        },
+        |rng| CodecSpec::RandK {
+            k_permille: rng.gen_range(1, 1001) as u16,
+            seeded: rng.gen_bool(0.5),
+        },
+        |rng| CodecSpec::adaptive(rng.gen_range(2, 12) as u8),
+        |rng| {
+            CodecSpec::error_feedback(CodecSpec::TopK {
                 k_permille: rng.gen_range(1, 1001) as u16,
                 coding: Coding::Naive,
-            },
-            _ => CodecSpec::TopK {
+            })
+        },
+        |rng| {
+            CodecSpec::error_feedback(CodecSpec::RandK {
                 k_permille: rng.gen_range(1, 1001) as u16,
-                coding: Coding::Elias,
-            },
-        }
-        .build()
-        .unwrap();
+                seeded: true,
+            })
+        },
+    ];
+    let pool: Vec<SpecGen> = all
+        .into_iter()
+        .filter(|g| family_enabled(g(&mut Rng::seed_from_u64(0)).family()))
+        .collect();
+    if pool.is_empty() {
+        return;
+    }
+    check(60, 0xfed_b4, |rng| {
+        let p = rng.gen_range(1, 2500);
+        let spec = pool[rng.gen_range(0, pool.len())](rng);
+        let codec: Box<dyn UpdateCodec> = spec.build().unwrap();
         let rule = match rng.gen_range(0, 3) {
             0 => StalenessRule::Uniform,
             1 => StalenessRule::inverse(),
@@ -245,13 +283,26 @@ fn prop_config_json_roundtrip() {
         cfg.t_total = cfg.tau * rng.gen_range(1, 50);
         cfg.seed = rng.next_u64();
         cfg.ratio = rng.gen_f64() * 1000.0 + 1.0;
-        cfg.codec = match rng.gen_range(0, 4) {
+        cfg.codec = match rng.gen_range(0, 7) {
             0 => CodecSpec::Identity,
             1 => CodecSpec::qsgd(rng.gen_range(1, 100) as u32),
             2 => CodecSpec::Qsgd {
                 s: rng.gen_range(1, 100) as u32,
                 coding: Coding::Elias,
             },
+            3 => CodecSpec::RandK {
+                k_permille: rng.gen_range(1, 1001) as u16,
+                seeded: rng.gen_bool(0.5),
+            },
+            4 => CodecSpec::AdaptiveQsgd {
+                bits_per_coord: rng.gen_range(2, 33) as u8,
+                coding: if rng.gen_bool(0.5) { Coding::Elias } else { Coding::Naive },
+            },
+            5 => CodecSpec::error_feedback(match rng.gen_range(0, 3) {
+                0 => CodecSpec::top_k(rng.gen_range(1, 1001) as u16),
+                1 => CodecSpec::rand_k(rng.gen_range(1, 1001) as u16),
+                _ => CodecSpec::qsgd(rng.gen_range(1, 100) as u32),
+            }),
             _ => CodecSpec::TopK {
                 k_permille: rng.gen_range(1, 1001) as u16,
                 coding: if rng.gen_bool(0.5) { Coding::Elias } else { Coding::Naive },

@@ -80,6 +80,7 @@ pub struct AsyncSim {
     now: f64,
     planner: Option<CommitPlanner>,
     jobs: Vec<Job>,
+    events: crate::ops::EventSink,
 }
 
 impl AsyncSim {
@@ -124,6 +125,15 @@ impl AsyncSim {
             &mut self.bufs,
         )?;
         let finish = at + cost.node_compute_time(node, version, w.cfg.tau, engine.batch());
+        self.events.emit(
+            "job_dispatched",
+            vec![
+                ("finish", crate::util::json::Json::num(finish)),
+                ("node", crate::util::json::Json::num(node as f64)),
+                ("t", crate::util::json::Json::num(at)),
+                ("version", crate::util::json::Json::num(version as f64)),
+            ],
+        );
         self.jobs.push(Job { node, version, slot, finish, enc });
         Ok(())
     }
@@ -211,6 +221,14 @@ impl Transport for AsyncSim {
                 .pop_next()
                 .ok_or_else(|| anyhow::anyhow!("async sim starved: no jobs in flight"))?;
             let arrival = job.finish;
+            self.events.emit(
+                "upload_arrived",
+                vec![
+                    ("node", crate::util::json::Json::num(job.node as f64)),
+                    ("t", crate::util::json::Json::num(arrival)),
+                    ("version", crate::util::json::Json::num(job.version as f64)),
+                ],
+            );
             let decisions =
                 self.planner.as_mut().unwrap().on_event(PlannerEvent::UploadArrived {
                     node: job.node,
@@ -222,7 +240,19 @@ impl Transport for AsyncSim {
                     // Discarded stale upload: charged no uplink time (see
                     // the module docs); its replacement dispatches at the
                     // drop's arrival instant.
-                    Decision::Drop { .. } => {}
+                    Decision::Drop { node, staleness } => {
+                        self.events.emit(
+                            "upload_dropped",
+                            vec![
+                                ("node", crate::util::json::Json::num(node as f64)),
+                                (
+                                    "staleness",
+                                    crate::util::json::Json::num(staleness as f64),
+                                ),
+                                ("t", crate::util::json::Json::num(arrival)),
+                            ],
+                        );
+                    }
                     Decision::Dispatch { node, version, slot } => {
                         self.dispatch(codec, engine, node, version, slot, arrival, ctx)?
                     }
@@ -256,6 +286,60 @@ impl Transport for AsyncSim {
             );
         }
         self.jobs.clear();
+        Ok(())
+    }
+
+    fn set_events(&mut self, events: crate::ops::EventSink) {
+        self.events = events;
+    }
+
+    /// Full async snapshot: planner, clock, and every in-flight job with
+    /// its already-computed upload — the upload is a pure function of the
+    /// dispatch-time model, which no longer exists after a resume, so the
+    /// bytes themselves are checkpointed. This is what makes simulator
+    /// resume *fully general*: any post-commit instant is resumable
+    /// bit-identically, stragglers in flight and all.
+    fn export_state(&self) -> crate::Result<Option<crate::ops::TransportState>> {
+        let planner = self
+            .planner
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("AsyncSim::export_state before setup"))?;
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| crate::ops::JobState {
+                node: j.node,
+                version: j.version,
+                slot: j.slot,
+                finish: j.finish,
+                enc: j.enc.clone(),
+            })
+            .collect();
+        Ok(Some(crate::ops::TransportState::Async {
+            planner: planner.export_state(),
+            now: self.now,
+            jobs,
+        }))
+    }
+
+    fn restore_state(
+        &mut self,
+        state: crate::ops::TransportState,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(self.world.is_some(), "AsyncSim::restore_state before setup");
+        let crate::ops::TransportState::Async { planner, now, jobs } = state;
+        self.planner = Some(CommitPlanner::from_state(planner)?);
+        self.now = now;
+        self.jobs = jobs
+            .into_iter()
+            .map(|j| Job {
+                node: j.node,
+                version: j.version,
+                slot: j.slot,
+                finish: j.finish,
+                enc: j.enc,
+            })
+            .collect();
         Ok(())
     }
 }

@@ -103,6 +103,34 @@ struct Buffered {
     enc: Encoded,
 }
 
+/// A complete, serializable snapshot of a [`CommitPlanner`] — what
+/// `ops` checkpoints persist so a resumed run continues the protocol
+/// mid-stream with identical decisions. [`CommitPlanner::export_state`]
+/// produces one; [`CommitPlanner::from_state`] rebuilds the planner
+/// (export → rebuild → export is an identity, property-tested in
+/// `rust/tests/ops_checkpoint.rs`).
+#[derive(Debug, Clone)]
+pub struct PlannerState {
+    pub seed: u64,
+    pub n_nodes: usize,
+    pub buffer_size: usize,
+    pub max_staleness: usize,
+    pub version: usize,
+    pub wave_len: usize,
+    pub awaiting_wave: bool,
+    /// `(node, version, slot)` of every dispatched-but-unarrived job.
+    pub in_flight: Vec<(usize, usize, usize)>,
+    /// `(node, version, slot, enc)` of every arrived-but-uncommitted
+    /// upload, in arrival order.
+    pub buffer: Vec<(usize, usize, usize, Encoded)>,
+    pub dropped_total: u64,
+    pub dropped_since_commit: u64,
+    /// Re-dispatch RNG stream position (the only cross-commit RNG state
+    /// the protocol owns — every other stream is keyed by structural
+    /// coordinates and needs no position tracking).
+    pub redispatches: u64,
+}
+
 /// The transport-agnostic buffered-commit state machine. See the module
 /// docs for the protocol it enforces.
 #[derive(Debug)]
@@ -193,6 +221,80 @@ impl CommitPlanner {
     /// The resolved commit threshold.
     pub fn buffer_size(&self) -> usize {
         self.buffer_size
+    }
+
+    /// `(node, version, slot)` of every dispatched-but-unarrived job.
+    /// Transports use this to retire a dead worker's jobs
+    /// ([`PlannerEvent::CapacityFreed`]) and to re-send in-flight work
+    /// after a checkpoint resume.
+    pub fn in_flight_jobs(&self) -> Vec<(usize, usize, usize)> {
+        self.in_flight
+            .iter()
+            .map(|j| (j.node, j.version, j.slot))
+            .collect()
+    }
+
+    /// Snapshot the complete planner state (see [`PlannerState`]).
+    pub fn export_state(&self) -> PlannerState {
+        PlannerState {
+            seed: self.seed,
+            n_nodes: self.n_nodes,
+            buffer_size: self.buffer_size,
+            max_staleness: self.max_staleness,
+            version: self.version,
+            wave_len: self.wave_len,
+            awaiting_wave: self.awaiting_wave,
+            in_flight: self.in_flight_jobs(),
+            buffer: self
+                .buffer
+                .iter()
+                .map(|b| (b.node, b.version, b.slot, b.enc.clone()))
+                .collect(),
+            dropped_total: self.dropped_total,
+            dropped_since_commit: self.dropped_since_commit,
+            redispatches: self.redispatches,
+        }
+    }
+
+    /// Rebuild a planner mid-stream from an [`CommitPlanner::export_state`]
+    /// snapshot: the restored planner emits the identical continuation of
+    /// decisions for the identical continuation of events.
+    pub fn from_state(st: PlannerState) -> crate::Result<Self> {
+        anyhow::ensure!(
+            st.buffer_size >= 1 && st.n_nodes >= 1,
+            "planner state has degenerate knobs (buffer_size={}, n_nodes={})",
+            st.buffer_size,
+            st.n_nodes
+        );
+        anyhow::ensure!(
+            st.buffer.len() < st.buffer_size,
+            "planner state buffers {} uploads at threshold {} — a full \
+             buffer must have committed before the snapshot",
+            st.buffer.len(),
+            st.buffer_size
+        );
+        Ok(CommitPlanner {
+            seed: st.seed,
+            n_nodes: st.n_nodes,
+            buffer_size: st.buffer_size,
+            max_staleness: st.max_staleness,
+            version: st.version,
+            wave_len: st.wave_len,
+            awaiting_wave: st.awaiting_wave,
+            in_flight: st
+                .in_flight
+                .into_iter()
+                .map(|(node, version, slot)| JobKey { node, version, slot })
+                .collect(),
+            buffer: st
+                .buffer
+                .into_iter()
+                .map(|(node, version, slot, enc)| Buffered { node, version, slot, enc })
+                .collect(),
+            dropped_total: st.dropped_total,
+            dropped_since_commit: st.dropped_since_commit,
+            redispatches: st.redispatches,
+        })
     }
 
     /// Start the current version's refill wave over the sampled set
@@ -438,6 +540,45 @@ mod tests {
         let mut p = planner(2, 2, 8);
         p.begin_version(&[0, 1]).unwrap();
         assert!(p.begin_version(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn exported_state_resumes_with_identical_decisions() {
+        // Drive a planner mid-protocol, snapshot it, rebuild, then feed
+        // both the identical continuation: decisions must match exactly.
+        let mut a = planner(4, 2, 1);
+        a.begin_version(&[0, 1, 2, 3]).unwrap();
+        a.on_event(PlannerEvent::UploadArrived { node: 1, version: 0, enc: enc() })
+            .unwrap();
+        a.on_event(PlannerEvent::UploadArrived { node: 3, version: 0, enc: enc() })
+            .unwrap();
+        a.begin_version(&[4, 5, 6, 7]).unwrap();
+        let snap = a.export_state();
+        let mut b = CommitPlanner::from_state(snap.clone()).unwrap();
+        assert_eq!(b.version(), a.version());
+        assert_eq!(b.in_flight_jobs(), a.in_flight_jobs());
+        let continuation = |p: &mut CommitPlanner| -> Vec<String> {
+            let mut log = Vec::new();
+            for (node, version) in [(0usize, 0usize), (4, 1), (2, 0)] {
+                for d in p
+                    .on_event(PlannerEvent::UploadArrived { node, version, enc: enc() })
+                    .unwrap()
+                {
+                    log.push(format!("{d:?}").split('{').next().unwrap().to_string());
+                }
+                log.push(format!("v={} inflight={}", p.version(), p.in_flight()));
+            }
+            log
+        };
+        assert_eq!(continuation(&mut a), continuation(&mut b));
+        assert_eq!(a.dropped(), b.dropped());
+        // A snapshot claiming a full (uncommitted) buffer is corrupt.
+        let mut bad = snap;
+        bad.buffer = vec![
+            (0, 0, 0, enc()),
+            (1, 0, 1, enc()),
+        ];
+        assert!(CommitPlanner::from_state(bad).is_err());
     }
 
     #[test]

@@ -81,6 +81,27 @@ pub struct RoundStats {
     pub staleness_mean: f64,
 }
 
+/// Self-description block attached to every [`RunResult`]: everything an
+/// operator needs to know *which* run produced a result file without
+/// hunting for the config that launched it.
+#[derive(Debug, Clone)]
+pub struct RunMeta {
+    /// Master seed of the run.
+    pub seed: u64,
+    /// The config's tagged codec spec, as its canonical JSON.
+    pub codec: crate::util::json::Json,
+    /// [`ExperimentConfig::config_hash`] — the run-identity key shared
+    /// with checkpoints.
+    pub config_hash: u64,
+    /// Wire-protocol version of this build
+    /// ([`crate::net::proto::PROTO_VERSION`]).
+    pub proto_version: u32,
+    /// Checkpoint id this run resumed from, if any (`None` for a fresh
+    /// run; serialized as JSON `null` so the field is always present —
+    /// CI's byte-diff strips the line either way).
+    pub resumed_from: Option<String>,
+}
+
 /// Output of a full training run.
 #[derive(Debug)]
 pub struct RunResult {
@@ -92,6 +113,8 @@ pub struct RunResult {
     pub rounds: Vec<RoundStats>,
     /// Total uploaded bits over the run.
     pub total_bits: u64,
+    /// Run self-description (seed, codec, config hash, provenance).
+    pub meta: RunMeta,
 }
 
 impl RunResult {
@@ -136,6 +159,24 @@ impl RunResult {
                 ])
             })
             .collect();
+        let meta = Json::obj(vec![
+            // Hash and seed are u64: decimal/hex strings, same convention
+            // as config JSON (f64 can't carry them exactly).
+            ("codec", self.meta.codec.clone()),
+            (
+                "config_hash",
+                Json::str(format!("{:016x}", self.meta.config_hash)),
+            ),
+            ("proto_version", Json::num(self.meta.proto_version as f64)),
+            (
+                "resumed_from",
+                match &self.meta.resumed_from {
+                    Some(id) => Json::str(id.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            ("seed", Json::str(self.meta.seed.to_string())),
+        ]);
         Json::obj(vec![
             (
                 "curve",
@@ -144,6 +185,7 @@ impl RunResult {
                     ("points", Json::Arr(points)),
                 ]),
             ),
+            ("meta", meta),
             ("rounds", Json::Arr(rounds)),
             ("total_bits", Json::num(self.total_bits as f64)),
             (
@@ -247,14 +289,44 @@ impl RoundEngine {
         engine: &mut dyn Engine,
         slab: &EvalSlab,
     ) -> crate::Result<RunResult> {
+        self.run_controlled(cfg, engine, slab, &crate::ops::RunControl::default())
+    }
+
+    /// [`run`](Self::run) plus operator controls: structured events,
+    /// periodic atomic checkpoints, forced early stop, and resume.
+    ///
+    /// The resume contract is **bit-identity**: a run checkpointed at
+    /// commit `K` and resumed produces the same `RunResult` (curve,
+    /// stats, params, total bits — everything but the `resumed_from`
+    /// provenance field) as the run that was never interrupted, because
+    /// the checkpoint restores every piece of cross-commit state: model,
+    /// history, virtual clock, codec residuals, and the async planner
+    /// with its in-flight jobs. CI enforces this with byte-diffs.
+    pub fn run_controlled(
+        &mut self,
+        cfg: &ExperimentConfig,
+        engine: &mut dyn Engine,
+        slab: &EvalSlab,
+        ctrl: &crate::ops::RunControl,
+    ) -> crate::Result<RunResult> {
+        use crate::util::json::Json;
+        let events = ctrl.events.with_seed(cfg.seed);
+        self.transport.set_events(events.clone());
         self.transport.setup(cfg, engine)?;
-        // Stateful codecs (error feedback) carry per-node memory; a run
-        // starts from zero residuals even when the codec instance is
-        // reused across runs (the trait's reset semantics).
-        self.codec.reset_state();
-        let mut params = engine.init_params()?;
-        let p = params.len();
+        let meta = RunMeta {
+            seed: cfg.seed,
+            codec: cfg.to_json().get("codec").cloned().unwrap_or(Json::Null),
+            config_hash: cfg.config_hash(),
+            proto_version: crate::net::proto::PROTO_VERSION,
+            resumed_from: ctrl.resume.as_ref().map(|ck| ck.id()),
+        };
         let rounds = cfg.rounds();
+        let p = engine.kind().param_count();
+        let mut curve;
+        let mut stats;
+        let mut total_bits;
+        let mut params;
+        let start_k;
         let mut timing = if self.transport.virtual_time() {
             Timing::Virtual {
                 cost: CostModel::with_ratio(cfg.ratio, p, cfg.seed),
@@ -263,9 +335,77 @@ impl RoundEngine {
         } else {
             Timing::Wall { t0: Instant::now() }
         };
-        let mut curve = Curve::new(cfg.name.clone());
-        let mut stats = Vec::with_capacity(rounds);
-        let mut total_bits = 0u64;
+        if let Some(ck) = &ctrl.resume {
+            // Continue mid-run: every piece of cross-commit state comes
+            // from the checkpoint; round 0 init and eval are skipped
+            // (the restored curve already holds them).
+            ck.check_config(cfg)?;
+            anyhow::ensure!(
+                ck.params.len() == p,
+                "checkpoint params have {} coords, the model expects {p}",
+                ck.params.len(),
+            );
+            anyhow::ensure!(
+                ck.next_round <= rounds,
+                "checkpoint is at commit {} but the config only runs {rounds}",
+                ck.next_round,
+            );
+            params = ck.params.clone();
+            curve = Curve::new(ck.curve_label.clone());
+            curve.points = ck.curve.clone();
+            stats = ck.stats.clone();
+            total_bits = ck.total_bits;
+            start_k = ck.next_round;
+            if let Timing::Virtual { clock, .. } = &mut timing {
+                clock.advance(ck.clock_now);
+            }
+            self.codec.reset_state();
+            self.codec.state_import(ck.codec_state.clone());
+            match ck.transport.clone() {
+                Some(ts) => self.transport.restore_state(ts)?,
+                None => anyhow::ensure!(
+                    !self.transport.buffered_async(),
+                    "checkpoint {} holds no async protocol state but transport \
+                     '{}' needs one",
+                    ck.id(),
+                    self.transport.name(),
+                ),
+            }
+        } else {
+            // Stateful codecs (error feedback) carry per-node memory; a
+            // fresh run starts from zero residuals even when the codec
+            // instance is reused across runs (the trait's reset
+            // semantics).
+            self.codec.reset_state();
+            params = engine.init_params()?;
+            anyhow::ensure!(params.len() == p, "engine param count mismatch");
+            curve = Curve::new(cfg.name.clone());
+            stats = Vec::with_capacity(rounds);
+            total_bits = 0u64;
+            start_k = 0;
+            // Round-0 point: initial loss at time 0.
+            let loss0 = slab.eval(engine, &params)?;
+            curve.push(CurvePoint {
+                round: 0,
+                iterations: 0,
+                time: 0.0,
+                bits_up: 0,
+                loss: loss0,
+            });
+        }
+        events.emit(
+            "run_started",
+            vec![
+                ("config_hash", Json::str(format!("{:016x}", meta.config_hash))),
+                ("resumed_from", match &meta.resumed_from {
+                    Some(id) => Json::str(id.as_str()),
+                    None => Json::Null,
+                }),
+                ("round_start", Json::num(start_k as f64)),
+                ("rounds", Json::num(rounds as f64)),
+                ("transport", Json::str(self.transport.name())),
+            ],
+        );
         let mut agg = Aggregator::new(p);
         // One shard plan for the whole run; `cfg.agg_shards == 1` is the
         // historical single-threaded accumulation, larger values fan the
@@ -275,11 +415,7 @@ impl RoundEngine {
         // funnels through this one path.
         let plan = ShardPlan::new(p, cfg.agg_shards);
 
-        // Round-0 point: initial loss at time 0.
-        let loss0 = slab.eval(engine, &params)?;
-        curve.push(CurvePoint { round: 0, iterations: 0, time: 0.0, bits_up: 0, loss: loss0 });
-
-        for k in 0..rounds {
+        for k in start_k..rounds {
             let round_t0 = Instant::now();
             let nodes = sampler::sample_nodes(cfg.n_nodes, cfg.r, cfg.seed, k);
             let lrs: Vec<f32> = (0..cfg.tau).map(|t| cfg.lr.lr(k, t)).collect();
@@ -368,8 +504,73 @@ impl RoundEngine {
                     loss,
                 });
             }
+
+            let completed = k + 1;
+            let t_now = match &timing {
+                Timing::Virtual { clock, .. } => clock.now(),
+                Timing::Wall { t0 } => t0.elapsed().as_secs_f64(),
+            };
+            events.emit(
+                "commit",
+                vec![
+                    ("bits", Json::num(bits as f64)),
+                    ("dropped", Json::num(outcome.dropped as f64)),
+                    ("staleness_max", Json::num(staleness_max as f64)),
+                    ("t", Json::num(t_now)),
+                    ("uploads", Json::num(outcome.uploads.len() as f64)),
+                    ("version", Json::num(completed as f64)),
+                ],
+            );
+            // Checkpoint after the eval point so a resumed curve carries
+            // this commit's measurement.
+            if let Some(path) =
+                ctrl.checkpoint_path.as_ref().filter(|_| ctrl.checkpoint_due(completed))
+            {
+                let ck = crate::ops::Checkpoint {
+                    config_hash: meta.config_hash,
+                    seed: cfg.seed,
+                    next_round: completed,
+                    total_bits,
+                    clock_now: match &timing {
+                        Timing::Virtual { clock, .. } => clock.now(),
+                        // Wall-clock time restarts on resume; see
+                        // docs/OPERATIONS.md.
+                        Timing::Wall { .. } => 0.0,
+                    },
+                    params: params.clone(),
+                    curve_label: curve.label.clone(),
+                    curve: curve.points.clone(),
+                    stats: stats.clone(),
+                    codec_state: self.codec.state_export(),
+                    rng_states: Vec::new(),
+                    transport: self.transport.export_state()?,
+                };
+                ck.write_atomic(path)?;
+                events.emit(
+                    "checkpoint_written",
+                    vec![
+                        ("id", Json::str(ck.id())),
+                        ("path", Json::str(path.display().to_string())),
+                        ("round", Json::num(completed as f64)),
+                    ],
+                );
+            }
+            if ctrl.stop_due(completed) {
+                eprintln!(
+                    "[{}] stop-after {completed}: checkpointed, exiting cleanly",
+                    self.transport.name()
+                );
+                break;
+            }
         }
         self.transport.shutdown()?;
-        Ok(RunResult { curve, params, rounds: stats, total_bits })
+        events.emit(
+            "run_finished",
+            vec![
+                ("rounds_done", Json::num(stats.len() as f64)),
+                ("total_bits", Json::num(total_bits as f64)),
+            ],
+        );
+        Ok(RunResult { curve, params, rounds: stats, total_bits, meta })
     }
 }

@@ -64,7 +64,7 @@ pub mod transport;
 
 pub use aggregate::{Aggregator, ShardPlan, StalenessRule};
 pub use async_sim::AsyncSim;
-pub use commit_loop::{CommitPlanner, Decision, PlannerEvent};
-pub use engine::{EvalSlab, RoundEngine, RoundStats, RunResult};
+pub use commit_loop::{CommitPlanner, Decision, PlannerEvent, PlannerState};
+pub use engine::{EvalSlab, RoundEngine, RoundStats, RunMeta, RunResult};
 pub use server::{Server, ServerBuilder};
 pub use transport::{CommitTiming, InProcess, RoundCtx, RoundOutcome, Transport, Upload};

@@ -29,11 +29,25 @@ pub struct ServerBuilder<'e> {
     engine: Option<&'e mut dyn Engine>,
     codec: Option<Box<dyn UpdateCodec>>,
     transport: Option<Box<dyn Transport>>,
+    control: crate::ops::RunControl,
 }
 
 impl<'e> ServerBuilder<'e> {
     pub fn new(cfg: ExperimentConfig) -> Self {
-        ServerBuilder { cfg, engine: None, codec: None, transport: None }
+        ServerBuilder {
+            cfg,
+            engine: None,
+            codec: None,
+            transport: None,
+            control: crate::ops::RunControl::default(),
+        }
+    }
+
+    /// Operator controls — event sink, checkpoint cadence, forced stop,
+    /// resume (see [`crate::ops::RunControl`]). Default: none of it.
+    pub fn control(mut self, control: crate::ops::RunControl) -> Self {
+        self.control = control;
+        self
     }
 
     /// The engine evaluating the loss — and, for in-process transports,
@@ -156,7 +170,13 @@ impl<'e> ServerBuilder<'e> {
             Some(codec) => codec,
             None => cfg.codec.build()?,
         };
-        Ok(Server { cfg, engine, slab, rounds: RoundEngine::new(codec, transport) })
+        Ok(Server {
+            cfg,
+            engine,
+            slab,
+            rounds: RoundEngine::new(codec, transport),
+            control: self.control,
+        })
     }
 }
 
@@ -166,6 +186,7 @@ pub struct Server<'e> {
     engine: &'e mut dyn Engine,
     slab: EvalSlab,
     rounds: RoundEngine,
+    control: crate::ops::RunControl,
 }
 
 impl<'e> Server<'e> {
@@ -190,9 +211,12 @@ impl<'e> Server<'e> {
         self.slab.eval(self.engine, params)
     }
 
-    /// Run the full K-round protocol; records the loss curve.
+    /// Run the full K-round protocol; records the loss curve. Honors
+    /// whatever [`crate::ops::RunControl`] the builder carried (none by
+    /// default).
     pub fn run(&mut self) -> crate::Result<RunResult> {
-        self.rounds.run(&self.cfg, self.engine, &self.slab)
+        self.rounds
+            .run_controlled(&self.cfg, self.engine, &self.slab, &self.control)
     }
 }
 

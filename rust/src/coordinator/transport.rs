@@ -158,6 +158,33 @@ pub trait Transport {
     fn shutdown(&mut self) -> crate::Result<()> {
         Ok(())
     }
+
+    /// Give the transport a structured-event destination (see
+    /// [`crate::ops::EventSink`]). Transports without protocol decisions
+    /// of their own ignore it.
+    fn set_events(&mut self, events: crate::ops::EventSink) {
+        let _ = events;
+    }
+
+    /// Export transport-owned protocol state for a checkpoint. Barrier
+    /// transports hold none (`Ok(None)`); buffered-async transports
+    /// return their planner snapshot (and, for the simulator, in-flight
+    /// jobs).
+    fn export_state(&self) -> crate::Result<Option<crate::ops::TransportState>> {
+        Ok(None)
+    }
+
+    /// Restore protocol state from a checkpoint, called after `setup`
+    /// and before the first resumed round. The default refuses: a
+    /// checkpoint carrying async state cannot resume on a transport that
+    /// does not know how to rebuild it.
+    fn restore_state(&mut self, state: crate::ops::TransportState) -> crate::Result<()> {
+        let _ = state;
+        anyhow::bail!(
+            "transport '{}' cannot restore checkpointed async protocol state",
+            self.name()
+        )
+    }
 }
 
 /// The synchronous simulation path: every sampled virtual node runs

@@ -374,14 +374,29 @@ impl Runner {
     /// Run a single config to completion.
     pub fn run_config(
         &mut self,
+        cfg: ExperimentConfig,
+    ) -> crate::Result<crate::coordinator::RunResult> {
+        self.run_config_controlled(cfg, crate::ops::RunControl::default())
+    }
+
+    /// [`Runner::run_config`] under operator run control: `ctrl` carries
+    /// the JSONL event sink, checkpoint cadence, and an optional
+    /// checkpoint to resume from (see [`crate::ops::RunControl`]).
+    pub fn run_config_controlled(
+        &mut self,
         mut cfg: ExperimentConfig,
+        ctrl: crate::ops::RunControl,
     ) -> crate::Result<crate::coordinator::RunResult> {
         if let Some(t) = self.t_override {
             cfg.t_total = t.max(cfg.tau);
         }
         cfg.engine = self.engine_kind.clone();
         let engine = self.engine_for(&cfg.model.clone())?;
-        ServerBuilder::new(cfg).engine(engine.as_mut()).build()?.run()
+        ServerBuilder::new(cfg)
+            .engine(engine.as_mut())
+            .control(ctrl)
+            .build()?
+            .run()
     }
 
     /// Run a whole figure, returning its curve bundle.

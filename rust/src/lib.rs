@@ -80,6 +80,20 @@
 //! let result = ServerBuilder::new(cfg).engine(&mut engine).build()?.run()?;
 //! ```
 //!
+//! ## Operable runs (see `docs/OPERATIONS.md`)
+//!
+//! The [`ops`] layer makes long runs killable and watchable:
+//! [`ops::Checkpoint`] snapshots model, history, codec residuals and the
+//! full async-planner state to an atomically-written versioned file
+//! (`--checkpoint FILE --checkpoint-every N`), and `--resume FILE`
+//! continues a run **byte-identically** to its uninterrupted twin — CI
+//! kills and resumes runs and diffs the result JSONs. Every protocol
+//! decision (dispatch, arrival, drop, commit, worker churn) streams to a
+//! JSONL [`ops::EventSink`] (`--events FILE`) with a documented stable
+//! schema; [`net::TcpAsync`] tolerates workers joining or dying mid-run,
+//! retiring a dead worker's in-flight jobs through the planner instead of
+//! hanging.
+//!
 //! ## Three-layer architecture (see `DESIGN.md`)
 //!
 //! * **Layer 3 (this crate)** — the federated coordinator: node sampling,
@@ -99,6 +113,7 @@ pub mod figures;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod ops;
 pub mod opt;
 pub mod quant;
 pub mod runtime;

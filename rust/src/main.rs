@@ -41,8 +41,17 @@ USAGE:
   (an async_rounds config runs the buffered-async TcpAsync leader; others
    run the synchronous barrier)
   fedpaq worker [--connect ADDR] [--delay-ms N] [--retry-secs S]
+                [--max-jobs N] [--events FILE|-]
   fedpaq quantize-check [--s S] [--seed SEED]
   fedpaq info
+
+Run control (train and leader — see docs/OPERATIONS.md):
+  --events FILE|-        append JSONL events to FILE (`-` = stderr)
+  --checkpoint FILE      write a resumable checkpoint (atomically) to FILE
+  --checkpoint-every N   ... every N commits (default 1)
+  --stop-after K         checkpoint and exit cleanly after commit K
+  --resume FILE          continue a run from a checkpoint; the resumed
+                         RunResult is bit-identical to the uninterrupted run
 
 Global: --artifacts DIR (default: artifacts)
 ";
@@ -108,6 +117,36 @@ impl Flags {
             other => anyhow::bail!("--engine must be pjrt|rust, got {other}"),
         }
     }
+}
+
+/// Build the shared run-control knobs (`--events`, `--checkpoint`,
+/// `--checkpoint-every`, `--stop-after`, `--resume`) for the train and
+/// leader subcommands.
+fn run_control(flags: &Flags) -> anyhow::Result<fedpaq::ops::RunControl> {
+    let mut ctrl = fedpaq::ops::RunControl::default();
+    if let Some(dest) = flags.get("events") {
+        ctrl.events = if dest == "-" || dest == "stderr" {
+            fedpaq::ops::EventSink::stderr()
+        } else {
+            fedpaq::ops::EventSink::to_file(Path::new(dest))?
+        };
+    }
+    ctrl.checkpoint_path = flags.get("checkpoint").map(PathBuf::from);
+    ctrl.checkpoint_every = flags.parse_num("checkpoint-every", 1usize)?;
+    ctrl.stop_after = flags
+        .get("stop-after")
+        .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--stop-after {v}: {e}")))
+        .transpose()?;
+    if let Some(path) = flags.get("resume") {
+        let ck = fedpaq::ops::Checkpoint::load(Path::new(path))?;
+        eprintln!(
+            "resuming {} from {path} (next commit {})",
+            ck.id(),
+            ck.next_round
+        );
+        ctrl.resume = Some(ck);
+    }
+    Ok(ctrl)
 }
 
 /// Short human label for a codec spec (run names, figure curve labels).
@@ -281,7 +320,7 @@ fn main() -> anyhow::Result<()> {
                 cfg = cfg.validated()?;
             }
             let mut runner = Runner::new(cfg.engine.clone(), &artifacts);
-            let res = runner.run_config(cfg.clone())?;
+            let res = runner.run_config_controlled(cfg.clone(), run_control(&flags)?)?;
             println!("run: {}", cfg.name);
             println!(
                 "rounds: {}  total upload: {} bits",
@@ -296,9 +335,13 @@ fn main() -> anyhow::Result<()> {
             }
             // Machine-readable RunResult dump (what the CI determinism
             // leg byte-diffs across seeds and --agg-shards values).
+            // Written atomically so a concurrent reader never sees a
+            // torn file.
             if let Some(path) = flags.get("out-json") {
-                std::fs::write(path, res.to_json().to_string_pretty())
-                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                fedpaq::util::fsio::write_atomic_str(
+                    Path::new(path),
+                    &res.to_json().to_string_pretty(),
+                )?;
                 println!("wrote {path}");
             }
             if let Some(dir) = flags.get("out") {
@@ -323,8 +366,14 @@ fn main() -> anyhow::Result<()> {
             let bind = flags.get_or("bind", "127.0.0.1:7070");
             let workers: usize = flags.parse_num("workers", 2usize)?;
             let mut engine = fedpaq::net::worker::build_engine(&cfg, &artifacts)?;
-            let res =
-                fedpaq::net::run_leader(cfg, &bind, workers, engine.as_mut(), &artifacts)?;
+            let res = fedpaq::net::run_leader_controlled(
+                cfg,
+                &bind,
+                workers,
+                engine.as_mut(),
+                &artifacts,
+                &run_control(&flags)?,
+            )?;
             println!("distributed run complete: final loss {:?}", res.curve.final_loss());
             for p in &res.curve.points {
                 println!("  k={:<4} wall={:<10.3}s loss={:.6}", p.round, p.time, p.loss);
@@ -333,19 +382,33 @@ fn main() -> anyhow::Result<()> {
             // writes — the CI async-TCP leg extracts its time-free
             // portion (python/curve_extract.py) and byte-diffs it.
             if let Some(path) = flags.get("out-json") {
-                std::fs::write(path, res.to_json().to_string_pretty())
-                    .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+                fedpaq::util::fsio::write_atomic_str(
+                    Path::new(path),
+                    &res.to_json().to_string_pretty(),
+                )?;
                 println!("wrote {path}");
             }
         }
         "worker" => {
             let connect = flags.get_or("connect", "127.0.0.1:7070");
+            let events = match flags.get("events") {
+                Some(dest) if dest == "-" || dest == "stderr" => {
+                    fedpaq::ops::EventSink::stderr()
+                }
+                Some(dest) => fedpaq::ops::EventSink::to_file(Path::new(dest))?,
+                None => fedpaq::ops::EventSink::null(),
+            };
             let opts = fedpaq::net::WorkerOptions {
                 work_delay: flags
                     .get("delay-ms")
                     .map(|v| v.parse::<u64>().map(std::time::Duration::from_millis))
                     .transpose()
                     .map_err(|e| anyhow::anyhow!("--delay-ms: {e}"))?,
+                max_jobs: flags
+                    .get("max-jobs")
+                    .map(|v| v.parse::<u64>().map_err(|e| anyhow::anyhow!("--max-jobs {v}: {e}")))
+                    .transpose()?,
+                events,
             };
             // Re-dial while the leader is still coming up (makes
             // `worker & worker & leader` launch scripts order-agnostic).

@@ -17,6 +17,7 @@ use super::transport::{Tcp, TcpAsync};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{EvalSlab, RoundEngine, RunResult, Transport};
 use crate::model::Engine;
+use crate::ops::RunControl;
 use std::path::Path;
 
 /// Run the distributed protocol with `n_workers` workers expected on
@@ -28,7 +29,23 @@ pub fn run_leader(
     bind: &str,
     n_workers: usize,
     engine: &mut dyn Engine,
+    artifacts: &Path,
+) -> crate::Result<RunResult> {
+    run_leader_controlled(cfg, bind, n_workers, engine, artifacts, &RunControl::default())
+}
+
+/// [`run_leader`] under operator run control: `ctrl` carries the JSONL
+/// event sink, the checkpoint cadence, and an optional checkpoint to
+/// resume from (`fedpaq leader --resume` — note the async leader only
+/// resumes *quiescent* checkpoints, see
+/// [`crate::ops::checkpoint`]).
+pub fn run_leader_controlled(
+    cfg: ExperimentConfig,
+    bind: &str,
+    n_workers: usize,
+    engine: &mut dyn Engine,
     _artifacts: &Path,
+    ctrl: &RunControl,
 ) -> crate::Result<RunResult> {
     let cfg = cfg.validated()?;
     let slab = EvalSlab::build(&cfg, engine)?;
@@ -38,5 +55,5 @@ pub fn run_leader(
         Box::new(Tcp::new(bind, n_workers))
     };
     let mut rounds = RoundEngine::new(cfg.codec.build()?, transport);
-    rounds.run(&cfg, engine, &slab)
+    rounds.run_controlled(&cfg, engine, &slab, ctrl)
 }

@@ -42,12 +42,27 @@
 //! paper's `n` is decoupled from the number of worker processes),
 //! regenerates its shard locally from the seeded config, builds its codec
 //! from the config's tagged spec, and never sees other shards.
+//!
+//! ## Worker churn (async leader only)
+//!
+//! [`TcpAsync`] tolerates membership changes mid-run: a worker that dies
+//! (read error / EOF / failed write) has its in-flight jobs retired back
+//! to the planner as freed capacity and re-dispatched to survivors, and
+//! its nodes re-pinned deterministically; a worker that connects after
+//! the run started completes the full handshake and becomes a
+//! re-pinning target. Both edges are reported on the JSONL event bus
+//! (`worker_left` / `worker_joined` — see `docs/OPERATIONS.md`). The
+//! barrier [`Tcp`] leader keeps its all-or-nothing semantics: a lost
+//! worker is a hard error. Worker-side, [`run_worker_retrying`] re-dials
+//! a missing leader with capped exponential backoff and deterministic
+//! jitter, and `WorkerOptions::max_jobs` injects a clean mid-run death
+//! for churn tests.
 
 pub mod leader;
 pub mod proto;
 pub mod transport;
 pub mod worker;
 
-pub use leader::run_leader;
+pub use leader::{run_leader, run_leader_controlled};
 pub use transport::{Tcp, TcpAsync};
 pub use worker::{run_worker, run_worker_retrying, run_worker_with, WorkerOptions};

@@ -71,48 +71,52 @@ pub enum ToLeader {
 }
 
 // ---------------- primitive writers/readers ----------------
+//
+// Shared beyond the socket protocol: `ops::checkpoint` serializes its
+// on-disk format with the same primitives (pub(crate) for that reason),
+// so checkpoints and wire frames can never disagree on layout
+// conventions.
 
 pub struct Buf(pub Vec<u8>);
 
 impl Buf {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Buf(Vec::new())
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.0.push(v);
     }
 
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
-    #[allow(dead_code)]
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn f64(&mut self, v: f64) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f32(&mut self, v: f32) {
+    pub(crate) fn f32(&mut self, v: f32) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn string(&mut self, s: &str) {
+    pub(crate) fn string(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.0.extend_from_slice(s.as_bytes());
     }
 
-    fn f32s(&mut self, v: &[f32]) {
+    pub(crate) fn f32s(&mut self, v: &[f32]) {
         self.u64(v.len() as u64);
         for &x in v {
             self.f32(x);
         }
     }
 
-    fn u64s(&mut self, v: &[u64]) {
+    pub(crate) fn u64s(&mut self, v: &[u64]) {
         self.u64(v.len() as u64);
         for &x in v {
             self.u64(x);
@@ -130,40 +134,49 @@ impl<'a> Cursor<'a> {
         Cursor { b, i: 0 }
     }
 
-    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
         anyhow::ensure!(self.i + n <= self.b.len(), "truncated frame");
         let s = &self.b[self.i..self.i + n];
         self.i += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> crate::Result<u8> {
+    /// Bytes consumed so far (exhaustion checks at decode boundaries).
+    pub(crate) fn pos(&self) -> usize {
+        self.i
+    }
+
+    /// Total bytes in the underlying buffer.
+    pub(crate) fn len(&self) -> usize {
+        self.b.len()
+    }
+
+    pub(crate) fn u8(&mut self) -> crate::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> crate::Result<u32> {
+    pub(crate) fn u32(&mut self) -> crate::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> crate::Result<u64> {
+    pub(crate) fn u64(&mut self) -> crate::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    #[allow(dead_code)]
-    fn f64(&mut self) -> crate::Result<f64> {
+    pub(crate) fn f64(&mut self) -> crate::Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> crate::Result<f32> {
+    pub(crate) fn f32(&mut self) -> crate::Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn string(&mut self) -> crate::Result<String> {
+    pub(crate) fn string(&mut self) -> crate::Result<String> {
         let n = self.u32()? as usize;
         Ok(std::str::from_utf8(self.take(n)?)?.to_string())
     }
 
-    fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+    pub(crate) fn f32s(&mut self) -> crate::Result<Vec<f32>> {
         let n = self.u64()? as usize;
         anyhow::ensure!(n * 4 <= self.b.len(), "oversized f32 vec");
         let mut v = Vec::with_capacity(n);
@@ -173,7 +186,7 @@ impl<'a> Cursor<'a> {
         Ok(v)
     }
 
-    fn u64s(&mut self) -> crate::Result<Vec<u64>> {
+    pub(crate) fn u64s(&mut self) -> crate::Result<Vec<u64>> {
         let n = self.u64()? as usize;
         anyhow::ensure!(n * 8 <= self.b.len(), "oversized u64 vec");
         let mut v = Vec::with_capacity(n);
@@ -284,14 +297,14 @@ fn read_spec_depth(c: &mut Cursor<'_>, depth: usize) -> crate::Result<CodecSpec>
     })
 }
 
-fn write_encoded(b: &mut Buf, e: &Encoded) {
+pub(crate) fn write_encoded(b: &mut Buf, e: &Encoded) {
     write_spec(b, &e.spec);
     b.u64(e.p as u64);
     b.u64(e.buf.len_bits());
     b.u64s(e.buf.words());
 }
 
-fn read_encoded(c: &mut Cursor<'_>) -> crate::Result<Encoded> {
+pub(crate) fn read_encoded(c: &mut Cursor<'_>) -> crate::Result<Encoded> {
     let spec = read_spec(c)?;
     let p = c.u64()? as usize;
     let len = c.u64()?;

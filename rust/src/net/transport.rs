@@ -48,14 +48,20 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::commit_loop::{CommitPlanner, Decision, PlannerEvent};
 use crate::coordinator::{RoundCtx, RoundOutcome, Transport};
 use crate::model::Engine;
+use crate::ops::EventSink;
 use crate::quant::{Encoded, UpdateCodec};
+use crate::util::json::Json;
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 struct WorkerConn {
     rd: TcpStream,
     wr: TcpStream,
+    peer: String,
 }
 
 fn accept_worker(listener: &TcpListener) -> crate::Result<WorkerConn> {
@@ -71,17 +77,30 @@ fn accept_worker(listener: &TcpListener) -> crate::Result<WorkerConn> {
         other => anyhow::bail!("expected Join from {peer}, got {other:?}"),
     }
     eprintln!("leader: worker joined from {peer}");
-    Ok(WorkerConn { rd, wr: stream })
+    Ok(WorkerConn { rd, wr: stream, peer: peer.to_string() })
+}
+
+/// `Setup`/`Ready` half of the handshake (engines compile now).
+fn setup_worker(w: &mut WorkerConn, cfg: &ExperimentConfig) -> crate::Result<()> {
+    send_to_worker(
+        &mut w.wr,
+        &ToWorker::Setup { proto: PROTO_VERSION, cfg: cfg.clone() },
+    )?;
+    let msg = recv_to_leader(&mut w.rd)?;
+    anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
+    Ok(())
 }
 
 /// Accept `n_workers` workers on `bind`, run the `Join`/`Setup`/`Ready`
-/// handshake, and hand back the ready connections. Shared by both
-/// leaders.
+/// handshake, and hand back the ready connections plus the (still-open)
+/// listener. Shared by both leaders; the async leader keeps the listener
+/// to admit mid-run joiners, the barrier leader drops it.
 fn accept_cluster(
     bind: &str,
     n_workers: usize,
     cfg: &ExperimentConfig,
-) -> crate::Result<Vec<WorkerConn>> {
+    events: &EventSink,
+) -> crate::Result<(Vec<WorkerConn>, TcpListener)> {
     anyhow::ensure!(n_workers >= 1, "need at least one worker");
     let listener = TcpListener::bind(bind)?;
     eprintln!("leader: listening on {}", listener.local_addr()?);
@@ -89,7 +108,7 @@ fn accept_cluster(
     for _ in 0..n_workers {
         workers.push(accept_worker(&listener)?);
     }
-    // Broadcast setup; await Ready from everyone (engines compile now).
+    // Broadcast setup; await Ready from everyone.
     for w in workers.iter_mut() {
         send_to_worker(
             &mut w.wr,
@@ -100,8 +119,17 @@ fn accept_cluster(
         let msg = recv_to_leader(&mut w.rd)?;
         anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
     }
+    for (i, w) in workers.iter().enumerate() {
+        events.emit(
+            "worker_joined",
+            vec![
+                ("peer", Json::str(w.peer.as_str())),
+                ("worker", Json::num(i as f64)),
+            ],
+        );
+    }
     eprintln!("leader: {n_workers} workers ready");
-    Ok(workers)
+    Ok((workers, listener))
 }
 
 /// Leader half of the synchronous TCP execution mode: accepts `n_workers`
@@ -112,11 +140,17 @@ pub struct Tcp {
     bind: String,
     n_workers: usize,
     workers: Vec<WorkerConn>,
+    events: EventSink,
 }
 
 impl Tcp {
     pub fn new(bind: impl Into<String>, n_workers: usize) -> Self {
-        Tcp { bind: bind.into(), n_workers, workers: Vec::new() }
+        Tcp {
+            bind: bind.into(),
+            n_workers,
+            workers: Vec::new(),
+            events: EventSink::null(),
+        }
     }
 }
 
@@ -133,12 +167,19 @@ impl Transport for Tcp {
         true
     }
 
+    fn set_events(&mut self, events: EventSink) {
+        self.events = events;
+    }
+
     fn setup(
         &mut self,
         cfg: &ExperimentConfig,
         _engine: &mut dyn Engine,
     ) -> crate::Result<()> {
-        self.workers = accept_cluster(&self.bind, self.n_workers, cfg)?;
+        // The barrier leader admits no mid-run joiners: drop the listener.
+        let (workers, _listener) =
+            accept_cluster(&self.bind, self.n_workers, cfg, &self.events)?;
+        self.workers = workers;
         Ok(())
     }
 
@@ -220,12 +261,66 @@ impl Transport for Tcp {
 pub struct TcpAsync {
     bind: String,
     n_workers: usize,
-    /// Write halves, indexed by worker; read halves live on the reader
-    /// threads after setup.
-    writers: Vec<TcpStream>,
-    arrivals: Option<Receiver<crate::Result<ToLeader>>>,
+    /// Write halves, indexed by worker; `None` once a worker is dead.
+    /// Read halves live on the reader threads after setup. Mid-run
+    /// joiners append, so the vector can outgrow `n_workers`.
+    writers: Vec<Option<TcpStream>>,
+    /// Liveness per worker index. A worker leaves exactly once: the flag
+    /// makes duplicate death reports (write failure racing reader EOF)
+    /// idempotent.
+    alive: Vec<bool>,
+    /// Virtual node → worker index. Pinned to `node % n_workers` (see the
+    /// module docs) until the assigned worker dies, then deterministically
+    /// re-pinned to the next live index.
+    assign: Vec<usize>,
+    /// Jobs dispatched and not yet arrived: `(node, version, worker)` —
+    /// the worker each job was *actually sent to*, which is what death
+    /// retirement must key on.
+    pending: Vec<(usize, usize, usize)>,
+    arrivals: Option<Receiver<(usize, FromWorker)>>,
+    /// Kept to hand clones to reader threads for mid-run joiners, and to
+    /// report write-path deaths through the same channel as read-path
+    /// ones. Dropped at shutdown so `recv` can disconnect.
+    arrivals_tx: Option<Sender<(usize, FromWorker)>>,
+    /// Handshaken mid-run joiners, shipped over from the accept thread.
+    joins: Option<Receiver<WorkerConn>>,
+    accept_stop: Option<Arc<AtomicBool>>,
+    accept_thread: Option<JoinHandle<()>>,
     readers: Vec<JoinHandle<()>>,
     planner: Option<CommitPlanner>,
+    events: EventSink,
+}
+
+/// What a per-connection reader thread feeds the leader: a wire message,
+/// or the news that the connection died (read error / EOF).
+enum FromWorker {
+    Msg(ToLeader),
+    Dead(String),
+}
+
+/// Full `Join`/`Setup`/`Ready` handshake for a worker connecting after
+/// the run has started.
+fn handshake_joiner(
+    stream: TcpStream,
+    peer: std::net::SocketAddr,
+    cfg: &ExperimentConfig,
+) -> crate::Result<WorkerConn> {
+    // The listener is non-blocking (the accept thread polls it); the
+    // handshake itself must block.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    let rd = stream.try_clone()?;
+    let mut conn = WorkerConn { rd, wr: stream, peer: peer.to_string() };
+    match recv_to_leader(&mut conn.rd)? {
+        ToLeader::Join { proto } => anyhow::ensure!(
+            proto == PROTO_VERSION,
+            "worker at {peer} speaks wire-protocol v{proto}; this leader \
+             requires v{PROTO_VERSION} — rebuild so leader and workers match"
+        ),
+        other => anyhow::bail!("expected Join from {peer}, got {other:?}"),
+    }
+    setup_worker(&mut conn, cfg)?;
+    Ok(conn)
 }
 
 impl TcpAsync {
@@ -234,9 +329,17 @@ impl TcpAsync {
             bind: bind.into(),
             n_workers,
             writers: Vec::new(),
+            alive: Vec::new(),
+            assign: Vec::new(),
+            pending: Vec::new(),
             arrivals: None,
+            arrivals_tx: None,
+            joins: None,
+            accept_stop: None,
+            accept_thread: None,
             readers: Vec::new(),
             planner: None,
+            events: EventSink::null(),
         }
     }
 
@@ -245,43 +348,168 @@ impl TcpAsync {
         self.planner.as_ref().map_or(0, CommitPlanner::dropped)
     }
 
+    /// Spawn the reader thread for worker `idx`: forwards every wire
+    /// message tagged with the worker index, then a final `Dead` when the
+    /// socket errors or closes. After a clean shutdown the leader has
+    /// already dropped the receiver, so the sends fail silently and the
+    /// thread just ends.
+    fn spawn_reader(&mut self, idx: usize, mut rd: TcpStream) {
+        let tx = self
+            .arrivals_tx
+            .as_ref()
+            .expect("spawn_reader before setup")
+            .clone();
+        self.readers.push(std::thread::spawn(move || loop {
+            match recv_to_leader(&mut rd) {
+                Ok(msg) => {
+                    if tx.send((idx, FromWorker::Msg(msg))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((idx, FromWorker::Dead(e.to_string())));
+                    return;
+                }
+            }
+        }));
+    }
+
+    /// Integrate any workers that completed the mid-run handshake since
+    /// the last check. Joiners get the next free index; existing node
+    /// pins are untouched (a joiner only picks up nodes when a pinned
+    /// worker later dies), so a join alone never perturbs the protocol
+    /// stream — bit-identity with the undisturbed run is preserved.
+    fn absorb_joins(&mut self) {
+        let joined: Vec<WorkerConn> = match &self.joins {
+            Some(rx) => rx.try_iter().collect(),
+            None => Vec::new(),
+        };
+        for conn in joined {
+            let idx = self.writers.len();
+            let WorkerConn { rd, wr, peer } = conn;
+            self.writers.push(Some(wr));
+            self.alive.push(true);
+            self.spawn_reader(idx, rd);
+            self.events.emit(
+                "worker_joined",
+                vec![
+                    ("peer", Json::str(peer.as_str())),
+                    ("worker", Json::num(idx as f64)),
+                ],
+            );
+            eprintln!("leader: worker {idx} joined mid-run from {peer}");
+        }
+    }
+
+    /// The worker that should run `node`: its pin if alive, else the
+    /// next live index scanning forward (deterministic, and re-pinned so
+    /// the node's future jobs stay on one worker).
+    fn worker_for(&mut self, node: usize) -> crate::Result<usize> {
+        let pinned = self.assign[node];
+        if self.alive.get(pinned).copied().unwrap_or(false) {
+            return Ok(pinned);
+        }
+        let n = self.writers.len();
+        for off in 1..=n {
+            let cand = (pinned + off) % n;
+            if self.alive[cand] {
+                self.assign[node] = cand;
+                return Ok(cand);
+            }
+        }
+        anyhow::bail!("no live workers remain to run node {node}")
+    }
+
     /// Execute one planner `Dispatch` decision: send the current model to
-    /// the node's pinned worker (`node % n_workers` — see the module
-    /// docs; a worker's jobs queue in its socket and run serially, which
-    /// keeps any stateful codec memory for its nodes in one process).
+    /// the node's assigned worker (a worker's jobs queue in its socket
+    /// and run serially, which keeps any stateful codec memory for its
+    /// nodes in one process). A failed write is reported through the
+    /// arrivals channel as a death — the same path a reader-thread EOF
+    /// takes — so retirement and re-dispatch happen in exactly one place.
     fn dispatch(
         &mut self,
         node: usize,
         version: usize,
         ctx: &RoundCtx<'_>,
     ) -> crate::Result<()> {
-        let w = node % self.n_workers;
-        send_to_worker(
-            &mut self.writers[w],
-            &ToWorker::Work {
-                version: version as u64,
-                node: node as u64,
-                params: ctx.params.to_vec(),
-                lrs: ctx.lrs.to_vec(),
-            },
-        )
+        let w = self.worker_for(node)?;
+        self.pending.push((node, version, w));
+        let frame = ToWorker::Work {
+            version: version as u64,
+            node: node as u64,
+            params: ctx.params.to_vec(),
+            lrs: ctx.lrs.to_vec(),
+        };
+        let wr = self.writers[w].as_mut().expect("live worker has a writer");
+        match send_to_worker(wr, &frame) {
+            Ok(()) => {
+                self.events.emit(
+                    "job_dispatched",
+                    vec![
+                        ("node", Json::num(node as f64)),
+                        ("version", Json::num(version as f64)),
+                        ("worker", Json::num(w as f64)),
+                    ],
+                );
+            }
+            Err(e) => {
+                if let Some(tx) = &self.arrivals_tx {
+                    let _ = tx.send((w, FromWorker::Dead(format!("write failed: {e}"))));
+                }
+            }
+        }
+        Ok(())
     }
 
-    /// Block until the next upload arrives on any connection.
-    fn next_upload(&mut self) -> crate::Result<(usize, usize, Encoded)> {
+    /// Retire a dead worker: mark it gone, give every job it still held
+    /// back to the planner as freed capacity, and return the planner's
+    /// replacement dispatches. Idempotent — a second report for the same
+    /// worker is a no-op.
+    fn handle_dead(&mut self, w: usize, reason: &str) -> crate::Result<Vec<Decision>> {
+        if !self.alive.get(w).copied().unwrap_or(false) {
+            return Ok(Vec::new());
+        }
+        self.alive[w] = false;
+        self.writers[w] = None;
+        let lost: Vec<(usize, usize)> = self
+            .pending
+            .iter()
+            .filter(|&&(_, _, pw)| pw == w)
+            .map(|&(n, v, _)| (n, v))
+            .collect();
+        self.pending.retain(|&(_, _, pw)| pw != w);
+        self.events.emit(
+            "worker_left",
+            vec![
+                ("jobs_retired", Json::num(lost.len() as f64)),
+                ("reason", Json::str(reason)),
+                ("worker", Json::num(w as f64)),
+            ],
+        );
+        eprintln!(
+            "leader: worker {w} left ({reason}); retiring {} in-flight job(s)",
+            lost.len()
+        );
+        anyhow::ensure!(
+            self.alive.iter().any(|&a| a),
+            "all workers are gone; cannot continue the run"
+        );
+        let planner = self.planner.as_mut().unwrap();
+        let mut decisions = Vec::new();
+        for (node, version) in lost {
+            decisions.extend(planner.on_event(PlannerEvent::CapacityFreed { node, version })?);
+        }
+        Ok(decisions)
+    }
+
+    /// Block until the next tagged message arrives on any connection.
+    fn next_event(&mut self) -> crate::Result<(usize, FromWorker)> {
         let rx = self
             .arrivals
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("TcpAsync used before setup"))?;
-        let msg = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("all worker connections closed"))??;
-        match msg {
-            ToLeader::Update { version, node, enc } => {
-                Ok((node as usize, version as usize, enc))
-            }
-            other => anyhow::bail!("unexpected message {other:?}"),
-        }
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("all worker connections closed"))
     }
 }
 
@@ -302,40 +530,64 @@ impl Transport for TcpAsync {
         true
     }
 
+    fn set_events(&mut self, events: EventSink) {
+        self.events = events;
+    }
+
     fn setup(
         &mut self,
         cfg: &ExperimentConfig,
         _engine: &mut dyn Engine,
     ) -> crate::Result<()> {
-        let workers = accept_cluster(&self.bind, self.n_workers, cfg)?;
+        let (workers, listener) =
+            accept_cluster(&self.bind, self.n_workers, cfg, &self.events)?;
         self.planner = Some(CommitPlanner::new(cfg)?);
+        self.assign = (0..cfg.n_nodes).map(|n| n % self.n_workers).collect();
+        self.pending.clear();
         self.writers.clear();
+        self.alive.clear();
         self.readers.clear();
         // One reader thread per connection, all feeding one channel: the
-        // leader sees uploads in real arrival order across workers. A
-        // read error is forwarded once and the thread exits; after a
-        // clean shutdown the leader has already dropped the receiver, so
-        // the forward fails silently and the thread just ends.
+        // leader sees uploads in real arrival order across workers,
+        // tagged with the worker index so a death can be attributed.
         let (tx, rx) = channel();
+        self.arrivals_tx = Some(tx);
+        self.arrivals = Some(rx);
         for conn in workers {
-            let WorkerConn { mut rd, wr } = conn;
-            self.writers.push(wr);
-            let tx = tx.clone();
-            self.readers.push(std::thread::spawn(move || loop {
-                match recv_to_leader(&mut rd) {
-                    Ok(msg) => {
-                        if tx.send(Ok(msg)).is_err() {
-                            return;
+            let idx = self.writers.len();
+            let WorkerConn { rd, wr, .. } = conn;
+            self.writers.push(Some(wr));
+            self.alive.push(true);
+            self.spawn_reader(idx, rd);
+        }
+        // Keep listening: a replacement worker may join mid-run. The
+        // accept thread polls a non-blocking listener (so it can see the
+        // stop flag at shutdown), runs the full handshake, and ships the
+        // ready connection over for the leader to absorb between events.
+        // A joiner that fails its handshake is simply dropped.
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (join_tx, join_rx) = channel();
+        self.accept_stop = Some(Arc::clone(&stop));
+        self.joins = Some(join_rx);
+        let cfg = cfg.clone();
+        self.accept_thread = Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(_) => return,
+                    Ok((stream, peer)) => {
+                        if let Ok(conn) = handshake_joiner(stream, peer, &cfg) {
+                            if join_tx.send(conn).is_err() {
+                                return;
+                            }
                         }
                     }
-                    Err(e) => {
-                        let _ = tx.send(Err(e));
-                        return;
-                    }
                 }
-            }));
-        }
-        self.arrivals = Some(rx);
+            }
+        }));
         Ok(())
     }
 
@@ -355,74 +607,151 @@ impl Transport for TcpAsync {
                 planner.version()
             );
         }
+        self.absorb_joins();
         // Refill wave at the current model (the whole sampled set at
         // version 0, then `buffer_size` jobs per commit) — exactly r jobs
-        // in flight at every instant.
-        let wave = self.planner.as_mut().unwrap().begin_version(ctx.nodes)?;
-        for d in wave {
-            match d {
-                Decision::Dispatch { node, version, .. } => {
-                    self.dispatch(node, version, ctx)?
-                }
-                other => anyhow::bail!("unexpected wave decision {other:?}"),
-            }
-        }
-        // Event loop: absorb socket arrivals until the planner commits.
+        // in flight at every instant. Decisions are queued and drained in
+        // planner order; a death mid-round splices its replacement
+        // dispatches into the same queue.
+        let mut queue: std::collections::VecDeque<Decision> =
+            self.planner.as_mut().unwrap().begin_version(ctx.nodes)?.into();
         loop {
-            let (node, version, enc) = self.next_upload()?;
-            let decisions = self
-                .planner
-                .as_mut()
-                .unwrap()
-                .on_event(PlannerEvent::UploadArrived { node, version, enc })?;
-            for d in decisions {
+            while let Some(d) = queue.pop_front() {
                 match d {
+                    Decision::Dispatch { node, version, .. } => {
+                        self.dispatch(node, version, ctx)?
+                    }
                     Decision::Drop { node, staleness } => {
+                        self.events.emit(
+                            "upload_dropped",
+                            vec![
+                                ("node", Json::num(node as f64)),
+                                ("staleness", Json::num(staleness as f64)),
+                            ],
+                        );
                         eprintln!(
                             "[tcp-async] commit {}: dropped node {node} upload \
                              (staleness {staleness})",
                             ctx.round
                         );
                     }
-                    Decision::Dispatch { node, version, .. } => {
-                        self.dispatch(node, version, ctx)?
-                    }
                     Decision::Commit { uploads, dropped } => {
                         return Ok(RoundOutcome { uploads, timing: None, dropped });
                     }
                 }
             }
+            let (w, msg) = self.next_event()?;
+            self.absorb_joins();
+            match msg {
+                FromWorker::Dead(reason) => {
+                    queue.extend(self.handle_dead(w, &reason)?);
+                }
+                FromWorker::Msg(ToLeader::Update { version, node, enc }) => {
+                    let (node, version) = (node as usize, version as usize);
+                    let pos = self
+                        .pending
+                        .iter()
+                        .position(|&(n, v, _)| n == node && v == version);
+                    let Some(pos) = pos else {
+                        // A straggler from a worker already declared dead:
+                        // its job was retired and re-dispatched, so this
+                        // upload no longer has a slot.
+                        eprintln!(
+                            "[tcp-async] ignoring late upload (node {node}, \
+                             version {version}) from a retired job"
+                        );
+                        continue;
+                    };
+                    self.pending.swap_remove(pos);
+                    self.events.emit(
+                        "upload_arrived",
+                        vec![
+                            ("node", Json::num(node as f64)),
+                            ("version", Json::num(version as f64)),
+                            ("worker", Json::num(w as f64)),
+                        ],
+                    );
+                    queue.extend(self.planner.as_mut().unwrap().on_event(
+                        PlannerEvent::UploadArrived { node, version, enc },
+                    )?);
+                }
+                FromWorker::Msg(other) => anyhow::bail!("unexpected message {other:?}"),
+            }
         }
     }
 
     fn shutdown(&mut self) -> crate::Result<()> {
+        // Stop admitting joiners first.
+        if let Some(stop) = self.accept_stop.take() {
+            stop.store(true, Ordering::Relaxed);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        self.joins = None;
         // Drain the straggler jobs still in flight (workers always finish
         // a dispatched Work before reading Shutdown), discard their
         // uploads, then release everyone. Tear-down is best-effort: a
         // dead connection mid-drain must not leave the healthy workers
         // blocked in recv or the reader threads unjoined — every step
         // still runs, and the first error is reported at the end.
-        let (pending, dropped) = self
-            .planner
-            .as_ref()
-            .map_or((0, 0), |p| (p.in_flight(), p.dropped()));
-        let mut first_err = None;
-        for _ in 0..pending {
-            if let Err(e) = self.next_upload() {
-                first_err = Some(e);
-                break;
+        let dropped = self.planner.as_ref().map_or(0, CommitPlanner::dropped);
+        let mut first_err: Option<anyhow::Error> = None;
+        while !self.pending.is_empty() {
+            match self.next_event() {
+                Ok((w, FromWorker::Dead(reason))) => {
+                    if self.alive.get(w).copied().unwrap_or(false) {
+                        self.alive[w] = false;
+                        self.writers[w] = None;
+                        let lost =
+                            self.pending.iter().filter(|&&(_, _, pw)| pw == w).count();
+                        self.pending.retain(|&(_, _, pw)| pw != w);
+                        self.events.emit(
+                            "worker_left",
+                            vec![
+                                ("jobs_retired", Json::num(lost as f64)),
+                                ("reason", Json::str(reason.as_str())),
+                                ("worker", Json::num(w as f64)),
+                            ],
+                        );
+                        eprintln!(
+                            "leader: worker {w} left during drain ({reason}); \
+                             discarding {lost} in-flight job(s)"
+                        );
+                    }
+                }
+                Ok((_, FromWorker::Msg(ToLeader::Update { version, node, .. }))) => {
+                    let (node, version) = (node as usize, version as usize);
+                    if let Some(pos) = self
+                        .pending
+                        .iter()
+                        .position(|&(n, v, _)| n == node && v == version)
+                    {
+                        self.pending.swap_remove(pos);
+                    }
+                }
+                Ok((_, FromWorker::Msg(other))) => {
+                    first_err
+                        .get_or_insert_with(|| anyhow::anyhow!("unexpected message {other:?}"));
+                    break;
+                }
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
             }
         }
         if dropped > 0 {
             eprintln!("[tcp-async] run complete: {dropped} stale upload(s) dropped");
         }
-        for w in self.writers.iter_mut() {
+        for w in self.writers.iter_mut().flatten() {
             if let Err(e) = send_to_worker(w, &ToWorker::Shutdown) {
                 first_err.get_or_insert(e);
             }
         }
-        // Dropping the receiver lets reader threads exit as soon as their
-        // socket closes; join to not leak threads past the run.
+        // Dropping both channel ends lets reader threads exit as soon as
+        // their socket closes; join to not leak threads past the run.
+        self.arrivals_tx = None;
         self.arrivals = None;
         for h in self.readers.drain(..) {
             let _ = h.join();
@@ -431,5 +760,35 @@ impl Transport for TcpAsync {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    fn export_state(&self) -> crate::Result<Option<crate::ops::TransportState>> {
+        let planner = self
+            .planner
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("TcpAsync::export_state before setup"))?;
+        // Real in-flight jobs live in worker processes and cannot be
+        // serialized; the planner snapshot records them, and
+        // `restore_state` insists the snapshot be quiescent.
+        Ok(Some(crate::ops::TransportState::Async {
+            planner: planner.export_state(),
+            now: 0.0,
+            jobs: Vec::new(),
+        }))
+    }
+
+    fn restore_state(&mut self, state: crate::ops::TransportState) -> crate::Result<()> {
+        anyhow::ensure!(!self.writers.is_empty(), "TcpAsync::restore_state before setup");
+        let crate::ops::TransportState::Async { planner, now: _, jobs } = state;
+        anyhow::ensure!(
+            jobs.is_empty() && planner.in_flight.is_empty() && planner.buffer.is_empty(),
+            "tcp-async can only resume from a quiescent checkpoint (no in-flight \
+             jobs or buffered uploads): in-flight model state lives in worker \
+             processes and cannot be recreated. Run with buffer_size == r and \
+             max_staleness == 0 (where every commit quiesces), or resume this \
+             checkpoint in the simulator instead"
+        );
+        self.planner = Some(CommitPlanner::from_state(planner)?);
+        Ok(())
     }
 }

@@ -54,7 +54,7 @@ pub fn build_engine(
 }
 
 /// Knobs for [`run_worker_with`].
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct WorkerOptions {
     /// Sleep this long before computing each `Work` request — a
     /// deterministic straggler injector for async-protocol tests and
@@ -62,6 +62,15 @@ pub struct WorkerOptions {
     /// upload *content* is unaffected (it depends only on seeds), only
     /// its arrival time.
     pub work_delay: Option<Duration>,
+    /// Exit cleanly (closing the connection) after answering this many
+    /// `Work` requests — a deterministic worker-death injector for churn
+    /// tests (`fedpaq worker --max-jobs N`). The buffered-async leader
+    /// sees the close, retires the worker's remaining jobs, and
+    /// re-dispatches them; the barrier leader treats it as a hard error.
+    pub max_jobs: Option<u64>,
+    /// Where [`run_worker_retrying`]'s reconnect attempts are reported
+    /// (the `worker_reconnecting` event). Null by default.
+    pub events: crate::ops::EventSink,
 }
 
 /// Worker main loop with default options. Returns after a clean
@@ -86,6 +95,13 @@ pub fn run_worker_with(
 /// the CLI, tests and launch scripts, keyed on the *dial* failing
 /// (structurally, not by error-message matching). Errors after the
 /// connection is established are never retried.
+///
+/// Attempts back off exponentially (100 ms doubling to a 5 s cap) with
+/// a deterministic jitter hashed from `(addr, attempt)`, so a fleet of
+/// workers pointed at one reborn leader de-synchronizes its dials
+/// without any shared randomness. Each sleep emits a
+/// `worker_reconnecting` event on `opts.events`; exhausting `retry_for`
+/// is a clear error naming the budget spent.
 pub fn run_worker_retrying(
     addr: &str,
     artifacts: &Path,
@@ -104,12 +120,41 @@ pub fn run_worker_retrying(
                 | std::io::ErrorKind::TimedOut
         )
     };
+    // FNV-1a over (addr, attempt): stable per worker invocation, different
+    // across addresses and attempts — jitter without an RNG dependency.
+    let jitter_of = |attempt: u32| {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in addr.bytes().chain(attempt.to_le_bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    };
     let deadline = std::time::Instant::now() + retry_for;
+    let mut attempt: u32 = 0;
     let stream = loop {
         match TcpStream::connect(addr) {
             Ok(s) => break s,
-            Err(e) if transient(&e) && std::time::Instant::now() < deadline => {
-                std::thread::sleep(Duration::from_millis(100));
+            Err(e) if transient(&e) => {
+                anyhow::ensure!(
+                    std::time::Instant::now() < deadline,
+                    "connect {addr}: retry budget ({retry_for:?}) exhausted \
+                     after {attempt} attempt(s): {e}"
+                );
+                // 100ms, 200ms, ... capped at 5s, plus up to +25% jitter.
+                let base = 100u64.saturating_mul(1u64 << attempt.min(10)).min(5_000);
+                let delay_ms = base + jitter_of(attempt) % (base / 4 + 1);
+                opts.events.emit(
+                    "worker_reconnecting",
+                    vec![
+                        ("attempt", crate::util::json::Json::num(attempt as f64)),
+                        ("delay_ms", crate::util::json::Json::num(delay_ms as f64)),
+                        ("error", crate::util::json::Json::str(e.to_string())),
+                    ],
+                );
+                eprintln!("worker: leader {addr} not reachable ({e}); retrying in {delay_ms}ms");
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                attempt += 1;
             }
             Err(e) => return Err(anyhow::anyhow!("connect {addr}: {e}")),
         }
@@ -136,6 +181,7 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
         BatchSampler,
     )> = None;
     let mut bufs = GatherBufs::default();
+    let mut jobs_done: u64 = 0;
 
     loop {
         let msg = recv_to_worker(&mut rd)?;
@@ -182,6 +228,13 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
                     &mut bufs,
                 )?;
                 send_to_leader(&mut wr, &ToLeader::Update { version, node, enc })?;
+                jobs_done += 1;
+                if opts.max_jobs.is_some_and(|cap| jobs_done >= cap) {
+                    // Deterministic death injection: close the connection
+                    // and let the leader's churn handling take over.
+                    eprintln!("worker: reached --max-jobs {jobs_done}; exiting");
+                    return Ok(());
+                }
             }
             ToWorker::Shutdown => return Ok(()),
         }

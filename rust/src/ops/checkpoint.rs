@@ -1,0 +1,579 @@
+//! The versioned, self-describing checkpoint format behind
+//! `fedpaq train --resume` / `fedpaq leader --resume`.
+//!
+//! A [`Checkpoint`] captures **everything** the run loop needs to
+//! continue bit-identically from commit `next_round`:
+//!
+//! * the server model `x_k` and the full curve/stats history so far
+//!   (so a resumed [`RunResult`](crate::coordinator::RunResult) carries
+//!   the uninterrupted run's complete record);
+//! * the virtual clock and cumulative upload bits;
+//! * the per-node codec state (error-feedback residuals, via
+//!   [`UpdateCodec::state_export`](crate::quant::UpdateCodec::state_export));
+//! * the transport's protocol state: the full
+//!   [`CommitPlanner`](crate::coordinator::CommitPlanner) snapshot
+//!   ([`PlannerState`]) plus, for the virtual-time simulator, the
+//!   in-flight jobs with their already-computed uploads and completion
+//!   times;
+//! * a table of explicit RNG stream positions. Today every RNG stream in
+//!   the tree is keyed by `(seed, structural coordinates)` and needs no
+//!   position (the one cross-commit counter, the planner's re-dispatch
+//!   stream, travels inside [`PlannerState`]); the table exists so a
+//!   future stateful stream has a format slot without a version bump.
+//!
+//! ## Binary layout (format version 1)
+//!
+//! Little-endian, written with the same hand-rolled `Buf`/`Cursor`
+//! primitives as the wire protocol ([`crate::net::proto`]):
+//!
+//! ```text
+//! "FPQC" magic · u32 format version · u64 config_hash · u64 seed
+//! · u64 next_round · u64 total_bits · f64 clock_now
+//! · params f32s · curve label + points · round stats
+//! · codec state (node, residuals) pairs · rng table (key, [u64;4]) pairs
+//! · transport tag (0 = none, 1 = async planner + jobs)
+//! ```
+//!
+//! Decoding rejects wrong magic, unknown format versions, truncation
+//! (every read is bounds-checked) and trailing bytes — the same
+//! corrupt-frame policy as the codec layer. Writes go through
+//! [`crate::util::fsio::write_atomic`], so a checkpoint file on disk is
+//! always complete: a kill mid-write leaves the previous checkpoint, not
+//! half a new one.
+//!
+//! Resume additionally validates `config_hash` against the config of the
+//! resuming process ([`ExperimentConfig::config_hash`]), so a checkpoint
+//! can never silently continue a *different* experiment.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::commit_loop::PlannerState;
+use crate::coordinator::engine::RoundStats;
+use crate::metrics::CurvePoint;
+use crate::net::proto::{read_encoded, write_encoded, Buf, Cursor};
+use crate::quant::Encoded;
+use std::path::Path;
+
+/// Current checkpoint format version (bumped on layout changes; decode
+/// rejects versions it does not know).
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 4] = b"FPQC";
+
+/// One in-flight virtual-time job, checkpointed with its already-computed
+/// upload: the upload is a pure function of the dispatch-time model and
+/// seeds, which no longer exist after a resume, so the bytes themselves
+/// must travel.
+#[derive(Debug, Clone)]
+pub struct JobState {
+    pub node: usize,
+    pub version: usize,
+    pub slot: usize,
+    /// Virtual completion time of the job.
+    pub finish: f64,
+    pub enc: Encoded,
+}
+
+/// Transport-owned protocol state inside a checkpoint.
+#[derive(Debug, Clone)]
+pub enum TransportState {
+    /// Buffered-async state: the planner snapshot plus (for the
+    /// simulator) the in-flight jobs and the transport clock. Real-socket
+    /// transports leave `jobs` empty — their in-flight work lives in
+    /// worker processes and is only resumable from a quiescent
+    /// checkpoint (see [`crate::net::TcpAsync`]).
+    Async { planner: PlannerState, now: f64, jobs: Vec<JobState> },
+}
+
+/// A complete run snapshot. See the module docs for the format contract.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// [`ExperimentConfig::config_hash`] of the run that wrote this.
+    pub config_hash: u64,
+    /// The run's master seed (duplicated out of the config for
+    /// self-description — event logs and checkpoints agree on the key).
+    pub seed: u64,
+    /// The next commit index to execute: `next_round` commits are
+    /// already folded into `params`/`curve`/`stats`.
+    pub next_round: usize,
+    pub total_bits: u64,
+    /// Virtual clock at the checkpoint (0 for wall-clock transports,
+    /// whose time axis restarts on resume).
+    pub clock_now: f64,
+    pub params: Vec<f32>,
+    pub curve_label: String,
+    pub curve: Vec<CurvePoint>,
+    pub stats: Vec<RoundStats>,
+    /// Per-node codec state (EF residuals), from
+    /// [`UpdateCodec::state_export`](crate::quant::UpdateCodec::state_export).
+    pub codec_state: Vec<(u64, Vec<f32>)>,
+    /// Explicit RNG stream positions (stream key → xoshiro256++ state).
+    /// Empty today — see the module docs.
+    pub rng_states: Vec<(u64, [u64; 4])>,
+    pub transport: Option<TransportState>,
+}
+
+impl Checkpoint {
+    /// Stable identifier embedded in RunResult meta blocks:
+    /// `ck-<config_hash hex>-<next_round>`.
+    pub fn id(&self) -> String {
+        format!("ck-{:016x}-{}", self.config_hash, self.next_round)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Buf::new();
+        for &m in MAGIC {
+            b.u8(m);
+        }
+        b.u32(CHECKPOINT_VERSION);
+        b.u64(self.config_hash);
+        b.u64(self.seed);
+        b.u64(self.next_round as u64);
+        b.u64(self.total_bits);
+        b.f64(self.clock_now);
+        b.f32s(&self.params);
+        b.string(&self.curve_label);
+        b.u64(self.curve.len() as u64);
+        for p in &self.curve {
+            b.u64(p.round as u64);
+            b.u64(p.iterations as u64);
+            b.f64(p.time);
+            b.u64(p.bits_up);
+            b.f64(p.loss);
+        }
+        b.u64(self.stats.len() as u64);
+        for s in &self.stats {
+            b.u64(s.round as u64);
+            b.f64(s.compute_time);
+            b.f64(s.comm_time);
+            b.u64(s.bits_up);
+            b.u64(s.dropped);
+            b.u64(s.staleness_max as u64);
+            b.f64(s.staleness_mean);
+        }
+        b.u64(self.codec_state.len() as u64);
+        for (node, res) in &self.codec_state {
+            b.u64(*node);
+            b.f32s(res);
+        }
+        b.u64(self.rng_states.len() as u64);
+        for (key, s) in &self.rng_states {
+            b.u64(*key);
+            for &w in s {
+                b.u64(w);
+            }
+        }
+        match &self.transport {
+            None => b.u8(0),
+            Some(TransportState::Async { planner, now, jobs }) => {
+                b.u8(1);
+                write_planner(&mut b, planner);
+                b.f64(*now);
+                b.u64(jobs.len() as u64);
+                for j in jobs {
+                    b.u64(j.node as u64);
+                    b.u64(j.version as u64);
+                    b.u64(j.slot as u64);
+                    b.f64(j.finish);
+                    write_encoded(&mut b, &j.enc);
+                }
+            }
+        }
+        b.0
+    }
+
+    pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
+        let mut c = Cursor::new(bytes);
+        let magic = c.take(4)?;
+        anyhow::ensure!(
+            magic == &MAGIC[..],
+            "not a fedpaq checkpoint (bad magic {magic:02x?})"
+        );
+        let version = c.u32()?;
+        anyhow::ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint format v{version} is not supported by this build \
+             (expected v{CHECKPOINT_VERSION})"
+        );
+        let config_hash = c.u64()?;
+        let seed = c.u64()?;
+        let next_round = c.u64()? as usize;
+        let total_bits = c.u64()?;
+        let clock_now = c.f64()?;
+        let params = c.f32s()?;
+        let curve_label = c.string()?;
+        let count = c.u64()?;
+        let n_curve = read_count(&c, count, 40)?;
+        let mut curve = Vec::with_capacity(n_curve);
+        for _ in 0..n_curve {
+            curve.push(CurvePoint {
+                round: c.u64()? as usize,
+                iterations: c.u64()? as usize,
+                time: c.f64()?,
+                bits_up: c.u64()?,
+                loss: c.f64()?,
+            });
+        }
+        let count = c.u64()?;
+        let n_stats = read_count(&c, count, 56)?;
+        let mut stats = Vec::with_capacity(n_stats);
+        for _ in 0..n_stats {
+            stats.push(RoundStats {
+                round: c.u64()? as usize,
+                compute_time: c.f64()?,
+                comm_time: c.f64()?,
+                bits_up: c.u64()?,
+                dropped: c.u64()?,
+                staleness_max: c.u64()? as usize,
+                staleness_mean: c.f64()?,
+            });
+        }
+        let count = c.u64()?;
+        let n_codec = read_count(&c, count, 16)?;
+        let mut codec_state = Vec::with_capacity(n_codec);
+        for _ in 0..n_codec {
+            let node = c.u64()?;
+            codec_state.push((node, c.f32s()?));
+        }
+        let count = c.u64()?;
+        let n_rng = read_count(&c, count, 40)?;
+        let mut rng_states = Vec::with_capacity(n_rng);
+        for _ in 0..n_rng {
+            let key = c.u64()?;
+            let mut s = [0u64; 4];
+            for w in &mut s {
+                *w = c.u64()?;
+            }
+            rng_states.push((key, s));
+        }
+        let transport = match c.u8()? {
+            0 => None,
+            1 => {
+                let planner = read_planner(&mut c)?;
+                let now = c.f64()?;
+                let count = c.u64()?;
+                let n_jobs = read_count(&c, count, 32)?;
+                let mut jobs = Vec::with_capacity(n_jobs);
+                for _ in 0..n_jobs {
+                    jobs.push(JobState {
+                        node: c.u64()? as usize,
+                        version: c.u64()? as usize,
+                        slot: c.u64()? as usize,
+                        finish: c.f64()?,
+                        enc: read_encoded(&mut c)?,
+                    });
+                }
+                Some(TransportState::Async { planner, now, jobs })
+            }
+            x => anyhow::bail!("bad checkpoint transport tag {x}"),
+        };
+        anyhow::ensure!(
+            c.pos() == c.len(),
+            "trailing bytes in checkpoint ({} of {} consumed)",
+            c.pos(),
+            c.len()
+        );
+        Ok(Checkpoint {
+            config_hash,
+            seed,
+            next_round,
+            total_bits,
+            clock_now,
+            params,
+            curve_label,
+            curve,
+            stats,
+            codec_state,
+            rng_states,
+            transport,
+        })
+    }
+
+    /// Atomically persist to `path` (temp + rename via
+    /// [`crate::util::fsio::write_atomic`]).
+    pub fn write_atomic(&self, path: &Path) -> crate::Result<()> {
+        crate::util::fsio::write_atomic(path, &self.encode())
+    }
+
+    /// Load and decode a checkpoint file.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read checkpoint {}: {e}", path.display()))?;
+        Self::decode(&bytes)
+            .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+
+    /// Reject resuming under a different experiment: the hash covers the
+    /// full config JSON, so any drift (codec, seeds, knobs) is caught
+    /// before a single round runs.
+    pub fn check_config(&self, cfg: &ExperimentConfig) -> crate::Result<()> {
+        let have = cfg.config_hash();
+        anyhow::ensure!(
+            self.config_hash == have,
+            "checkpoint {} was written by a different config \
+             (hash {:016x}, this run {:016x}) — resume requires the \
+             identical experiment",
+            self.id(),
+            self.config_hash,
+            have
+        );
+        Ok(())
+    }
+}
+
+/// Bounds-check an element count against the buffer that must still
+/// contain `count * min_bytes` bytes, so a corrupt length prefix fails
+/// with a clear error instead of a giant allocation.
+fn read_count(c: &Cursor<'_>, count: u64, min_bytes: usize) -> crate::Result<usize> {
+    let n = count as usize;
+    anyhow::ensure!(
+        count <= (c.len() as u64) && n.saturating_mul(min_bytes) <= c.len(),
+        "corrupt checkpoint: element count {count} exceeds buffer size {}",
+        c.len()
+    );
+    Ok(n)
+}
+
+fn write_planner(b: &mut Buf, p: &PlannerState) {
+    b.u64(p.seed);
+    b.u64(p.n_nodes as u64);
+    b.u64(p.buffer_size as u64);
+    b.u64(p.max_staleness as u64);
+    b.u64(p.version as u64);
+    b.u64(p.wave_len as u64);
+    b.u8(p.awaiting_wave as u8);
+    b.u64(p.in_flight.len() as u64);
+    for &(node, version, slot) in &p.in_flight {
+        b.u64(node as u64);
+        b.u64(version as u64);
+        b.u64(slot as u64);
+    }
+    b.u64(p.buffer.len() as u64);
+    for (node, version, slot, enc) in &p.buffer {
+        b.u64(*node as u64);
+        b.u64(*version as u64);
+        b.u64(*slot as u64);
+        write_encoded(b, enc);
+    }
+    b.u64(p.dropped_total);
+    b.u64(p.dropped_since_commit);
+    b.u64(p.redispatches);
+}
+
+fn read_planner(c: &mut Cursor<'_>) -> crate::Result<PlannerState> {
+    let seed = c.u64()?;
+    let n_nodes = c.u64()? as usize;
+    let buffer_size = c.u64()? as usize;
+    let max_staleness = c.u64()? as usize;
+    let version = c.u64()? as usize;
+    let wave_len = c.u64()? as usize;
+    let awaiting_wave = match c.u8()? {
+        0 => false,
+        1 => true,
+        x => anyhow::bail!("bad planner bool byte {x}"),
+    };
+    let count = c.u64()?;
+    let n_in_flight = read_count(c, count, 24)?;
+    let mut in_flight = Vec::with_capacity(n_in_flight);
+    for _ in 0..n_in_flight {
+        in_flight.push((c.u64()? as usize, c.u64()? as usize, c.u64()? as usize));
+    }
+    let count = c.u64()?;
+    let n_buffer = read_count(c, count, 24)?;
+    let mut buffer = Vec::with_capacity(n_buffer);
+    for _ in 0..n_buffer {
+        let node = c.u64()? as usize;
+        let v = c.u64()? as usize;
+        let slot = c.u64()? as usize;
+        buffer.push((node, v, slot, read_encoded(c)?));
+    }
+    Ok(PlannerState {
+        seed,
+        n_nodes,
+        buffer_size,
+        max_staleness,
+        version,
+        wave_len,
+        awaiting_wave,
+        in_flight,
+        buffer,
+        dropped_total: c.u64()?,
+        dropped_since_commit: c.u64()?,
+        redispatches: c.u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::CodecSpec;
+    use crate::util::rng::Rng;
+
+    fn enc(seed: u64) -> Encoded {
+        let codec = CodecSpec::qsgd(2).build().unwrap();
+        let mut rng = Rng::seed_from_u64(seed);
+        let v: Vec<f32> = (0..16).map(|_| rng.gen_f32() - 0.5).collect();
+        codec.encode(&v, &mut rng)
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            config_hash: 0xdead_beef_cafe_f00d,
+            seed: 42,
+            next_round: 7,
+            total_bits: 123_456,
+            clock_now: 98.25,
+            params: vec![1.0, -0.5, 0.25, 3.5e-8],
+            curve_label: "fedbuff logreg".into(),
+            curve: vec![
+                CurvePoint { round: 0, iterations: 0, time: 0.0, bits_up: 0, loss: 0.9 },
+                CurvePoint {
+                    round: 7,
+                    iterations: 35,
+                    time: 98.25,
+                    bits_up: 123_456,
+                    loss: 0.31,
+                },
+            ],
+            stats: vec![RoundStats {
+                round: 6,
+                compute_time: 4.5,
+                comm_time: 1.25,
+                bits_up: 2048,
+                dropped: 1,
+                staleness_max: 3,
+                staleness_mean: 0.75,
+            }],
+            codec_state: vec![(3, vec![0.5, -0.5]), (11, vec![1.0])],
+            rng_states: vec![(9, [1, 2, 3, u64::MAX])],
+            transport: Some(TransportState::Async {
+                planner: PlannerState {
+                    seed: 42,
+                    n_nodes: 50,
+                    buffer_size: 4,
+                    max_staleness: 8,
+                    version: 7,
+                    wave_len: 25,
+                    awaiting_wave: true,
+                    in_flight: vec![(1, 6, 2), (9, 7, 0)],
+                    buffer: vec![(4, 7, 1, enc(5))],
+                    dropped_total: 3,
+                    dropped_since_commit: 1,
+                    redispatches: 3,
+                },
+                now: 98.25,
+                jobs: vec![JobState {
+                    node: 1,
+                    version: 6,
+                    slot: 2,
+                    finish: 101.5,
+                    enc: enc(8),
+                }],
+            }),
+        }
+    }
+
+    fn assert_checkpoints_equal(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.config_hash, b.config_hash);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.next_round, b.next_round);
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.clock_now.to_bits(), b.clock_now.to_bits());
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.curve_label, b.curve_label);
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.stats.len(), b.stats.len());
+        for (x, y) in a.stats.iter().zip(&b.stats) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.compute_time.to_bits(), y.compute_time.to_bits());
+            assert_eq!(x.bits_up, y.bits_up);
+            assert_eq!(x.dropped, y.dropped);
+        }
+        assert_eq!(a.codec_state, b.codec_state);
+        assert_eq!(a.rng_states, b.rng_states);
+        // Re-encode equality covers the transport state bit-for-bit.
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn encode_decode_roundtrips() {
+        let ck = sample();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_checkpoints_equal(&ck, &back);
+        assert_eq!(ck.id(), "ck-deadbeefcafef00d-7");
+    }
+
+    #[test]
+    fn no_transport_state_roundtrips() {
+        let ck = Checkpoint { transport: None, ..sample() };
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert!(back.transport.is_none());
+        assert_eq!(ck.encode(), back.encode());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        let mut bytes = sample().encode();
+        bytes[4] = 99;
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("format v99"), "{err}");
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_rejected() {
+        let bytes = sample().encode();
+        // Every strict prefix must fail loudly, never panic or succeed.
+        for cut in [8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        let err = Checkpoint::decode(&padded).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_count_fails_without_huge_allocation() {
+        let ck = Checkpoint {
+            transport: None,
+            codec_state: vec![],
+            rng_states: vec![],
+            curve: vec![],
+            stats: vec![],
+            ..sample()
+        };
+        let mut bytes = ck.encode();
+        // The curve-count u64 sits right after the fixed header + params
+        // + label; smash it to u64::MAX and expect a clean error.
+        let off = 4 + 4 + 8 * 4 + 8 // header
+            + 8 + 4 * ck.params.len() // params
+            + 4 + ck.curve_label.len(); // label
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("element count"), "{err}");
+    }
+
+    #[test]
+    fn config_hash_mismatch_is_rejected() {
+        let cfg = ExperimentConfig::fig1_logreg_base();
+        let ck = Checkpoint { config_hash: cfg.config_hash(), ..sample() };
+        ck.check_config(&cfg).unwrap();
+        let other = cfg.clone().with_seed(7);
+        let err = ck.check_config(&other).unwrap_err();
+        assert!(err.to_string().contains("different config"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fedpaq-ck-{}", std::process::id()));
+        let path = dir.join("run.ck");
+        let ck = sample();
+        ck.write_atomic(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.encode(), back.encode());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,194 @@
+//! [`EventSink`]: the JSONL structured-event bus.
+//!
+//! One sink instance is threaded (by cheap clone — the writer is shared
+//! behind an `Arc<Mutex>`) through the
+//! [`RoundEngine`](crate::coordinator::RoundEngine), the async
+//! transports' [`CommitPlanner`](crate::coordinator::CommitPlanner)
+//! decision points, both TCP leaders, and the worker's reconnect loop.
+//! Every `emit` appends exactly one compact JSON object per line and
+//! flushes, so a tail of the file is always valid JSONL even if the
+//! process is killed mid-run — which is the whole point: the event log
+//! is the operator's live view of a run that may die at any commit.
+//!
+//! ## Schema (stable — see `docs/OPERATIONS.md` for the full table)
+//!
+//! Common fields on every event:
+//!
+//! * `"event"` — the kind tag (`run_started`, `job_dispatched`,
+//!   `upload_arrived`, `upload_dropped`, `commit`,
+//!   `checkpoint_written`, `worker_joined`, `worker_left`,
+//!   `worker_reconnecting`, `run_finished`);
+//! * `"seed"` — the run's master seed as a decimal **string** (u64
+//!   exceeds f64's exact-integer range, same convention as config JSON);
+//! * `"ts_ms"` — wall-clock Unix milliseconds at emission.
+//!
+//! Per-event fields carry the protocol coordinates (`version`, `node`,
+//! `slot`, `staleness`, …) and, where the transport owns a clock, the
+//! **virtual** time `t` (wall-clock transports report elapsed seconds).
+//! Keys are emitted in sorted order (the JSON module's object ordering),
+//! so lines are byte-stable for equal field sets modulo `ts_ms`.
+//!
+//! A default-constructed sink is **null**: `emit` is a no-op and
+//! `is_active` is `false`, so instrumented code paths cost one branch
+//! when no `--events` destination is configured.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+/// Shared JSONL event writer. Clones write to the same destination; the
+/// seed stamp is per-clone (see [`EventSink::with_seed`]) so one process
+/// driving several runs labels each run's events correctly.
+#[derive(Clone, Default)]
+pub struct EventSink {
+    out: Option<Arc<Mutex<Box<dyn Write + Send>>>>,
+    seed: u64,
+}
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventSink")
+            .field("active", &self.out.is_some())
+            .field("seed", &self.seed)
+            .finish()
+    }
+}
+
+impl EventSink {
+    /// The inert sink: `emit` does nothing. Same as `Default`.
+    pub fn null() -> Self {
+        Self::default()
+    }
+
+    /// Emit events to standard error (interleaves with the human log;
+    /// every event line is still a self-contained JSON object).
+    pub fn stderr() -> Self {
+        Self::to_writer(Box::new(std::io::stderr()))
+    }
+
+    /// Emit events to `path`, appending. The file is created (with
+    /// parent directories) on construction so a run that dies before its
+    /// first event still leaves an empty log rather than nothing.
+    pub fn to_file(path: &std::path::Path) -> crate::Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| anyhow::anyhow!("create {}: {e}", parent.display()))?;
+            }
+        }
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| anyhow::anyhow!("open events file {}: {e}", path.display()))?;
+        Ok(Self::to_writer(Box::new(f)))
+    }
+
+    /// Emit events into any writer (what tests use to capture lines).
+    pub fn to_writer(w: Box<dyn Write + Send>) -> Self {
+        EventSink { out: Some(Arc::new(Mutex::new(w))), seed: 0 }
+    }
+
+    /// A clone of this sink stamping `seed` on every event it emits.
+    /// The underlying writer stays shared.
+    pub fn with_seed(&self, seed: u64) -> Self {
+        EventSink { out: self.out.clone(), seed }
+    }
+
+    /// Whether events actually go anywhere. Instrumentation may use this
+    /// to skip building expensive field sets.
+    pub fn is_active(&self) -> bool {
+        self.out.is_some()
+    }
+
+    /// Append one event line: `kind` plus the common fields plus
+    /// `fields`. Write errors are swallowed deliberately — observability
+    /// must never kill a training run — but the line is flushed so a
+    /// subsequent process kill cannot truncate it.
+    pub fn emit(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        let Some(out) = &self.out else { return };
+        let ts_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut all = vec![
+            ("event", Json::str(kind)),
+            ("seed", Json::str(self.seed.to_string())),
+            ("ts_ms", Json::num(ts_ms as f64)),
+        ];
+        all.extend(fields);
+        let line = Json::obj(all).to_string_compact();
+        if let Ok(mut w) = out.lock() {
+            let _ = writeln!(w, "{line}");
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A Write handle into a shared byte buffer, so the test can read
+    /// back what the sink wrote.
+    #[derive(Clone)]
+    struct Shared(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Shared {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn null_sink_is_inert() {
+        let sink = EventSink::null();
+        assert!(!sink.is_active());
+        sink.emit("run_started", vec![("version", Json::num(0.0))]);
+    }
+
+    #[test]
+    fn emits_one_parseable_json_line_per_event_with_common_fields() {
+        let buf = Shared(Arc::new(Mutex::new(Vec::new())));
+        let sink = EventSink::to_writer(Box::new(buf.clone())).with_seed(42);
+        assert!(sink.is_active());
+        sink.emit("commit", vec![("version", Json::num(3.0)), ("bits", Json::num(128.0))]);
+        sink.emit("run_finished", vec![]);
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").and_then(Json::as_str), Some("commit"));
+        assert_eq!(first.get("seed").and_then(Json::as_str), Some("42"));
+        assert_eq!(first.get("version").and_then(Json::as_usize), Some(3));
+        assert!(first.get("ts_ms").is_some());
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("event").and_then(Json::as_str), Some("run_finished"));
+    }
+
+    #[test]
+    fn clones_share_the_writer_and_seed_is_per_clone() {
+        let buf = Shared(Arc::new(Mutex::new(Vec::new())));
+        let a = EventSink::to_writer(Box::new(buf.clone())).with_seed(1);
+        let b = a.with_seed(2);
+        a.emit("worker_joined", vec![]);
+        b.emit("worker_left", vec![]);
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let seeds: Vec<String> = text
+            .lines()
+            .map(|l| {
+                Json::parse(l)
+                    .unwrap()
+                    .get("seed")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert_eq!(seeds, ["1", "2"]);
+    }
+}

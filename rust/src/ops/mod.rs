@@ -1,0 +1,98 @@
+//! Operator-grade run control: checkpoint/resume, the JSONL event bus,
+//! and the knobs that thread them through a run.
+//!
+//! This layer exists so a long federated run is *operable*: it can be
+//! watched (every protocol decision lands on the [`EventSink`] as one
+//! JSON line), killed (checkpoints are written atomically every
+//! `checkpoint_every` commits, so the newest complete one always
+//! survives), and resumed (`--resume FILE` continues such that the final
+//! [`RunResult`](crate::coordinator::RunResult) is **byte-identical** to
+//! the uninterrupted run — CI diffs the two JSONs).
+//!
+//! The pieces:
+//!
+//! * [`checkpoint`] — the versioned binary snapshot format
+//!   ([`Checkpoint`]) covering model, history, codec residuals, planner
+//!   state and in-flight jobs; see its module docs for the layout and
+//!   `docs/OPERATIONS.md` for the operator-facing contract.
+//! * [`events`] — the [`EventSink`] JSONL bus and its stable schema.
+//! * [`RunControl`] — the bundle of operator knobs the
+//!   [`RoundEngine`](crate::coordinator::RoundEngine) consumes. The
+//!   default value is "no ops": null sink, no checkpoints, run to the
+//!   configured horizon — the zero-cost path every pre-existing caller
+//!   gets implicitly.
+
+pub mod checkpoint;
+pub mod events;
+
+pub use checkpoint::{Checkpoint, JobState, TransportState, CHECKPOINT_VERSION};
+pub use events::EventSink;
+
+use std::path::PathBuf;
+
+/// Operator knobs for one run, consumed by
+/// [`RoundEngine::run_controlled`](crate::coordinator::RoundEngine::run_controlled).
+#[derive(Debug, Default)]
+pub struct RunControl {
+    /// Structured-event destination (null by default).
+    pub events: EventSink,
+    /// Where to write checkpoints. `None` disables checkpointing even if
+    /// `checkpoint_every` is set.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Write a checkpoint after every N commits (0 = only the forced
+    /// `stop_after` checkpoint, if any).
+    pub checkpoint_every: usize,
+    /// Stop cleanly after this many commits, forcing a final checkpoint
+    /// to `checkpoint_path` first — the "kill" half of the kill/resume
+    /// determinism tests, without OS signals.
+    pub stop_after: Option<usize>,
+    /// Resume from this snapshot instead of initializing fresh state.
+    pub resume: Option<Checkpoint>,
+}
+
+impl RunControl {
+    /// Whether a checkpoint should be written after commit `k + 1` of
+    /// the run (`k` is the zero-based commit index just executed).
+    pub fn checkpoint_due(&self, completed: usize) -> bool {
+        self.checkpoint_path.is_some()
+            && ((self.checkpoint_every > 0 && completed % self.checkpoint_every == 0)
+                || self.stop_after == Some(completed))
+    }
+
+    /// Whether the run should stop cleanly after `completed` commits.
+    pub fn stop_due(&self, completed: usize) -> bool {
+        self.stop_after == Some(completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_control_is_inert() {
+        let ctrl = RunControl::default();
+        assert!(!ctrl.events.is_active());
+        for k in 1..=10 {
+            assert!(!ctrl.checkpoint_due(k));
+            assert!(!ctrl.stop_due(k));
+        }
+    }
+
+    #[test]
+    fn checkpoint_cadence_and_forced_stop() {
+        let ctrl = RunControl {
+            checkpoint_path: Some(PathBuf::from("/tmp/run.ck")),
+            checkpoint_every: 3,
+            stop_after: Some(7),
+            ..Default::default()
+        };
+        let due: Vec<usize> = (1..=10).filter(|&k| ctrl.checkpoint_due(k)).collect();
+        assert_eq!(due, vec![3, 6, 7, 9]);
+        assert!(ctrl.stop_due(7));
+        assert!(!ctrl.stop_due(6));
+        // Without a path, nothing is ever due.
+        let no_path = RunControl { checkpoint_path: None, ..ctrl };
+        assert!((1..=10).all(|k| !no_path.checkpoint_due(k)));
+    }
+}

@@ -370,6 +370,22 @@ pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
     /// codecs.
     fn reset_state(&self) {}
 
+    /// Snapshot all per-node state as `(node, values)` pairs in
+    /// ascending node order — what `ops` checkpoints persist so a
+    /// resumed run continues with identical codec memory (EF residuals).
+    /// Stateless codecs keep this default (empty).
+    fn state_export(&self) -> Vec<(u64, Vec<f32>)> {
+        Vec::new()
+    }
+
+    /// Replace all per-node state with a [`UpdateCodec::state_export`]
+    /// snapshot (checkpoint resume). Stateless codecs keep this no-op
+    /// default; implementations must accept their own export verbatim
+    /// (`state_import(state_export())` is an identity).
+    fn state_import(&self, state: Vec<(u64, Vec<f32>)>) {
+        let _ = state;
+    }
+
     /// Decode an upload into `out` (cleared and refilled to `enc.p`
     /// values). Rejects buffers produced by a different codec config.
     ///
@@ -472,6 +488,14 @@ impl UpdateCodec for Box<dyn UpdateCodec> {
 
     fn reset_state(&self) {
         (**self).reset_state()
+    }
+
+    fn state_export(&self) -> Vec<(u64, Vec<f32>)> {
+        (**self).state_export()
+    }
+
+    fn state_import(&self, state: Vec<(u64, Vec<f32>)>) {
+        (**self).state_import(state)
     }
 
     fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>) -> crate::Result<()> {

@@ -167,7 +167,9 @@ impl Group {
             ("group", Json::str(&self.name)),
             ("records", Json::Arr(records)),
         ]);
-        std::fs::write(&path, doc.to_string_pretty()).ok()?;
+        // Atomic staging: a bench process killed mid-write never leaves
+        // a truncated BENCH_*.json for the CI regression gate to parse.
+        crate::util::fsio::write_atomic_str(&path, &doc.to_string_pretty()).ok()?;
         Some(path)
     }
 }

@@ -1,0 +1,103 @@
+//! Crash-safe file writes: temp file + atomic rename.
+//!
+//! Every durable artifact the system emits — `--out-json` RunResult
+//! dumps, `BENCH_*.json` records, `ops` checkpoints — goes through
+//! [`write_atomic`], so a process killed mid-write can never leave a
+//! truncated file behind: readers either see the previous complete
+//! version or the new complete version, never a prefix.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write `bytes` to `path` atomically: the data lands in a sibling
+/// temp file first (same directory, so the final `rename` stays on one
+/// filesystem and is atomic on POSIX), is flushed, then renamed over
+/// `path`. On any error the temp file is cleaned up best-effort and
+/// `path` is left untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> crate::Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    if let Some(dir) = dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("cannot write to {}: no file name", path.display()))?;
+    let mut tmp = path.to_path_buf();
+    // Unique per process: concurrent writers of the same target (e.g.
+    // two bench runs) each stage their own temp file; last rename wins
+    // with a complete file either way.
+    tmp.set_file_name(format!(
+        ".{}.tmp.{}",
+        file_name.to_string_lossy(),
+        std::process::id()
+    ));
+    let write = (|| -> crate::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // Push the bytes to disk before the rename makes them visible,
+        // so a crash after rename cannot surface an empty file.
+        f.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow::anyhow!(
+            "staging atomic write of {}: {e}",
+            path.display()
+        ));
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::anyhow!("renaming {} into place: {e}", path.display())
+    })
+}
+
+/// [`write_atomic`] for string content (the common JSON case).
+pub fn write_atomic_str(path: &Path, text: &str) -> crate::Result<()> {
+    write_atomic(path, text.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fedpaq-fsio-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_overwrites() {
+        let dir = tmpdir("basic");
+        let path = dir.join("out.json");
+        write_atomic_str(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        write_atomic_str(&path, "second, longer content").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second, longer content");
+        // No temp droppings left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn creates_missing_parent_dirs() {
+        let dir = tmpdir("nested");
+        let path = dir.join("a/b/out.json");
+        write_atomic_str(&path, "x").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn directory_target_is_an_error_and_leaves_no_tmp() {
+        let dir = tmpdir("dirtarget");
+        assert!(write_atomic_str(&dir, "x").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

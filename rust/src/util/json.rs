@@ -125,6 +125,44 @@ impl Json {
         out
     }
 
+    /// Single-line rendering with no whitespace — one value per line is
+    /// exactly the JSONL framing the event bus (`ops::events`) emits.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_) => {
+                self.write(out, 0)
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -424,6 +462,22 @@ mod tests {
         let text = j.to_string_pretty();
         let back = Json::parse(&text).unwrap();
         assert_eq!(j, back);
+    }
+
+    #[test]
+    fn roundtrip_compact_single_line() {
+        let j = Json::obj(vec![
+            ("a", Json::num(1.5)),
+            ("b", Json::Arr(vec![Json::Bool(true), Json::Null, Json::str("x\"y\n")])),
+            ("c", Json::obj(vec![("nested", Json::num(42))])),
+        ]);
+        let line = j.to_string_compact();
+        assert!(!line.contains('\n'), "compact output spans lines: {line}");
+        assert_eq!(Json::parse(&line).unwrap(), j);
+        assert_eq!(
+            Json::obj(vec![("k", Json::Arr(vec![]))]).to_string_compact(),
+            r#"{"k":[]}"#
+        );
     }
 
     #[test]

@@ -9,8 +9,12 @@
 //! * [`bench`] — measurement harness for the `rust/benches/` targets
 //!   (replaces `criterion`)
 //! * [`prop`]  — randomized property-test driver (replaces `proptest`)
+//! * [`fsio`]  — crash-safe atomic file writes (replaces `tempfile`-style
+//!   staging) used by every durable artifact (RunResult dumps, bench
+//!   records, `ops` checkpoints)
 
 pub mod bench;
+pub mod fsio;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,312 @@
+//! Checkpoint/resume: the ops subsystem's bit-identity contract.
+//!
+//! Property side (driver: `fedpaq::util::prop` — proptest is unavailable
+//! offline): random checkpoints round-trip the binary format exactly,
+//! and truncated or corrupted bytes are rejected without panics or
+//! runaway allocations.
+//!
+//! Integration side: a run killed at commit `K` (via
+//! `RunControl::stop_after`, the signal-free kill) and resumed from its
+//! checkpoint must produce a [`RunResult`] **bit-identical** to the
+//! uninterrupted run — losses, virtual times, traffic and telemetry —
+//! on both the synchronous in-process transport (with stateful
+//! error-feedback codec residuals crossing the checkpoint) and the
+//! buffered-async simulator (with non-quiescent in-flight jobs crossing
+//! it).
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::coordinator::{PlannerState, RunResult, ServerBuilder, StalenessRule};
+use fedpaq::metrics::CurvePoint;
+use fedpaq::model::{ModelKind, RustEngine};
+use fedpaq::ops::{Checkpoint, JobState, RunControl, TransportState};
+use fedpaq::opt::LrSchedule;
+use fedpaq::quant::{CodecSpec, Encoded};
+use fedpaq::util::prop::check;
+use fedpaq::util::rng::Rng;
+use std::path::PathBuf;
+
+// ---------------------------------------------------------------------
+// Property tests over the binary format.
+// ---------------------------------------------------------------------
+
+fn rand_enc(rng: &mut Rng) -> Encoded {
+    let codec = CodecSpec::qsgd(rng.gen_range(1, 5) as u32).build().unwrap();
+    let n = rng.gen_range(1, 24);
+    let x: Vec<f32> = (0..n).map(|_| rng.gen_f32() - 0.5).collect();
+    codec.encode(&x, rng)
+}
+
+fn rand_checkpoint(rng: &mut Rng) -> Checkpoint {
+    let transport = if rng.gen_bool(0.5) {
+        Some(TransportState::Async {
+            planner: PlannerState {
+                seed: rng.next_u64(),
+                n_nodes: rng.gen_range(1, 30),
+                buffer_size: rng.gen_range(1, 8),
+                max_staleness: rng.gen_range(0, 8),
+                version: rng.gen_range(0, 100),
+                wave_len: rng.gen_range(0, 8),
+                awaiting_wave: rng.gen_bool(0.5),
+                in_flight: (0..rng.gen_range(0, 5))
+                    .map(|i| (rng.gen_range(0, 30), rng.gen_range(0, 100), i))
+                    .collect(),
+                buffer: (0..rng.gen_range(0, 4))
+                    .map(|i| {
+                        (rng.gen_range(0, 30), rng.gen_range(0, 100), i, rand_enc(rng))
+                    })
+                    .collect(),
+                dropped_total: rng.next_u64() >> 40,
+                dropped_since_commit: rng.next_u64() >> 50,
+                redispatches: rng.next_u64() >> 40,
+            },
+            now: rng.gen_f32() as f64 * 1e3,
+            jobs: (0..rng.gen_range(0, 4))
+                .map(|i| JobState {
+                    node: rng.gen_range(0, 30),
+                    version: rng.gen_range(0, 100),
+                    slot: i,
+                    finish: rng.gen_f32() as f64 * 1e3,
+                    enc: rand_enc(rng),
+                })
+                .collect(),
+        })
+    } else {
+        None
+    };
+    Checkpoint {
+        config_hash: rng.next_u64(),
+        seed: rng.next_u64(),
+        next_round: rng.gen_range(0, 1000),
+        total_bits: rng.next_u64() >> 20,
+        clock_now: rng.gen_f32() as f64 * 1e4,
+        params: (0..rng.gen_range(1, 40)).map(|_| rng.gen_f32() - 0.5).collect(),
+        curve_label: format!("run-{}", rng.gen_range(0, 1000)),
+        curve: (0..rng.gen_range(0, 6))
+            .map(|k| CurvePoint {
+                round: k,
+                iterations: k * 5,
+                time: k as f64 * 1.5,
+                bits_up: rng.next_u64() >> 30,
+                loss: rng.gen_f32() as f64,
+            })
+            .collect(),
+        stats: Vec::new(),
+        codec_state: (0..rng.gen_range(0, 5))
+            .map(|i| {
+                (i as u64, (0..rng.gen_range(1, 8)).map(|_| rng.gen_f32()).collect())
+            })
+            .collect(),
+        rng_states: (0..rng.gen_range(0, 3))
+            .map(|i| (i as u64, [rng.next_u64(); 4]))
+            .collect(),
+        transport,
+    }
+}
+
+#[test]
+fn prop_random_checkpoints_roundtrip_bit_exactly() {
+    check(60, 0x0b5_c4e0, |rng| {
+        let ck = rand_checkpoint(rng);
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        // Byte-level re-encode equality covers every field, including
+        // the nested planner snapshot and in-flight job payloads.
+        assert_eq!(bytes, back.encode());
+        assert_eq!(ck.id(), back.id());
+    });
+}
+
+#[test]
+fn prop_truncation_and_corruption_are_rejected_cleanly() {
+    check(40, 0x0b5_c4e1, |rng| {
+        let bytes = rand_checkpoint(rng).encode();
+        // Any strict prefix must fail with an error, never a panic.
+        for _ in 0..8 {
+            let cut = rng.gen_range(0, bytes.len());
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // A random byte flip must never panic or hang; decoding may
+        // still succeed when the flip lands in float payload bytes.
+        let mut corrupt = bytes.clone();
+        let at = rng.gen_range(0, corrupt.len());
+        corrupt[at] ^= 1 << rng.gen_range(0, 8);
+        let _ = Checkpoint::decode(&corrupt);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Kill/resume bit-identity on the in-process transports.
+// ---------------------------------------------------------------------
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "ops-ck-it".into(),
+        model: "logreg".into(),
+        dataset: fedpaq::data::DatasetKind::Mnist08,
+        n_nodes: 12,
+        per_node: 40,
+        r: 6,
+        tau: 3,
+        t_total: 36, // 12 commits
+        codec: CodecSpec::qsgd(2),
+        lr: LrSchedule::Const { eta: 0.4 },
+        ratio: 100.0,
+        seed: 29,
+        eval_every: 1,
+        engine: EngineKind::Rust,
+        partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: false,
+        buffer_size: 0,
+        max_staleness: 8,
+        staleness_rule: StalenessRule::Uniform,
+        agg_shards: 1,
+    }
+}
+
+fn engine() -> RustEngine {
+    RustEngine::new(ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 480).unwrap()
+}
+
+fn run_ctrl(cfg: &ExperimentConfig, ctrl: RunControl) -> RunResult {
+    let mut eng = engine();
+    ServerBuilder::new(cfg.clone())
+        .engine(&mut eng)
+        .control(ctrl)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Exact equality of everything a RunResult records (modulo meta
+/// provenance, asserted separately): losses, virtual times, bits,
+/// per-round telemetry and the final model.
+fn assert_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.params, b.params, "final models differ");
+    assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.curve.points.len(), b.curve.points.len());
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(pa.round, pb.round);
+        assert_eq!(pa.iterations, pb.iterations);
+        assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "loss at k={}", pa.round);
+        assert_eq!(pa.time.to_bits(), pb.time.to_bits(), "time at k={}", pa.round);
+        assert_eq!(pa.bits_up, pb.bits_up);
+    }
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.compute_time.to_bits(), rb.compute_time.to_bits());
+        assert_eq!(ra.comm_time.to_bits(), rb.comm_time.to_bits());
+        assert_eq!(ra.bits_up, rb.bits_up);
+        assert_eq!(ra.dropped, rb.dropped);
+        assert_eq!(ra.staleness_max, rb.staleness_max);
+        assert_eq!(ra.staleness_mean.to_bits(), rb.staleness_mean.to_bits());
+    }
+}
+
+fn temp_ck(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("fedpaq-ops-it-{}", std::process::id()))
+        .join(name)
+}
+
+/// Shared kill/resume flow: full run vs stop-at-K + resume.
+fn kill_resume_roundtrip(cfg: &ExperimentConfig, stop_after: usize, ck_name: &str) {
+    let full = run_ctrl(cfg, RunControl::default());
+    assert!(full.meta.resumed_from.is_none());
+
+    let path = temp_ck(ck_name);
+    let stopped = run_ctrl(
+        cfg,
+        RunControl {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: 0, // only the forced stop_after checkpoint
+            stop_after: Some(stop_after),
+            ..Default::default()
+        },
+    );
+    assert_eq!(stopped.rounds.len(), stop_after, "stop_after did not stop");
+
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.next_round, stop_after);
+    let ck_id = ck.id();
+    let resumed = run_ctrl(cfg, RunControl { resume: Some(ck), ..Default::default() });
+
+    assert_identical(&full, &resumed);
+    assert_eq!(resumed.meta.resumed_from.as_deref(), Some(ck_id.as_str()));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sync_kill_resume_is_bit_identical_with_error_feedback_residuals() {
+    // Error feedback makes the codec stateful: per-node residuals must
+    // cross the checkpoint exactly or the resumed uploads diverge.
+    let cfg = ExperimentConfig {
+        codec: CodecSpec::error_feedback(CodecSpec::qsgd(2)),
+        ..base_cfg()
+    };
+    kill_resume_roundtrip(&cfg, 4, "sync-ef.ck");
+}
+
+#[test]
+fn async_kill_resume_is_bit_identical_with_in_flight_jobs() {
+    // buffer_size < r: every post-commit checkpoint carries r − b
+    // in-flight jobs (with their already-computed uploads and virtual
+    // completion times) plus the planner snapshot. Resume must splice
+    // all of it back for the event stream to replay identically.
+    let cfg = ExperimentConfig {
+        async_rounds: true,
+        buffer_size: 2,
+        max_staleness: 8,
+        ..base_cfg()
+    };
+    kill_resume_roundtrip(&cfg, 5, "async-buffered.ck");
+}
+
+#[test]
+fn resume_under_a_different_config_is_rejected() {
+    let cfg = base_cfg();
+    let path = temp_ck("mismatch.ck");
+    let _ = run_ctrl(
+        &cfg,
+        RunControl {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: 0,
+            stop_after: Some(3),
+            ..Default::default()
+        },
+    );
+    let ck = Checkpoint::load(&path).unwrap();
+    let other = cfg.with_seed(99);
+    let mut eng = engine();
+    let err = ServerBuilder::new(other)
+        .engine(&mut eng)
+        .control(RunControl { resume: Some(ck), ..Default::default() })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("different config"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn periodic_checkpoints_leave_the_newest_complete_snapshot() {
+    // checkpoint_every = 3 over 12 commits: the file on disk at the end
+    // is the last cadence hit (commit 12), written atomically over the
+    // earlier ones.
+    let cfg = base_cfg();
+    let path = temp_ck("periodic.ck");
+    let _ = run_ctrl(
+        &cfg,
+        RunControl {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: 3,
+            ..Default::default()
+        },
+    );
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.next_round, 12);
+    assert_eq!(ck.seed, cfg.seed);
+    std::fs::remove_file(&path).ok();
+}

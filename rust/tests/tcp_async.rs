@@ -14,11 +14,17 @@ use fedpaq::config::{EngineKind, ExperimentConfig};
 use fedpaq::coordinator::{RunResult, StalenessRule};
 use fedpaq::data::DatasetKind;
 use fedpaq::model::RustEngine;
-use fedpaq::net::{run_leader, run_worker_retrying, WorkerOptions};
+use fedpaq::net::{
+    run_leader, run_leader_controlled, run_worker_retrying, WorkerOptions,
+};
+use fedpaq::ops::{EventSink, RunControl};
 use fedpaq::opt::LrSchedule;
 use fedpaq::quant::CodecSpec;
+use fedpaq::util::json::Json;
+use std::io::Write;
 use std::net::TcpListener;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 fn cluster_cfg(seed: u64) -> ExperimentConfig {
@@ -69,7 +75,7 @@ fn run_cluster(cfg: &ExperimentConfig, delays: &[Option<Duration>]) -> RunResult
                 run_worker_retrying(
                     &addr,
                     Path::new("artifacts"),
-                    WorkerOptions { work_delay },
+                    WorkerOptions { work_delay, ..Default::default() },
                     Duration::from_secs(30),
                 )
                 .unwrap_or_else(|e| panic!("worker failed: {e}"));
@@ -89,6 +95,93 @@ fn run_cluster(cfg: &ExperimentConfig, delays: &[Option<Duration>]) -> RunResult
         w.join().unwrap();
     }
     res
+}
+
+/// A `Write` handle into a shared byte buffer, so a test can read back
+/// the leader's JSONL event stream.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Like [`run_cluster`], but with per-worker options, an optional
+/// late-joining extra worker (spawned against the same leader after
+/// `join_after`), and the leader's event stream captured. Worker errors
+/// are tolerated for the late joiner (it may lose the race against a
+/// short run) but fatal for the initial set.
+fn run_cluster_churn(
+    cfg: &ExperimentConfig,
+    opts: Vec<WorkerOptions>,
+    join_after: Option<Duration>,
+) -> (RunResult, Vec<Json>) {
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let n_initial = opts.len();
+    let mut workers: Vec<_> = opts
+        .into_iter()
+        .map(|o| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker_retrying(
+                    &addr,
+                    Path::new("artifacts"),
+                    o,
+                    Duration::from_secs(30),
+                )
+                .unwrap_or_else(|e| panic!("worker failed: {e}"));
+            })
+        })
+        .collect();
+    if let Some(delay) = join_after {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            std::thread::sleep(delay);
+            // Best-effort: the joiner may lose the race against run end.
+            let _ = run_worker_retrying(
+                &addr,
+                Path::new("artifacts"),
+                WorkerOptions::default(),
+                Duration::from_secs(5),
+            );
+        }));
+    }
+    let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let ctrl = RunControl {
+        events: EventSink::to_writer(Box::new(buf.clone())),
+        ..Default::default()
+    };
+    let mut engine = leader_engine();
+    let res = run_leader_controlled(
+        cfg.clone(),
+        &addr,
+        n_initial,
+        &mut engine,
+        Path::new("artifacts"),
+        &ctrl,
+    )
+    .unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    let events = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    (res, events)
+}
+
+/// Events of a given kind from a captured stream.
+fn of_kind<'a>(events: &'a [Json], kind: &str) -> Vec<&'a Json> {
+    events
+        .iter()
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some(kind))
+        .collect()
 }
 
 #[test]
@@ -170,4 +263,74 @@ fn delayed_worker_surfaces_with_staleness_and_polynomial_damping() {
         assert!(p.time >= t, "time went backwards");
         t = p.time;
     }
+}
+
+#[test]
+fn worker_death_mid_run_retires_jobs_and_run_completes() {
+    // One of two workers exits cleanly after 5 jobs (`max_jobs` — the
+    // same injector `fedpaq worker --max-jobs` exposes). The async
+    // leader must notice the close, retire that worker's in-flight jobs
+    // back to the planner, re-dispatch them to the survivor, and finish
+    // every commit — no hang, no error.
+    let cfg = ExperimentConfig {
+        async_rounds: true,
+        buffer_size: 2,
+        max_staleness: 6,
+        t_total: 24, // 12 commits
+        ..cluster_cfg(47)
+    };
+    let (res, events) = run_cluster_churn(
+        &cfg,
+        vec![
+            WorkerOptions { max_jobs: Some(5), ..Default::default() },
+            WorkerOptions::default(),
+        ],
+        None,
+    );
+    assert_eq!(res.rounds.len(), 12, "run did not complete all commits");
+    // The death is on the event bus, attributed to worker 0.
+    let left = of_kind(&events, "worker_left");
+    assert_eq!(left.len(), 1, "expected exactly one worker_left event");
+    assert_eq!(left[0].get("worker").and_then(Json::as_usize), Some(0));
+    // Jobs dispatched after the 5th answer were lost and must have been
+    // retired (the counter is also in the event for operators).
+    assert!(left[0].get("jobs_retired").and_then(Json::as_usize).is_some());
+    // Training still progressed on the surviving worker.
+    let first = res.curve.points.first().unwrap().loss;
+    let last = res.curve.points.last().unwrap().loss;
+    assert!(last.is_finite() && last < first, "churned run did not train");
+}
+
+#[test]
+fn late_joiner_is_absorbed_and_takes_over_after_a_death() {
+    // One initial worker (slowed so the run outlasts the handshake), one
+    // late joiner, and the initial worker dies after 6 jobs: the run can
+    // only complete if the joiner was absorbed mid-run and the dead
+    // worker's nodes were re-pinned onto it.
+    let cfg = ExperimentConfig {
+        async_rounds: true,
+        buffer_size: 2,
+        max_staleness: 6,
+        t_total: 24, // 12 commits
+        ..cluster_cfg(53)
+    };
+    let (res, events) = run_cluster_churn(
+        &cfg,
+        vec![WorkerOptions {
+            work_delay: Some(Duration::from_millis(30)),
+            max_jobs: Some(6),
+            ..Default::default()
+        }],
+        Some(Duration::from_millis(50)),
+    );
+    assert_eq!(res.rounds.len(), 12, "run did not complete all commits");
+    // Setup joins worker 0; the mid-run joiner is worker 1.
+    let joined = of_kind(&events, "worker_joined");
+    assert_eq!(joined.len(), 2, "expected setup join + mid-run join");
+    assert_eq!(joined[1].get("worker").and_then(Json::as_usize), Some(1));
+    let left = of_kind(&events, "worker_left");
+    assert_eq!(left.len(), 1);
+    assert_eq!(left[0].get("worker").and_then(Json::as_usize), Some(0));
+    // Commits kept flowing after the handover.
+    assert!(of_kind(&events, "commit").len() >= 12);
 }

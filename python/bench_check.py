@@ -19,10 +19,20 @@ floor by editing the baseline, or refresh all floors from a run with:
 which rewrites BASELINE with CURRENT's measured rates scaled by
 --update-headroom (default 0.5, i.e. new floor = half the measured rate).
 
+CI additionally emits a *proposal* (never applied automatically) as a
+workflow artifact from every bench run:
+
+    python3 python/bench_check.py CURRENT BASELINE --propose OUT
+
+writes OUT with tightened floors at --propose-headroom (default 0.8) of
+the measured rates — so the PR that lands a speedup can ratchet the
+committed floors by copying the artifact instead of hand-editing numbers.
+
 Baseline records whose name is missing from the current run fail the gate
-(a silently deleted bench is a coverage regression); current records
-missing from the baseline are reported but pass, so adding a bench does
-not require touching the baseline in the same commit.
+with the missing name spelled out (a silently deleted or renamed bench is
+a coverage regression); current records missing from the baseline are
+warned about but pass, so adding a bench does not require touching the
+baseline in the same commit.
 """
 
 import argparse
@@ -35,15 +45,39 @@ def load_doc(path):
         return json.load(f)
 
 
-def records_of(doc):
+def records_of(doc, path):
     # Group files are {"group": ..., "records": [...]}; tolerate a bare
-    # list so hand-written baselines can stay minimal.
-    records = doc["records"] if isinstance(doc, dict) else doc
+    # list so hand-written baselines can stay minimal. Malformed files
+    # name themselves and the offending key instead of a bare KeyError.
+    if isinstance(doc, dict):
+        if "records" not in doc:
+            sys.exit(
+                f"error: {path}: no 'records' key (got keys "
+                f"{sorted(doc)}) — not a BENCH_*.json group file?"
+            )
+        records = doc["records"]
+    else:
+        records = doc
     out = {}
-    for r in records:
+    for i, r in enumerate(records):
+        if not isinstance(r, dict) or "name" not in r:
+            sys.exit(f"error: {path}: record {i} has no 'name': {r!r}")
         if r.get("elems_per_sec") is not None:
             out[r["name"]] = float(r["elems_per_sec"])
     return out
+
+
+def write_floors(path, group, comment, records, headroom):
+    doc = {"group": group}
+    if comment is not None:
+        doc["_comment"] = comment
+    doc["records"] = [
+        {"name": name, "elems_per_sec": rate * headroom}
+        for name, rate in sorted(records.items())
+    ]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
 
 
 def main():
@@ -67,34 +101,49 @@ def main():
         default=0.5,
         help="when updating: new floor = measured rate * headroom",
     )
+    ap.add_argument(
+        "--propose",
+        metavar="OUT",
+        help="instead of checking, write a tightened-floor proposal JSON "
+        "to OUT (CI uploads it as the bench-floor-proposal artifact)",
+    )
+    ap.add_argument(
+        "--propose-headroom",
+        type=float,
+        default=0.8,
+        help="when proposing: new floor = measured rate * headroom",
+    )
     args = ap.parse_args()
 
     current_doc = load_doc(args.current)
-    current = records_of(current_doc)
+    current = records_of(current_doc, args.current)
+    group = (current_doc.get("group", "bench")
+             if isinstance(current_doc, dict) else "bench")
+    # Keep the old baseline's policy note, if any — it documents why the
+    # floors are what they are.
+    comment = None
+    try:
+        old = load_doc(args.baseline)
+        if isinstance(old, dict) and "_comment" in old:
+            comment = old["_comment"]
+    except (OSError, ValueError):
+        pass
+
     if args.update:
-        group = (current_doc.get("group", "bench")
-                 if isinstance(current_doc, dict) else "bench")
-        doc = {"group": group}
-        # Keep the old baseline's policy note, if any — it documents why
-        # the floors are what they are.
-        try:
-            old = load_doc(args.baseline)
-            if isinstance(old, dict) and "_comment" in old:
-                doc["_comment"] = old["_comment"]
-        except (OSError, ValueError):
-            pass
-        doc["records"] = [
-            {"name": name, "elems_per_sec": rate * args.update_headroom}
-            for name, rate in sorted(current.items())
-        ]
-        with open(args.baseline, "w") as f:
-            json.dump(doc, f, indent=2)
-            f.write("\n")
+        write_floors(args.baseline, group, comment, current,
+                     args.update_headroom)
         print(f"rewrote {args.baseline} from {args.current} "
               f"(headroom {args.update_headroom})")
         return 0
+    if args.propose:
+        write_floors(args.propose, group, comment, current,
+                     args.propose_headroom)
+        print(f"proposed floors in {args.propose} from {args.current} "
+              f"(headroom {args.propose_headroom}; review and copy over "
+              f"{args.baseline} to ratchet)")
+        return 0
 
-    baseline = records_of(load_doc(args.baseline))
+    baseline = records_of(load_doc(args.baseline), args.baseline)
     if not baseline:
         print(f"error: no comparable records in baseline {args.baseline}")
         return 2
@@ -104,7 +153,10 @@ def main():
     for name, want in sorted(baseline.items()):
         got = current.get(name)
         if got is None:
-            failures.append(f"{name}: present in baseline but missing from run")
+            failures.append(
+                f"{name}: present in baseline {args.baseline} but missing "
+                f"from run {args.current} (deleted or renamed bench?)"
+            )
             continue
         floor = want * floor_frac
         verdict = "OK" if got >= floor else "REGRESSION"
@@ -114,9 +166,10 @@ def main():
             failures.append(
                 f"{name}: {got/1e6:.1f} Melem/s < floor {floor/1e6:.1f} Melem/s"
             )
-    for name in sorted(set(current) - set(baseline)):
-        print(f"{'NEW':>10}  {name}: {current[name]/1e6:10.1f} Melem/s "
-              f"(no baseline yet)")
+    extras = sorted(set(current) - set(baseline))
+    for name in extras:
+        print(f"{'WARN':>10}  {name}: {current[name]/1e6:10.1f} Melem/s "
+              f"(measured but not in the baseline — add a floor)")
 
     if failures:
         print(f"\n{len(failures)} benchmark regression(s) beyond "
@@ -124,7 +177,11 @@ def main():
         for f_ in failures:
             print(f"  {f_}", file=sys.stderr)
         return 1
-    print("\nall benchmarks within the regression budget")
+    if extras:
+        print(f"\nall benchmarks within the regression budget "
+              f"({len(extras)} unfloored group(s) warned above)")
+    else:
+        print("\nall benchmarks within the regression budget")
     return 0
 
 

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Spawn a loopback fedpaq TCP cluster: one leader on an ephemeral port
+plus N workers, wait for every process, collect the leader's --out-json.
+
+This is the one orchestration helper behind every TCP leg of the CI
+determinism job (plain loopback runs, leader kill/resume, worker churn) —
+it replaces the shell `run_cluster`/`run_leader` functions the job had
+grown five near-copies of. The protocol it automates:
+
+1. launch `fedpaq leader --bind 127.0.0.1:0` with stderr to a log file
+   (truncated first, so a second invocation never scrapes a stale
+   address);
+2. poll the log for the `leader: listening on <addr>` line;
+3. launch the workers against that address (`--retry-secs 30` unless the
+   per-worker extra args already say otherwise);
+4. wait for every process individually — any non-zero exit dumps the
+   leader log and fails the run.
+
+Examples:
+
+    python3 python/run_cluster.py --fedpaq target/release/fedpaq \\
+        --config configs/async_tcp_logreg.json --out-json /tmp/a.json
+    python3 python/run_cluster.py ... \\
+        --leader-args "--checkpoint /tmp/tcp.ck --stop-after 3"
+    python3 python/run_cluster.py ... --workers 2 \\
+        --worker-args "--max-jobs 4"   # worker 0 only; worker 1 plain
+"""
+
+import argparse
+import shlex
+import subprocess
+import sys
+import time
+
+ADDR_PREFIX = "leader: listening on "
+
+
+def scrape_addr(log_path, timeout):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        try:
+            with open(log_path) as f:
+                for line in f:
+                    if line.startswith(ADDR_PREFIX):
+                        return line[len(ADDR_PREFIX):].strip()
+        except OSError:
+            pass
+        time.sleep(0.1)
+    return None
+
+
+def dump_log(log_path):
+    try:
+        with open(log_path) as f:
+            sys.stderr.write(f.read())
+    except OSError as e:
+        print(f"(no leader log: {e})", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fedpaq", default="target/release/fedpaq",
+                    help="path to the fedpaq binary")
+    ap.add_argument("--config", required=True,
+                    help="experiment config JSON for the leader")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="number of worker processes (default 2)")
+    ap.add_argument("--out-json", required=True,
+                    help="leader RunResult output path")
+    ap.add_argument("--leader-args", default="",
+                    help="extra leader args, one shell-quoted string "
+                    "(e.g. \"--checkpoint /tmp/x.ck --stop-after 3\")")
+    ap.add_argument("--worker-args", action="append", default=[],
+                    help="extra args for one worker (repeatable; i-th flag "
+                    "goes to the i-th worker, later workers get none)")
+    ap.add_argument("--leader-log", default=None,
+                    help="leader stderr log path "
+                    "(default: <out-json>.leader.log)")
+    ap.add_argument("--listen-timeout", type=float, default=10.0,
+                    help="seconds to wait for the leader's listen line")
+    args = ap.parse_args()
+
+    log_path = args.leader_log or args.out_json + ".leader.log"
+    leader_cmd = [
+        args.fedpaq, "leader", "--config", args.config,
+        "--bind", "127.0.0.1:0", "--workers", str(args.workers),
+    ] + shlex.split(args.leader_args) + ["--out-json", args.out_json]
+
+    procs = []  # (name, Popen)
+    try:
+        with open(log_path, "w") as log:
+            leader = subprocess.Popen(leader_cmd, stderr=log)
+        procs.append(("leader", leader))
+
+        addr = scrape_addr(log_path, args.listen_timeout)
+        if addr is None:
+            print("leader never started listening", file=sys.stderr)
+            dump_log(log_path)
+            return 1
+
+        extras = args.worker_args + [""] * (args.workers - len(args.worker_args))
+        for i in range(args.workers):
+            extra = shlex.split(extras[i])
+            cmd = [args.fedpaq, "worker", "--connect", addr]
+            if "--retry-secs" not in extra:
+                cmd += ["--retry-secs", "30"]
+            procs.append((f"worker{i}", subprocess.Popen(cmd + extra)))
+
+        ok = True
+        for name, proc in procs:
+            rc = proc.wait()
+            if rc != 0:
+                print(f"{name} exited with {rc}", file=sys.stderr)
+                ok = False
+        if not ok:
+            dump_log(log_path)
+            return 1
+        return 0
+    finally:
+        for _, proc in procs:
+            if proc.poll() is None:
+                proc.terminate()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

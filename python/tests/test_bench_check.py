@@ -1,0 +1,117 @@
+"""bench_check.py gate semantics: floor proposals, malformed-file
+diagnostics, missing-baseline-record failures and unfloored-extra
+warnings — the behaviours CI leans on."""
+
+import json
+
+import pytest
+
+import bench_check
+
+
+def write(path, doc):
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def group(records, **extra):
+    return {"group": "aggregate", **extra, "records": records}
+
+
+def rec(name, rate):
+    return {"name": name, "elems_per_sec": rate}
+
+
+def run_main(monkeypatch, *argv):
+    monkeypatch.setattr("sys.argv", ["bench_check.py", *argv])
+    return bench_check.main()
+
+
+# -------------------------------------------------- --propose artifact
+
+
+def test_propose_writes_headroom_scaled_floors(tmp_path, monkeypatch):
+    current = write(tmp_path / "cur.json",
+                    group([rec("a/fused", 100.0), rec("b", 50.0)]))
+    baseline = write(tmp_path / "base.json",
+                     group([rec("a/fused", 10.0)], _comment="policy note"))
+    out = tmp_path / "proposal.json"
+
+    assert run_main(monkeypatch, current, baseline, "--propose", str(out)) == 0
+
+    doc = json.loads(out.read_text())
+    assert doc["group"] == "aggregate"
+    # The baseline's policy note rides along into the proposal.
+    assert doc["_comment"] == "policy note"
+    floors = {r["name"]: r["elems_per_sec"] for r in doc["records"]}
+    assert floors == {"a/fused": 80.0, "b": 40.0}
+
+
+def test_propose_headroom_is_configurable(tmp_path, monkeypatch):
+    current = write(tmp_path / "cur.json", group([rec("a", 100.0)]))
+    baseline = write(tmp_path / "base.json", group([rec("a", 10.0)]))
+    out = tmp_path / "proposal.json"
+
+    assert run_main(monkeypatch, current, baseline, "--propose", str(out),
+                    "--propose-headroom", "0.5") == 0
+    doc = json.loads(out.read_text())
+    assert doc["records"] == [rec("a", 50.0)]
+
+
+# -------------------------------------------------- malformed inputs
+
+
+def test_missing_records_key_names_the_file(tmp_path, monkeypatch):
+    current = write(tmp_path / "cur.json", {"group": "aggregate"})
+    baseline = write(tmp_path / "base.json", group([rec("a", 1.0)]))
+
+    with pytest.raises(SystemExit) as exc:
+        run_main(monkeypatch, current, baseline)
+    msg = str(exc.value)
+    assert "cur.json" in msg and "no 'records' key" in msg
+    assert "'group'" in msg  # the keys it DID find
+
+
+def test_record_without_name_names_the_index(tmp_path, monkeypatch):
+    current = write(tmp_path / "cur.json",
+                    group([rec("a", 1.0), {"elems_per_sec": 2.0}]))
+    baseline = write(tmp_path / "base.json", group([rec("a", 1.0)]))
+
+    with pytest.raises(SystemExit) as exc:
+        run_main(monkeypatch, current, baseline)
+    assert "record 1 has no 'name'" in str(exc.value)
+
+
+# -------------------------------------------------- gate semantics
+
+
+def test_baseline_record_missing_from_run_fails(tmp_path, monkeypatch, capsys):
+    current = write(tmp_path / "cur.json", group([rec("kept", 100.0)]))
+    baseline = write(tmp_path / "base.json",
+                     group([rec("kept", 10.0), rec("deleted", 10.0)]))
+
+    assert run_main(monkeypatch, current, baseline) == 1
+    err = capsys.readouterr().err
+    assert "deleted" in err and "missing" in err
+
+
+def test_extra_measured_records_warn_but_pass(tmp_path, monkeypatch, capsys):
+    current = write(tmp_path / "cur.json",
+                    group([rec("floored", 100.0), rec("new_bench", 5.0)]))
+    baseline = write(tmp_path / "base.json", group([rec("floored", 10.0)]))
+
+    assert run_main(monkeypatch, current, baseline) == 0
+    out = capsys.readouterr().out
+    assert "WARN" in out and "new_bench" in out
+    assert "1 unfloored group(s)" in out
+
+
+def test_regression_beyond_budget_fails(tmp_path, monkeypatch, capsys):
+    current = write(tmp_path / "cur.json", group([rec("a", 70.0)]))
+    baseline = write(tmp_path / "base.json", group([rec("a", 100.0)]))
+
+    assert run_main(monkeypatch, current, baseline) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # A 30% drop passes once the budget is widened to match.
+    assert run_main(monkeypatch, current, baseline,
+                    "--max-regression", "0.35") == 0

@@ -83,8 +83,9 @@ fn aggregation() {
     let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.13).cos() * 0.01).collect();
     let mut rng = Rng::seed_from_u64(2);
     let encs: Vec<_> = (0..25).map(|_| q.encode(&x, &mut rng)).collect();
-    // One long-lived aggregator, reset per round: the decode scratch and
-    // sum buffers are allocated once, as on the real hot path.
+    // One long-lived aggregator, reset per round: the sum buffer is
+    // allocated once and uploads stream in fused, as on the real hot
+    // path.
     let mut agg = Aggregator::new(p);
     g.bench_elems("r25_p92k_qsgd1", (25 * p) as u64, || {
         agg.reset();
@@ -124,6 +125,46 @@ fn aggregation() {
                 black_box(&params);
             },
         );
+    }
+
+    // Fused (`UpdateCodec::accumulate_range`) vs scratch (`decode_range`
+    // + widening add — the pre-fusion hot loop, kept here as the
+    // comparison baseline) at the same r=8 × 2^20 commit shape, across
+    // every codec family. The fused/scratch ratio is the ISSUE's
+    // measured multiple; both rows are floored in
+    // rust/benches/baseline/BENCH_aggregate.json so neither side of the
+    // comparison can silently rot.
+    for (label, spec) in [
+        ("identity", CodecSpec::Identity),
+        ("qsgd1", CodecSpec::qsgd(1)),
+        ("qsgd_s7_elias", CodecSpec::Qsgd { s: 7, coding: Coding::Elias }),
+        ("topk_100", CodecSpec::top_k(100)),
+        ("randk_100_seeded", CodecSpec::rand_k(100)),
+        ("adaptive_b4", CodecSpec::adaptive(4)),
+        ("ef_qsgd1", CodecSpec::error_feedback(CodecSpec::qsgd(1))),
+    ] {
+        let q = spec.build().unwrap();
+        let mut rng = Rng::seed_from_u64(4);
+        let encs: Vec<Encoded> = (0..r).map(|_| q.encode(&x, &mut rng)).collect();
+        let mut sum = vec![0f64; p];
+        g.bench_elems(&format!("p1m_r8_{label}/fused"), (r * p) as u64, || {
+            sum.iter_mut().for_each(|s| *s = 0.0);
+            for e in &encs {
+                q.accumulate_range(black_box(e), 0, p, 1.0, &mut sum).unwrap();
+            }
+            black_box(&sum);
+        });
+        let mut scratch: Vec<f32> = Vec::new();
+        g.bench_elems(&format!("p1m_r8_{label}/scratch"), (r * p) as u64, || {
+            sum.iter_mut().for_each(|s| *s = 0.0);
+            for e in &encs {
+                q.decode_range(black_box(e), 0, p, &mut scratch).unwrap();
+                for (acc, &v) in sum.iter_mut().zip(&scratch) {
+                    *acc += v as f64;
+                }
+            }
+            black_box(&sum);
+        });
     }
     g.finish();
 }

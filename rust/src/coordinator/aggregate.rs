@@ -18,9 +18,14 @@
 //! [`Aggregator::push_batch`] / [`Aggregator::apply_sharded`] drive one
 //! scoped thread per range (`std::thread::scope` — no runtime, no extra
 //! dependencies). Each shard owns `sum[lo..hi]` exclusively and replays
-//! the committed uploads **in batch order** over only its range, decoding
-//! just `lo..hi` of each upload via
-//! [`UpdateCodec::decode_range`](crate::quant::UpdateCodec::decode_range).
+//! the committed uploads **in batch order** over only its range via the
+//! fused
+//! [`UpdateCodec::accumulate_range`](crate::quant::UpdateCodec::accumulate_range)
+//! kernels: each upload's `lo..hi` window streams straight into the f64
+//! accumulators, with no per-upload scratch `Vec<f32>` anywhere on the
+//! hot path (the kernels are pinned bit-identical to the old
+//! decode-then-add loop by `prop_accumulate_range_matches_decode_range_add`,
+//! so swapping them in changed no bit of any run).
 //!
 //! **Determinism is a contract, not a hope:** for a fixed batch, the
 //! additions landing on any single element `sum[i]` happen in exactly the
@@ -35,12 +40,21 @@
 //! shard count is a pure throughput knob — free to differ between the
 //! machine that trained a run and the machine that replays it.
 //!
+//! The fused kernels extend the same contract one level down: within an
+//! upload's window each coordinate receives exactly one f64 add of
+//! `weight · v` (the multiply skipped entirely at `weight == 1.0`,
+//! preserving the historical unweighted mean bitwise), sparse codecs may
+//! skip their implicit zeros because these accumulators never hold
+//! `-0.0` (they start at `+0.0`, and round-to-nearest addition cannot
+//! produce `-0.0` from it), and the `sum[i]` addition chain remains
+//! batch-ordered for every shard count.
+//!
 //! The ledger invariants (`count`, `weight_sum`, one `upload_bits` entry
 //! per absorbed upload) are enforced with real `Err`s in release builds:
 //! a miscounted round aborts loudly instead of silently corrupting a
 //! long run.
 
-use crate::quant::{Encoded, UpdateCodec};
+use crate::quant::{accumulate_slice, Encoded, UpdateCodec};
 
 /// Disjoint contiguous parameter ranges for sharded accumulation: `k`
 /// near-equal ranges covering `0..p` (the first `p mod k` ranges are one
@@ -144,8 +158,10 @@ impl StalenessRule {
 /// order themselves).
 ///
 /// Designed to live for a whole run: [`Aggregator::reset`] rewinds it for
-/// the next round while keeping the `sum` and decode-scratch allocations,
-/// so the per-upload hot path ([`Aggregator::push`]) allocates nothing.
+/// the next round while keeping the `sum` allocation; the per-upload hot
+/// path ([`Aggregator::push`]) streams each frame straight into the f64
+/// accumulators through the fused [`UpdateCodec::accumulate_range`]
+/// kernels, so it allocates nothing and materializes no scratch decode.
 ///
 /// Every public entry point ([`push`](Aggregator::push),
 /// [`push_weighted`](Aggregator::push_weighted),
@@ -166,19 +182,11 @@ pub struct Aggregator {
     count: usize,
     weight_sum: f64,
     bits: Vec<u64>,
-    /// Reused decode buffer: one allocation per run, not per upload.
-    scratch: Vec<f32>,
 }
 
 impl Aggregator {
     pub fn new(p: usize) -> Self {
-        Aggregator {
-            sum: vec![0.0; p],
-            count: 0,
-            weight_sum: 0.0,
-            bits: Vec::new(),
-            scratch: Vec::new(),
-        }
+        Aggregator { sum: vec![0.0; p], count: 0, weight_sum: 0.0, bits: Vec::new() }
     }
 
     /// Rewind for the next round, keeping all allocations.
@@ -189,11 +197,13 @@ impl Aggregator {
         self.bits.clear();
     }
 
-    /// The single streaming accumulation path: absorb `dec` with weight
-    /// `weight`, recording `bits` uplink bits. Every per-upload entry
-    /// point funnels through here ([`Aggregator::push_batch`] replays the
-    /// same arithmetic shard-wise); the ledger check pins the invariant
-    /// that one upload contributes exactly one entry to every ledger.
+    /// The decoded-slice accumulation path: absorb `dec` with weight
+    /// `weight`, recording `bits` uplink bits — the arithmetic the fused
+    /// wire path ([`Aggregator::push_weighted`] via
+    /// [`UpdateCodec::accumulate_range`]) reproduces bit for bit
+    /// (`accumulate_slice` is the same weight-branched widening add the
+    /// kernels fuse). The ledger check pins the invariant that one upload
+    /// contributes exactly one entry to every ledger.
     fn absorb(&mut self, dec: &[f32], bits: u64, weight: f64) -> crate::Result<()> {
         anyhow::ensure!(
             dec.len() == self.sum.len(),
@@ -205,24 +215,18 @@ impl Aggregator {
             weight.is_finite() && weight > 0.0,
             "aggregation weight must be finite and positive, got {weight}"
         );
-        if weight == 1.0 {
-            // Keep the uniform path bit-identical to the historical
-            // unweighted mean (multiplying by 1.0 is exact, but skipping
-            // the multiply entirely makes the intent auditable).
-            for (s, &v) in self.sum.iter_mut().zip(dec) {
-                *s += v as f64;
-            }
-        } else {
-            for (s, &v) in self.sum.iter_mut().zip(dec) {
-                *s += v as f64 * weight;
-            }
-        }
+        accumulate_slice(&mut self.sum, dec, weight);
+        self.ledger(bits, weight)
+    }
+
+    /// Advance the ledgers for one absorbed upload, enforcing their
+    /// lockstep. Drift here would mean `apply` divides by a normalizer
+    /// that doesn't match the absorbed uploads — a silent corruption in
+    /// a long run. Checked in release builds, not just debug.
+    fn ledger(&mut self, bits: u64, weight: f64) -> crate::Result<()> {
         self.bits.push(bits);
         self.count += 1;
         self.weight_sum += weight;
-        // Drift here would mean `apply` divides by a normalizer that
-        // doesn't match the absorbed uploads — a silent corruption in a
-        // long run. Checked in release builds, not just debug.
         anyhow::ensure!(
             self.bits.len() == self.count,
             "aggregator ledgers out of sync: {} bit records for {} uploads",
@@ -237,10 +241,11 @@ impl Aggregator {
     ///
     /// **Bit-identical to the sequential path for every shard count**:
     /// each shard replays the uploads in batch order over only its own
-    /// `sum[lo..hi]` (decoding just that range via
-    /// [`UpdateCodec::decode_range`]), so the additions landing on any
-    /// single element happen in exactly the order the single-shard loop
-    /// would perform them — see the module docs for the full contract.
+    /// `sum[lo..hi]` (streaming just that window through the fused
+    /// [`UpdateCodec::accumulate_range`] kernel), so the additions
+    /// landing on any single element happen in exactly the order the
+    /// single-shard loop would perform them — see the module docs for
+    /// the full contract.
     ///
     /// Dimensions and weights are validated up front on every path, so a
     /// malformed batch absorbs nothing. A *decode* failure mid-batch (a
@@ -300,19 +305,11 @@ impl Aggregator {
                 .into_iter()
                 .map(|((lo, hi), shard)| {
                     s.spawn(move || -> crate::Result<()> {
-                        let mut scratch = Vec::with_capacity(hi - lo);
                         for &(enc, w) in batch {
-                            codec.decode_range(enc, lo, hi, &mut scratch)?;
-                            if w == 1.0 {
-                                // Same exact-1.0 fast path as `absorb`.
-                                for (acc, &v) in shard.iter_mut().zip(&scratch) {
-                                    *acc += v as f64;
-                                }
-                            } else {
-                                for (acc, &v) in shard.iter_mut().zip(&scratch) {
-                                    *acc += v as f64 * w;
-                                }
-                            }
+                            // Fused kernel: the upload's window streams
+                            // straight into this shard's accumulators —
+                            // no scratch decode, bit-identical to one.
+                            codec.accumulate_range(enc, lo, hi, w, shard)?;
                         }
                         Ok(())
                     })
@@ -328,22 +325,14 @@ impl Aggregator {
         // path (weight_sum is an f64 sum, so order matters for bit
         // reproducibility too).
         for &(enc, w) in batch {
-            self.bits.push(enc.bits());
-            self.count += 1;
-            self.weight_sum += w;
+            self.ledger(enc.bits(), w)?;
         }
-        anyhow::ensure!(
-            self.bits.len() == self.count,
-            "aggregator ledgers out of sync: {} bit records for {} uploads",
-            self.bits.len(),
-            self.count
-        );
         Ok(())
     }
 
     /// Decode and absorb one node's upload at weight 1 (allocation-free:
-    /// decodes into the internal scratch buffer via
-    /// [`UpdateCodec::decode_into`]).
+    /// streams the frame into the accumulators via the fused
+    /// [`UpdateCodec::accumulate_range`] kernel).
     pub fn push(&mut self, codec: &dyn UpdateCodec, enc: &Encoded) -> crate::Result<()> {
         self.push_weighted(codec, enc, 1.0)
     }
@@ -356,18 +345,16 @@ impl Aggregator {
         enc: &Encoded,
         weight: f64,
     ) -> crate::Result<()> {
+        // Explicit dimension check first: a shorter upload must not
+        // silently accumulate into a prefix of the model.
         anyhow::ensure!(
             enc.p == self.sum.len(),
             "upload dimension mismatch: {} != {}",
             enc.p,
             self.sum.len()
         );
-        codec.decode_into(enc, &mut self.scratch)?;
-        // Move scratch out to appease the borrow checker without copying.
-        let scratch = std::mem::take(&mut self.scratch);
-        let r = self.absorb(&scratch, enc.bits(), weight);
-        self.scratch = scratch;
-        r
+        codec.accumulate_range(enc, 0, enc.p, weight, &mut self.sum)?;
+        self.ledger(enc.bits(), weight)
     }
 
     /// Absorb an already-decoded update at weight 1, skipping the wire

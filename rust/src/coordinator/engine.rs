@@ -410,9 +410,11 @@ impl RoundEngine {
         // One shard plan for the whole run; `cfg.agg_shards == 1` is the
         // historical single-threaded accumulation, larger values fan the
         // f64 accumulate/apply across scoped threads with bit-identical
-        // results (the aggregate module's determinism contract). Every
-        // transport — InProcess, AsyncSim, and the net::Tcp leader —
-        // funnels through this one path.
+        // results (the aggregate module's determinism contract). Either
+        // way each upload streams through the fused scratch-free
+        // `UpdateCodec::accumulate_range` kernels. Every transport —
+        // InProcess, AsyncSim, and the net::Tcp leader — funnels through
+        // this one path.
         let plan = ShardPlan::new(p, cfg.agg_shards);
 
         for k in start_k..rounds {

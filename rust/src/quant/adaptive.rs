@@ -23,8 +23,9 @@
 
 use super::bitstream::BitWriter;
 use super::{
-    check_range, check_spec, l2_norm, level_bits, qsgd_decode_range_body,
-    qsgd_encode_body, Coding, CodecSpec, Encoded, UpdateCodec,
+    check_accumulate, check_range, check_spec, l2_norm, level_bits,
+    qsgd_accumulate_range_body, qsgd_decode_range_body, qsgd_encode_body, Coding, CodecSpec,
+    Encoded, UpdateCodec,
 };
 use crate::util::rng::Rng;
 
@@ -115,6 +116,45 @@ impl UpdateCodec for AdaptiveQsgdCodec {
             enc.p
         );
         qsgd_decode_range_body(enc, HEADER_BITS, norm, s, self.coding, lo, hi, out)
+    }
+
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        anyhow::ensure!(
+            enc.buf.len_bits() >= HEADER_BITS,
+            "adaptive-QSGD frame truncated: {} bits, header needs {HEADER_BITS}",
+            enc.buf.len_bits()
+        );
+        let mut hr = enc.buf.reader();
+        let s = hr.read_bits(32) as u32;
+        let norm = hr.read_f32();
+        // Same forged-header rejection as `decode_range`.
+        anyhow::ensure!(
+            s == self.s_for(enc.p),
+            "adaptive-QSGD header s={s} does not match the dial's s={} for \
+             p={}",
+            self.s_for(enc.p),
+            enc.p
+        );
+        qsgd_accumulate_range_body(
+            enc,
+            HEADER_BITS,
+            norm,
+            s,
+            self.coding,
+            lo,
+            hi,
+            weight,
+            sum,
+        )
     }
 
     fn analytic_bits(&self, p: usize) -> Option<u64> {

@@ -165,6 +165,20 @@ impl<C: UpdateCodec> UpdateCodec for ErrorFeedbackCodec<C> {
         self.inner.decode_range(enc, lo, hi, out)
     }
 
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        // Verbatim delegation: EF shapes what gets *encoded* (residual
+        // carry-in), never how a frame decodes — the inner codec's fused
+        // kernel is the right one bit for bit.
+        self.inner.accumulate_range(enc, lo, hi, weight, sum)
+    }
+
     fn analytic_bits(&self, p: usize) -> Option<u64> {
         self.inner.analytic_bits(p)
     }

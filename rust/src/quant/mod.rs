@@ -48,6 +48,19 @@
 //!    stream from any range. A bad value hiding in an *untraversed*
 //!    fixed-width field is caught by whichever decode touches it — the
 //!    full decode always does.
+//! 6. **Keep the fused accumulate bit-identical.** The aggregation hot
+//!    path calls [`UpdateCodec::accumulate_range`]: decode `lo..hi` and
+//!    add straight into per-coordinate f64 accumulators at a given
+//!    weight, with no scratch buffer. The provided default (range
+//!    decode + widening add) is correct for any codec; built-ins
+//!    override it with fused kernels that must stay **bit-identical**
+//!    to that scratch path — same reconstruction expressions, the same
+//!    rejection surface as `decode_range`, one add per in-window
+//!    coordinate, and the weight multiply *skipped* (not just exact) at
+//!    `weight == 1.0`, matching the aggregator's uniform-mean loop.
+//!    Sparsifiers may skip their implicit zeros outright because the
+//!    accumulator contract forbids `-0.0` entries (see the trait docs).
+//!    Pinned by `prop_accumulate_range_matches_decode_range_add`.
 //!
 //! ## Statefulness rules
 //!
@@ -437,6 +450,56 @@ pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
         Ok(())
     }
 
+    /// Decode coordinates `lo..hi` of `enc` and accumulate them into
+    /// `sum` (length exactly `hi − lo`, `sum[j] += weight ·
+    /// decoded[lo + j]` with the product taken in f64), fused so the
+    /// aggregation hot path needs no scratch `Vec<f32>` per upload.
+    ///
+    /// The provided default — [`UpdateCodec::decode_range`] into a
+    /// temporary, then a widening add — is correct for any codec and is
+    /// the behavioral spec every override must match **bit-identically**:
+    ///
+    /// - same decoded value per coordinate (use the same reconstruction
+    ///   expressions as the decode path, in the same order);
+    /// - one `+=` per coordinate of the window, in ascending coordinate
+    ///   order, each a single f64 add of `weight * v as f64` (or of
+    ///   `v as f64` alone when `weight == 1.0` — the multiply must be
+    ///   *skipped*, not merely exact, to match the aggregator's
+    ///   historical unweighted loop);
+    /// - same rejection surface as `decode_range` (corrupt frames, spec
+    ///   mismatches, bad ranges), plus: `sum.len() != hi − lo`,
+    ///   non-finite or non-positive `weight`. Argument rejections and
+    ///   data-independent frame-size checks happen before the first add;
+    ///   variable-width corruption detected mid-stream may leave a
+    ///   partial contribution, exactly as
+    ///   [`Aggregator::push_batch`](crate::coordinator::aggregate::Aggregator::push_batch)
+    ///   already documents for decode failures — every error is fatal to
+    ///   the run.
+    ///
+    /// Sparse codecs (top-k, rand-k) may skip the `+= 0.0` for
+    /// coordinates outside their support *only* because callers
+    /// guarantee no `sum` entry is `-0.0`: the
+    /// [`Aggregator`](crate::coordinator::aggregate::Aggregator)
+    /// accumulators start at `+0.0` and round-to-nearest addition
+    /// from `+0.0` can never
+    /// produce `-0.0`, and for any `x != -0.0`, `x + 0.0` is bitwise
+    /// `x`. (A `-0.0` entry would flip to `+0.0` under the scratch
+    /// path but survive under a skipping kernel.)
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        let mut scratch = Vec::with_capacity(hi - lo);
+        self.decode_range(enc, lo, hi, &mut scratch)?;
+        accumulate_slice(sum, &scratch, weight);
+        Ok(())
+    }
+
     /// Decode into a fresh vector (allocating convenience wrapper).
     fn decode(&self, enc: &Encoded) -> crate::Result<Vec<f32>> {
         let mut out = Vec::new();
@@ -512,6 +575,17 @@ impl UpdateCodec for Box<dyn UpdateCodec> {
         (**self).decode_range(enc, lo, hi, out)
     }
 
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        (**self).accumulate_range(enc, lo, hi, weight, sum)
+    }
+
     fn analytic_bits(&self, p: usize) -> Option<u64> {
         (**self).analytic_bits(p)
     }
@@ -571,12 +645,61 @@ impl UpdateCodec for IdentityCodec {
     ) -> crate::Result<()> {
         check_spec(self.spec(), enc)?;
         check_range(enc.p, lo, hi)?;
+        identity_check_frame(enc)?;
         // Fixed-width stream: coordinate i lives at bit 32·i exactly.
         let mut r = enc.buf.reader_at(32 * lo as u64)?;
         out.clear();
         out.reserve(hi - lo);
         for _ in lo..hi {
             out.push(r.read_f32());
+        }
+        Ok(())
+    }
+
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        identity_check_frame(enc)?;
+        // Fused word-level kernel: coordinate i is the low (even i) or
+        // high (odd i) 32 bits of packed word i/2, so the body streams
+        // two coordinates per u64 load with no BitReader per-call
+        // overhead and no scratch buffer. Values are bit-identical to
+        // `read_f32` — both are `f32::from_bits` of the same 32 bits.
+        let words = enc.buf.words();
+        let mut i = lo;
+        // Head: an odd `lo` starts mid-word.
+        if i < hi && i % 2 == 1 {
+            let v = f32::from_bits((words[i / 2] >> 32) as u32);
+            accumulate_one(&mut sum[i - lo], v, weight);
+            i += 1;
+        }
+        // Body: two-wide, weight branch hoisted out of the loop.
+        if weight == 1.0 {
+            while i + 1 < hi {
+                let w = words[i / 2];
+                sum[i - lo] += f32::from_bits(w as u32) as f64;
+                sum[i + 1 - lo] += f32::from_bits((w >> 32) as u32) as f64;
+                i += 2;
+            }
+        } else {
+            while i + 1 < hi {
+                let w = words[i / 2];
+                sum[i - lo] += weight * f32::from_bits(w as u32) as f64;
+                sum[i + 1 - lo] += weight * f32::from_bits((w >> 32) as u32) as f64;
+                i += 2;
+            }
+        }
+        // Tail: an odd remaining count ends mid-word.
+        if i < hi {
+            let v = f32::from_bits(words[i / 2] as u32);
+            accumulate_one(&mut sum[i - lo], v, weight);
         }
         Ok(())
     }
@@ -588,6 +711,19 @@ impl UpdateCodec for IdentityCodec {
     fn variance_q(&self, _p: usize) -> f64 {
         0.0
     }
+}
+
+/// Exact data-independent frame size for the identity coding, checked up
+/// front so every range (and the fused accumulate) rejects a truncated or
+/// oversized frame per module-doc contract item 5.
+fn identity_check_frame(enc: &Encoded) -> crate::Result<()> {
+    let expect = 32 * enc.p as u64;
+    anyhow::ensure!(
+        enc.buf.len_bits() == expect,
+        "identity frame truncated or oversized: {} bits, expected {expect}",
+        enc.buf.len_bits()
+    );
+    Ok(())
 }
 
 // ---------------- QSGD ----------------
@@ -732,6 +868,120 @@ pub(crate) fn qsgd_decode_range_body(
     Ok(())
 }
 
+/// Largest level count served by the stack reconstruction table in
+/// [`qsgd_accumulate_range_body`]; `s >= QSGD_LUT_MAX` falls back to the
+/// per-coordinate division (identical expression, identical bits).
+pub(crate) const QSGD_LUT_MAX: usize = 256;
+
+/// Shared QSGD-family fused accumulate body: the
+/// [`UpdateCodec::accumulate_range`] counterpart of
+/// [`qsgd_decode_range_body`], with the same validation surface and the
+/// same reconstruction expression `norm * level as f32 / s as f32` —
+/// precomputed into a stack table for small `s` (the common case), so
+/// the naive coding's hot loop is one combined sign+level bit read and
+/// one table lookup per coordinate: no scratch buffer, no per-coordinate
+/// division, no second reader call.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn qsgd_accumulate_range_body(
+    enc: &Encoded,
+    header_bits: u64,
+    norm: f32,
+    s: u32,
+    coding: Coding,
+    lo: usize,
+    hi: usize,
+    weight: f64,
+    sum: &mut [f64],
+) -> crate::Result<()> {
+    let nb = level_bits(s);
+    let sf = s as f32;
+    // Reconstruction table: lut[l] is bit-identical to the decode path's
+    // `norm * l as f32 / sf` because it is that expression. Stack-only —
+    // a heap table would cost an allocation per upload.
+    let mut lut = [0.0f32; QSGD_LUT_MAX];
+    let lut_len = (s as usize + 1).min(QSGD_LUT_MAX);
+    for (l, slot) in lut.iter_mut().enumerate().take(lut_len) {
+        *slot = norm * l as f32 / sf;
+    }
+    let lut = &lut[..lut_len];
+    match coding {
+        Coding::Naive => {
+            let expect = header_bits + enc.p as u64 * (1 + nb as u64);
+            anyhow::ensure!(
+                enc.buf.len_bits() == expect,
+                "QSGD frame truncated or oversized: {} bits, expected {expect}",
+                enc.buf.len_bits()
+            );
+            let mut r = enc.buf.reader_at(header_bits + lo as u64 * (1 + nb as u64))?;
+            for acc in sum.iter_mut() {
+                // Sign is written first, so LSB-first packing puts it in
+                // bit 0 of a combined (1 + nb)-bit read; the level is the
+                // remaining high bits.
+                let field = r.read_bits(1 + nb);
+                let sign = field & 1 == 1;
+                let level = (field >> 1) as usize;
+                // The table lookup doubles as the `level <= s` bound for
+                // tabulated levels.
+                let mag = match lut.get(level) {
+                    Some(&m) => m,
+                    None => {
+                        anyhow::ensure!(
+                            level as u64 <= s as u64,
+                            "QSGD level {level} beyond s={s}: corrupt frame"
+                        );
+                        norm * level as f32 / sf
+                    }
+                };
+                accumulate_one(acc, if sign { -mag } else { mag }, weight);
+            }
+        }
+        Coding::Elias => {
+            // Same checked skip-scan as the decode body: every traversed
+            // bit and level bound is validated identically.
+            let mut r = enc.buf.reader_at(header_bits)?;
+            for _ in 0..lo {
+                anyhow::ensure!(
+                    r.remaining() >= 1,
+                    "QSGD frame truncated in the skipped prefix"
+                );
+                r.read_bit();
+                let level = elias::try_decode_omega(&mut r)? - 1;
+                anyhow::ensure!(
+                    level <= s as u64,
+                    "QSGD level {level} beyond s={s}: corrupt frame"
+                );
+            }
+            for acc in sum.iter_mut() {
+                anyhow::ensure!(
+                    r.remaining() >= 1,
+                    "QSGD frame truncated mid-coordinate"
+                );
+                let sign = r.read_bit();
+                let level = elias::try_decode_omega(&mut r)? - 1;
+                let mag = match lut.get(level as usize) {
+                    Some(&m) => m,
+                    None => {
+                        anyhow::ensure!(
+                            level <= s as u64,
+                            "QSGD level {level} beyond s={s}: corrupt frame"
+                        );
+                        norm * level as f32 / sf
+                    }
+                };
+                accumulate_one(acc, if sign { -mag } else { mag }, weight);
+            }
+            if hi == enc.p {
+                anyhow::ensure!(
+                    r.remaining() == 0,
+                    "QSGD frame truncated or oversized: {} trailing bits",
+                    r.remaining()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 impl UpdateCodec for QsgdCodec {
     fn spec(&self) -> CodecSpec {
         CodecSpec::Qsgd { s: self.s, coding: self.coding }
@@ -766,6 +1016,24 @@ impl UpdateCodec for QsgdCodec {
         );
         let norm = enc.buf.reader().read_f32();
         qsgd_decode_range_body(enc, 32, norm, self.s, self.coding, lo, hi, out)
+    }
+
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        anyhow::ensure!(
+            enc.buf.len_bits() >= 32,
+            "QSGD frame truncated: missing norm header"
+        );
+        let norm = enc.buf.reader().read_f32();
+        qsgd_accumulate_range_body(enc, 32, norm, self.s, self.coding, lo, hi, weight, sum)
     }
 
     fn analytic_bits(&self, p: usize) -> Option<u64> {
@@ -836,22 +1104,20 @@ pub(crate) fn sparse_encode_elias(w: &mut BitWriter, idx: &[u32], x: &[f32]) {
     }
 }
 
-/// Shared sparse-stream decode: scan all `k` Elias-delta pairs (k ≪ p,
-/// and the full scan preserves the ascending/unique/in-range/truncation
-/// validation for *every* range), placing in-window values into `out`
-/// (length `hi − lo`), scaled by `scale`. `what` names the codec in
-/// errors.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn sparse_decode_elias(
+/// Shared sparse-stream scan: validate and walk all `k` Elias-delta
+/// `(index, value)` pairs (k ≪ p, and the full scan preserves the
+/// ascending/unique/in-range/truncation validation for *every* caller),
+/// calling `visit(i, v)` for each pair with `v` already scaled. Both the
+/// range decode ([`sparse_decode_elias`]) and the fused accumulate
+/// kernels drive this one scan, so their validation and reconstruction
+/// cannot drift. `what` names the codec in errors.
+pub(crate) fn sparse_scan_elias(
     enc: &Encoded,
     k: usize,
-    lo: usize,
-    hi: usize,
     scale: f32,
-    out: &mut [f32],
     what: &str,
+    mut visit: impl FnMut(usize, f32),
 ) -> crate::Result<()> {
-    debug_assert_eq!(out.len(), hi - lo);
     let p = enc.p;
     let mut r = enc.buf.reader();
     let mut prev: u64 = 0;
@@ -877,17 +1143,72 @@ pub(crate) fn sparse_decode_elias(
             "{what} frame truncated or oversized: value {j} of {k} cut short"
         );
         let v = r.read_f32();
-        if i >= lo && i < hi {
-            // Exact-1.0 fast path: unscaled codecs (top-k) reproduce the
-            // stored bit pattern verbatim, NaN payloads included.
-            out[i - lo] = if scale == 1.0 { v } else { scale * v };
-        }
+        // Exact-1.0 fast path: unscaled codecs (top-k) reproduce the
+        // stored bit pattern verbatim, NaN payloads included.
+        visit(i, if scale == 1.0 { v } else { scale * v });
     }
     anyhow::ensure!(
         r.remaining() == 0,
         "{what} frame truncated or oversized: {} trailing bits after {k} pairs",
         r.remaining()
     );
+    Ok(())
+}
+
+/// Shared sparse-stream decode over [`sparse_scan_elias`]: place the
+/// in-window values into `out` (length `hi − lo`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sparse_decode_elias(
+    enc: &Encoded,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    out: &mut [f32],
+    what: &str,
+) -> crate::Result<()> {
+    debug_assert_eq!(out.len(), hi - lo);
+    sparse_scan_elias(enc, k, scale, what, |i, v| {
+        if i >= lo && i < hi {
+            out[i - lo] = v;
+        }
+    })
+}
+
+/// Shared top-k fixed-width-index scan: validate the exact frame size and
+/// walk all `k` `(index, value)` pairs, calling `visit(i, v)` for each —
+/// the naive-coding counterpart of [`sparse_scan_elias`], shared by
+/// [`TopKCodec`]'s range decode and fused accumulate.
+pub(crate) fn topk_scan_naive(
+    enc: &Encoded,
+    k: usize,
+    mut visit: impl FnMut(usize, f32),
+) -> crate::Result<()> {
+    let p = enc.p;
+    let nb = index_bits(p);
+    // Exact data-independent frame size, checked up front.
+    let expect = k as u64 * (nb as u64 + 32);
+    anyhow::ensure!(
+        enc.buf.len_bits() == expect,
+        "top-k frame truncated or oversized: {} bits, expected \
+         {expect} (k={k}, fixed-width indices)",
+        enc.buf.len_bits()
+    );
+    let mut r = enc.buf.reader();
+    let mut prev: u64 = 0;
+    for j in 0..k {
+        let i = r.read_bits(nb);
+        // Strictly ascending unique indices — same wire
+        // contract the Elias path enforces.
+        anyhow::ensure!(
+            j == 0 || i > prev,
+            "top-k indices not strictly ascending ({i} after {prev})"
+        );
+        prev = i;
+        let i = i as usize;
+        anyhow::ensure!(i < p, "top-k index {i} out of range 0..{p}");
+        visit(i, r.read_f32());
+    }
     Ok(())
 }
 
@@ -941,50 +1262,53 @@ impl UpdateCodec for TopKCodec {
     ) -> crate::Result<()> {
         check_spec(self.spec(), enc)?;
         check_range(enc.p, lo, hi)?;
-        let p = enc.p;
-        let k = self.k_of(p);
+        let k = self.k_of(enc.p);
         out.clear();
         out.resize(hi - lo, 0.0);
         // The stream is k sparse (index, value) pairs in ascending index
         // order: scan them all (k ≪ p), keep the ones inside `lo..hi`.
         // The full-stream scan preserves the ascending/unique/in-range/
         // truncation validation for every range, so a corrupt upload is
-        // rejected identically whichever entry point sees it (the fixed-
-        // width and Elias paths used to disagree here; the Elias scan is
-        // now the shared `sparse_decode_elias`).
+        // rejected identically whichever entry point sees it — both
+        // codings now drive the shared scans (`topk_scan_naive`,
+        // `sparse_decode_elias`) the fused accumulate also uses.
         match self.coding {
-            Coding::Naive => {
-                let nb = index_bits(p);
-                // Exact data-independent frame size, checked up front.
-                let expect = k as u64 * (nb as u64 + 32);
-                anyhow::ensure!(
-                    enc.buf.len_bits() == expect,
-                    "top-k frame truncated or oversized: {} bits, expected \
-                     {expect} (k={k}, fixed-width indices)",
-                    enc.buf.len_bits()
-                );
-                let mut r = enc.buf.reader();
-                let mut prev: u64 = 0;
-                for j in 0..k {
-                    let i = r.read_bits(nb);
-                    // Strictly ascending unique indices — same wire
-                    // contract the Elias path enforces.
-                    anyhow::ensure!(
-                        j == 0 || i > prev,
-                        "top-k indices not strictly ascending ({i} after {prev})"
-                    );
-                    prev = i;
-                    let i = i as usize;
-                    anyhow::ensure!(i < p, "top-k index {i} out of range 0..{p}");
-                    let v = r.read_f32();
-                    if i >= lo && i < hi {
-                        out[i - lo] = v;
-                    }
+            Coding::Naive => topk_scan_naive(enc, k, |i, v| {
+                if i >= lo && i < hi {
+                    out[i - lo] = v;
                 }
-            }
+            })?,
             Coding::Elias => sparse_decode_elias(enc, k, lo, hi, 1.0, out, "top-k")?,
         }
         Ok(())
+    }
+
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        let k = self.k_of(enc.p);
+        // Scatter-add the in-window pairs straight into `sum`. Skipping
+        // the implicit zeros is bit-identical to the scratch path by the
+        // trait's no-`-0.0`-accumulator guarantee.
+        match self.coding {
+            Coding::Naive => topk_scan_naive(enc, k, |i, v| {
+                if i >= lo && i < hi {
+                    accumulate_one(&mut sum[i - lo], v, weight);
+                }
+            }),
+            Coding::Elias => sparse_scan_elias(enc, k, 1.0, "top-k", |i, v| {
+                if i >= lo && i < hi {
+                    accumulate_one(&mut sum[i - lo], v, weight);
+                }
+            }),
+        }
     }
 
     fn analytic_bits(&self, p: usize) -> Option<u64> {
@@ -1030,6 +1354,58 @@ pub(crate) fn check_spec(expect: CodecSpec, enc: &Encoded) -> crate::Result<()> 
         expect
     );
     Ok(())
+}
+
+/// Validate an [`UpdateCodec::accumulate_range`] request: the range
+/// itself, the accumulator length, and the weight (same bounds and
+/// message the [`Aggregator`](crate::coordinator::aggregate::Aggregator)
+/// enforces, so the two layers can never disagree on a weight's
+/// validity).
+pub(crate) fn check_accumulate(
+    p: usize,
+    lo: usize,
+    hi: usize,
+    weight: f64,
+    sum_len: usize,
+) -> crate::Result<()> {
+    check_range(p, lo, hi)?;
+    anyhow::ensure!(
+        sum_len == hi - lo,
+        "accumulate_range {lo}..{hi} into a {sum_len}-element accumulator"
+    );
+    anyhow::ensure!(
+        weight.is_finite() && weight > 0.0,
+        "aggregation weight must be finite and positive, got {weight}"
+    );
+    Ok(())
+}
+
+/// One fused accumulation step: `*acc += weight * v` in f64, with the
+/// multiply skipped (not just exact) at `weight == 1.0` so the uniform
+/// path stays bit-identical to the historical unweighted mean.
+#[inline]
+pub(crate) fn accumulate_one(acc: &mut f64, v: f32, weight: f64) {
+    if weight == 1.0 {
+        *acc += v as f64;
+    } else {
+        *acc += v as f64 * weight;
+    }
+}
+
+/// Widening add of a decoded slice into f64 accumulators — the scratch
+/// half of the [`UpdateCodec::accumulate_range`] default, with the
+/// weight branch hoisted out of the loop.
+pub(crate) fn accumulate_slice(sum: &mut [f64], dec: &[f32], weight: f64) {
+    debug_assert_eq!(sum.len(), dec.len());
+    if weight == 1.0 {
+        for (acc, &v) in sum.iter_mut().zip(dec) {
+            *acc += v as f64;
+        }
+    } else {
+        for (acc, &v) in sum.iter_mut().zip(dec) {
+            *acc += v as f64 * weight;
+        }
+    }
 }
 
 /// Fixed-width bits needed for a QSGD level in `0..=s`.
@@ -1415,5 +1791,90 @@ mod tests {
         w.write_f32(-2.5);
         let enc = Encoded { buf: w.finish(), p: 4, spec: q.spec() };
         assert!(q.decode(&enc).is_err());
+    }
+
+    #[test]
+    fn identity_accumulate_handles_odd_ranges_and_weights() {
+        // The word-level kernel has head/body/tail cases keyed to range
+        // parity — exercise every alignment against the scratch path.
+        let p = 11;
+        let x: Vec<f32> = (0..p).map(|i| (i as f32 - 5.0) * 0.75).collect();
+        let q = IdentityCodec;
+        let enc = q.encode(&x, &mut rng(21));
+        for (lo, hi) in [(0, p), (0, 0), (1, p), (1, p - 1), (2, 3), (3, 4), (p, p)] {
+            for weight in [1.0f64, 0.5, 0.3] {
+                let mut fused: Vec<f64> = (0..hi - lo).map(|i| i as f64 * 0.25).collect();
+                let mut want = fused.clone();
+                q.accumulate_range(&enc, lo, hi, weight, &mut fused).unwrap();
+                let mut dec = Vec::new();
+                q.decode_range(&enc, lo, hi, &mut dec).unwrap();
+                accumulate_slice(&mut want, &dec, weight);
+                for (j, (f, w)) in fused.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        f.to_bits(),
+                        w.to_bits(),
+                        "{lo}..{hi} w={weight} coord {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_accumulate_beyond_the_level_table_matches_decode() {
+        // s values straddling QSGD_LUT_MAX force both the table hit and
+        // the division fallback through the same reconstruction bits.
+        let p = 64;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.29).cos() * 2.0).collect();
+        for s in [255u32, 256, 1000] {
+            for coding in [Coding::Naive, Coding::Elias] {
+                let q = QsgdCodec { s, coding };
+                let enc = q.encode(&x, &mut rng(22));
+                let dec = q.decode(&enc).unwrap();
+                let mut fused = vec![0.0f64; p];
+                q.accumulate_range(&enc, 0, p, 1.0, &mut fused).unwrap();
+                for (j, (f, &v)) in fused.iter().zip(&dec).enumerate() {
+                    assert_eq!(
+                        f.to_bits(),
+                        (v as f64).to_bits(),
+                        "s={s} {coding:?} coord {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_range_rejects_bad_args_and_truncated_frames() {
+        let p = 32;
+        let x: Vec<f32> = (0..p).map(|i| (i as f32 * 0.11).sin()).collect();
+        let q = QsgdCodec::new(4);
+        let enc = q.encode(&x, &mut rng(23));
+        let mut sum = vec![0.0f64; p];
+        // Accumulator length must be exactly hi - lo.
+        assert!(q.accumulate_range(&enc, 0, p, 1.0, &mut sum[..p - 1]).is_err());
+        assert!(q.accumulate_range(&enc, 1, p, 1.0, &mut sum).is_err());
+        // Bad ranges and weights, same surface as the aggregator.
+        assert!(q.accumulate_range(&enc, 0, p + 1, 1.0, &mut sum).is_err());
+        assert!(q.accumulate_range(&enc, 5, 4, 1.0, &mut [0.0; 0][..]).is_err());
+        for w in [0.0f64, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(q.accumulate_range(&enc, 0, p, w, &mut sum).is_err(), "{w}");
+        }
+        // Spec mismatch and truncation reject exactly like decode_range.
+        assert!(QsgdCodec::new(5).accumulate_range(&enc, 0, p, 1.0, &mut sum).is_err());
+        let mut w = BitWriter::new();
+        let mut r = enc.buf.reader();
+        for _ in 0..enc.buf.len_bits() / 2 {
+            w.write_bit(r.read_bit());
+        }
+        let cut = Encoded { buf: w.finish(), p, spec: q.spec() };
+        assert!(q.accumulate_range(&cut, 0, p, 1.0, &mut sum).is_err());
+        // Identity's fused path got a frame-size check too.
+        let id = IdentityCodec;
+        let good = id.encode(&x, &mut rng(24));
+        let short = Encoded { buf: BitWriter::new().finish(), p, spec: id.spec() };
+        assert!(id.accumulate_range(&short, 0, p, 1.0, &mut sum).is_err());
+        assert!(id.decode_range(&short, 0, 0, &mut Vec::new()).is_err());
+        assert!(id.accumulate_range(&good, 0, p, 1.0, &mut sum).is_ok());
     }
 }

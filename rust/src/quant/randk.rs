@@ -18,8 +18,8 @@
 
 use super::bitstream::BitWriter;
 use super::{
-    check_range, check_spec, sparse_decode_elias, sparse_encode_elias, CodecSpec, Encoded,
-    UpdateCodec,
+    accumulate_one, check_accumulate, check_range, check_spec, sparse_decode_elias,
+    sparse_encode_elias, sparse_scan_elias, CodecSpec, Encoded, UpdateCodec,
 };
 use crate::util::rng::Rng;
 
@@ -157,6 +157,50 @@ impl UpdateCodec for RandKCodec {
             sparse_decode_elias(enc, k, lo, hi, scale, out, "rand-k")?;
         }
         Ok(())
+    }
+
+    fn accumulate_range(
+        &self,
+        enc: &Encoded,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        check_spec(self.spec(), enc)?;
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        let p = enc.p;
+        let k = self.k_of(p);
+        let scale = self.scale(p);
+        // Scatter-add straight into `sum`, skipping the implicit zeros —
+        // bit-identical to the scratch path by the trait's
+        // no-`-0.0`-accumulator guarantee. Reconstruction expressions are
+        // verbatim those of `decode_range` (no 1.0-scale shortcut on the
+        // seeded arm, because the decode path has none).
+        if self.seeded {
+            let expect = 64 + 32 * k as u64;
+            anyhow::ensure!(
+                enc.buf.len_bits() == expect,
+                "rand-k frame truncated or oversized: {} bits, expected {expect} \
+                 (k={k}, seeded indices)",
+                enc.buf.len_bits()
+            );
+            let index_seed = enc.buf.reader().read_bits(64);
+            let idx = rand_k_indices(index_seed, p, k);
+            let j_lo = idx.partition_point(|&i| (i as usize) < lo);
+            let j_hi = idx.partition_point(|&i| (i as usize) < hi);
+            let mut r = enc.buf.reader_at(64 + 32 * j_lo as u64)?;
+            for &i in &idx[j_lo..j_hi] {
+                accumulate_one(&mut sum[i as usize - lo], scale * r.read_f32(), weight);
+            }
+            Ok(())
+        } else {
+            sparse_scan_elias(enc, k, scale, "rand-k", |i, v| {
+                if i >= lo && i < hi {
+                    accumulate_one(&mut sum[i - lo], v, weight);
+                }
+            })
+        }
     }
 
     fn analytic_bits(&self, p: usize) -> Option<u64> {

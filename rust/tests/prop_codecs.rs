@@ -12,9 +12,10 @@
 //!
 //! (Driver: `fedpaq::util::prop` — proptest is unavailable offline.)
 
+use fedpaq::quant::bitstream::BitWriter;
 use fedpaq::quant::{
-    family_enabled, l2_norm, AdaptiveQsgdCodec, CodecSpec, Coding, ErrorFeedbackCodec,
-    IdentityCodec, QsgdCodec, RandKCodec, TopKCodec, UpdateCodec,
+    family_enabled, l2_norm, AdaptiveQsgdCodec, CodecSpec, Coding, Encoded,
+    ErrorFeedbackCodec, IdentityCodec, QsgdCodec, RandKCodec, TopKCodec, UpdateCodec,
 };
 use fedpaq::util::prop::check;
 use fedpaq::util::rng::Rng;
@@ -348,6 +349,102 @@ fn prop_error_feedback_residual_law_and_determinism() {
                 assert_eq!(res[i], (x[i] + prev_res[i]) - dec[i], "coord {i}");
             }
             prev_res = res;
+        }
+    });
+}
+
+#[test]
+fn prop_accumulate_range_matches_decode_range_add() {
+    // The fused-aggregation contract: for every codec, accumulating any
+    // `lo..hi` window at any valid weight — including the word-level,
+    // LUT, and scatter-add fast paths — is bit-identical to the scratch
+    // path (`decode_range` + weight-branched f64 widening add) over the
+    // same prefilled accumulators. Prefills avoid `-0.0` (the trait's
+    // accumulator guarantee), since sparse kernels skip implicit zeros.
+    check(60, 0xc0dec_12, |rng| {
+        let p = rng.gen_range(1, 800);
+        let x = random_vec(rng, p, 3.0);
+        let mut dec: Vec<f32> = Vec::new();
+        for codec in all_codecs() {
+            let enc = codec.encode(&x, &mut rng.clone());
+            let mut lo = rng.gen_range(0, p + 1);
+            let mut hi = rng.gen_range(0, p + 1);
+            if lo > hi {
+                std::mem::swap(&mut lo, &mut hi);
+            }
+            let weight = match rng.gen_range(0, 3) {
+                0 => 1.0f64,
+                1 => 0.5,
+                _ => 1.0 / (1.0 + rng.gen_range(1, 10) as f64),
+            };
+            for (lo, hi) in [(lo, hi), (0, p), (0, 0), (p, p)] {
+                // Aggregator-shaped prefill: +0.0 everywhere, plus a
+                // nonzero variant to catch kernels that overwrite
+                // instead of accumulate. Never -0.0.
+                for prefill in [0.0f64, 0.25] {
+                    let mut fused = vec![prefill; hi - lo];
+                    let mut want = fused.clone();
+                    codec
+                        .accumulate_range(&enc, lo, hi, weight, &mut fused)
+                        .unwrap_or_else(|e| {
+                            panic!("{:?} {lo}..{hi} w={weight}: {e}", codec.spec())
+                        });
+                    codec.decode_range(&enc, lo, hi, &mut dec).unwrap();
+                    if weight == 1.0 {
+                        for (acc, &v) in want.iter_mut().zip(&dec) {
+                            *acc += v as f64;
+                        }
+                    } else {
+                        for (acc, &v) in want.iter_mut().zip(&dec) {
+                            *acc += v as f64 * weight;
+                        }
+                    }
+                    for (j, (f, w)) in fused.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            f.to_bits(),
+                            w.to_bits(),
+                            "{:?} {lo}..{hi} w={weight} coord {j}",
+                            codec.spec()
+                        );
+                    }
+                }
+            }
+            // Rejection surface: wrong accumulator length, bad ranges,
+            // non-finite/non-positive weights — all before any add.
+            let mut sum = vec![0.0f64; p];
+            if p > 1 {
+                assert!(codec
+                    .accumulate_range(&enc, 0, p, 1.0, &mut sum[..p - 1])
+                    .is_err());
+            }
+            assert!(codec.accumulate_range(&enc, 0, p + 1, 1.0, &mut sum).is_err());
+            for w in [0.0f64, -1.0, f64::NAN, f64::INFINITY] {
+                assert!(
+                    codec.accumulate_range(&enc, 0, p, w, &mut sum).is_err(),
+                    "{:?} accepted weight {w}",
+                    codec.spec()
+                );
+                assert!(sum.iter().all(|&s| s == 0.0), "rejection touched sum");
+            }
+            // A frame cut in half rejects through the fused path exactly
+            // like the decode path does (fixed-width exact-size checks,
+            // Elias mid-stream truncation).
+            let mut w = BitWriter::new();
+            let mut r = enc.buf.reader();
+            for _ in 0..enc.buf.len_bits() / 2 {
+                w.write_bit(r.read_bit());
+            }
+            let cut = Encoded { buf: w.finish(), p, spec: enc.spec.clone() };
+            assert!(
+                codec.decode_range(&cut, 0, p, &mut dec).is_err(),
+                "{:?} decoded a halved frame",
+                codec.spec()
+            );
+            assert!(
+                codec.accumulate_range(&cut, 0, p, 1.0, &mut sum).is_err(),
+                "{:?} accumulated a halved frame",
+                codec.spec()
+            );
         }
     });
 }

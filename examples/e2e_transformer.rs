@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         max_staleness: 8,
         staleness_rule: Default::default(),
         agg_shards: 1,
+        down_codec: None,
     }
     .validated()?;
 
@@ -68,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     );
     let t0 = std::time::Instant::now();
     let mut runner = Runner::new(EngineKind::Pjrt, "artifacts");
-    let res = runner.run_config(cfg.clone())?;
+    let res = runner.run_config(cfg.clone(), fedpaq::ops::RunControl::default())?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\nround  iters  virtual-time  loss");

@@ -72,7 +72,14 @@ fn main() -> anyhow::Result<()> {
     let cfg = cluster_config();
     let dist = {
         let mut engine = fedpaq::net::worker::build_engine(&cfg, Path::new("artifacts"))?;
-        fedpaq::net::run_leader(cfg.clone(), addr, n_workers, engine.as_mut(), Path::new("artifacts"))?
+        fedpaq::net::run_leader(
+            cfg.clone(),
+            addr,
+            n_workers,
+            engine.as_mut(),
+            Path::new("artifacts"),
+            &fedpaq::ops::RunControl::default(),
+        )?
     };
     for c in children.iter_mut() {
         let _ = c.wait();
@@ -86,7 +93,7 @@ fn main() -> anyhow::Result<()> {
     // Cross-check against the in-process simulation.
     println!("\nreplaying in-process for parity check ...");
     let mut runner = Runner::new(cfg.engine.clone(), "artifacts");
-    let sim = runner.run_config(cfg)?;
+    let sim = runner.run_config(cfg, fedpaq::ops::RunControl::default())?;
     let max_diff = dist
         .params
         .iter()

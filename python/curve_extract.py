@@ -22,17 +22,25 @@ def extract(doc):
     return {
         "label": doc["curve"]["label"],
         "points": [
-            {k: p[k] for k in ("round", "iterations", "bits_up", "loss")}
+            {k: p[k] for k in ("round", "iterations", "bits_up", "bits_down", "loss")}
             for p in doc["curve"]["points"]
         ],
         "rounds": [
             {
                 k: r[k]
-                for k in ("round", "bits_up", "dropped", "staleness_max", "staleness_mean")
+                for k in (
+                    "round",
+                    "bits_up",
+                    "bits_down",
+                    "dropped",
+                    "staleness_max",
+                    "staleness_mean",
+                )
             }
             for r in doc["rounds"]
         ],
         "total_bits": doc["total_bits"],
+        "total_bits_down": doc["total_bits_down"],
         "params": doc["params"],
     }
 

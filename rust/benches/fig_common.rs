@@ -28,7 +28,9 @@ pub fn bench_figure(group: &str, fig_id: &str, t_total: usize) {
     g.target_time = Duration::from_secs(2);
     for cfg in &spec.configs {
         g.bench(&cfg.name, || {
-            runner.run_config(cfg.clone()).expect("run failed");
+            runner
+                .run_config(cfg.clone(), fedpaq::ops::RunControl::default())
+                .expect("run failed");
         });
     }
     g.finish();

@@ -26,6 +26,20 @@
 //! built-ins plug in programmatically through
 //! [`ServerBuilder::codec`](crate::coordinator::ServerBuilder::codec).
 //!
+//! ## Downlink codec (bidirectional compression)
+//!
+//! `codec` compresses the uplink (node → server). The optional
+//! `down_codec` field — same tagged-object grammar — compresses the
+//! server → node broadcast as well, QAFeL-style (Zakerinia et al.
+//! 2206.10032): the server keeps a shared *reference* model, encodes
+//! each new version as a compressed delta against it, and every client
+//! reconstructs the identical reference by applying the decoded delta
+//! chain (see `coordinator::downlink`). Absent or `null` means the
+//! historical raw-f32 broadcast, so pre-bidirectional config files parse
+//! unchanged. `down_codec` must be a buildable built-in (`external` has
+//! no instance for clients to rebuild); `error_feedback` composes on the
+//! downlink too, with one server-side residual stream.
+//!
 //! ## Transport knobs
 //!
 //! The transport is an execution-mode choice, not an experiment
@@ -237,6 +251,14 @@ pub struct ExperimentConfig {
     pub t_total: usize,
     /// Upload codec spec (Identity == FedAvg).
     pub codec: CodecSpec,
+    /// Optional downlink (server → node) codec spec. `None` is the
+    /// historical raw-f32 broadcast. `Some(spec)` turns on QAFeL-style
+    /// bidirectional compression: the server encodes each model version
+    /// as a compressed delta against a shared reference model and
+    /// clients reconstruct by applying the decoded delta chain (see
+    /// `coordinator::downlink`). Must be a buildable built-in — never
+    /// `external` — because every client rebuilds it from this config.
+    pub down_codec: Option<CodecSpec>,
     /// Stepsize schedule.
     pub lr: LrSchedule,
     /// Cost-model ratio `C_comm/C_comp` (paper: 100 convex, 1000 NN).
@@ -304,6 +326,15 @@ impl ExperimentConfig {
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!(self.ratio > 0.0, "ratio must be positive");
         validate_codec(&self.codec, true)?;
+        if let Some(down) = &self.down_codec {
+            anyhow::ensure!(
+                down.rebuildable(),
+                "down_codec must be rebuildable from the config: every \
+                 client rebuilds the downlink decoder from the spec, and \
+                 `external` has no instance to rebuild"
+            );
+            validate_codec(down, true)?;
+        }
         if let PartitionKind::Dirichlet { alpha } = self.partition {
             anyhow::ensure!(alpha > 0.0, "dirichlet alpha must be positive");
         }
@@ -336,6 +367,7 @@ impl ExperimentConfig {
             tau: 5,
             t_total: 100,
             codec: CodecSpec::qsgd(1),
+            down_codec: None,
             lr: LrSchedule::Const { eta: 0.2 },
             ratio: 100.0,
             seed: 42,
@@ -363,6 +395,7 @@ impl ExperimentConfig {
             tau: 2,
             t_total: 100,
             codec: CodecSpec::qsgd(1),
+            down_codec: None,
             lr: LrSchedule::Const { eta: 0.1 },
             ratio: 1000.0,
             seed: 42,
@@ -408,6 +441,16 @@ impl ExperimentConfig {
             ("tau", Json::num(self.tau as f64)),
             ("t_total", Json::num(self.t_total as f64)),
             ("codec", codec),
+            (
+                "down_codec",
+                match &self.down_codec {
+                    // Emit an explicit null so the canonical serialization
+                    // always carries the key (config_hash covers it either
+                    // way; parse treats absent and null identically).
+                    None => Json::Null,
+                    Some(down) => codec_to_json(down),
+                },
+            ),
             ("lr", lr),
             ("ratio", Json::num(self.ratio)),
             // Seeds are u64 and exceed f64's 2^53 integer range: ship as a
@@ -475,6 +518,12 @@ impl ExperimentConfig {
                 .or_else(|| j.get("quantizer"))
                 .ok_or_else(|| anyhow::anyhow!("missing JSON field \"codec\""))?,
         )?;
+        // Absent (pre-bidirectional files) and explicit null both mean
+        // the historical raw-f32 broadcast.
+        let down_codec = match j.get("down_codec") {
+            None | Some(Json::Null) => None,
+            Some(d) => Some(codec_from_json(d)?),
+        };
         let lr = {
             let l = j.req("lr")?;
             match l.req_str("type")? {
@@ -501,6 +550,7 @@ impl ExperimentConfig {
             tau: j.req_usize("tau")?,
             t_total: j.req_usize("t_total")?,
             codec,
+            down_codec,
             lr,
             ratio: j.req_f64("ratio")?,
             seed: match j.req("seed")? {
@@ -559,6 +609,12 @@ impl ExperimentConfig {
 
     pub fn with_codec(mut self, codec: CodecSpec) -> Self {
         self.codec = codec;
+        self
+    }
+
+    /// Enable downlink (server → node) compression with the given codec.
+    pub fn with_down_codec(mut self, down: CodecSpec) -> Self {
+        self.down_codec = Some(down);
         self
     }
 
@@ -724,6 +780,13 @@ mod tests {
                 .with_async(7, 0)
                 .with_staleness_rule(StalenessRule::Polynomial { a: 0.5 }),
             ExperimentConfig::fig1_logreg_base().with_agg_shards(8),
+            ExperimentConfig::fig1_logreg_base().with_down_codec(CodecSpec::qsgd(4)),
+            ExperimentConfig::fig1_logreg_base()
+                .with_codec(CodecSpec::top_k(100))
+                .with_down_codec(CodecSpec::error_feedback(CodecSpec::top_k(100)))
+                .with_async(4, 16),
+            ExperimentConfig::fig1_logreg_base()
+                .with_down_codec(CodecSpec::rand_k(150)),
         ] {
             let j = cfg.to_json();
             let back = ExperimentConfig::from_json(&j).unwrap();
@@ -762,6 +825,7 @@ mod tests {
             "async_fedbuff_logreg.json",
             "async_tcp_logreg.json",
             "ef_randk_logreg.json",
+            "bidir_qsgd_logreg.json",
         ] {
             ExperimentConfig::from_json_file(&dir.join(f))
                 .unwrap_or_else(|e| panic!("{f}: {e}"));
@@ -776,6 +840,10 @@ mod tests {
             ExperimentConfig::from_json_file(&dir.join("async_fedbuff_logreg.json")).unwrap();
         assert!(async_cfg.async_rounds);
         assert_eq!(async_cfg.effective_buffer_size(), 4);
+        let bidir_cfg =
+            ExperimentConfig::from_json_file(&dir.join("bidir_qsgd_logreg.json")).unwrap();
+        assert_eq!(bidir_cfg.down_codec, Some(CodecSpec::qsgd(4)));
+        assert!(bidir_cfg.async_rounds);
     }
 
     #[test]
@@ -816,6 +884,54 @@ mod tests {
     fn zero_agg_shards_rejected() {
         let c = ExperimentConfig::fig1_logreg_base().with_agg_shards(0);
         assert!(c.validated().is_err());
+    }
+
+    #[test]
+    fn pre_bidirectional_configs_parse_to_raw_downlink() {
+        // A config JSON written before `down_codec` existed must land on
+        // the historical raw-f32 broadcast; an explicit null is the same.
+        let mut j = ExperimentConfig::fig1_logreg_base().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("down_codec");
+        } else {
+            panic!("config JSON must be an object");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.down_codec, None);
+        assert_eq!(back, ExperimentConfig::fig1_logreg_base());
+        let back =
+            ExperimentConfig::from_json(&ExperimentConfig::fig1_logreg_base().to_json())
+                .unwrap();
+        assert_eq!(back.down_codec, None);
+    }
+
+    #[test]
+    fn invalid_down_codec_rejected() {
+        let base = || ExperimentConfig::fig1_logreg_base();
+        // External downlink codecs are unbuildable on the client side.
+        let c = base().with_down_codec(CodecSpec::External { id: 7 });
+        assert!(c.validated().is_err());
+        let c = base()
+            .with_down_codec(CodecSpec::error_feedback(CodecSpec::External { id: 7 }));
+        assert!(c.validated().is_err());
+        // Parameter bounds apply to the downlink slot too.
+        let c = base().with_down_codec(CodecSpec::top_k(0));
+        assert!(c.validated().is_err());
+        let nested = CodecSpec::error_feedback(CodecSpec::error_feedback(
+            CodecSpec::qsgd(1),
+        ));
+        assert!(base().with_down_codec(nested).validated().is_err());
+        // Every concrete built-in family is a legal downlink codec.
+        for down in [
+            CodecSpec::Identity,
+            CodecSpec::qsgd(4),
+            CodecSpec::top_k(100),
+            CodecSpec::rand_k(100),
+            CodecSpec::adaptive(4),
+            CodecSpec::error_feedback(CodecSpec::top_k(100)),
+        ] {
+            base().with_down_codec(down).validated().unwrap();
+        }
     }
 
     #[test]

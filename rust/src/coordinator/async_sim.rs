@@ -47,7 +47,7 @@
 
 use super::commit_loop::{CommitPlanner, Decision, PlannerEvent};
 use super::local::GatherBufs;
-use super::transport::{CommitTiming, RoundCtx, RoundOutcome, Transport, World};
+use super::transport::{CommitTiming, ModelFrame, RoundCtx, RoundOutcome, Transport, World};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Partition};
 use crate::model::Engine;
@@ -80,6 +80,10 @@ pub struct AsyncSim {
     now: f64,
     planner: Option<CommitPlanner>,
     jobs: Vec<Job>,
+    /// `(node, version)` dispatches performed during the current `round`
+    /// call, in dispatch order — handed to the engine in the commit's
+    /// [`RoundOutcome`] for downlink-bits accounting.
+    dispatched: Vec<(usize, usize)>,
     events: crate::ops::EventSink,
 }
 
@@ -120,7 +124,7 @@ impl AsyncSim {
             engine,
             node,
             version,
-            ctx.params,
+            &ctx.frame.params,
             ctx.lrs,
             &mut self.bufs,
         )?;
@@ -135,6 +139,7 @@ impl AsyncSim {
             ],
         );
         self.jobs.push(Job { node, version, slot, finish, enc });
+        self.dispatched.push((node, version));
         Ok(())
     }
 
@@ -204,6 +209,7 @@ impl Transport for AsyncSim {
         // Refill wave at the current model (planner decides its size:
         // the whole sampled set at version 0, then `buffer_size` jobs per
         // commit, keeping r jobs in flight).
+        self.dispatched.clear();
         let wave = planner.begin_version(ctx.nodes)?;
         let now = self.now;
         for d in wave {
@@ -271,6 +277,7 @@ impl Transport for AsyncSim {
                             uploads,
                             timing: Some(CommitTiming { compute_time, comm_time }),
                             dropped,
+                            dispatches: std::mem::take(&mut self.dispatched),
                         });
                     }
                 }
@@ -362,6 +369,7 @@ mod tests {
             tau: 2,
             t_total: 8,
             codec: CodecSpec::qsgd(2),
+            down_codec: None,
             lr: LrSchedule::Const { eta: 0.3 },
             ratio: 100.0,
             seed: 11,
@@ -394,9 +402,13 @@ mod tests {
                 cfg.n_nodes, cfg.r, cfg.seed, k,
             );
             let lrs = vec![0.3f32; cfg.tau];
-            let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
+            let frame = ModelFrame::raw(k, params.clone());
+            let ctx = RoundCtx { round: k, nodes: &nodes, frame: &frame, lrs: &lrs };
             let out = t.round(&ctx, codec.as_ref(), &mut eng).unwrap();
             assert_eq!(out.uploads.len(), 2, "commit k={k}");
+            // Every dispatch of this commit is reported, at this version.
+            assert!(!out.dispatches.is_empty() || k > 0);
+            assert!(out.dispatches.iter().all(|&(_, v)| v == k));
             let timing = out.timing.expect("async sim owns its timing");
             assert!(timing.compute_time >= 0.0 && timing.comm_time > 0.0);
             clock += timing.compute_time + timing.comm_time;
@@ -422,7 +434,8 @@ mod tests {
         t.setup(&cfg, &mut eng).unwrap();
         let nodes = vec![0, 1, 2, 3];
         let lrs = vec![0.3f32; cfg.tau];
-        let ctx = RoundCtx { round: 3, nodes: &nodes, params: &params, lrs: &lrs };
+        let frame = ModelFrame::raw(3, params.clone());
+        let ctx = RoundCtx { round: 3, nodes: &nodes, frame: &frame, lrs: &lrs };
         assert!(t.round(&ctx, codec.as_ref(), &mut eng).is_err());
     }
 
@@ -444,7 +457,8 @@ mod tests {
             let nodes = crate::coordinator::sampler::sample_nodes(
                 cfg.n_nodes, cfg.r, cfg.seed, k,
             );
-            let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
+            let frame = ModelFrame::raw(k, params.clone());
+            let ctx = RoundCtx { round: k, nodes: &nodes, frame: &frame, lrs: &lrs };
             let out = t.round(&ctx, codec.as_ref(), &mut eng).unwrap();
             assert_eq!(out.uploads.len(), cfg.buffer_size);
             assert!(out.uploads.iter().all(|u| u.staleness == 0));

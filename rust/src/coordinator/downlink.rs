@@ -1,0 +1,315 @@
+//! Server → node downlink compression (QAFeL-style hidden state).
+//!
+//! FedPAQ compresses the uplink; at scale the broadcast of raw f32
+//! models is the larger aggregate bill. This module adds the symmetric
+//! downlink seam, following Zakerinia et al. (2206.10032): the server
+//! keeps a *reference* model (the QAFeL hidden state) that every client
+//! can reconstruct exactly, and each broadcast ships only the encoded
+//! delta between the new model version and that reference:
+//!
+//! ```text
+//! ref(0)   = x_0                      (initial model, shipped out of band)
+//! link_k   = encode(x_k − ref(k−1))   (k ≥ 1, RNG stream [7, k])
+//! ref(k)   = ref(k−1) + decode(link_k)
+//! ```
+//!
+//! Clients train **from `ref(k)`**, not from the exact `x_k` they never
+//! see; their uploaded deltas are relative to `ref(k)`, and the server
+//! applies the aggregated delta to its exact `x_k` as usual. Because
+//! `decode` is deterministic, a client holding `ref(v)` reaches `ref(N)`
+//! bit-exactly by applying the chain `link_{v+1} … link_N` — the
+//! interaction with buffered-async staleness reduces to shipping the
+//! right chain suffix (or a raw re-base of the reference for fresh and
+//! rejoined workers; see `net::transport`).
+//!
+//! One [`DownlinkEncoder`] per run lives inside the round engine; the
+//! same chain-application arithmetic ([`apply_link`]) runs on TCP
+//! workers, so the simulated and real clusters reconstruct bit-identical
+//! references. Encoding uses the node-less [`UpdateCodec::encode`] entry
+//! point: the downlink has exactly one logical stream, so a stateful
+//! error-feedback wrapper keeps one server-side residual (its anonymous
+//! node slot) and its frames stay decodable by any client.
+
+use crate::quant::{Encoded, UpdateCodec};
+use crate::util::rng::Rng;
+
+use super::transport::ModelFrame;
+
+/// Downlink encoder RNG stream for `(seed, version)` — coordinate prefix
+/// `7`, disjoint from the quantizer (`3`) and planner re-dispatch (`5`)
+/// streams.
+pub fn downlink_rng(seed: u64, version: usize) -> Rng {
+    Rng::from_coords(seed, &[7, version as u64])
+}
+
+/// Apply one decoded chain link to a reference model in place
+/// (`reference[i] += decode(enc)[i]`).
+///
+/// This is the *only* arithmetic that advances a reference, shared by
+/// the server-side [`DownlinkEncoder`] and the TCP worker's
+/// reconstruction, so both sides stay bit-identical by construction.
+pub fn apply_link(
+    codec: &dyn UpdateCodec,
+    enc: &Encoded,
+    reference: &mut [f32],
+    scratch: &mut Vec<f32>,
+) -> crate::Result<()> {
+    codec.decode_into(enc, scratch)?;
+    anyhow::ensure!(
+        scratch.len() == reference.len(),
+        "downlink chain link decodes to {} coords, reference has {}",
+        scratch.len(),
+        reference.len()
+    );
+    for (r, d) in reference.iter_mut().zip(scratch.iter()) {
+        *r += *d;
+    }
+    Ok(())
+}
+
+/// Server-side downlink state: the shared reference model, the per-link
+/// bit sizes (for the up/down accounting split), and each node's last
+/// known reference version.
+///
+/// Owned by the round engine; checkpointed in full (reference, link
+/// bits, per-node versions, codec state) so `--resume` continues the
+/// chain bit-identically.
+#[derive(Debug)]
+pub struct DownlinkEncoder {
+    codec: Box<dyn UpdateCodec>,
+    seed: u64,
+    reference: Vec<f32>,
+    /// `link_bits[k]` = exact wire bits of `link_k`; entry 0 is always 0
+    /// (version 0 is the out-of-band initial model, never a link).
+    link_bits: Vec<u64>,
+    /// Per-node version whose reference the node currently holds. Starts
+    /// at 0: every node knows `x_0`.
+    last: Vec<u64>,
+    scratch: Vec<f32>,
+}
+
+impl DownlinkEncoder {
+    pub fn new(codec: Box<dyn UpdateCodec>, seed: u64, n_nodes: usize) -> Self {
+        codec.reset_state();
+        DownlinkEncoder {
+            codec,
+            seed,
+            reference: Vec::new(),
+            link_bits: Vec::new(),
+            last: vec![0; n_nodes],
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn codec(&self) -> &dyn UpdateCodec {
+        self.codec.as_ref()
+    }
+
+    /// The current reference model `ref(k)`.
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+
+    /// Build the broadcast frame for `version` from the server's exact
+    /// model. Version 0 adopts `params` as `ref(0)` (no link); each later
+    /// version encodes `x_k − ref(k−1)`, advances the reference by the
+    /// *decoded* link, and remembers the link's bit size.
+    pub fn begin_round(&mut self, version: usize, params: &[f32]) -> crate::Result<ModelFrame> {
+        if version == 0 {
+            anyhow::ensure!(
+                self.link_bits.is_empty(),
+                "downlink encoder already started (have {} links)",
+                self.link_bits.len().saturating_sub(1)
+            );
+            self.reference = params.to_vec();
+            self.link_bits.push(0);
+            return Ok(ModelFrame {
+                version: 0,
+                params: self.reference.clone(),
+                link: None,
+            });
+        }
+        anyhow::ensure!(
+            self.link_bits.len() == version,
+            "downlink encoder at version {} asked to encode version {version}",
+            self.link_bits.len().saturating_sub(1)
+        );
+        anyhow::ensure!(
+            params.len() == self.reference.len(),
+            "model has {} coords, downlink reference has {}",
+            params.len(),
+            self.reference.len()
+        );
+        let delta: Vec<f32> = params
+            .iter()
+            .zip(self.reference.iter())
+            .map(|(&x, &r)| x - r)
+            .collect();
+        let mut rng = downlink_rng(self.seed, version);
+        let enc = self.codec.encode(&delta, &mut rng);
+        apply_link(self.codec.as_ref(), &enc, &mut self.reference, &mut self.scratch)?;
+        self.link_bits.push(enc.bits());
+        Ok(ModelFrame {
+            version,
+            params: self.reference.clone(),
+            link: Some(enc),
+        })
+    }
+
+    /// Downlink bits a dispatch of `node` at `version` costs: the sum of
+    /// the chain links `(last_v, version]` the node still needs.
+    /// Advances the node's bookkeeping — per-*node* accounting, the cost
+    /// model's unit (a transport fanning several nodes into one worker
+    /// socket ships fewer wire bytes; see `docs/PROTOCOL.md`).
+    pub fn dispatch_bits(&mut self, node: usize, version: usize) -> u64 {
+        let have = self.last[node];
+        let bits = ((have as usize + 1)..=version)
+            .map(|k| self.link_bits[k])
+            .sum();
+        self.last[node] = self.last[node].max(version as u64);
+        bits
+    }
+
+    /// Snapshot for checkpoints: `(reference, link_bits, last, codec
+    /// state)`.
+    #[allow(clippy::type_complexity)]
+    pub fn state_export(&self) -> (Vec<f32>, Vec<u64>, Vec<u64>, Vec<(u64, Vec<f32>)>) {
+        (
+            self.reference.clone(),
+            self.link_bits.clone(),
+            self.last.clone(),
+            self.codec.state_export(),
+        )
+    }
+
+    /// Restore a [`DownlinkEncoder::state_export`] snapshot (resume).
+    pub fn state_import(
+        &mut self,
+        reference: Vec<f32>,
+        link_bits: Vec<u64>,
+        last: Vec<u64>,
+        codec_state: Vec<(u64, Vec<f32>)>,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            last.len() == self.last.len(),
+            "downlink snapshot covers {} nodes, config has {}",
+            last.len(),
+            self.last.len()
+        );
+        anyhow::ensure!(
+            !link_bits.is_empty(),
+            "downlink snapshot has no link-bit history (not even version 0)"
+        );
+        self.reference = reference;
+        self.link_bits = link_bits;
+        self.last = last;
+        self.codec.reset_state();
+        self.codec.state_import(codec_state);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::CodecSpec;
+
+    fn walk(p: usize, steps: usize, seed: u64) -> Vec<Vec<f32>> {
+        // A deterministic pseudo-random trajectory of model versions.
+        let mut rng = Rng::from_coords(seed, &[99]);
+        let mut x: Vec<f32> = (0..p).map(|_| rng.gen_f32() - 0.5).collect();
+        let mut out = vec![x.clone()];
+        for _ in 0..steps {
+            for v in x.iter_mut() {
+                *v += 0.1 * (rng.gen_f32() - 0.5);
+            }
+            out.push(x.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn client_chain_reconstruction_matches_reference() {
+        let versions = walk(64, 6, 5);
+        let mut down =
+            DownlinkEncoder::new(CodecSpec::qsgd(4).build().unwrap(), 5, 4);
+        let client_codec = CodecSpec::qsgd(4).build().unwrap();
+        let mut frames = Vec::new();
+        for (k, x) in versions.iter().enumerate() {
+            frames.push(down.begin_round(k, x).unwrap());
+        }
+        // A client that held ref(v) reaches ref(N) by applying the chain.
+        let mut scratch = Vec::new();
+        for v in 0..versions.len() {
+            let mut client = frames[v].params.clone();
+            for frame in &frames[v + 1..] {
+                apply_link(
+                    client_codec.as_ref(),
+                    frame.link.as_ref().unwrap(),
+                    &mut client,
+                    &mut scratch,
+                )
+                .unwrap();
+            }
+            assert_eq!(client, down.reference(), "chain from v={v} diverged");
+        }
+    }
+
+    #[test]
+    fn dispatch_bits_sums_exactly_the_missing_links() {
+        let versions = walk(32, 3, 9);
+        let mut down =
+            DownlinkEncoder::new(CodecSpec::qsgd(2).build().unwrap(), 9, 3);
+        let mut bits = Vec::new();
+        for (k, x) in versions.iter().enumerate() {
+            let f = down.begin_round(k, x).unwrap();
+            bits.push(f.link.map_or(0, |l| l.bits()));
+        }
+        // Node 0 dispatched every version: pays each link once.
+        for k in 0..=3 {
+            assert_eq!(down.dispatch_bits(0, k), bits[k]);
+        }
+        // Node 1 never dispatched until version 3: pays the whole chain.
+        assert_eq!(down.dispatch_bits(1, 3), bits[1] + bits[2] + bits[3]);
+        // Re-dispatch at a version already held is free.
+        assert_eq!(down.dispatch_bits(1, 3), 0);
+        // Version 0 is the out-of-band initial model: free.
+        assert_eq!(down.dispatch_bits(2, 0), 0);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_the_chain_bit_identically() {
+        let versions = walk(48, 5, 13);
+        let spec = CodecSpec::error_feedback(CodecSpec::top_k(250));
+        let mut a = DownlinkEncoder::new(spec.build().unwrap(), 13, 2);
+        for (k, x) in versions.iter().take(3).enumerate() {
+            a.begin_round(k, x).unwrap();
+        }
+        a.dispatch_bits(0, 2);
+        let (r, lb, last, cs) = a.state_export();
+        let mut b = DownlinkEncoder::new(spec.build().unwrap(), 13, 2);
+        b.state_import(r, lb, last, cs).unwrap();
+        for (k, x) in versions.iter().enumerate().skip(3) {
+            let fa = a.begin_round(k, x).unwrap();
+            let fb = b.begin_round(k, x).unwrap();
+            assert_eq!(fa.params, fb.params);
+            assert_eq!(
+                fa.link.as_ref().map(|l| l.bits()),
+                fb.link.as_ref().map(|l| l.bits())
+            );
+        }
+        assert_eq!(a.reference(), b.reference());
+        assert_eq!(a.dispatch_bits(0, 5), b.dispatch_bits(0, 5));
+    }
+
+    #[test]
+    fn out_of_order_versions_rejected() {
+        let versions = walk(16, 2, 1);
+        let mut down =
+            DownlinkEncoder::new(CodecSpec::qsgd(2).build().unwrap(), 1, 2);
+        down.begin_round(0, &versions[0]).unwrap();
+        assert!(down.begin_round(2, &versions[2]).is_err());
+        assert!(down.begin_round(0, &versions[0]).is_err());
+        down.begin_round(1, &versions[1]).unwrap();
+    }
+}

@@ -31,9 +31,10 @@
 //! transports that drop failed nodes outright.
 
 use super::aggregate::{Aggregator, ShardPlan};
+use super::downlink::DownlinkEncoder;
 use super::local::OwnedLabels;
 use super::sampler;
-use super::transport::{RoundCtx, Transport};
+use super::transport::{ModelFrame, RoundCtx, Transport};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Labels, Partition};
 use crate::metrics::{Curve, CurvePoint};
@@ -72,6 +73,11 @@ pub struct RoundStats {
     pub compute_time: f64,
     pub comm_time: f64,
     pub bits_up: u64,
+    /// Downlink bits charged for this commit's dispatches: the delta
+    /// chain links each dispatched node was missing (down codec set), or
+    /// one dense `32·p` model per dispatch (raw downlink). Per-node
+    /// accounting — see `docs/PROTOCOL.md`.
+    pub bits_down: u64,
     /// Stale uploads dropped (and re-dispatched) between the previous
     /// commit and this one.
     pub dropped: u64,
@@ -90,6 +96,9 @@ pub struct RunMeta {
     pub seed: u64,
     /// The config's tagged codec spec, as its canonical JSON.
     pub codec: crate::util::json::Json,
+    /// The config's downlink codec spec as canonical JSON (`null` when
+    /// the broadcast is raw f32).
+    pub down_codec: crate::util::json::Json,
     /// [`ExperimentConfig::config_hash`] — the run-identity key shared
     /// with checkpoints.
     pub config_hash: u64,
@@ -113,6 +122,9 @@ pub struct RunResult {
     pub rounds: Vec<RoundStats>,
     /// Total uploaded bits over the run.
     pub total_bits: u64,
+    /// Total downlink (broadcast) bits over the run — the other half of
+    /// the communication bill, per-node accounting.
+    pub total_bits_down: u64,
     /// Run self-description (seed, codec, config hash, provenance).
     pub meta: RunMeta,
 }
@@ -140,6 +152,7 @@ impl RunResult {
                     ("iterations", Json::num(p.iterations as f64)),
                     ("time", Json::num(p.time)),
                     ("bits_up", Json::num(p.bits_up as f64)),
+                    ("bits_down", Json::num(p.bits_down as f64)),
                     ("loss", Json::num(p.loss)),
                 ])
             })
@@ -153,6 +166,7 @@ impl RunResult {
                     ("compute_time", Json::num(r.compute_time)),
                     ("comm_time", Json::num(r.comm_time)),
                     ("bits_up", Json::num(r.bits_up as f64)),
+                    ("bits_down", Json::num(r.bits_down as f64)),
                     ("dropped", Json::num(r.dropped as f64)),
                     ("staleness_max", Json::num(r.staleness_max as f64)),
                     ("staleness_mean", Json::num(r.staleness_mean)),
@@ -167,6 +181,7 @@ impl RunResult {
                 "config_hash",
                 Json::str(format!("{:016x}", self.meta.config_hash)),
             ),
+            ("down_codec", self.meta.down_codec.clone()),
             ("proto_version", Json::num(self.meta.proto_version as f64)),
             (
                 "resumed_from",
@@ -188,6 +203,7 @@ impl RunResult {
             ("meta", meta),
             ("rounds", Json::Arr(rounds)),
             ("total_bits", Json::num(self.total_bits as f64)),
+            ("total_bits_down", Json::num(self.total_bits_down as f64)),
             (
                 "params",
                 Json::Arr(self.params.iter().map(|&v| Json::num(v as f64)).collect()),
@@ -283,26 +299,22 @@ impl RoundEngine {
 
     /// Drive the full K-round protocol for a *validated* `cfg`, recording
     /// the loss curve through `slab` on `cfg.eval_every`'s schedule.
-    pub fn run(
-        &mut self,
-        cfg: &ExperimentConfig,
-        engine: &mut dyn Engine,
-        slab: &EvalSlab,
-    ) -> crate::Result<RunResult> {
-        self.run_controlled(cfg, engine, slab, &crate::ops::RunControl::default())
-    }
-
-    /// [`run`](Self::run) plus operator controls: structured events,
-    /// periodic atomic checkpoints, forced early stop, and resume.
+    ///
+    /// `ctrl` carries the operator controls (structured events, periodic
+    /// atomic checkpoints, forced early stop, resume); pass
+    /// `&RunControl::default()` for a plain run. This is the single
+    /// entry point — the former `run`/`run_controlled` pair collapsed
+    /// into one options-taking signature.
     ///
     /// The resume contract is **bit-identity**: a run checkpointed at
     /// commit `K` and resumed produces the same `RunResult` (curve,
     /// stats, params, total bits — everything but the `resumed_from`
     /// provenance field) as the run that was never interrupted, because
     /// the checkpoint restores every piece of cross-commit state: model,
-    /// history, virtual clock, codec residuals, and the async planner
-    /// with its in-flight jobs. CI enforces this with byte-diffs.
-    pub fn run_controlled(
+    /// history, virtual clock, codec residuals, downlink reference, and
+    /// the async planner with its in-flight jobs. CI enforces this with
+    /// byte-diffs.
+    pub fn run(
         &mut self,
         cfg: &ExperimentConfig,
         engine: &mut dyn Engine,
@@ -313,18 +325,28 @@ impl RoundEngine {
         let events = ctrl.events.with_seed(cfg.seed);
         self.transport.set_events(events.clone());
         self.transport.setup(cfg, engine)?;
+        let cfg_json = cfg.to_json();
         let meta = RunMeta {
             seed: cfg.seed,
-            codec: cfg.to_json().get("codec").cloned().unwrap_or(Json::Null),
+            codec: cfg_json.get("codec").cloned().unwrap_or(Json::Null),
+            down_codec: cfg_json.get("down_codec").cloned().unwrap_or(Json::Null),
             config_hash: cfg.config_hash(),
             proto_version: crate::net::proto::PROTO_VERSION,
             resumed_from: ctrl.resume.as_ref().map(|ck| ck.id()),
         };
         let rounds = cfg.rounds();
         let p = engine.kind().param_count();
+        // The downlink encoder (QAFeL hidden state) lives run-long so the
+        // reference model and per-node chain accounting persist across
+        // commits; raw-f32 broadcast when the config has no down codec.
+        let mut downlink = match &cfg.down_codec {
+            Some(spec) => Some(DownlinkEncoder::new(spec.build()?, cfg.seed, cfg.n_nodes)),
+            None => None,
+        };
         let mut curve;
         let mut stats;
         let mut total_bits;
+        let mut total_bits_down;
         let mut params;
         let start_k;
         let mut timing = if self.transport.virtual_time() {
@@ -355,12 +377,27 @@ impl RoundEngine {
             curve.points = ck.curve.clone();
             stats = ck.stats.clone();
             total_bits = ck.total_bits;
+            total_bits_down = ck.total_bits_down;
             start_k = ck.next_round;
             if let Timing::Virtual { clock, .. } = &mut timing {
                 clock.advance(ck.clock_now);
             }
             self.codec.reset_state();
             self.codec.state_import(ck.codec_state.clone());
+            match &mut downlink {
+                Some(d) => d.state_import(
+                    ck.down_reference.clone(),
+                    ck.down_link_bits.clone(),
+                    ck.down_last.clone(),
+                    ck.down_codec_state.clone(),
+                )?,
+                None => anyhow::ensure!(
+                    ck.down_reference.is_empty() && ck.down_link_bits.is_empty(),
+                    "checkpoint {} carries downlink state but the config has \
+                     no down_codec",
+                    ck.id(),
+                ),
+            }
             match ck.transport.clone() {
                 Some(ts) => self.transport.restore_state(ts)?,
                 None => anyhow::ensure!(
@@ -382,6 +419,7 @@ impl RoundEngine {
             curve = Curve::new(cfg.name.clone());
             stats = Vec::with_capacity(rounds);
             total_bits = 0u64;
+            total_bits_down = 0u64;
             start_k = 0;
             // Round-0 point: initial loss at time 0.
             let loss0 = slab.eval(engine, &params)?;
@@ -390,6 +428,7 @@ impl RoundEngine {
                 iterations: 0,
                 time: 0.0,
                 bits_up: 0,
+                bits_down: 0,
                 loss: loss0,
             });
         }
@@ -421,8 +460,31 @@ impl RoundEngine {
             let round_t0 = Instant::now();
             let nodes = sampler::sample_nodes(cfg.n_nodes, cfg.r, cfg.seed, k);
             let lrs: Vec<f32> = (0..cfg.tau).map(|t| cfg.lr.lr(k, t)).collect();
-            let ctx = RoundCtx { round: k, nodes: &nodes, params: &params, lrs: &lrs };
+            // Build this version's broadcast frame. Under a down codec
+            // the dispatched nodes train on the shared reference `ref(k)`
+            // — not the exact `x_k` they never see — and their uplink
+            // deltas are relative to it; the aggregate still applies to
+            // the server's exact model (QAFeL).
+            let frame = match &mut downlink {
+                Some(d) => d.begin_round(k, &params)?,
+                None => ModelFrame::raw(k, params.clone()),
+            };
+            let ctx = RoundCtx { round: k, nodes: &nodes, frame: &frame, lrs: &lrs };
             let outcome = self.transport.round(&ctx, self.codec.as_ref(), engine)?;
+            // Downlink bits, per dispatch: the chain links the node was
+            // missing (down codec), or one dense model — `32·p`, except
+            // the free out-of-band version 0 — on the raw broadcast.
+            let bits_down: u64 = match &mut downlink {
+                Some(d) => outcome
+                    .dispatches
+                    .iter()
+                    .map(|&(node, v)| d.dispatch_bits(node, v))
+                    .sum(),
+                None => outcome.dispatches.iter().filter(|&&(_, v)| v > 0).count()
+                    as u64
+                    * 32
+                    * p as u64,
+            };
             agg.reset();
             let batch: Vec<(&crate::quant::Encoded, f64)> = outcome
                 .uploads
@@ -471,6 +533,7 @@ impl RoundEngine {
                 );
             }
             total_bits += bits;
+            total_bits_down += bits_down;
             // Async-protocol telemetry: staleness stamps come with the
             // uploads, drop counts with the outcome. Barrier transports
             // report all zeros (every upload is staleness 0, none drop).
@@ -487,6 +550,7 @@ impl RoundEngine {
                 compute_time,
                 comm_time,
                 bits_up: bits,
+                bits_down,
                 dropped: outcome.dropped,
                 staleness_max,
                 staleness_mean,
@@ -503,6 +567,7 @@ impl RoundEngine {
                     iterations: (k + 1) * cfg.tau,
                     time,
                     bits_up: total_bits,
+                    bits_down: total_bits_down,
                     loss,
                 });
             }
@@ -516,6 +581,7 @@ impl RoundEngine {
                 "commit",
                 vec![
                     ("bits", Json::num(bits as f64)),
+                    ("bits_down", Json::num(bits_down as f64)),
                     ("dropped", Json::num(outcome.dropped as f64)),
                     ("staleness_max", Json::num(staleness_max as f64)),
                     ("t", Json::num(t_now)),
@@ -528,11 +594,17 @@ impl RoundEngine {
             if let Some(path) =
                 ctrl.checkpoint_path.as_ref().filter(|_| ctrl.checkpoint_due(completed))
             {
+                let (down_reference, down_link_bits, down_last, down_codec_state) =
+                    match &downlink {
+                        Some(d) => d.state_export(),
+                        None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+                    };
                 let ck = crate::ops::Checkpoint {
                     config_hash: meta.config_hash,
                     seed: cfg.seed,
                     next_round: completed,
                     total_bits,
+                    total_bits_down,
                     clock_now: match &timing {
                         Timing::Virtual { clock, .. } => clock.now(),
                         // Wall-clock time restarts on resume; see
@@ -544,6 +616,10 @@ impl RoundEngine {
                     curve: curve.points.clone(),
                     stats: stats.clone(),
                     codec_state: self.codec.state_export(),
+                    down_reference,
+                    down_link_bits,
+                    down_last,
+                    down_codec_state,
                     rng_states: Vec::new(),
                     transport: self.transport.export_state()?,
                 };
@@ -571,8 +647,9 @@ impl RoundEngine {
             vec![
                 ("rounds_done", Json::num(stats.len() as f64)),
                 ("total_bits", Json::num(total_bits as f64)),
+                ("total_bits_down", Json::num(total_bits_down as f64)),
             ],
         );
-        Ok(RunResult { curve, params, rounds: stats, total_bits, meta })
+        Ok(RunResult { curve, params, rounds: stats, total_bits, total_bits_down, meta })
     }
 }

@@ -49,6 +49,12 @@
 //! `cfg.async_rounds` is set) and [`server::Server`] keeps the
 //! historical one-call entry point.
 //!
+//! Step 2's broadcast has its own optional codec seam: with
+//! `cfg.down_codec` set, the server ships compressed deltas against a
+//! shared reference model instead of raw f32 ([`downlink`],
+//! QAFeL-style), and each commit's [`transport::ModelFrame`] carries the
+//! newest chain link alongside the dense reference.
+//!
 //! Baselines fall out of the same pipeline: **FedAvg** = identity codec,
 //! **QSGD** = `τ = 1`, vanilla parallel SGD = both, **FedBuff** =
 //! `async_rounds` + identity codec.
@@ -56,6 +62,7 @@
 pub mod aggregate;
 pub mod async_sim;
 pub mod commit_loop;
+pub mod downlink;
 pub mod engine;
 pub mod local;
 pub mod sampler;
@@ -65,6 +72,9 @@ pub mod transport;
 pub use aggregate::{Aggregator, ShardPlan, StalenessRule};
 pub use async_sim::AsyncSim;
 pub use commit_loop::{CommitPlanner, Decision, PlannerEvent, PlannerState};
+pub use downlink::DownlinkEncoder;
 pub use engine::{EvalSlab, RoundEngine, RoundStats, RunMeta, RunResult};
 pub use server::{Server, ServerBuilder};
-pub use transport::{CommitTiming, InProcess, RoundCtx, RoundOutcome, Transport, Upload};
+pub use transport::{
+    CommitTiming, InProcess, ModelFrame, RoundCtx, RoundOutcome, Transport, Upload,
+};

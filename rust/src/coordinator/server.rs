@@ -78,6 +78,17 @@ impl<'e> ServerBuilder<'e> {
         self
     }
 
+    /// Compress the server→client broadcast with `spec` (sets
+    /// `cfg.down_codec`): the engine ships per-commit deltas against a
+    /// shared reference model instead of raw f32 — see
+    /// [`super::downlink`]. Only rebuildable specs are accepted
+    /// (validation runs at `build()`), since every receiver reconstructs
+    /// the codec from the config.
+    pub fn down_codec(mut self, spec: crate::quant::CodecSpec) -> Self {
+        self.cfg.down_codec = Some(spec);
+        self
+    }
+
     /// Override the transport (default: [`InProcess`], or
     /// [`AsyncSim`] when `cfg.async_rounds` is set).
     ///
@@ -216,7 +227,7 @@ impl<'e> Server<'e> {
     /// default).
     pub fn run(&mut self) -> crate::Result<RunResult> {
         self.rounds
-            .run_controlled(&self.cfg, self.engine, &self.slab, &self.control)
+            .run(&self.cfg, self.engine, &self.slab, &self.control)
     }
 }
 
@@ -250,6 +261,7 @@ mod tests {
             max_staleness: 8,
             staleness_rule: Default::default(),
             agg_shards: 1,
+            down_codec: None,
         }
     }
 
@@ -406,6 +418,39 @@ mod tests {
         // codec leg byte-diffs).
         let c = run(1);
         assert_eq!(a.params, c.params);
+    }
+
+    #[test]
+    fn downlink_compression_trains_and_splits_the_bit_account() {
+        // down_codec end-to-end through the default in-process pipeline:
+        // the run still trains (clients learn from the QAFeL reference,
+        // not the exact server model), the download side of the bill is
+        // reported, compressed broadcast is much cheaper than dense, and
+        // repeat runs are bit-identical.
+        let run = |down: Option<CodecSpec>| {
+            let mut eng = engine();
+            let mut cfg = small_cfg();
+            cfg.down_codec = down;
+            Server::new(cfg, &mut eng).unwrap().run().unwrap()
+        };
+        let raw = run(None);
+        assert!(raw.total_bits_down > 0, "raw broadcasts must be billed");
+        let qd = run(Some(CodecSpec::qsgd(4)));
+        assert!(qd.total_bits_down > 0);
+        assert!(
+            qd.total_bits_down < raw.total_bits_down / 2,
+            "compressed downlink {} vs dense {}",
+            qd.total_bits_down,
+            raw.total_bits_down
+        );
+        let first = qd.curve.points.first().unwrap().loss;
+        let last = qd.curve.points.last().unwrap().loss;
+        assert!(last < first * 0.9, "did not train: {first} -> {last}");
+        let qd2 = run(Some(CodecSpec::qsgd(4)));
+        assert_eq!(qd.params, qd2.params);
+        assert_eq!(qd.total_bits_down, qd2.total_bits_down);
+        // Uplink accounting is independent of the downlink codec.
+        assert_eq!(qd.total_bits, qd2.total_bits);
     }
 
     #[test]

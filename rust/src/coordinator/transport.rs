@@ -34,18 +34,47 @@ use crate::model::Engine;
 use crate::quant::{Encoded, UpdateCodec};
 use std::sync::Arc;
 
+/// One broadcastable model version — the unit every transport ships to
+/// its nodes, replacing the ad-hoc `(Vec<f32>, version)` tuples the
+/// broadcast paths used to pass around.
+///
+/// `params` is always the dense model clients must *train on*: the exact
+/// `x_k` when the downlink is raw, or the shared reference `ref(k)` when
+/// a `down_codec` is set (see [`super::downlink`]). `link` additionally
+/// carries the newest delta-chain link in compressed form, so networked
+/// transports can ship a chain suffix instead of the dense vector.
+#[derive(Debug, Clone)]
+pub struct ModelFrame {
+    /// Server version `k` this frame broadcasts.
+    pub version: usize,
+    /// Dense broadcast model (`x_k` raw, `ref(k)` under a down codec).
+    pub params: Vec<f32>,
+    /// The encoded chain link `ref(k−1) → ref(k)`. `None` when the
+    /// downlink is raw, and at version 0 (the initial model is shipped
+    /// out of band / as a raw re-base).
+    pub link: Option<Encoded>,
+}
+
+impl ModelFrame {
+    /// A raw (uncompressed-downlink) frame.
+    pub fn raw(version: usize, params: Vec<f32>) -> Self {
+        ModelFrame { version, params, link: None }
+    }
+}
+
 /// Everything a transport needs to execute one commit's worth of work.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundCtx<'a> {
     /// Server version `k` (one per commit; for barrier transports this is
-    /// exactly the paper's round index).
+    /// exactly the paper's round index). Always equals `frame.version`.
     pub round: usize,
     /// The sampled candidate set `S_k`, in sampling order. Barrier
     /// transports run all of it; buffered-async transports dispatch a
     /// prefix as their refill wave.
     pub nodes: &'a [usize],
-    /// Current global model `x_k` to broadcast.
-    pub params: &'a [f32],
+    /// The broadcast model for this version (what dispatched nodes train
+    /// on, plus the compressed chain link when the downlink is encoded).
+    pub frame: &'a ModelFrame,
     /// Per-local-step stepsizes for work dispatched at this version.
     pub lrs: &'a [f32],
 }
@@ -89,6 +118,13 @@ pub struct RoundOutcome {
     /// [`RoundStats`](super::engine::RoundStats). Always 0 on barrier
     /// transports.
     pub dropped: u64,
+    /// Every `(node, version)` dispatch performed during this call, in
+    /// dispatch order — the engine charges downlink bits per dispatch
+    /// (the chain links, or the dense model when the downlink is raw).
+    /// Barrier transports dispatch each sampled node once at
+    /// `ctx.round`; buffered-async transports also list their planner
+    /// re-dispatches.
+    pub dispatches: Vec<(usize, usize)>,
 }
 
 impl RoundOutcome {
@@ -102,7 +138,8 @@ impl RoundOutcome {
             .zip(encs)
             .map(|(&node, enc)| Upload { node, origin_round: ctx.round, staleness: 0, enc })
             .collect();
-        RoundOutcome { uploads, timing: None, dropped: 0 }
+        let dispatches = ctx.nodes.iter().map(|&node| (node, ctx.round)).collect();
+        RoundOutcome { uploads, timing: None, dropped: 0, dispatches }
     }
 }
 
@@ -303,7 +340,7 @@ impl Transport for InProcess {
                 engine,
                 node,
                 ctx.round,
-                ctx.params,
+                &ctx.frame.params,
                 ctx.lrs,
                 &mut self.bufs,
             )?);
@@ -330,6 +367,7 @@ mod tests {
             tau: 2,
             t_total: 4,
             codec: CodecSpec::qsgd(2),
+            down_codec: None,
             lr: LrSchedule::Const { eta: 0.3 },
             ratio: 100.0,
             seed: 9,
@@ -352,10 +390,11 @@ mod tests {
             RustEngine::new(crate::model::ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 120)
                 .unwrap();
         let params = engine.init_params().unwrap();
+        let frame = ModelFrame::raw(0, params.clone());
         let run_once = |engine: &mut RustEngine| {
             let mut t = InProcess::new();
             t.setup(&cfg, engine).unwrap();
-            let ctx = RoundCtx { round: 0, nodes: &[2, 0], params: &params, lrs: &[0.3, 0.3] };
+            let ctx = RoundCtx { round: 0, nodes: &[2, 0], frame: &frame, lrs: &[0.3, 0.3] };
             t.round(&ctx, codec.as_ref(), engine).unwrap()
         };
         let a = run_once(&mut engine);
@@ -372,6 +411,8 @@ mod tests {
         // Node order preserved (the bit-stability contract).
         assert_eq!(a.uploads[0].node, 2);
         assert_eq!(a.uploads[1].node, 0);
+        // Barrier rounds dispatch each sampled node once, at this round.
+        assert_eq!(a.dispatches, vec![(2, 0), (0, 0)]);
     }
 
     #[test]
@@ -381,8 +422,8 @@ mod tests {
         let mut engine =
             RustEngine::new(crate::model::ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 120)
                 .unwrap();
-        let params = vec![0f32; 785];
-        let ctx = RoundCtx { round: 0, nodes: &[0], params: &params, lrs: &[0.1] };
+        let frame = ModelFrame::raw(0, vec![0f32; 785]);
+        let ctx = RoundCtx { round: 0, nodes: &[0], frame: &frame, lrs: &[0.1] };
         let mut t = InProcess::new();
         assert!(t.round(&ctx, codec.as_ref(), &mut engine).is_err());
     }

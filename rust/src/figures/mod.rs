@@ -279,6 +279,39 @@ pub fn all_figures() -> Vec<FigureSpec> {
                 .with_name("ef+rand-k 10%"),
         ],
     });
+    // --- Extension: bidirectional compression — loss vs TOTAL traffic
+    // (bits_up + bits_down). The uplink-only runs pay a dense 32-bit
+    // broadcast per dispatch; the down_codec runs ship QAFeL-style
+    // reference deltas instead. Covers both directions' codec pairings,
+    // including an EF-wrapped downlink (the server-side residual stream).
+    let base = ExperimentConfig::fig1_logreg_base();
+    out.push(FigureSpec {
+        id: "ext_bidir".into(),
+        title: "EXT LogReg/MNIST: bidirectional compression, loss vs total \
+                up+down bits (tau=5, r=25)"
+            .into(),
+        configs: vec![
+            base.clone()
+                .with_codec(CodecSpec::qsgd(4))
+                .with_name("qsgd4 up / raw down"),
+            base.clone()
+                .with_codec(CodecSpec::qsgd(4))
+                .with_down_codec(CodecSpec::qsgd(4))
+                .with_name("qsgd4 up / qsgd4 down"),
+            base.clone()
+                .with_codec(CodecSpec::top_k(100))
+                .with_down_codec(CodecSpec::qsgd(4))
+                .with_name("top-k 10% up / qsgd4 down"),
+            base.clone()
+                .with_codec(CodecSpec::qsgd(4))
+                .with_down_codec(CodecSpec::error_feedback(CodecSpec::top_k(100)))
+                .with_name("qsgd4 up / ef+top-k down"),
+            base.clone()
+                .with_codec(CodecSpec::error_feedback(CodecSpec::rand_k(100)))
+                .with_down_codec(CodecSpec::adaptive(4))
+                .with_name("ef+rand-k up / adaptive4 down"),
+        ],
+    });
     // Coding ablation: QSGD Elias-omega wire vs the naive fixed-width wire
     // (same stochastic levels, different |Q(p,s)| on the time axis).
     let base = ExperimentConfig::fig1_nn_base();
@@ -371,18 +404,14 @@ impl Runner {
         Ok(self.engines.get_mut(model).unwrap())
     }
 
-    /// Run a single config to completion.
+    /// Run a single config to completion under operator run control:
+    /// `ctrl` carries the JSONL event sink, checkpoint cadence, and an
+    /// optional checkpoint to resume from (see
+    /// [`crate::ops::RunControl`]). Callers without operator needs pass
+    /// `RunControl::default()` — the former
+    /// `run_config`/`run_config_controlled` pair collapsed into this one
+    /// options-taking signature.
     pub fn run_config(
-        &mut self,
-        cfg: ExperimentConfig,
-    ) -> crate::Result<crate::coordinator::RunResult> {
-        self.run_config_controlled(cfg, crate::ops::RunControl::default())
-    }
-
-    /// [`Runner::run_config`] under operator run control: `ctrl` carries
-    /// the JSONL event sink, checkpoint cadence, and an optional
-    /// checkpoint to resume from (see [`crate::ops::RunControl`]).
-    pub fn run_config_controlled(
         &mut self,
         mut cfg: ExperimentConfig,
         ctrl: crate::ops::RunControl,
@@ -405,7 +434,7 @@ impl Runner {
         for cfg in &spec.configs {
             let label = cfg.name.clone();
             eprintln!("  [{}] running {label} ...", spec.id);
-            let res = self.run_config(cfg.clone())?;
+            let res = self.run_config(cfg.clone(), crate::ops::RunControl::default())?;
             fig.curves.push(res.curve);
         }
         Ok(fig)
@@ -432,11 +461,11 @@ mod tests {
     #[test]
     fn all_figure_ids_unique_and_configs_valid() {
         let figs = all_figures();
-        assert_eq!(figs.len(), 24); // 4 + 4 + 4*3 + 4 extensions
+        assert_eq!(figs.len(), 25); // 4 + 4 + 4*3 + 5 extensions
         let mut ids: Vec<_> = figs.iter().map(|f| f.id.clone()).collect();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), 24);
+        assert_eq!(ids.len(), 25);
         for f in &figs {
             assert!(!f.configs.is_empty(), "{} empty", f.id);
             for c in &f.configs {
@@ -474,6 +503,25 @@ mod tests {
     }
 
     #[test]
+    fn ext_bidir_sweeps_codec_pairs_with_downlink() {
+        let f = figure("ext_bidir").unwrap();
+        assert!(f.configs.len() >= 4, "need >= 4 up/down pairs");
+        // At least one uplink-only baseline and several compressed
+        // downlinks, including a stateful (EF) one.
+        assert!(f.configs.iter().any(|c| c.down_codec.is_none()));
+        assert!(f.configs.iter().filter(|c| c.down_codec.is_some()).count() >= 3);
+        assert!(f
+            .configs
+            .iter()
+            .any(|c| matches!(&c.down_codec, Some(d) if d.is_stateful())));
+        for c in &f.configs {
+            if let Some(d) = &c.down_codec {
+                assert!(d.rebuildable(), "{}: downlink spec must be rebuildable", c.name);
+            }
+        }
+    }
+
+    #[test]
     fn rust_runner_smoke_on_tiny_logreg() {
         let mut runner = Runner::new(EngineKind::Rust, "artifacts");
         runner.t_override = Some(10);
@@ -487,7 +535,7 @@ mod tests {
         // keep the world big enough for the slab:
         cfg.n_nodes = 50;
         cfg.per_node = 200;
-        let res = runner.run_config(cfg).unwrap();
+        let res = runner.run_config(cfg, crate::ops::RunControl::default()).unwrap();
         assert!(res.curve.points.len() >= 2);
     }
 }

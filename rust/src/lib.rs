@@ -80,6 +80,24 @@
 //! let result = ServerBuilder::new(cfg).engine(&mut engine).build()?.run()?;
 //! ```
 //!
+//! ## Bidirectional compression (see `docs/PROTOCOL.md`)
+//!
+//! The same [`quant::UpdateCodec`] trait drives both wire directions.
+//! `cfg.down_codec` (CLI: `--down-s`/`--down-topk`/... mirroring the
+//! uplink flags) compresses the server→client broadcast as a chain of
+//! encoded model *deltas* against a shared reference model the server
+//! maintains ([`coordinator::DownlinkEncoder`], QAFeL-style hidden
+//! state): round 0 ships dense and seeds the reference, every later
+//! round ships `encode(x_k − ref)` and advances the reference by its own
+//! decode, so server and every client hold bit-identical references
+//! without ever re-sending the dense model. Download traffic is billed
+//! per virtual node from the per-version link sizes
+//! ([`metrics::CurvePoint::bits_down`], `RunResult::total_bits_down`),
+//! identically across all four transports; on real sockets the leader
+//! ships each worker only the links it is missing and re-bases dead or
+//! late-joining workers with a dense frame ([`net::proto::ModelPayload`],
+//! wire protocol v3).
+//!
 //! ## Operable runs (see `docs/OPERATIONS.md`)
 //!
 //! The [`ops`] layer makes long runs killable and watchable:

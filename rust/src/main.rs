@@ -32,9 +32,14 @@ USAGE:
                [--engine pjrt|rust] [--agg-shards N] [--out-json FILE]
                [--async-rounds] [--buffer-size B] [--max-staleness S]
                [--staleness-rule uniform|polynomial] [--staleness-a A]
+               [--down-s S] [--down-topk PERMILLE] [--down-rand-k PERMILLE]
+               [--down-adaptive-bits B] [--down-elias] [--down-ef]
   (codec pick: --topk > --rand-k > --adaptive-bits > --s; --s 0 = identity;
    --elias selects Elias coding, and for --rand-k the explicit-index mode;
    --ef wraps the picked codec in per-node error feedback)
+  (--down-* mirror the uplink flags but pick the server->client downlink
+   codec — the broadcast ships compressed model deltas; no --down-* flag
+   means a dense broadcast, and --down-s 0 = identity-coded deltas)
   (a leading flag implies `train`: `fedpaq --async-rounds --buffer-size 4`)
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
                 [--agg-shards N] [--out-json FILE]
@@ -71,7 +76,10 @@ impl Flags {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Boolean flags have no value or are followed by another --flag.
-                let is_bool = matches!(key, "elias" | "fast" | "async-rounds" | "ef");
+                let is_bool = matches!(
+                    key,
+                    "elias" | "fast" | "async-rounds" | "ef" | "down-elias" | "down-ef"
+                );
                 if is_bool {
                     map.insert(key.to_string(), "true".to_string());
                     i += 1;
@@ -259,6 +267,58 @@ fn main() -> anyhow::Result<()> {
                 } else {
                     base_codec
                 };
+                // Downlink pick mirrors the uplink precedence; with no
+                // --down-* flag the broadcast stays dense (None).
+                let down_elias = flags.get("down-elias").is_some();
+                let down_coding = if down_elias { Coding::Elias } else { Coding::Naive };
+                let down_base = if let Some(k) = flags.get("down-topk") {
+                    Some(CodecSpec::TopK {
+                        k_permille: k
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--down-topk {k}: {e}"))?,
+                        coding: down_coding,
+                    })
+                } else if let Some(k) = flags.get("down-rand-k") {
+                    Some(CodecSpec::RandK {
+                        k_permille: k
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--down-rand-k {k}: {e}"))?,
+                        seeded: !down_elias,
+                    })
+                } else if let Some(b) = flags.get("down-adaptive-bits") {
+                    Some(CodecSpec::AdaptiveQsgd {
+                        bits_per_coord: b
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--down-adaptive-bits {b}: {e}"))?,
+                        coding: down_coding,
+                    })
+                } else if let Some(s) = flags.get("down-s") {
+                    let s: u32 = s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--down-s {s}: {e}"))?;
+                    Some(if s == 0 {
+                        CodecSpec::Identity
+                    } else {
+                        CodecSpec::Qsgd { s, coding: down_coding }
+                    })
+                } else {
+                    None
+                };
+                let down_codec = match down_base {
+                    Some(base) if flags.get("down-ef").is_some() => {
+                        Some(CodecSpec::error_feedback(base))
+                    }
+                    None if flags.get("down-ef").is_some() => {
+                        anyhow::bail!(
+                            "--down-ef needs a downlink codec (--down-s/--down-topk/...)"
+                        )
+                    }
+                    other => other,
+                };
+                let down_label = down_codec
+                    .as_ref()
+                    .map(|c| format!(" down={}", codec_label(c)))
+                    .unwrap_or_default();
                 let codec_label = codec_label(&codec);
                 let async_rounds = flags.get("async-rounds").is_some();
                 let buffer_size: usize = flags.parse_num("buffer-size", 0usize)?;
@@ -299,6 +359,7 @@ fn main() -> anyhow::Result<()> {
                     max_staleness,
                     staleness_rule,
                     agg_shards: 1,
+                    down_codec,
                 }
                 .validated()?;
                 let async_label = if cfg.async_rounds {
@@ -306,8 +367,10 @@ fn main() -> anyhow::Result<()> {
                 } else {
                     String::new()
                 };
-                cfg.name =
-                    format!("{} {codec_label} r={r} tau={tau}{async_label}", cfg.model);
+                cfg.name = format!(
+                    "{} {codec_label} r={r} tau={tau}{async_label}{down_label}",
+                    cfg.model
+                );
                 cfg
             };
             // Shard count is an execution knob, not an experiment
@@ -320,12 +383,13 @@ fn main() -> anyhow::Result<()> {
                 cfg = cfg.validated()?;
             }
             let mut runner = Runner::new(cfg.engine.clone(), &artifacts);
-            let res = runner.run_config_controlled(cfg.clone(), run_control(&flags)?)?;
+            let res = runner.run_config(cfg.clone(), run_control(&flags)?)?;
             println!("run: {}", cfg.name);
             println!(
-                "rounds: {}  total upload: {} bits",
+                "rounds: {}  total upload: {} bits  total download: {} bits",
                 res.rounds.len(),
-                res.total_bits
+                res.total_bits,
+                res.total_bits_down
             );
             for p in &res.curve.points {
                 println!(
@@ -366,7 +430,7 @@ fn main() -> anyhow::Result<()> {
             let bind = flags.get_or("bind", "127.0.0.1:7070");
             let workers: usize = flags.parse_num("workers", 2usize)?;
             let mut engine = fedpaq::net::worker::build_engine(&cfg, &artifacts)?;
-            let res = fedpaq::net::run_leader_controlled(
+            let res = fedpaq::net::run_leader(
                 cfg,
                 &bind,
                 workers,

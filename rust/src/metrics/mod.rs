@@ -14,8 +14,18 @@ pub struct CurvePoint {
     pub time: f64,
     /// Cumulative uploaded bits.
     pub bits_up: u64,
+    /// Cumulative downlink (broadcast) bits, per-node accounting.
+    pub bits_down: u64,
     /// Training loss at the server model.
     pub loss: f64,
+}
+
+impl CurvePoint {
+    /// Total communication so far, both directions — the x-axis of the
+    /// bidirectional-compression tradeoff figures.
+    pub fn bits_total(&self) -> u64 {
+        self.bits_up + self.bits_down
+    }
 }
 
 /// A named loss-vs-time series (one line on a paper plot).
@@ -76,18 +86,19 @@ impl FigureData {
         FigureData { id: id.into(), title: title.into(), curves: Vec::new() }
     }
 
-    /// Write `<dir>/<id>.csv` with columns `label,round,iterations,time,bits_up,loss`.
+    /// Write `<dir>/<id>.csv` with columns
+    /// `label,round,iterations,time,bits_up,bits_down,loss`.
     pub fn write_csv(&self, dir: &Path) -> crate::Result<std::path::PathBuf> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.csv", self.id));
         let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        writeln!(f, "label,round,iterations,time,bits_up,loss")?;
+        writeln!(f, "label,round,iterations,time,bits_up,bits_down,loss")?;
         for c in &self.curves {
             for p in &c.points {
                 writeln!(
                     f,
-                    "{},{},{},{:.6},{},{:.6}",
-                    c.label, p.round, p.iterations, p.time, p.bits_up, p.loss
+                    "{},{},{},{:.6},{},{},{:.6}",
+                    c.label, p.round, p.iterations, p.time, p.bits_up, p.bits_down, p.loss
                 )?;
             }
         }
@@ -136,7 +147,14 @@ mod tests {
     fn curve(label: &str, pts: &[(f64, f64)]) -> Curve {
         let mut c = Curve::new(label);
         for (i, &(t, l)) in pts.iter().enumerate() {
-            c.push(CurvePoint { round: i + 1, iterations: (i + 1) * 5, time: t, bits_up: 0, loss: l });
+            c.push(CurvePoint {
+                round: i + 1,
+                iterations: (i + 1) * 5,
+                time: t,
+                bits_up: 0,
+                bits_down: 0,
+                loss: l,
+            });
         }
         c
     }
@@ -160,7 +178,7 @@ mod tests {
         let lines: Vec<_> = text.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("label,round"));
-        assert!(lines[1].starts_with("s=1,1,5,1.000000,0,0.9"));
+        assert!(lines[1].starts_with("s=1,1,5,1.000000,0,0,0.9"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

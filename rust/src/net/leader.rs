@@ -21,25 +21,17 @@ use crate::ops::RunControl;
 use std::path::Path;
 
 /// Run the distributed protocol with `n_workers` workers expected on
-/// `bind`. The leader also evaluates the loss curve locally on `engine`.
+/// `bind`, under operator run control: `ctrl` carries the JSONL event
+/// sink, the checkpoint cadence, and an optional checkpoint to resume
+/// from (`fedpaq leader --resume` — note the async leader only resumes
+/// *quiescent* checkpoints, see [`crate::ops::checkpoint`]). Callers
+/// without operator needs pass `&RunControl::default()` — the former
+/// `run_leader`/`run_leader_controlled` pair collapsed into this one
+/// options-taking signature.
 ///
+/// The leader also evaluates the loss curve locally on `engine`.
 /// Returns a [`RunResult`] whose `time` axis is real elapsed seconds.
 pub fn run_leader(
-    cfg: ExperimentConfig,
-    bind: &str,
-    n_workers: usize,
-    engine: &mut dyn Engine,
-    artifacts: &Path,
-) -> crate::Result<RunResult> {
-    run_leader_controlled(cfg, bind, n_workers, engine, artifacts, &RunControl::default())
-}
-
-/// [`run_leader`] under operator run control: `ctrl` carries the JSONL
-/// event sink, the checkpoint cadence, and an optional checkpoint to
-/// resume from (`fedpaq leader --resume` — note the async leader only
-/// resumes *quiescent* checkpoints, see
-/// [`crate::ops::checkpoint`]).
-pub fn run_leader_controlled(
     cfg: ExperimentConfig,
     bind: &str,
     n_workers: usize,
@@ -55,5 +47,5 @@ pub fn run_leader_controlled(
         Box::new(Tcp::new(bind, n_workers))
     };
     let mut rounds = RoundEngine::new(cfg.codec.build()?, transport);
-    rounds.run_controlled(&cfg, engine, &slab, ctrl)
+    rounds.run(&cfg, engine, &slab, ctrl)
 }

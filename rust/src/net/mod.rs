@@ -28,15 +28,19 @@
 //! ```text
 //! worker -> leader   Join { proto }
 //! leader -> worker   Setup { proto, cfg }     once, after all workers join
-//! leader -> worker   Work { version, node, params, lrs }
-//! worker -> leader   Update { version, node, enc }
+//! leader -> worker   Work { version, node, payload, lrs }
+//! worker -> leader   Update { version, node, enc, compute_ms, decode_ms }
 //! leader -> worker   Shutdown
 //! ```
 //!
 //! Every dispatch/upload carries the server **model version** it belongs
 //! to; staleness is leader-side bookkeeping (`commit − version`).
-//! Mixed-version clusters are rejected at the handshake with a clear
-//! protocol-version error ([`proto::PROTO_VERSION`]).
+//! `payload` ships the model either dense (`Raw`) or — with
+//! `cfg.down_codec` set — as a compressed delta chain the worker applies
+//! to its reconstructed reference ([`proto::ModelPayload`], wire v3; the
+//! full frame catalogue lives in `docs/PROTOCOL.md`). Mixed-version
+//! clusters are rejected at the handshake with a clear protocol-version
+//! error ([`proto::PROTO_VERSION`]).
 //!
 //! Each worker impersonates the *virtual nodes* assigned to it (the
 //! paper's `n` is decoupled from the number of worker processes),
@@ -63,6 +67,6 @@ pub mod proto;
 pub mod transport;
 pub mod worker;
 
-pub use leader::{run_leader, run_leader_controlled};
+pub use leader::run_leader;
 pub use transport::{Tcp, TcpAsync};
 pub use worker::{run_worker, run_worker_retrying, run_worker_with, WorkerOptions};

@@ -8,15 +8,20 @@
 //!
 //! ## Versioning
 //!
-//! v2 (the buffered-async protocol) stamps every dispatch and upload with
-//! the server **model version** it belongs to — the coordinate the
+//! v2 (the buffered-async protocol) stamped every dispatch and upload
+//! with the server **model version** it belongs to — the coordinate the
 //! [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
 //! derives staleness from (`staleness = commit version − origin
-//! version`). The v1 (pre-async) `Work`/`Update`/`Setup`/`Join` layouts
-//! used different variant tags; decoding one here fails with an explicit
-//! protocol-version error (not a byte-soup "truncated frame"), so a
-//! mixed-version cluster is rejected at the handshake instead of
-//! silently corrupting a run.
+//! version`). v3 (the bidirectional-compression protocol) additionally
+//! lets a `Work` dispatch carry its model as either a dense raw vector
+//! or a **compressed delta chain** against the worker's last
+//! reconstructed reference ([`ModelPayload`]), and `Update` frames echo
+//! worker-side decode/compute timings for the event bus. The v1 and v2
+//! layouts used different variant tags; decoding one here fails with an
+//! explicit protocol-version error (not a byte-soup "truncated frame"),
+//! so a mixed-version cluster is rejected at the handshake instead of
+//! silently corrupting a run. See `docs/PROTOCOL.md` for the full frame
+//! catalogue.
 
 use crate::config::ExperimentConfig;
 use crate::quant::{bitstream::BitBuf, CodecSpec, Coding, Encoded};
@@ -27,18 +32,35 @@ use std::io::{Read, Write};
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
 /// Wire protocol version. Bumped to 2 when dispatches/uploads gained
-/// model-version stamps (the buffered-async protocol); v1 peers are
-/// rejected with a clear error at the `Join`/`Setup` handshake.
-pub const PROTO_VERSION: u32 = 2;
+/// model-version stamps (the buffered-async protocol), and to 3 when
+/// dispatches gained delta-chain model payloads and uploads gained
+/// worker timing (the bidirectional-compression protocol); v1/v2 peers
+/// are rejected with a clear error at the `Join`/`Setup` handshake.
+pub const PROTO_VERSION: u32 = 3;
 
-/// The error both ends raise when a v1 (pre-async) frame shows up.
-fn protocol_version_error(what: &str) -> anyhow::Error {
+/// The error both ends raise when an older-protocol frame shows up.
+fn protocol_version_error(v: u32, what: &str) -> anyhow::Error {
     anyhow::anyhow!(
-        "peer sent a wire-protocol v1 (pre-async) {what} frame; this build \
-         speaks v{PROTO_VERSION}, which stamps every dispatch/upload with its \
-         model version — upgrade the older binary (leader and workers must \
-         match)"
+        "peer sent a wire-protocol v{v} {what} frame; this build speaks \
+         v{PROTO_VERSION}, whose dispatches carry raw-or-delta model payloads \
+         and whose uploads carry worker timings — upgrade the older binary \
+         (leader and workers must match)"
     )
+}
+
+/// How a `Work` dispatch ships its model (wire v3).
+///
+/// `Raw` is the pre-bidirectional shape: the dense f32 model. `Chain`
+/// is the compressed-downlink shape: the ordered per-version delta
+/// links `(base_version, version]`, each one
+/// `encode(x_k − reference_{k−1})` from the server's
+/// [`DownlinkEncoder`](crate::coordinator::DownlinkEncoder); the worker
+/// applies them in order to its reconstructed reference at
+/// `base_version`. An empty chain means "you are already at `version`".
+#[derive(Debug, Clone)]
+pub enum ModelPayload {
+    Raw(Vec<f32>),
+    Chain { base_version: u64, links: Vec<Encoded> },
 }
 
 /// Leader → worker messages.
@@ -48,12 +70,13 @@ pub enum ToWorker {
     /// Carries the leader's [`PROTO_VERSION`] so the worker can refuse a
     /// mismatched leader with a clear error.
     Setup { proto: u32, cfg: ExperimentConfig },
-    /// Run virtual node `node` from `params`, the server model at
-    /// `version`. On barrier transports `version` is the round index; on
+    /// Run virtual node `node` from the server model at `version`,
+    /// shipped as a raw vector or delta chain ([`ModelPayload`]). On
+    /// barrier transports `version` is the round index; on
     /// buffered-async transports it is the commit count at dispatch time
     /// (what staleness is measured against). Either way it keys the
     /// node's per-`(seed, node, version)` RNG streams.
-    Work { version: u64, node: u64, params: Vec<f32>, lrs: Vec<f32> },
+    Work { version: u64, node: u64, payload: ModelPayload, lrs: Vec<f32> },
     /// Clean shutdown.
     Shutdown,
 }
@@ -66,8 +89,11 @@ pub enum ToLeader {
     /// Setup acknowledged (engine compiled, data generated).
     Ready,
     /// One node's quantized upload, echoing the model `version` it was
-    /// dispatched at (the leader stamps `staleness = commit − version`).
-    Update { version: u64, node: u64, enc: Encoded },
+    /// dispatched at (the leader stamps `staleness = commit − version`)
+    /// plus the worker-side wall-clock cost of the job: `decode_ms`
+    /// (reconstructing the model from its payload) and `compute_ms`
+    /// (local training + uplink encode), surfaced on the event bus.
+    Update { version: u64, node: u64, enc: Encoded, compute_ms: f64, decode_ms: f64 },
 }
 
 // ---------------- primitive writers/readers ----------------
@@ -312,30 +338,71 @@ pub(crate) fn read_encoded(c: &mut Cursor<'_>) -> crate::Result<Encoded> {
     Ok(Encoded { buf: BitBuf::from_parts(words, len)?, p, spec })
 }
 
-// Variant tags. v1 used 0=Setup/Join, 1=Work (2=Update on ToLeader); v2
-// retired those tag values so a v1 frame is recognized — and rejected
-// with a protocol-version error — instead of being misparsed.
+// Variant tags. v1 used 0=Setup/Join, 1=Work (2=Update on ToLeader);
+// v2 used 3=Setup/Join, 4=Work/Update. v3 retired both generations'
+// tag values so an older frame is recognized — and rejected with a
+// protocol-version error — instead of being misparsed. `Ready` and
+// `Shutdown` kept their layouts (a bare tag byte) across all versions.
 const TAG_SHUTDOWN: u8 = 2;
-const TAG_SETUP_V2: u8 = 3;
-const TAG_WORK_V2: u8 = 4;
+const TAG_SETUP_V3: u8 = 5;
+const TAG_WORK_V3: u8 = 6;
 const TAG_READY: u8 = 1;
-const TAG_JOIN_V2: u8 = 3;
-const TAG_UPDATE_V2: u8 = 4;
+const TAG_JOIN_V3: u8 = 5;
+const TAG_UPDATE_V3: u8 = 6;
+
+// Payload tags inside a v3 Work frame.
+const PAYLOAD_RAW: u8 = 0;
+const PAYLOAD_CHAIN: u8 = 1;
+
+fn write_payload(b: &mut Buf, payload: &ModelPayload) {
+    match payload {
+        ModelPayload::Raw(params) => {
+            b.u8(PAYLOAD_RAW);
+            b.f32s(params);
+        }
+        ModelPayload::Chain { base_version, links } => {
+            b.u8(PAYLOAD_CHAIN);
+            b.u64(*base_version);
+            b.u64(links.len() as u64);
+            for enc in links {
+                write_encoded(b, enc);
+            }
+        }
+    }
+}
+
+fn read_payload(c: &mut Cursor<'_>) -> crate::Result<ModelPayload> {
+    Ok(match c.u8()? {
+        PAYLOAD_RAW => ModelPayload::Raw(c.f32s()?),
+        PAYLOAD_CHAIN => {
+            let base_version = c.u64()?;
+            let n = c.u64()? as usize;
+            // Each link is at least a spec byte + two u64 headers.
+            anyhow::ensure!(n.saturating_mul(17) <= c.len(), "oversized link chain");
+            let mut links = Vec::with_capacity(n);
+            for _ in 0..n {
+                links.push(read_encoded(c)?);
+            }
+            ModelPayload::Chain { base_version, links }
+        }
+        x => anyhow::bail!("bad model-payload tag {x}"),
+    })
+}
 
 impl ToWorker {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Buf::new();
         match self {
             ToWorker::Setup { proto, cfg } => {
-                b.u8(TAG_SETUP_V2);
+                b.u8(TAG_SETUP_V3);
                 b.u32(*proto);
                 b.string(&cfg.to_json().to_string_pretty());
             }
-            ToWorker::Work { version, node, params, lrs } => {
-                b.u8(TAG_WORK_V2);
+            ToWorker::Work { version, node, payload, lrs } => {
+                b.u8(TAG_WORK_V3);
                 b.u64(*version);
                 b.u64(*node);
-                b.f32s(params);
+                write_payload(&mut b, payload);
                 b.f32s(lrs);
             }
             ToWorker::Shutdown => b.u8(TAG_SHUTDOWN),
@@ -346,19 +413,21 @@ impl ToWorker {
     pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
         let mut c = Cursor::new(bytes);
         let msg = match c.u8()? {
-            0 => return Err(protocol_version_error("Setup")),
-            1 => return Err(protocol_version_error("Work")),
-            TAG_SETUP_V2 => {
+            0 => return Err(protocol_version_error(1, "Setup")),
+            1 => return Err(protocol_version_error(1, "Work")),
+            3 => return Err(protocol_version_error(2, "Setup")),
+            4 => return Err(protocol_version_error(2, "Work")),
+            TAG_SETUP_V3 => {
                 let proto = c.u32()?;
                 let text = c.string()?;
                 let cfg =
                     ExperimentConfig::from_json(&crate::util::json::Json::parse(&text)?)?;
                 ToWorker::Setup { proto, cfg }
             }
-            TAG_WORK_V2 => ToWorker::Work {
+            TAG_WORK_V3 => ToWorker::Work {
                 version: c.u64()?,
                 node: c.u64()?,
-                params: c.f32s()?,
+                payload: read_payload(&mut c)?,
                 lrs: c.f32s()?,
             },
             TAG_SHUTDOWN => ToWorker::Shutdown,
@@ -374,15 +443,17 @@ impl ToLeader {
         let mut b = Buf::new();
         match self {
             ToLeader::Join { proto } => {
-                b.u8(TAG_JOIN_V2);
+                b.u8(TAG_JOIN_V3);
                 b.u32(*proto);
             }
             ToLeader::Ready => b.u8(TAG_READY),
-            ToLeader::Update { version, node, enc } => {
-                b.u8(TAG_UPDATE_V2);
+            ToLeader::Update { version, node, enc, compute_ms, decode_ms } => {
+                b.u8(TAG_UPDATE_V3);
                 b.u64(*version);
                 b.u64(*node);
                 write_encoded(&mut b, enc);
+                b.f64(*compute_ms);
+                b.f64(*decode_ms);
             }
         }
         b.0
@@ -391,14 +462,18 @@ impl ToLeader {
     pub fn decode(bytes: &[u8]) -> crate::Result<Self> {
         let mut c = Cursor::new(bytes);
         let msg = match c.u8()? {
-            0 => return Err(protocol_version_error("Join")),
-            2 => return Err(protocol_version_error("Update")),
-            TAG_JOIN_V2 => ToLeader::Join { proto: c.u32()? },
+            0 => return Err(protocol_version_error(1, "Join")),
+            2 => return Err(protocol_version_error(1, "Update")),
+            3 => return Err(protocol_version_error(2, "Join")),
+            4 => return Err(protocol_version_error(2, "Update")),
+            TAG_JOIN_V3 => ToLeader::Join { proto: c.u32()? },
             TAG_READY => ToLeader::Ready,
-            TAG_UPDATE_V2 => ToLeader::Update {
+            TAG_UPDATE_V3 => ToLeader::Update {
                 version: c.u64()?,
                 node: c.u64()?,
                 enc: read_encoded(&mut c)?,
+                compute_ms: c.f64()?,
+                decode_ms: c.f64()?,
             },
             x => anyhow::bail!("bad ToLeader tag {x}"),
         };
@@ -456,14 +531,73 @@ mod tests {
         let msg = ToWorker::Work {
             version: 3,
             node: 17,
-            params: vec![1.0, -2.5, 3.25],
+            payload: ModelPayload::Raw(vec![1.0, -2.5, 3.25]),
             lrs: vec![0.1, 0.1],
         };
         match ToWorker::decode(&msg.encode()).unwrap() {
-            ToWorker::Work { version, node, params, lrs } => {
+            ToWorker::Work { version, node, payload, lrs } => {
                 assert_eq!((version, node), (3, 17));
-                assert_eq!(params, vec![1.0, -2.5, 3.25]);
+                match payload {
+                    ModelPayload::Raw(params) => {
+                        assert_eq!(params, vec![1.0, -2.5, 3.25])
+                    }
+                    _ => panic!("expected raw payload"),
+                }
                 assert_eq!(lrs, vec![0.1, 0.1]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn chain_work_roundtrip_preserves_every_link() {
+        let q = CodecSpec::qsgd(3).build().unwrap();
+        let links: Vec<Encoded> = (0..3)
+            .map(|i| {
+                let x: Vec<f32> = (0..64).map(|j| ((i * 64 + j) as f32 * 0.11).sin()).collect();
+                q.encode(&x, &mut Rng::seed_from_u64(i as u64))
+            })
+            .collect();
+        let decoded_before: Vec<Vec<f32>> =
+            links.iter().map(|e| q.decode(e).unwrap()).collect();
+        let msg = ToWorker::Work {
+            version: 9,
+            node: 4,
+            payload: ModelPayload::Chain { base_version: 6, links },
+            lrs: vec![0.05],
+        };
+        match ToWorker::decode(&msg.encode()).unwrap() {
+            ToWorker::Work { version, payload, .. } => {
+                assert_eq!(version, 9);
+                match payload {
+                    ModelPayload::Chain { base_version, links } => {
+                        assert_eq!(base_version, 6);
+                        assert_eq!(links.len(), 3);
+                        for (enc, before) in links.iter().zip(&decoded_before) {
+                            assert_eq!(&q.decode(enc).unwrap(), before);
+                        }
+                    }
+                    _ => panic!("expected chain payload"),
+                }
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn empty_chain_roundtrips() {
+        // An empty chain is the "you are current" dispatch — the worker
+        // reuses its reconstructed reference without any decode work.
+        let msg = ToWorker::Work {
+            version: 5,
+            node: 0,
+            payload: ModelPayload::Chain { base_version: 5, links: vec![] },
+            lrs: vec![0.1],
+        };
+        match ToWorker::decode(&msg.encode()).unwrap() {
+            ToWorker::Work { payload: ModelPayload::Chain { base_version, links }, .. } => {
+                assert_eq!(base_version, 5);
+                assert!(links.is_empty());
             }
             _ => panic!("wrong variant"),
         }
@@ -492,14 +626,19 @@ mod tests {
     }
 
     #[test]
-    fn v1_frames_fail_with_a_protocol_version_error() {
+    fn old_protocol_frames_fail_with_a_version_error() {
         // v1 tag values: ToWorker 0=Setup, 1=Work; ToLeader 0=Join,
-        // 2=Update. Each must name the protocol mismatch, not garble.
-        for (bytes, decode_leader) in [
-            (vec![0u8], false),
-            (vec![1u8, 0, 0, 0, 0, 0, 0, 0, 0], false),
-            (vec![0u8], true),
-            (vec![2u8, 9, 9], true),
+        // 2=Update. v2 tag values: 3=Setup/Join, 4=Work/Update. Each
+        // must name the protocol mismatch, not garble.
+        for (bytes, decode_leader, gen) in [
+            (vec![0u8], false, "v1"),
+            (vec![1u8, 0, 0, 0, 0, 0, 0, 0, 0], false, "v1"),
+            (vec![0u8], true, "v1"),
+            (vec![2u8, 9, 9], true, "v1"),
+            (vec![3u8, 2, 0, 0, 0], false, "v2"),
+            (vec![4u8, 0, 0, 0, 0, 0, 0, 0, 0], false, "v2"),
+            (vec![3u8, 2, 0, 0, 0], true, "v2"),
+            (vec![4u8, 9, 9], true, "v2"),
         ] {
             let err = if decode_leader {
                 ToLeader::decode(&bytes).unwrap_err().to_string()
@@ -507,7 +646,7 @@ mod tests {
                 ToWorker::decode(&bytes).unwrap_err().to_string()
             };
             assert!(
-                err.contains("wire-protocol v1") && err.contains("v2"),
+                err.contains(&format!("wire-protocol {gen}")) && err.contains("v3"),
                 "unhelpful error: {err}"
             );
         }
@@ -519,11 +658,14 @@ mod tests {
         let x: Vec<f32> = (0..300).map(|i| (i as f32 * 0.7).sin()).collect();
         let enc = q.encode(&x, &mut Rng::seed_from_u64(1));
         let dec_before = q.decode(&enc).unwrap();
-        let msg = ToLeader::Update { version: 9, node: 4, enc };
+        let msg =
+            ToLeader::Update { version: 9, node: 4, enc, compute_ms: 12.5, decode_ms: 0.75 };
         match ToLeader::decode(&msg.encode()).unwrap() {
-            ToLeader::Update { version, node, enc } => {
+            ToLeader::Update { version, node, enc, compute_ms, decode_ms } => {
                 assert_eq!((version, node), (9, 4));
                 assert_eq!(q.decode(&enc).unwrap(), dec_before);
+                assert_eq!(compute_ms.to_bits(), 12.5f64.to_bits());
+                assert_eq!(decode_ms.to_bits(), 0.75f64.to_bits());
             }
             _ => panic!(),
         }
@@ -564,7 +706,8 @@ mod tests {
         let x: Vec<f32> = (0..96).map(|i| (i as f32 * 0.3).cos()).collect();
         let enc = q.encode(&x, &mut Rng::seed_from_u64(2));
         let dec_before = q.decode(&enc).unwrap();
-        let msg = ToLeader::Update { version: 1, node: 2, enc };
+        let msg =
+            ToLeader::Update { version: 1, node: 2, enc, compute_ms: 0.0, decode_ms: 0.0 };
         match ToLeader::decode(&msg.encode()).unwrap() {
             ToLeader::Update { enc, .. } => {
                 assert_eq!(enc.spec, q.spec());
@@ -584,6 +727,8 @@ mod tests {
                 version: i,
                 node: i * 2,
                 enc: q.encode(&[0.5; 16], &mut Rng::seed_from_u64(i)),
+                compute_ms: i as f64,
+                decode_ms: 0.0,
             }
             .encode())
             .unwrap();

@@ -42,11 +42,11 @@
 //! bit-for-bit instead of fragmenting memory across processes.
 
 use super::proto::{
-    recv_to_leader, send_to_worker, ToLeader, ToWorker, PROTO_VERSION,
+    recv_to_leader, send_to_worker, ModelPayload, ToLeader, ToWorker, PROTO_VERSION,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::commit_loop::{CommitPlanner, Decision, PlannerEvent};
-use crate::coordinator::{RoundCtx, RoundOutcome, Transport};
+use crate::coordinator::{ModelFrame, RoundCtx, RoundOutcome, Transport};
 use crate::model::Engine;
 use crate::ops::EventSink;
 use crate::quant::{Encoded, UpdateCodec};
@@ -132,6 +132,99 @@ fn accept_cluster(
     Ok((workers, listener))
 }
 
+/// Leader-side downlink shipping state, shared by both TCP leaders.
+///
+/// With `cfg.down_codec` set, the engine's per-round [`ModelFrame`]s
+/// carry one new chain link each (the compressed delta
+/// `x_k − reference_{k−1}`); the shipper keeps the observed link
+/// history plus each worker's last fully-shipped version and picks the
+/// cheapest correct [`ModelPayload`] per dispatch:
+///
+/// * a worker that has never seen a model (fresh, rejoined, or
+///   post-resume) gets the dense `Raw` vector — a deterministic
+///   re-base, after which it rides the chain;
+/// * a worker already at the current version gets an empty chain
+///   ("you are current");
+/// * otherwise the worker gets exactly the links `(last, current]`.
+///
+/// Note wire traffic is per *worker connection* while the engine's
+/// `bits_down` accounting is per *virtual node* (the paper's cost
+/// model) — see `docs/PROTOCOL.md` for why the two intentionally
+/// differ.
+struct DownlinkShipper {
+    enabled: bool,
+    /// Version of `links[0]`; meaningful once `links` is non-empty.
+    /// After `--resume` the history restarts at the resume round, so
+    /// this is not always 1.
+    first: usize,
+    /// Contiguous link history: `links[i]` belongs to version
+    /// `first + i`.
+    links: Vec<Encoded>,
+    /// Per-worker last model version fully shipped; `None` until the
+    /// worker's first dispatch (and again never reset — a *new* worker
+    /// index gets a fresh `None` slot instead).
+    last_sent: Vec<Option<usize>>,
+}
+
+impl DownlinkShipper {
+    fn new(enabled: bool, n_workers: usize) -> Self {
+        DownlinkShipper { enabled, first: 0, links: Vec::new(), last_sent: vec![None; n_workers] }
+    }
+
+    /// Record the newest chain link from this round's frame (no-op for
+    /// raw frames — version 0, or downlink compression off).
+    fn observe(&mut self, frame: &ModelFrame) -> crate::Result<()> {
+        let Some(enc) = &frame.link else { return Ok(()) };
+        if self.links.is_empty() {
+            self.first = frame.version;
+        } else {
+            anyhow::ensure!(
+                frame.version == self.first + self.links.len(),
+                "non-contiguous downlink history: version {} after {} links from {}",
+                frame.version,
+                self.links.len(),
+                self.first
+            );
+        }
+        self.links.push(enc.clone());
+        Ok(())
+    }
+
+    /// Pick the payload for dispatching `frame` to worker `w` and
+    /// advance that worker's shipped version.
+    fn payload_for(&mut self, w: usize, frame: &ModelFrame) -> ModelPayload {
+        if w >= self.last_sent.len() {
+            // Mid-run joiners get fresh slots.
+            self.last_sent.resize(w + 1, None);
+        }
+        if !self.enabled {
+            return ModelPayload::Raw(frame.params.clone());
+        }
+        let cur = frame.version;
+        let have = self.last_sent[w];
+        self.last_sent[w] = Some(cur);
+        match have {
+            Some(v) if v == cur => {
+                ModelPayload::Chain { base_version: cur as u64, links: Vec::new() }
+            }
+            Some(v)
+                if v < cur
+                    && !self.links.is_empty()
+                    && self.first <= v + 1
+                    && self.first + self.links.len() > cur =>
+            {
+                ModelPayload::Chain {
+                    base_version: v as u64,
+                    links: self.links[v + 1 - self.first..=cur - self.first].to_vec(),
+                }
+            }
+            // Fresh worker, or a gap the history cannot bridge: dense
+            // re-base.
+            _ => ModelPayload::Raw(frame.params.clone()),
+        }
+    }
+}
+
 /// Leader half of the synchronous TCP execution mode: accepts `n_workers`
 /// workers on `bind`, broadcasts the config, then round-robins the
 /// sampled virtual nodes across them each round. Rounds are charged
@@ -140,6 +233,7 @@ pub struct Tcp {
     bind: String,
     n_workers: usize,
     workers: Vec<WorkerConn>,
+    shipper: DownlinkShipper,
     events: EventSink,
 }
 
@@ -149,6 +243,7 @@ impl Tcp {
             bind: bind.into(),
             n_workers,
             workers: Vec::new(),
+            shipper: DownlinkShipper::new(false, 0),
             events: EventSink::null(),
         }
     }
@@ -180,6 +275,7 @@ impl Transport for Tcp {
         let (workers, _listener) =
             accept_cluster(&self.bind, self.n_workers, cfg, &self.events)?;
         self.workers = workers;
+        self.shipper = DownlinkShipper::new(cfg.down_codec.is_some(), self.n_workers);
         Ok(())
     }
 
@@ -190,20 +286,23 @@ impl Transport for Tcp {
         _engine: &mut dyn Engine,
     ) -> crate::Result<RoundOutcome> {
         anyhow::ensure!(!self.workers.is_empty(), "Tcp::round before setup");
+        self.shipper.observe(ctx.frame)?;
         // Fan the r virtual nodes out by their *stable* assignment
         // (node % n_workers — see the module docs): per-round counts can
         // skew, but a node's stateful codec memory always lives on one
         // worker.
         let mut counts = vec![0usize; self.n_workers];
         for &node in ctx.nodes {
-            counts[node % self.n_workers] += 1;
-            let w = &mut self.workers[node % self.n_workers];
+            let wi = node % self.n_workers;
+            counts[wi] += 1;
+            let payload = self.shipper.payload_for(wi, ctx.frame);
+            let w = &mut self.workers[wi];
             send_to_worker(
                 &mut w.wr,
                 &ToWorker::Work {
                     version: ctx.round as u64,
                     node: node as u64,
-                    params: ctx.params.to_vec(),
+                    payload,
                     lrs: ctx.lrs.to_vec(),
                 },
             )?;
@@ -216,7 +315,7 @@ impl Transport for Tcp {
             for _ in 0..count {
                 let w = &mut self.workers[wi];
                 match recv_to_leader(&mut w.rd)? {
-                    ToLeader::Update { version, node, enc } => {
+                    ToLeader::Update { version, node, enc, .. } => {
                         anyhow::ensure!(version as usize == ctx.round, "round mismatch");
                         let pos = ctx
                             .nodes
@@ -277,6 +376,11 @@ pub struct TcpAsync {
     /// the worker each job was *actually sent to*, which is what death
     /// retirement must key on.
     pending: Vec<(usize, usize, usize)>,
+    /// Every `(node, version)` dispatched since the last commit — the
+    /// engine bills downlink bits off this list (mirrors `AsyncSim`).
+    dispatched: Vec<(usize, usize)>,
+    /// Raw-vs-chain payload selection per worker.
+    shipper: DownlinkShipper,
     arrivals: Option<Receiver<(usize, FromWorker)>>,
     /// Kept to hand clones to reader threads for mid-run joiners, and to
     /// report write-path deaths through the same channel as read-path
@@ -332,6 +436,8 @@ impl TcpAsync {
             alive: Vec::new(),
             assign: Vec::new(),
             pending: Vec::new(),
+            dispatched: Vec::new(),
+            shipper: DownlinkShipper::new(false, 0),
             arrivals: None,
             arrivals_tx: None,
             joins: None,
@@ -432,12 +538,24 @@ impl TcpAsync {
         version: usize,
         ctx: &RoundCtx<'_>,
     ) -> crate::Result<()> {
+        // Every dispatch happens at the planner's current version, which
+        // is the model the engine handed us this round; a delta chain
+        // built against any other version would reconstruct the wrong
+        // model on the worker.
+        anyhow::ensure!(
+            version == ctx.frame.version,
+            "async dispatch at version {version} but the round's model frame \
+             is version {}",
+            ctx.frame.version
+        );
         let w = self.worker_for(node)?;
         self.pending.push((node, version, w));
+        self.dispatched.push((node, version));
+        let payload = self.shipper.payload_for(w, ctx.frame);
         let frame = ToWorker::Work {
             version: version as u64,
             node: node as u64,
-            params: ctx.params.to_vec(),
+            payload,
             lrs: ctx.lrs.to_vec(),
         };
         let wr = self.writers[w].as_mut().expect("live worker has a writer");
@@ -544,6 +662,8 @@ impl Transport for TcpAsync {
         self.planner = Some(CommitPlanner::new(cfg)?);
         self.assign = (0..cfg.n_nodes).map(|n| n % self.n_workers).collect();
         self.pending.clear();
+        self.dispatched.clear();
+        self.shipper = DownlinkShipper::new(cfg.down_codec.is_some(), self.n_workers);
         self.writers.clear();
         self.alive.clear();
         self.readers.clear();
@@ -608,6 +728,8 @@ impl Transport for TcpAsync {
             );
         }
         self.absorb_joins();
+        self.shipper.observe(ctx.frame)?;
+        self.dispatched.clear();
         // Refill wave at the current model (the whole sampled set at
         // version 0, then `buffer_size` jobs per commit) — exactly r jobs
         // in flight at every instant. Decisions are queued and drained in
@@ -636,7 +758,12 @@ impl Transport for TcpAsync {
                         );
                     }
                     Decision::Commit { uploads, dropped } => {
-                        return Ok(RoundOutcome { uploads, timing: None, dropped });
+                        return Ok(RoundOutcome {
+                            uploads,
+                            timing: None,
+                            dropped,
+                            dispatches: std::mem::take(&mut self.dispatched),
+                        });
                     }
                 }
             }
@@ -646,7 +773,7 @@ impl Transport for TcpAsync {
                 FromWorker::Dead(reason) => {
                     queue.extend(self.handle_dead(w, &reason)?);
                 }
-                FromWorker::Msg(ToLeader::Update { version, node, enc }) => {
+                FromWorker::Msg(ToLeader::Update { version, node, enc, compute_ms, decode_ms }) => {
                     let (node, version) = (node as usize, version as usize);
                     let pos = self
                         .pending
@@ -666,6 +793,8 @@ impl Transport for TcpAsync {
                     self.events.emit(
                         "upload_arrived",
                         vec![
+                            ("compute_ms", Json::num(compute_ms)),
+                            ("decode_ms", Json::num(decode_ms)),
                             ("node", Json::num(node as f64)),
                             ("version", Json::num(version as f64)),
                             ("worker", Json::num(w as f64)),

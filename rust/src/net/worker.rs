@@ -24,9 +24,10 @@
 //! whole residual stream stays in one process.
 
 use super::proto::{
-    recv_to_worker, send_to_leader, ToLeader, ToWorker, PROTO_VERSION,
+    recv_to_worker, send_to_leader, ModelPayload, ToLeader, ToWorker, PROTO_VERSION,
 };
 use crate::config::{EngineKind, ExperimentConfig};
+use crate::coordinator::downlink::apply_link;
 use crate::coordinator::local::{self, GatherBufs};
 use crate::data::{BatchSampler, FederatedDataset, Partition};
 use crate::figures::zoo_kind;
@@ -169,8 +170,10 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
     let mut wr = stream;
     send_to_leader(&mut wr, &ToLeader::Join { proto: PROTO_VERSION })?;
 
-    // World state, built on Setup. The codec is instantiated once from
-    // the config's tagged spec and reused for every Work request.
+    // World state, built on Setup. The codecs are instantiated once from
+    // the config's tagged specs and reused for every Work request; the
+    // last tuple slot is the downlink codec (None when the run ships raw
+    // models).
     #[allow(clippy::type_complexity)]
     let mut world: Option<(
         ExperimentConfig,
@@ -179,7 +182,15 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
         FederatedDataset,
         Partition,
         BatchSampler,
+        Option<Box<dyn crate::quant::UpdateCodec>>,
     )> = None;
+    // The reconstructed reference model and its version — the worker's
+    // half of the QAFeL hidden state. Adopted whole from a Raw payload,
+    // advanced link-by-link from Chain payloads with the same
+    // [`apply_link`] arithmetic the leader used, so both sides agree
+    // bit-for-bit.
+    let mut reference: Option<(Vec<f32>, u64)> = None;
+    let mut chain_scratch: Vec<f32> = Vec::new();
     let mut bufs = GatherBufs::default();
     let mut jobs_done: u64 = 0;
 
@@ -199,21 +210,70 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
                 // worker-side half of the trait's reset contract (the
                 // leader-side half runs in RoundEngine::run).
                 codec.reset_state();
+                // Decode-side downlink codec. Chains arrive as
+                // wire-transparent frames, so decoding never touches
+                // stateful memory — the instance exists to own the
+                // decode tables, not residuals.
+                let down_codec = match &cfg.down_codec {
+                    Some(spec) => {
+                        let c = spec.build()?;
+                        c.reset_state();
+                        Some(c)
+                    }
+                    None => None,
+                };
+                reference = None;
                 let n_samples = cfg.n_nodes * cfg.per_node;
                 let data = FederatedDataset::generate(cfg.dataset, cfg.seed, n_samples);
                 let partition =
                     Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);
                 let sampler = BatchSampler::new(cfg.seed, engine.batch());
-                world = Some((cfg, codec, engine, data, partition, sampler));
+                world = Some((cfg, codec, engine, data, partition, sampler, down_codec));
                 send_to_leader(&mut wr, &ToLeader::Ready)?;
             }
-            ToWorker::Work { version, node, params, lrs } => {
+            ToWorker::Work { version, node, payload, lrs } => {
                 if let Some(delay) = opts.work_delay {
                     std::thread::sleep(delay);
                 }
-                let (cfg, codec, engine, data, partition, sampler) = world
+                let (cfg, codec, engine, data, partition, sampler, down_codec) = world
                     .as_mut()
                     .ok_or_else(|| anyhow::anyhow!("Work before Setup"))?;
+                let decode_start = std::time::Instant::now();
+                match payload {
+                    ModelPayload::Raw(params) => reference = Some((params, version)),
+                    ModelPayload::Chain { base_version, links } => {
+                        let down = down_codec.as_ref().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "leader sent a delta chain but the config has no down_codec"
+                            )
+                        })?;
+                        let (ref_params, ref_version) =
+                            reference.as_mut().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "delta chain before any raw model: nothing to apply it to"
+                                )
+                            })?;
+                        anyhow::ensure!(
+                            *ref_version == base_version,
+                            "delta chain based at version {base_version} but this \
+                             worker's reference is at version {ref_version}"
+                        );
+                        for enc in &links {
+                            apply_link(down.as_ref(), enc, ref_params, &mut chain_scratch)?;
+                        }
+                        *ref_version = base_version + links.len() as u64;
+                    }
+                }
+                let (params, ref_version) = reference
+                    .as_ref()
+                    .map(|(p, v)| (p.as_slice(), *v))
+                    .expect("reference set by payload handling");
+                anyhow::ensure!(
+                    ref_version == version,
+                    "payload reconstructed version {ref_version}, dispatch says {version}"
+                );
+                let decode_ms = decode_start.elapsed().as_secs_f64() * 1e3;
+                let compute_start = std::time::Instant::now();
                 let enc = local::node_round(
                     cfg,
                     codec.as_ref(),
@@ -223,11 +283,24 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
                     sampler,
                     node as usize,
                     version as usize,
-                    &params,
+                    params,
                     &lrs,
                     &mut bufs,
                 )?;
-                send_to_leader(&mut wr, &ToLeader::Update { version, node, enc })?;
+                let compute_ms = compute_start.elapsed().as_secs_f64() * 1e3;
+                send_to_leader(
+                    &mut wr,
+                    &ToLeader::Update { version, node, enc, compute_ms, decode_ms },
+                )?;
+                opts.events.emit(
+                    "job_completed",
+                    vec![
+                        ("compute_ms", crate::util::json::Json::num(compute_ms)),
+                        ("decode_ms", crate::util::json::Json::num(decode_ms)),
+                        ("node", crate::util::json::Json::num(node as f64)),
+                        ("version", crate::util::json::Json::num(version as f64)),
+                    ],
+                );
                 jobs_done += 1;
                 if opts.max_jobs.is_some_and(|cap| jobs_done >= cap) {
                     // Deterministic death injection: close the connection

@@ -7,9 +7,15 @@
 //! * the server model `x_k` and the full curve/stats history so far
 //!   (so a resumed [`RunResult`](crate::coordinator::RunResult) carries
 //!   the uninterrupted run's complete record);
-//! * the virtual clock and cumulative upload bits;
+//! * the virtual clock and cumulative upload **and download** bits;
 //! * the per-node codec state (error-feedback residuals, via
 //!   [`UpdateCodec::state_export`](crate::quant::UpdateCodec::state_export));
+//! * the downlink compression state when `cfg.down_codec` is set
+//!   ([`DownlinkEncoder::state_export`](crate::coordinator::DownlinkEncoder::state_export)):
+//!   the shared reference model, the per-version link-bit ledger, the
+//!   per-node last-shipped versions and the downlink codec's own state
+//!   (EF residual) — everything needed for the resumed broadcast chain
+//!   to stay bit-identical;
 //! * the transport's protocol state: the full
 //!   [`CommitPlanner`](crate::coordinator::CommitPlanner) snapshot
 //!   ([`PlannerState`]) plus, for the virtual-time simulator, the
@@ -21,18 +27,27 @@
 //!   stream, travels inside [`PlannerState`]); the table exists so a
 //!   future stateful stream has a format slot without a version bump.
 //!
-//! ## Binary layout (format version 1)
+//! ## Binary layout (format version 2)
 //!
 //! Little-endian, written with the same hand-rolled `Buf`/`Cursor`
 //! primitives as the wire protocol ([`crate::net::proto`]):
 //!
 //! ```text
 //! "FPQC" magic · u32 format version · u64 config_hash · u64 seed
-//! · u64 next_round · u64 total_bits · f64 clock_now
+//! · u64 next_round · u64 total_bits · u64 total_bits_down · f64 clock_now
 //! · params f32s · curve label + points · round stats
-//! · codec state (node, residuals) pairs · rng table (key, [u64;4]) pairs
+//! · codec state (node, residuals) pairs
+//! · downlink reference f32s · link-bit ledger u64s · per-node last u64s
+//! · downlink codec state (node, residuals) pairs
+//! · rng table (key, [u64;4]) pairs
 //! · transport tag (0 = none, 1 = async planner + jobs)
 //! ```
+//!
+//! Version 2 (this layout) added the bidirectional-compression fields:
+//! `total_bits_down`, the `bits_down` column inside curve points and
+//! round stats, and the four downlink-state sections. v1 checkpoints
+//! are rejected with an explicit version error — they predate the
+//! downlink seam and cannot resume a bidirectional run faithfully.
 //!
 //! Decoding rejects wrong magic, unknown format versions, truncation
 //! (every read is bounds-checked) and trailing bytes — the same
@@ -55,7 +70,7 @@ use std::path::Path;
 
 /// Current checkpoint format version (bumped on layout changes; decode
 /// rejects versions it does not know).
-pub const CHECKPOINT_VERSION: u32 = 1;
+pub const CHECKPOINT_VERSION: u32 = 2;
 
 const MAGIC: &[u8; 4] = b"FPQC";
 
@@ -96,6 +111,9 @@ pub struct Checkpoint {
     /// already folded into `params`/`curve`/`stats`.
     pub next_round: usize,
     pub total_bits: u64,
+    /// Cumulative downlink (broadcast) bits; 0 for runs that predate or
+    /// never enable the downlink seam.
+    pub total_bits_down: u64,
     /// Virtual clock at the checkpoint (0 for wall-clock transports,
     /// whose time axis restarts on resume).
     pub clock_now: f64,
@@ -106,6 +124,17 @@ pub struct Checkpoint {
     /// Per-node codec state (EF residuals), from
     /// [`UpdateCodec::state_export`](crate::quant::UpdateCodec::state_export).
     pub codec_state: Vec<(u64, Vec<f32>)>,
+    /// Downlink shared reference model; empty when `down_codec` is off.
+    pub down_reference: Vec<f32>,
+    /// Per-version downlink link bits (`[0]` is the free version-0
+    /// adoption); empty when `down_codec` is off.
+    pub down_link_bits: Vec<u64>,
+    /// Per-node last version whose links were billed; empty when
+    /// `down_codec` is off.
+    pub down_last: Vec<u64>,
+    /// Downlink codec state (the server-side EF residual stream), from
+    /// [`DownlinkEncoder::state_export`](crate::coordinator::DownlinkEncoder::state_export).
+    pub down_codec_state: Vec<(u64, Vec<f32>)>,
     /// Explicit RNG stream positions (stream key → xoshiro256++ state).
     /// Empty today — see the module docs.
     pub rng_states: Vec<(u64, [u64; 4])>,
@@ -129,6 +158,7 @@ impl Checkpoint {
         b.u64(self.seed);
         b.u64(self.next_round as u64);
         b.u64(self.total_bits);
+        b.u64(self.total_bits_down);
         b.f64(self.clock_now);
         b.f32s(&self.params);
         b.string(&self.curve_label);
@@ -138,6 +168,7 @@ impl Checkpoint {
             b.u64(p.iterations as u64);
             b.f64(p.time);
             b.u64(p.bits_up);
+            b.u64(p.bits_down);
             b.f64(p.loss);
         }
         b.u64(self.stats.len() as u64);
@@ -146,12 +177,27 @@ impl Checkpoint {
             b.f64(s.compute_time);
             b.f64(s.comm_time);
             b.u64(s.bits_up);
+            b.u64(s.bits_down);
             b.u64(s.dropped);
             b.u64(s.staleness_max as u64);
             b.f64(s.staleness_mean);
         }
         b.u64(self.codec_state.len() as u64);
         for (node, res) in &self.codec_state {
+            b.u64(*node);
+            b.f32s(res);
+        }
+        b.f32s(&self.down_reference);
+        b.u64(self.down_link_bits.len() as u64);
+        for &bits in &self.down_link_bits {
+            b.u64(bits);
+        }
+        b.u64(self.down_last.len() as u64);
+        for &last in &self.down_last {
+            b.u64(last);
+        }
+        b.u64(self.down_codec_state.len() as u64);
+        for (node, res) in &self.down_codec_state {
             b.u64(*node);
             b.f32s(res);
         }
@@ -198,11 +244,12 @@ impl Checkpoint {
         let seed = c.u64()?;
         let next_round = c.u64()? as usize;
         let total_bits = c.u64()?;
+        let total_bits_down = c.u64()?;
         let clock_now = c.f64()?;
         let params = c.f32s()?;
         let curve_label = c.string()?;
         let count = c.u64()?;
-        let n_curve = read_count(&c, count, 40)?;
+        let n_curve = read_count(&c, count, 48)?;
         let mut curve = Vec::with_capacity(n_curve);
         for _ in 0..n_curve {
             curve.push(CurvePoint {
@@ -210,11 +257,12 @@ impl Checkpoint {
                 iterations: c.u64()? as usize,
                 time: c.f64()?,
                 bits_up: c.u64()?,
+                bits_down: c.u64()?,
                 loss: c.f64()?,
             });
         }
         let count = c.u64()?;
-        let n_stats = read_count(&c, count, 56)?;
+        let n_stats = read_count(&c, count, 64)?;
         let mut stats = Vec::with_capacity(n_stats);
         for _ in 0..n_stats {
             stats.push(RoundStats {
@@ -222,6 +270,7 @@ impl Checkpoint {
                 compute_time: c.f64()?,
                 comm_time: c.f64()?,
                 bits_up: c.u64()?,
+                bits_down: c.u64()?,
                 dropped: c.u64()?,
                 staleness_max: c.u64()? as usize,
                 staleness_mean: c.f64()?,
@@ -233,6 +282,26 @@ impl Checkpoint {
         for _ in 0..n_codec {
             let node = c.u64()?;
             codec_state.push((node, c.f32s()?));
+        }
+        let down_reference = c.f32s()?;
+        let count = c.u64()?;
+        let n_links = read_count(&c, count, 8)?;
+        let mut down_link_bits = Vec::with_capacity(n_links);
+        for _ in 0..n_links {
+            down_link_bits.push(c.u64()?);
+        }
+        let count = c.u64()?;
+        let n_last = read_count(&c, count, 8)?;
+        let mut down_last = Vec::with_capacity(n_last);
+        for _ in 0..n_last {
+            down_last.push(c.u64()?);
+        }
+        let count = c.u64()?;
+        let n_down_codec = read_count(&c, count, 16)?;
+        let mut down_codec_state = Vec::with_capacity(n_down_codec);
+        for _ in 0..n_down_codec {
+            let node = c.u64()?;
+            down_codec_state.push((node, c.f32s()?));
         }
         let count = c.u64()?;
         let n_rng = read_count(&c, count, 40)?;
@@ -277,12 +346,17 @@ impl Checkpoint {
             seed,
             next_round,
             total_bits,
+            total_bits_down,
             clock_now,
             params,
             curve_label,
             curve,
             stats,
             codec_state,
+            down_reference,
+            down_link_bits,
+            down_last,
+            down_codec_state,
             rng_states,
             transport,
         })
@@ -421,16 +495,25 @@ mod tests {
             seed: 42,
             next_round: 7,
             total_bits: 123_456,
+            total_bits_down: 77_000,
             clock_now: 98.25,
             params: vec![1.0, -0.5, 0.25, 3.5e-8],
             curve_label: "fedbuff logreg".into(),
             curve: vec![
-                CurvePoint { round: 0, iterations: 0, time: 0.0, bits_up: 0, loss: 0.9 },
+                CurvePoint {
+                    round: 0,
+                    iterations: 0,
+                    time: 0.0,
+                    bits_up: 0,
+                    bits_down: 0,
+                    loss: 0.9,
+                },
                 CurvePoint {
                     round: 7,
                     iterations: 35,
                     time: 98.25,
                     bits_up: 123_456,
+                    bits_down: 77_000,
                     loss: 0.31,
                 },
             ],
@@ -439,11 +522,16 @@ mod tests {
                 compute_time: 4.5,
                 comm_time: 1.25,
                 bits_up: 2048,
+                bits_down: 512,
                 dropped: 1,
                 staleness_max: 3,
                 staleness_mean: 0.75,
             }],
             codec_state: vec![(3, vec![0.5, -0.5]), (11, vec![1.0])],
+            down_reference: vec![0.125, -2.0, 0.0, 1.5],
+            down_link_bits: vec![0, 640, 720, 704, 696, 700, 698],
+            down_last: vec![6, 4, 6, 0, 5],
+            down_codec_state: vec![(u64::MAX, vec![0.01, -0.02])],
             rng_states: vec![(9, [1, 2, 3, u64::MAX])],
             transport: Some(TransportState::Async {
                 planner: PlannerState {
@@ -477,6 +565,7 @@ mod tests {
         assert_eq!(a.seed, b.seed);
         assert_eq!(a.next_round, b.next_round);
         assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.total_bits_down, b.total_bits_down);
         assert_eq!(a.clock_now.to_bits(), b.clock_now.to_bits());
         assert_eq!(a.params, b.params);
         assert_eq!(a.curve_label, b.curve_label);
@@ -489,6 +578,10 @@ mod tests {
             assert_eq!(x.dropped, y.dropped);
         }
         assert_eq!(a.codec_state, b.codec_state);
+        assert_eq!(a.down_reference, b.down_reference);
+        assert_eq!(a.down_link_bits, b.down_link_bits);
+        assert_eq!(a.down_last, b.down_last);
+        assert_eq!(a.down_codec_state, b.down_codec_state);
         assert_eq!(a.rng_states, b.rng_states);
         // Re-encode equality covers the transport state bit-for-bit.
         assert_eq!(a.encode(), b.encode());
@@ -548,7 +641,7 @@ mod tests {
         let mut bytes = ck.encode();
         // The curve-count u64 sits right after the fixed header + params
         // + label; smash it to u64::MAX and expect a clean error.
-        let off = 4 + 4 + 8 * 4 + 8 // header
+        let off = 4 + 4 + 8 * 5 + 8 // header (incl. total_bits_down)
             + 8 + 4 * ck.params.len() // params
             + 4 + ck.curve_label.len(); // label
         bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());

@@ -31,7 +31,7 @@ pub use events::EventSink;
 use std::path::PathBuf;
 
 /// Operator knobs for one run, consumed by
-/// [`RoundEngine::run_controlled`](crate::coordinator::RoundEngine::run_controlled).
+/// [`RoundEngine::run`](crate::coordinator::RoundEngine::run).
 #[derive(Debug, Default)]
 pub struct RunControl {
     /// Structured-event destination (null by default).

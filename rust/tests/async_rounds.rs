@@ -32,6 +32,7 @@ fn base_cfg() -> ExperimentConfig {
         max_staleness: 8,
         staleness_rule: StalenessRule::Uniform,
         agg_shards: 1,
+        down_codec: None,
     }
 }
 
@@ -54,12 +55,14 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(pa.loss, pb.loss, "loss differs at round {}", pa.round);
         assert_eq!(pa.time, pb.time, "time differs at round {}", pa.round);
         assert_eq!(pa.bits_up, pb.bits_up);
+        assert_eq!(pa.bits_down, pb.bits_down);
     }
     assert_eq!(a.rounds.len(), b.rounds.len());
     for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
         assert_eq!(ra.compute_time, rb.compute_time, "round {}", ra.round);
         assert_eq!(ra.comm_time, rb.comm_time, "round {}", ra.round);
         assert_eq!(ra.bits_up, rb.bits_up, "round {}", ra.round);
+        assert_eq!(ra.bits_down, rb.bits_down, "round {}", ra.round);
     }
 }
 
@@ -84,6 +87,24 @@ fn full_buffer_zero_staleness_reproduces_sync_exactly() {
     let cfg = base_cfg();
     let r = cfg.r;
     let asynchronous = run(cfg.with_async(r, 0));
+    assert_identical(&sync, &asynchronous);
+}
+
+#[test]
+fn full_buffer_downlink_degeneration_holds_with_compressed_broadcasts() {
+    // Bidirectional compression must not break the sync degeneration:
+    // with a downlink codec both transports walk the same reference
+    // chain (same [7, k] RNG coords), dispatch every wave at the commit
+    // version, and bill identical per-node download bits.
+    let cfg = ExperimentConfig {
+        down_codec: Some(CodecSpec::qsgd(4)),
+        ..base_cfg()
+    };
+    let sync = run(cfg.clone());
+    assert!(sync.total_bits_down > 0, "downlink bits unbilled");
+    let r = cfg.r;
+    let asynchronous = run(cfg.with_async(r, 0));
+    assert_eq!(sync.total_bits_down, asynchronous.total_bits_down);
     assert_identical(&sync, &asynchronous);
 }
 

@@ -35,6 +35,7 @@ fn cluster_cfg(seed: u64) -> ExperimentConfig {
         max_staleness: 8,
         staleness_rule: Default::default(),
         agg_shards: 1,
+        down_codec: None,
     }
 }
 
@@ -66,8 +67,15 @@ fn run_cluster(cfg: &ExperimentConfig, n_workers: usize) -> fedpaq::coordinator:
         .collect();
     let (kind, batch, eval_n) = zoo_kind("logreg").unwrap();
     let mut engine = RustEngine::new(kind, batch, eval_n).unwrap();
-    let res = run_leader(cfg.clone(), &addr, n_workers, &mut engine, Path::new("artifacts"))
-        .unwrap();
+    let res = run_leader(
+        cfg.clone(),
+        &addr,
+        n_workers,
+        &mut engine,
+        Path::new("artifacts"),
+        &fedpaq::ops::RunControl::default(),
+    )
+    .unwrap();
     for w in workers {
         w.join().unwrap();
     }

@@ -220,8 +220,9 @@ fn pjrt_fedpaq_run_decreases_loss_and_matches_shape() {
         max_staleness: 8,
         staleness_rule: Default::default(),
         agg_shards: 1,
+        down_codec: None,
     };
-    let res = runner.run_config(cfg).unwrap();
+    let res = runner.run_config(cfg, fedpaq::ops::RunControl::default()).unwrap();
     let first = res.curve.points.first().unwrap().loss;
     let last = res.curve.points.last().unwrap().loss;
     assert!(last < first * 0.7, "{first} -> {last}");
@@ -252,6 +253,7 @@ fn pjrt_and_rust_engines_agree_on_full_logreg_run() {
         max_staleness: 8,
         staleness_rule: Default::default(),
         agg_shards: 1,
+        down_codec: None,
     };
     let client = client();
     let mut pjrt = PjrtEngine::load(&client, &dir, "logreg").unwrap();

@@ -78,6 +78,7 @@ fn rand_checkpoint(rng: &mut Rng) -> Checkpoint {
         seed: rng.next_u64(),
         next_round: rng.gen_range(0, 1000),
         total_bits: rng.next_u64() >> 20,
+        total_bits_down: rng.next_u64() >> 20,
         clock_now: rng.gen_f32() as f64 * 1e4,
         params: (0..rng.gen_range(1, 40)).map(|_| rng.gen_f32() - 0.5).collect(),
         curve_label: format!("run-{}", rng.gen_range(0, 1000)),
@@ -87,11 +88,20 @@ fn rand_checkpoint(rng: &mut Rng) -> Checkpoint {
                 iterations: k * 5,
                 time: k as f64 * 1.5,
                 bits_up: rng.next_u64() >> 30,
+                bits_down: rng.next_u64() >> 30,
                 loss: rng.gen_f32() as f64,
             })
             .collect(),
         stats: Vec::new(),
         codec_state: (0..rng.gen_range(0, 5))
+            .map(|i| {
+                (i as u64, (0..rng.gen_range(1, 8)).map(|_| rng.gen_f32()).collect())
+            })
+            .collect(),
+        down_reference: (0..rng.gen_range(0, 20)).map(|_| rng.gen_f32() - 0.5).collect(),
+        down_link_bits: (0..rng.gen_range(0, 6)).map(|_| rng.next_u64() >> 40).collect(),
+        down_last: (0..rng.gen_range(0, 8)).map(|_| rng.next_u64() % 100).collect(),
+        down_codec_state: (0..rng.gen_range(0, 3))
             .map(|i| {
                 (i as u64, (0..rng.gen_range(1, 8)).map(|_| rng.gen_f32()).collect())
             })
@@ -160,6 +170,7 @@ fn base_cfg() -> ExperimentConfig {
         max_staleness: 8,
         staleness_rule: StalenessRule::Uniform,
         agg_shards: 1,
+        down_codec: None,
     }
 }
 
@@ -184,6 +195,7 @@ fn run_ctrl(cfg: &ExperimentConfig, ctrl: RunControl) -> RunResult {
 fn assert_identical(a: &RunResult, b: &RunResult) {
     assert_eq!(a.params, b.params, "final models differ");
     assert_eq!(a.total_bits, b.total_bits);
+    assert_eq!(a.total_bits_down, b.total_bits_down);
     assert_eq!(a.curve.points.len(), b.curve.points.len());
     for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
         assert_eq!(pa.round, pb.round);
@@ -191,6 +203,7 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(pa.loss.to_bits(), pb.loss.to_bits(), "loss at k={}", pa.round);
         assert_eq!(pa.time.to_bits(), pb.time.to_bits(), "time at k={}", pa.round);
         assert_eq!(pa.bits_up, pb.bits_up);
+        assert_eq!(pa.bits_down, pb.bits_down);
     }
     assert_eq!(a.rounds.len(), b.rounds.len());
     for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
@@ -198,6 +211,7 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(ra.compute_time.to_bits(), rb.compute_time.to_bits());
         assert_eq!(ra.comm_time.to_bits(), rb.comm_time.to_bits());
         assert_eq!(ra.bits_up, rb.bits_up);
+        assert_eq!(ra.bits_down, rb.bits_down);
         assert_eq!(ra.dropped, rb.dropped);
         assert_eq!(ra.staleness_max, rb.staleness_max);
         assert_eq!(ra.staleness_mean.to_bits(), rb.staleness_mean.to_bits());
@@ -261,6 +275,24 @@ fn async_kill_resume_is_bit_identical_with_in_flight_jobs() {
         ..base_cfg()
     };
     kill_resume_roundtrip(&cfg, 5, "async-buffered.ck");
+}
+
+#[test]
+fn downlink_kill_resume_is_bit_identical_with_reference_state() {
+    // Bidirectional compression: the checkpoint must carry the server's
+    // downlink reference model, per-version link bits, per-node chain
+    // positions and the (stateful, error-feedback) downlink codec's
+    // residuals — the resumed run re-encodes link K+1 against the exact
+    // reference the killed run held, so every later broadcast, upload
+    // and bit count matches the uninterrupted run bit for bit.
+    let cfg = ExperimentConfig {
+        async_rounds: true,
+        buffer_size: 2,
+        max_staleness: 8,
+        down_codec: Some(CodecSpec::error_feedback(CodecSpec::qsgd(4))),
+        ..base_cfg()
+    };
+    kill_resume_roundtrip(&cfg, 5, "async-downlink.ck");
 }
 
 #[test]

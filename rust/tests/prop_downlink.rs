@@ -1,0 +1,130 @@
+//! Property tests over the downlink (server → client) compression seam
+//! — the chain-reconstruction contract behind bidirectional FedPAQ:
+//! for **every** codec family, a client that last held reference version
+//! `v` and applies the decoded link chain `link_{v+1} … link_N` lands on
+//! a reference **bit-identical** to the server's, and the per-node
+//! download accounting sums exactly the link sizes the client was
+//! missing.
+//!
+//! Like `prop_codecs.rs`, the suite honors `FEDPAQ_CODEC_FILTER` (see
+//! [`fedpaq::quant::family_enabled`]) so the CI codec-conformance matrix
+//! runs it once per family and a broken family names itself.
+//!
+//! (Driver: `fedpaq::util::prop` — proptest is unavailable offline.)
+
+use fedpaq::coordinator::{downlink::apply_link, DownlinkEncoder};
+use fedpaq::quant::{family_enabled, CodecSpec, UpdateCodec};
+use fedpaq::util::prop::check;
+use fedpaq::util::rng::Rng;
+
+/// One representative spec per downlink-capable codec family, restricted
+/// to the families `FEDPAQ_CODEC_FILTER` enables (all, when unset).
+/// Every spec here is `rebuildable()` — the downlink contract requires
+/// the client to rebuild the decoder from the config tag alone.
+fn downlink_specs() -> Vec<CodecSpec> {
+    let specs = vec![
+        CodecSpec::Identity,
+        CodecSpec::qsgd(1),
+        CodecSpec::qsgd(4),
+        CodecSpec::Qsgd { s: 7, coding: fedpaq::quant::Coding::Elias },
+        CodecSpec::top_k(150),
+        CodecSpec::RandK { k_permille: 200, seeded: true },
+        CodecSpec::RandK { k_permille: 200, seeded: false },
+        CodecSpec::adaptive(4),
+        CodecSpec::error_feedback(CodecSpec::qsgd(3)),
+        CodecSpec::error_feedback(CodecSpec::top_k(250)),
+    ];
+    specs.into_iter().filter(|s| family_enabled(s.family())).collect()
+}
+
+/// A deterministic pseudo-random model trajectory `x_0 … x_steps`.
+fn walk(rng: &mut Rng, p: usize, steps: usize) -> Vec<Vec<f32>> {
+    let mut x: Vec<f32> = (0..p).map(|_| rng.gen_f32() - 0.5).collect();
+    let mut out = vec![x.clone()];
+    for _ in 0..steps {
+        for v in x.iter_mut() {
+            *v += 0.2 * (rng.gen_f32() - 0.5);
+        }
+        out.push(x.clone());
+    }
+    out
+}
+
+#[test]
+fn prop_chain_reconstruction_is_bit_exact_per_family() {
+    for spec in downlink_specs() {
+        check(12, 0xd0_714c, |rng| {
+            let p = rng.gen_range(1, 80);
+            let steps = rng.gen_range(1, 7);
+            let seed = rng.next_u64();
+            let versions = walk(rng, p, steps);
+            let mut down =
+                DownlinkEncoder::new(spec.build().unwrap(), seed, 1);
+            // The client side rebuilds its decoder from the tag alone —
+            // a *fresh* instance, as a TCP worker would.
+            let client_codec: Box<dyn UpdateCodec> = spec.build().unwrap();
+            let mut frames = Vec::new();
+            for (k, x) in versions.iter().enumerate() {
+                frames.push(down.begin_round(k, x).unwrap());
+            }
+            // From every possible held version v, the chain suffix must
+            // reach the server's reference exactly.
+            let mut scratch = Vec::new();
+            for v in 0..versions.len() {
+                let mut client = frames[v].params.clone();
+                for frame in &frames[v + 1..] {
+                    apply_link(
+                        client_codec.as_ref(),
+                        frame.link.as_ref().unwrap(),
+                        &mut client,
+                        &mut scratch,
+                    )
+                    .unwrap();
+                }
+                let same = client
+                    .iter()
+                    .zip(down.reference())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "[{spec:?}] chain from v={v} diverged");
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_dispatch_accounting_sums_exactly_the_missing_links() {
+    for spec in downlink_specs() {
+        check(8, 0xd0_714d, |rng| {
+            let p = rng.gen_range(1, 60);
+            let steps = rng.gen_range(1, 6);
+            let seed = rng.next_u64();
+            let versions = walk(rng, p, steps);
+            let mut down =
+                DownlinkEncoder::new(spec.build().unwrap(), seed, 3);
+            let mut bits = Vec::new();
+            for (k, x) in versions.iter().enumerate() {
+                let f = down.begin_round(k, x).unwrap();
+                bits.push(f.link.map_or(0, |l| l.bits()));
+            }
+            let n = versions.len() - 1;
+            // Node 0 kept up: pays each link exactly once, nothing twice.
+            let mut node0 = 0;
+            for (k, &b) in bits.iter().enumerate() {
+                node0 += down.dispatch_bits(0, k);
+                assert_eq!(
+                    node0,
+                    bits[..=k].iter().sum::<u64>(),
+                    "[{spec:?}] cumulative bill drifted at k={k} (link={b})"
+                );
+            }
+            // Node 1 jumps straight to the head: pays the whole chain.
+            assert_eq!(
+                down.dispatch_bits(1, n),
+                bits[1..].iter().sum::<u64>(),
+                "[{spec:?}] catch-up bill wrong"
+            );
+            // Re-dispatch at a version already held is free.
+            assert_eq!(down.dispatch_bits(1, n), 0, "[{spec:?}]");
+        });
+    }
+}

@@ -361,26 +361,45 @@ fn prop_json_parser_roundtrips_random_documents() {
 
 #[test]
 fn prop_wire_messages_roundtrip() {
-    use fedpaq::net::proto::{ToLeader, ToWorker};
+    use fedpaq::net::proto::{ModelPayload, ToLeader, ToWorker};
     check(150, 0xfed_b3, |rng| {
         let p = rng.gen_range(1, 400);
+        // Alternate raw broadcasts and compressed delta chains so both
+        // wire-v3 payload shapes survive the roundtrip.
+        let chain = rng.gen_bool(0.5);
+        let payload = if chain {
+            let q = QsgdCodec::new(rng.gen_range(1, 16) as u32);
+            let n_links = rng.gen_range(1, 4);
+            ModelPayload::Chain {
+                base_version: rng.next_u64() % 1000,
+                links: (0..n_links)
+                    .map(|_| q.encode(&random_vec(rng, p, 2.0), &mut rng.clone()))
+                    .collect(),
+            }
+        } else {
+            ModelPayload::Raw(random_vec(rng, p, 1.0))
+        };
         let msg = ToWorker::Work {
             version: rng.next_u64() % 1000,
             node: rng.next_u64() % 50,
-            params: random_vec(rng, p, 1.0),
+            payload,
             lrs: {
                 let n_lrs = rng.gen_range(1, 8);
                 random_vec(rng, n_lrs, 0.1)
             },
         };
-        match (ToWorker::decode(&msg.encode()).unwrap(), &msg) {
+        let bytes = msg.encode();
+        let back = ToWorker::decode(&bytes).unwrap();
+        // Re-encoding the decoded frame must reproduce the exact bytes
+        // (covers the payload, whose Encoded links aren't PartialEq).
+        assert_eq!(back.encode(), bytes);
+        match (back, &msg) {
             (
-                ToWorker::Work { version, node, params, lrs },
-                ToWorker::Work { version: v2, node: n2, params: p2, lrs: l2 },
+                ToWorker::Work { version, node, lrs, .. },
+                ToWorker::Work { version: v2, node: n2, lrs: l2, .. },
             ) => {
                 assert_eq!(version, *v2);
                 assert_eq!(node, *n2);
-                assert_eq!(&params, p2);
                 assert_eq!(&lrs, l2);
             }
             _ => panic!(),
@@ -388,9 +407,19 @@ fn prop_wire_messages_roundtrip() {
         let q = QsgdCodec::new(rng.gen_range(1, 16) as u32);
         let enc = q.encode(&random_vec(rng, p, 2.0), &mut rng.clone());
         let want = q.decode(&enc).unwrap();
-        let up = ToLeader::Update { version: 1, node: 2, enc };
+        let up = ToLeader::Update {
+            version: 1,
+            node: 2,
+            enc,
+            compute_ms: 3.25,
+            decode_ms: 0.5,
+        };
         match ToLeader::decode(&up.encode()).unwrap() {
-            ToLeader::Update { enc, .. } => assert_eq!(q.decode(&enc).unwrap(), want),
+            ToLeader::Update { enc, compute_ms, decode_ms, .. } => {
+                assert_eq!(q.decode(&enc).unwrap(), want);
+                assert_eq!(compute_ms, 3.25);
+                assert_eq!(decode_ms, 0.5);
+            }
             _ => panic!(),
         }
     });

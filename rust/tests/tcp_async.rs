@@ -14,9 +14,7 @@ use fedpaq::config::{EngineKind, ExperimentConfig};
 use fedpaq::coordinator::{RunResult, StalenessRule};
 use fedpaq::data::DatasetKind;
 use fedpaq::model::RustEngine;
-use fedpaq::net::{
-    run_leader, run_leader_controlled, run_worker_retrying, WorkerOptions,
-};
+use fedpaq::net::{run_leader, run_worker_retrying, WorkerOptions};
 use fedpaq::ops::{EventSink, RunControl};
 use fedpaq::opt::LrSchedule;
 use fedpaq::quant::CodecSpec;
@@ -49,6 +47,7 @@ fn cluster_cfg(seed: u64) -> ExperimentConfig {
         max_staleness: 8,
         staleness_rule: Default::default(),
         agg_shards: 1,
+        down_codec: None,
     }
 }
 
@@ -89,6 +88,7 @@ fn run_cluster(cfg: &ExperimentConfig, delays: &[Option<Duration>]) -> RunResult
         delays.len(),
         &mut engine,
         Path::new("artifacts"),
+        &RunControl::default(),
     )
     .unwrap();
     for w in workers {
@@ -159,7 +159,7 @@ fn run_cluster_churn(
         ..Default::default()
     };
     let mut engine = leader_engine();
-    let res = run_leader_controlled(
+    let res = run_leader(
         cfg.clone(),
         &addr,
         n_initial,

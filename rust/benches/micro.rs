@@ -177,7 +177,7 @@ fn sampling_and_gather() {
         black_box(sample_nodes(50, 25, 7, black_box(round)));
     });
     let data = FederatedDataset::generate(DatasetKind::Cifar10, 1, 10_000);
-    let part = Partition::iid(10_000, 50, 200, 1);
+    let part = Partition::iid(10_000, 50, 200);
     let sampler = BatchSampler::new(1, 10);
     let mut bufs = GatherBufs::default();
     g.bench("gather_tau5_b10_cifar", || {
@@ -188,9 +188,81 @@ fn sampling_and_gather() {
     g.finish();
 }
 
+/// Simulator throughput at cohort scale: full `AsyncSim` commits
+/// (dispatch wave → event-queue arrivals → planner decision) at 10^4 and
+/// 10^5 clients, emitted as `BENCH_sim.json` and gated by CI against the
+/// committed floors in `rust/benches/baseline/BENCH_sim.json`. Per-commit
+/// cost must be O(active) — the two rows differ by 10× in cohort size but
+/// share the same active set (r=64, b=32), so a regression that
+/// reintroduces O(n_nodes) work shows up as the 10^5 row (and only it)
+/// falling off a cliff.
+fn sim_throughput() {
+    use fedpaq::config::{EngineKind, ExperimentConfig};
+    use fedpaq::coordinator::{AsyncSim, ModelFrame, RoundCtx, Transport};
+    use fedpaq::data::PartitionKind;
+    use fedpaq::model::{Engine, ModelKind, RustEngine};
+    use fedpaq::opt::LrSchedule;
+
+    let mut g = Group::new("sim");
+    for &(label, n_nodes) in &[("commit_n1e4_r64_b32", 10_000usize),
+                               ("commit_n1e5_r64_b32", 100_000usize)] {
+        let cfg = ExperimentConfig {
+            name: format!("bench-{label}"),
+            model: "logreg".into(),
+            dataset: DatasetKind::Mnist08,
+            n_nodes,
+            per_node: 32,
+            r: 64,
+            tau: 1,
+            t_total: 1_000_000,
+            codec: CodecSpec::qsgd(2),
+            down_codec: None,
+            lr: LrSchedule::Const { eta: 0.05 },
+            ratio: 100.0,
+            seed: 17,
+            eval_every: 1,
+            engine: EngineKind::Rust,
+            partition: PartitionKind::Iid,
+            async_rounds: true,
+            buffer_size: 32,
+            max_staleness: 16,
+            staleness_rule: Default::default(),
+            agg_shards: 1,
+            straggler: Default::default(),
+            // O(r + dataset) resident state: shards wrap a 4096-sample
+            // dataset however large the cohort is.
+            dataset_cap: 4096,
+        };
+        let codec = cfg.codec.build().unwrap();
+        let mut eng =
+            RustEngine::new(ModelKind::LogReg { d: 784, l2: 0.05 }, 8, 256).unwrap();
+        let params = eng.init_params().unwrap();
+        let mut t = AsyncSim::new();
+        t.setup(&cfg, &mut eng).unwrap();
+        let mut round = 0usize;
+        let lrs = vec![0.05f32; cfg.tau];
+        // One commit per iteration ≈ b pops + b dispatches in steady
+        // state; rounds stay sequential across bench iterations (the
+        // planner requires it).
+        let events_per_commit = 2 * cfg.buffer_size as u64;
+        g.bench_elems(label, events_per_commit, || {
+            let nodes = sample_nodes(cfg.n_nodes, cfg.r, cfg.seed, round);
+            let frame = ModelFrame::raw(round, params.clone());
+            let ctx =
+                RoundCtx { round, nodes: &nodes, frame: &frame, lrs: &lrs };
+            let out = t.round(&ctx, codec.as_ref(), &mut eng).unwrap();
+            black_box(out);
+            round += 1;
+        });
+        t.shutdown().unwrap();
+    }
+    g.finish();
+}
+
 fn main() {
     quantizer_codec();
     codec_suite();
     aggregation();
     sampling_and_gather();
+    sim_throughput();
 }

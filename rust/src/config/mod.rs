@@ -74,6 +74,23 @@
 //! classic `1/(1+s)` damping). All four fields default to the synchronous
 //! protocol when absent, so pre-async config files parse unchanged.
 //!
+//! ## Scale knobs (million-client simulation)
+//!
+//! ```json
+//! "straggler": {"type": "shifted_exp"}           // or
+//! "straggler": {"type": "pareto", "alpha": 1.5},
+//! "dataset_cap": 16384
+//! ```
+//!
+//! `straggler` selects the [`StragglerDist`] behind the §5 cost model's
+//! random compute-time component (absent ⇒ the paper's shifted
+//! exponential, bit-identical to historical runs). `dataset_cap` bounds
+//! the generated dataset to `min(cap, n·m)` samples — `0` (the default)
+//! is the historical `n·m` — letting 10^5–10^7-client cohorts share a
+//! fixed dataset via the arithmetic wraparound partition
+//! ([`Partition::iid`](crate::data::Partition::iid)). Both default so
+//! pre-scale config files parse unchanged.
+//!
 //! Serialization goes through the in-tree JSON module (`util::json`);
 //! see `configs/` for example files.
 
@@ -81,6 +98,7 @@ use crate::coordinator::aggregate::StalenessRule;
 use crate::data::{DatasetKind, PartitionKind};
 use crate::opt::LrSchedule;
 use crate::quant::{CodecSpec, Coding};
+use crate::simtime::StragglerDist;
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -293,6 +311,17 @@ pub struct ExperimentConfig {
     /// (see the `aggregate` module docs). `1` = the historical
     /// single-threaded loop.
     pub agg_shards: usize,
+    /// Straggler distribution behind the §5 cost model's random
+    /// compute-time component. The default (`ShiftedExp`) is the paper's
+    /// model and is bit-identical to pre-knob runs; `Pareto` is the
+    /// mean-matched heavy tail for cohort-heterogeneity sweeps.
+    pub straggler: StragglerDist,
+    /// Cap the generated dataset at this many samples (`0` = the
+    /// historical `n_nodes · per_node`). With a cap below `n·m`, node
+    /// shards wrap around the dataset and share samples
+    /// ([`Partition::iid`](crate::data::Partition::iid) oversubscription)
+    /// — what keeps 10^5+-client cohorts in memory. IID partitions only.
+    pub dataset_cap: usize,
 }
 
 impl ExperimentConfig {
@@ -308,6 +337,18 @@ impl ExperimentConfig {
             self.r
         } else {
             self.buffer_size
+        }
+    }
+
+    /// The generated dataset size: `min(dataset_cap, n·m)` with `0`
+    /// meaning uncapped. Every process that materializes the dataset
+    /// (sim engine, TCP workers) must agree on this number.
+    pub fn n_samples(&self) -> usize {
+        let full = self.n_nodes * self.per_node;
+        if self.dataset_cap == 0 {
+            full
+        } else {
+            self.dataset_cap.min(full)
         }
     }
 
@@ -351,6 +392,20 @@ impl ExperimentConfig {
             );
         }
         anyhow::ensure!(self.agg_shards >= 1, "agg_shards must be >= 1");
+        if let StragglerDist::Pareto { alpha } = self.straggler {
+            anyhow::ensure!(
+                alpha.is_finite() && alpha > 1.0,
+                "pareto straggler needs a finite tail index alpha > 1 \
+                 (finite mean), got {alpha}"
+            );
+        }
+        if self.dataset_cap != 0 && self.dataset_cap < self.n_nodes * self.per_node {
+            anyhow::ensure!(
+                self.partition == PartitionKind::Iid,
+                "dataset_cap below n_nodes*per_node requires the iid \
+                 partition (label-skew shards cannot wrap around)"
+            );
+        }
         Ok(self)
     }
 
@@ -379,6 +434,8 @@ impl ExperimentConfig {
             max_staleness: 8,
             staleness_rule: StalenessRule::Uniform,
             agg_shards: 1,
+            straggler: StragglerDist::ShiftedExp,
+            dataset_cap: 0,
         }
     }
 
@@ -407,6 +464,8 @@ impl ExperimentConfig {
             max_staleness: 8,
             staleness_rule: StalenessRule::Uniform,
             agg_shards: 1,
+            straggler: StragglerDist::ShiftedExp,
+            dataset_cap: 0,
         }
     }
 
@@ -490,6 +549,19 @@ impl ExperimentConfig {
                 },
             ),
             ("agg_shards", Json::num(self.agg_shards as f64)),
+            (
+                "straggler",
+                match self.straggler {
+                    StragglerDist::ShiftedExp => {
+                        Json::obj(vec![("type", Json::str("shifted_exp"))])
+                    }
+                    StragglerDist::Pareto { alpha } => Json::obj(vec![
+                        ("type", Json::str("pareto")),
+                        ("alpha", Json::num(alpha)),
+                    ]),
+                },
+            ),
+            ("dataset_cap", Json::num(self.dataset_cap as f64)),
         ])
     }
 
@@ -589,6 +661,17 @@ impl ExperimentConfig {
             // Absent in pre-sharding config files: default to the
             // historical single-threaded accumulation.
             agg_shards: j.get("agg_shards").and_then(Json::as_usize).unwrap_or(1),
+            // Scale knobs default so pre-scale config files parse
+            // unchanged (shifted-exponential stragglers, uncapped data).
+            straggler: match j.get("straggler") {
+                None => StragglerDist::ShiftedExp,
+                Some(s) => match s.req_str("type")? {
+                    "shifted_exp" => StragglerDist::ShiftedExp,
+                    "pareto" => StragglerDist::Pareto { alpha: s.req_f64("alpha")? },
+                    other => anyhow::bail!("unknown straggler type {other:?}"),
+                },
+            },
+            dataset_cap: j.get("dataset_cap").and_then(Json::as_usize).unwrap_or(0),
         }
         .validated()
     }
@@ -666,6 +749,19 @@ impl ExperimentConfig {
     /// single-threaded accumulation; bit-identical results either way).
     pub fn with_agg_shards(mut self, agg_shards: usize) -> Self {
         self.agg_shards = agg_shards;
+        self
+    }
+
+    /// Select the straggler compute-time distribution (cost model).
+    pub fn with_straggler(mut self, straggler: StragglerDist) -> Self {
+        self.straggler = straggler;
+        self
+    }
+
+    /// Cap the generated dataset at `dataset_cap` samples; shards wrap
+    /// around it (i.i.d. only). `0` = uncapped (`n_nodes * per_node`).
+    pub fn with_dataset_cap(mut self, dataset_cap: usize) -> Self {
+        self.dataset_cap = dataset_cap;
         self
     }
 }
@@ -787,6 +883,9 @@ mod tests {
                 .with_async(4, 16),
             ExperimentConfig::fig1_logreg_base()
                 .with_down_codec(CodecSpec::rand_k(150)),
+            ExperimentConfig::fig1_logreg_base()
+                .with_straggler(StragglerDist::Pareto { alpha: 1.5 })
+                .with_dataset_cap(500),
         ] {
             let j = cfg.to_json();
             let back = ExperimentConfig::from_json(&j).unwrap();
@@ -813,6 +912,13 @@ mod tests {
             cfg.clone().with_codec(CodecSpec::Identity).config_hash()
         );
         assert_ne!(cfg.config_hash(), cfg.clone().with_async(4, 8).config_hash());
+        assert_ne!(
+            cfg.config_hash(),
+            cfg.clone()
+                .with_straggler(StragglerDist::Pareto { alpha: 1.5 })
+                .config_hash()
+        );
+        assert_ne!(cfg.config_hash(), cfg.clone().with_dataset_cap(100).config_hash());
     }
 
     #[test]
@@ -826,6 +932,7 @@ mod tests {
             "async_tcp_logreg.json",
             "ef_randk_logreg.json",
             "bidir_qsgd_logreg.json",
+            "scale_logreg.json",
         ] {
             ExperimentConfig::from_json_file(&dir.join(f))
                 .unwrap_or_else(|e| panic!("{f}: {e}"));
@@ -844,6 +951,11 @@ mod tests {
             ExperimentConfig::from_json_file(&dir.join("bidir_qsgd_logreg.json")).unwrap();
         assert_eq!(bidir_cfg.down_codec, Some(CodecSpec::qsgd(4)));
         assert!(bidir_cfg.async_rounds);
+        let scale_cfg =
+            ExperimentConfig::from_json_file(&dir.join("scale_logreg.json")).unwrap();
+        assert!(scale_cfg.async_rounds);
+        assert!(scale_cfg.dataset_cap > 0);
+        assert!(matches!(scale_cfg.straggler, StragglerDist::Pareto { .. }));
     }
 
     #[test]
@@ -878,6 +990,53 @@ mod tests {
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.agg_shards, 1);
         assert_eq!(back, ExperimentConfig::fig1_logreg_base());
+    }
+
+    #[test]
+    fn pre_scale_configs_parse_to_defaults() {
+        // A config JSON written before the scale knobs existed must land
+        // on shifted-exponential stragglers and an uncapped dataset.
+        let mut j = ExperimentConfig::fig1_logreg_base().to_json();
+        if let Json::Obj(map) = &mut j {
+            for key in ["straggler", "dataset_cap"] {
+                map.remove(key);
+            }
+        } else {
+            panic!("config JSON must be an object");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.straggler, StragglerDist::ShiftedExp);
+        assert_eq!(back.dataset_cap, 0);
+        assert_eq!(back, ExperimentConfig::fig1_logreg_base());
+    }
+
+    #[test]
+    fn invalid_scale_knobs_rejected() {
+        // Pareto needs a finite tail index > 1 for a finite mean.
+        for alpha in [1.0, 0.5, f64::NAN, f64::INFINITY] {
+            let c = ExperimentConfig::fig1_logreg_base()
+                .with_straggler(StragglerDist::Pareto { alpha });
+            assert!(c.validated().is_err(), "alpha={alpha} accepted");
+        }
+        // A binding dataset cap requires the arithmetic i.i.d. partition.
+        let c = ExperimentConfig::fig1_logreg_base()
+            .with_partition(PartitionKind::Dirichlet { alpha: 0.5 })
+            .with_dataset_cap(10);
+        assert!(c.validated().is_err());
+        // Non-binding cap (>= n*m) is fine with any partition.
+        let c = ExperimentConfig::fig1_logreg_base()
+            .with_partition(PartitionKind::Dirichlet { alpha: 0.5 })
+            .with_dataset_cap(10_000_000);
+        c.validated().unwrap();
+    }
+
+    #[test]
+    fn n_samples_honors_the_cap() {
+        let base = ExperimentConfig::fig1_logreg_base();
+        let full = base.n_nodes * base.per_node;
+        assert_eq!(base.n_samples(), full);
+        assert_eq!(base.clone().with_dataset_cap(100).n_samples(), 100);
+        assert_eq!(base.clone().with_dataset_cap(full * 2).n_samples(), full);
     }
 
     #[test]

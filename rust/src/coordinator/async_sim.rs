@@ -44,6 +44,19 @@
 //! to [`InProcess`](super::InProcess) (asserted by
 //! `rust/tests/async_rounds.rs`, which also pins this refactor to the
 //! pre-planner RunResults).
+//!
+//! ## O(active) scaling contract
+//!
+//! Per-round cost is a function of the *active* set (`r` in-flight jobs
+//! plus the commit batch), never of the cohort size `n_nodes`: the
+//! in-flight queue is an indexed [`EventQueue`] (binary heap keyed on the
+//! total order `(finish, version, slot, node)` — pop order bit-identical
+//! to the historical linear scan, pinned by
+//! `rust/tests/prop_event_queue.rs`), node sampling is Floyd's O(r)
+//! algorithm, shards are arithmetic ranges and straggler draws are pure
+//! functions of `(seed, node, version)`. Resident state is O(r + dataset)
+//! — with `dataset_cap` set, 10^6–10^7-client cohorts fit in memory. See
+//! `docs/OPERATIONS.md` § "Scaling to millions of simulated clients".
 
 use super::commit_loop::{CommitPlanner, Decision, PlannerEvent};
 use super::local::GatherBufs;
@@ -52,22 +65,8 @@ use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Partition};
 use crate::model::Engine;
 use crate::quant::{Encoded, UpdateCodec};
-use crate::simtime::CostModel;
+use crate::simtime::{CostModel, EventKey, EventQueue};
 use std::sync::Arc;
-
-/// One in-flight node job: dispatched at server version `version`,
-/// finishing at virtual time `finish` with upload `enc` already computed
-/// (the *result* depends only on the dispatch model/seeds; only its
-/// arrival time is simulated). `slot` is the planner's canonical batch
-/// position, reused here as the deterministic arrival tie-break.
-#[derive(Debug)]
-struct Job {
-    node: usize,
-    version: usize,
-    slot: usize,
-    finish: f64,
-    enc: Encoded,
-}
 
 /// The buffered-async simulated transport. See the module docs.
 #[derive(Debug, Default)]
@@ -79,7 +78,12 @@ pub struct AsyncSim {
     /// Virtual clock: time of the last commit, uplink included.
     now: f64,
     planner: Option<CommitPlanner>,
-    jobs: Vec<Job>,
+    /// In-flight jobs, indexed by arrival key: each entry is the upload
+    /// `enc`, already computed at dispatch (the *result* depends only on
+    /// the dispatch model/seeds; only its arrival time is simulated).
+    /// `slot` in the key is the planner's canonical batch position,
+    /// reused as the deterministic arrival tie-break.
+    jobs: EventQueue<Encoded>,
     /// `(node, version)` dispatches performed during the current `round`
     /// call, in dispatch order — handed to the engine in the commit's
     /// [`RoundOutcome`] for downlink-bits accounting.
@@ -138,28 +142,9 @@ impl AsyncSim {
                 ("version", crate::util::json::Json::num(version as f64)),
             ],
         );
-        self.jobs.push(Job { node, version, slot, finish, enc });
+        self.jobs.push(EventKey { finish, version, slot, node }, enc);
         self.dispatched.push((node, version));
         Ok(())
-    }
-
-    /// Pop the next upload to arrive: minimum `(finish, version, slot,
-    /// node)` — total order, so event processing is deterministic even
-    /// under exact time ties.
-    fn pop_next(&mut self) -> Option<Job> {
-        let idx = self
-            .jobs
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| {
-                a.finish
-                    .total_cmp(&b.finish)
-                    .then(a.version.cmp(&b.version))
-                    .then(a.slot.cmp(&b.slot))
-                    .then(a.node.cmp(&b.node))
-            })
-            .map(|(i, _)| i)?;
-        Some(self.jobs.swap_remove(idx))
     }
 }
 
@@ -185,7 +170,8 @@ impl Transport for AsyncSim {
         // Same cost model the engine builds for barrier transports: equal
         // seeds draw identical per-(node, version) straggler times.
         let p = engine.kind().param_count();
-        self.cost = Some(CostModel::with_ratio(cfg.ratio, p, cfg.seed));
+        self.cost =
+            Some(CostModel::with_ratio(cfg.ratio, p, cfg.seed).with_dist(cfg.straggler));
         self.planner = Some(CommitPlanner::new(cfg)?);
         self.now = 0.0;
         self.jobs.clear();
@@ -222,24 +208,28 @@ impl Transport for AsyncSim {
         }
 
         // Discrete-event loop: absorb arrivals until the planner commits.
+        // The queue pops the minimum `(finish, version, slot, node)` —
+        // total order, so event processing is deterministic even under
+        // exact time ties.
         loop {
-            let job = self
-                .pop_next()
+            let (key, enc) = self
+                .jobs
+                .pop()
                 .ok_or_else(|| anyhow::anyhow!("async sim starved: no jobs in flight"))?;
-            let arrival = job.finish;
+            let arrival = key.finish;
             self.events.emit(
                 "upload_arrived",
                 vec![
-                    ("node", crate::util::json::Json::num(job.node as f64)),
+                    ("node", crate::util::json::Json::num(key.node as f64)),
                     ("t", crate::util::json::Json::num(arrival)),
-                    ("version", crate::util::json::Json::num(job.version as f64)),
+                    ("version", crate::util::json::Json::num(key.version as f64)),
                 ],
             );
             let decisions =
                 self.planner.as_mut().unwrap().on_event(PlannerEvent::UploadArrived {
-                    node: job.node,
-                    version: job.version,
-                    enc: job.enc,
+                    node: key.node,
+                    version: key.version,
+                    enc,
                 })?;
             for d in decisions {
                 match d {
@@ -286,6 +276,16 @@ impl Transport for AsyncSim {
     }
 
     fn shutdown(&mut self) -> crate::Result<()> {
+        // Structured counterpart of the stderr note below, so operators
+        // tailing the JSONL event stream see the run-total drop count
+        // without scraping stderr.
+        self.events.emit(
+            "transport_shutdown",
+            vec![(
+                "dropped_total",
+                crate::util::json::Json::num(self.dropped() as f64),
+            )],
+        );
         if self.dropped() > 0 {
             eprintln!(
                 "[async-sim] run complete: {} stale upload(s) dropped",
@@ -311,15 +311,20 @@ impl Transport for AsyncSim {
             .planner
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("AsyncSim::export_state before setup"))?;
+        // Canonical ordering: jobs serialize sorted by the event-queue
+        // key, so two equivalent sims (e.g. either side of a kill/resume,
+        // or heap internals permuted by a different insertion history)
+        // always produce byte-identical checkpoints.
         let jobs = self
             .jobs
-            .iter()
-            .map(|j| crate::ops::JobState {
-                node: j.node,
-                version: j.version,
-                slot: j.slot,
-                finish: j.finish,
-                enc: j.enc.clone(),
+            .sorted()
+            .into_iter()
+            .map(|(key, enc)| crate::ops::JobState {
+                node: key.node,
+                version: key.version,
+                slot: key.slot,
+                finish: key.finish,
+                enc: enc.clone(),
             })
             .collect();
         Ok(Some(crate::ops::TransportState::Async {
@@ -337,16 +342,13 @@ impl Transport for AsyncSim {
         let crate::ops::TransportState::Async { planner, now, jobs } = state;
         self.planner = Some(CommitPlanner::from_state(planner)?);
         self.now = now;
-        self.jobs = jobs
-            .into_iter()
-            .map(|j| Job {
-                node: j.node,
-                version: j.version,
-                slot: j.slot,
-                finish: j.finish,
-                enc: j.enc,
-            })
-            .collect();
+        self.jobs.clear();
+        for j in jobs {
+            self.jobs.push(
+                EventKey { finish: j.finish, version: j.version, slot: j.slot, node: j.node },
+                j.enc,
+            );
+        }
         Ok(())
     }
 }
@@ -381,6 +383,8 @@ mod tests {
             max_staleness: 4,
             staleness_rule: Default::default(),
             agg_shards: 1,
+            straggler: Default::default(),
+            dataset_cap: 0,
         }
     }
 

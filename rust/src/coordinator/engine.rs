@@ -52,7 +52,7 @@ pub(crate) fn build_world(
     cfg: &ExperimentConfig,
     engine: &mut dyn Engine,
 ) -> crate::Result<(Arc<FederatedDataset>, Partition)> {
-    let n_samples = cfg.n_nodes * cfg.per_node;
+    let n_samples = cfg.n_samples();
     let data = crate::data::cached_generate(cfg.dataset, cfg.seed, n_samples);
     anyhow::ensure!(
         data.dim == engine.kind().d_in(),
@@ -242,20 +242,23 @@ impl EvalSlab {
         partition: &Partition,
     ) -> crate::Result<Self> {
         let eval_n = engine.eval_n();
-        let all = partition.all_indices();
-        anyhow::ensure!(all.len() >= eval_n, "eval slab larger than dataset");
-        let idx = &all[..eval_n];
+        anyhow::ensure!(
+            partition.assigned() >= eval_n && data.n_samples >= eval_n,
+            "eval slab larger than dataset"
+        );
+        // Lazy prefix of the assignment — O(eval_n), never O(n_nodes).
+        let idx: Vec<usize> = partition.eval_indices(eval_n);
         let mut x = Vec::new();
-        data.gather_features(idx, &mut x);
+        data.gather_features(&idx, &mut x);
         let y = match &data.labels {
             Labels::Float(_) => {
                 let mut y = Vec::new();
-                data.gather_labels_f32(idx, &mut y);
+                data.gather_labels_f32(&idx, &mut y);
                 OwnedLabels::F32(y)
             }
             Labels::Int(_) => {
                 let mut y = Vec::new();
-                data.gather_labels_i32(idx, &mut y);
+                data.gather_labels_i32(&idx, &mut y);
                 OwnedLabels::I32(y)
             }
         };
@@ -351,7 +354,8 @@ impl RoundEngine {
         let start_k;
         let mut timing = if self.transport.virtual_time() {
             Timing::Virtual {
-                cost: CostModel::with_ratio(cfg.ratio, p, cfg.seed),
+                cost: CostModel::with_ratio(cfg.ratio, p, cfg.seed)
+                    .with_dist(cfg.straggler),
                 clock: VirtualClock::new(),
             }
         } else {

@@ -3,7 +3,7 @@
 //! shard, run the engine's chained local SGD, quantize the model delta.
 
 use crate::config::ExperimentConfig;
-use crate::data::{BatchSampler, FederatedDataset};
+use crate::data::{BatchSampler, FederatedDataset, Shard};
 use crate::model::{Engine, LabelBatch};
 use crate::quant::{Encoded, UpdateCodec};
 
@@ -39,7 +39,7 @@ pub struct GatherBufs {
 /// engine resamples identical batches.
 pub fn gather_local_batches(
     data: &FederatedDataset,
-    shard: &[usize],
+    shard: Shard<'_>,
     sampler: &BatchSampler,
     node: usize,
     round: usize,
@@ -58,7 +58,7 @@ pub fn gather_local_batches(
     for t in 0..tau {
         sampler.sample_into(node, round, t, shard.len(), &mut bufs.idx);
         // Map shard-relative indices to dataset indices.
-        let abs: Vec<usize> = bufs.idx.iter().map(|&i| shard[i]).collect();
+        let abs: Vec<usize> = bufs.idx.iter().map(|&i| shard.get(i)).collect();
         data.gather_features(&abs, &mut xtmp);
         bufs.x.extend_from_slice(&xtmp);
         if float_labels {
@@ -91,7 +91,7 @@ pub fn node_round(
     codec: &dyn UpdateCodec,
     engine: &mut dyn Engine,
     data: &FederatedDataset,
-    shard: &[usize],
+    shard: Shard<'_>,
     sampler: &BatchSampler,
     node: usize,
     round: usize,
@@ -124,7 +124,7 @@ mod tests {
     #[test]
     fn gather_shapes_and_determinism() {
         let data = FederatedDataset::generate(DatasetKind::Mnist08, 1, 1000);
-        let part = Partition::iid(1000, 10, 100, 1);
+        let part = Partition::iid(1000, 10, 100);
         let sampler = BatchSampler::new(1, 10);
         let mut b1 = GatherBufs::default();
         let mut b2 = GatherBufs::default();
@@ -141,7 +141,7 @@ mod tests {
     #[test]
     fn gather_uses_only_own_shard() {
         let data = FederatedDataset::generate(DatasetKind::Mnist08, 2, 200);
-        let part = Partition::iid(200, 4, 50, 2);
+        let part = Partition::iid(200, 4, 50);
         let sampler = BatchSampler::new(2, 10);
         let mut bufs = GatherBufs::default();
         gather_local_batches(&data, part.shard(0), &sampler, 0, 0, 3, &mut bufs);
@@ -151,7 +151,7 @@ mod tests {
             let found = part
                 .shard(0)
                 .iter()
-                .any(|&abs| data.row(abs) == row);
+                .any(|abs| data.row(abs) == row);
             assert!(found, "row {row_i} not from shard 0");
         }
     }

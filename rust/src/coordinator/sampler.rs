@@ -1,21 +1,38 @@
 //! Partial node participation (paper §3.2): per round, `r` of `n` nodes
 //! are sampled uniformly without replacement — `Pr[S_k] = 1/C(n,r)`.
+//!
+//! Cost is O(r) time and memory, independent of the cohort size `n`
+//! (Floyd's algorithm) — a 10^7-client cohort samples its wave without
+//! ever materializing O(n) state, part of the simulator's O(active)
+//! contract. Note the historical implementation was a partial
+//! Fisher–Yates over a full `(0..n)` pool: the *distribution* is the
+//! same, but the concrete sets drawn from a given seed differ, which is
+//! why `ops::CHECKPOINT_VERSION` was bumped when Floyd sampling landed
+//! (a pre-bump checkpoint would resume onto different cohorts).
 
 use crate::util::rng::Rng;
 
 /// Sample the participant set `S_k` for round `round`.
 ///
-/// Deterministic in `(seed, round)`; partial Fisher–Yates, O(n) time.
+/// Deterministic in `(seed, round)`; Floyd's algorithm, O(r) time.
 pub fn sample_nodes(n: usize, r: usize, seed: u64, round: usize) -> Vec<usize> {
     assert!(r >= 1 && r <= n, "r={r} out of 1..={n}");
     let mut rng = rng_for(seed, round);
-    let mut pool: Vec<usize> = (0..n).collect();
-    for i in 0..r {
-        let j = rng.gen_range(i, n);
-        pool.swap(i, j);
+    let mut seen = std::collections::HashSet::with_capacity(r);
+    let mut out = Vec::with_capacity(r);
+    for j in (n - r)..n {
+        let t = rng.gen_range(0, j + 1);
+        // t already chosen ⇒ take j instead (j is new by construction):
+        // this is what makes every r-subset equally likely.
+        let pick = if seen.insert(t) {
+            t
+        } else {
+            seen.insert(j);
+            j
+        };
+        out.push(pick);
     }
-    pool.truncate(r);
-    pool
+    out
 }
 
 fn rng_for(seed: u64, round: usize) -> Rng {

@@ -262,6 +262,8 @@ mod tests {
             staleness_rule: Default::default(),
             agg_shards: 1,
             down_codec: None,
+            straggler: Default::default(),
+            dataset_cap: 0,
         }
     }
 
@@ -509,7 +511,7 @@ mod tests {
         // Manual replay.
         let mut eng2 = engine();
         let data = FederatedDataset::generate(cfg.dataset, cfg.seed, 320);
-        let part = Partition::iid(320, 8, 40, cfg.seed);
+        let part = Partition::iid(320, 8, 40);
         let sampler = BatchSampler::new(cfg.seed, 10);
         let p0 = eng2.init_params().unwrap();
         let mut mean = vec![0f64; p0.len()];

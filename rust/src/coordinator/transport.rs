@@ -379,6 +379,8 @@ mod tests {
             max_staleness: 8,
             staleness_rule: Default::default(),
             agg_shards: 1,
+            straggler: Default::default(),
+            dataset_cap: 0,
         }
     }
 

@@ -15,6 +15,6 @@ pub mod partition;
 pub mod synth;
 
 pub use batch::BatchSampler;
-pub use partition::{Partition, PartitionKind};
+pub use partition::{Partition, PartitionKind, Shard};
 pub use cache::cached_generate;
 pub use synth::{DatasetKind, FederatedDataset, Labels};

@@ -1,9 +1,22 @@
 //! The i.i.d. federated partitioner: `n` nodes × `m` samples each.
 //!
-//! The paper's setting (§2) is i.i.d. data uniformly spread over nodes; we
-//! shuffle the global sample indices with a seeded RNG and deal them out
-//! contiguously. Invariant (property-tested): the node shards are a
-//! *partition* — disjoint and jointly covering the first `n*m` samples.
+//! The paper's setting (§2) is i.i.d. data uniformly spread over nodes.
+//! The synthetic datasets draw every sample from a per-sample seeded RNG
+//! (statistically i.i.d. by construction), so the IID partition needs no
+//! shuffle: node `i`'s shard is the **arithmetic range**
+//! `{(i·m + j) mod n_samples : j < m}`, computed on demand in
+//! [`Partition::shard`] and never materialized. That is the other half of
+//! the simulator's O(active) memory contract — 10^7 nodes cost zero
+//! resident partition state, and when `n·m > n_samples` (a capped
+//! dataset, `cfg.dataset_cap`) shards wrap around and share samples, the
+//! standard way to simulate huge cohorts over a bounded dataset.
+//! Invariant (property-tested): with `n·m ≤ n_samples` the node shards
+//! are a *partition* — disjoint and jointly covering the first `n*m`
+//! samples.
+//!
+//! The Dirichlet label-skew partitioner still stores explicit per-node
+//! index lists (its shards are data-dependent); both shapes are served
+//! through the [`Shard`] view.
 
 use crate::util::rng::Rng;
 
@@ -20,29 +33,71 @@ pub enum PartitionKind {
     Dirichlet { alpha: f64 },
 }
 
+/// A node's shard of sample indices, as a cheap copyable view: either a
+/// slice of explicitly stored indices (Dirichlet) or an arithmetic range
+/// (lazy IID — nothing resident).
+#[derive(Debug, Clone, Copy)]
+pub enum Shard<'a> {
+    /// Explicit index list (label-skew partitions).
+    Explicit(&'a [usize]),
+    /// `{(start + j) mod modulo : j < len}` — the lazy IID shard.
+    Range { start: usize, len: usize, modulo: usize },
+}
+
+impl<'a> Shard<'a> {
+    pub fn len(&self) -> usize {
+        match *self {
+            Shard::Explicit(s) => s.len(),
+            Shard::Range { len, .. } => len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th sample index of this shard (panics out of range).
+    pub fn get(&self, i: usize) -> usize {
+        match *self {
+            Shard::Explicit(s) => s[i],
+            Shard::Range { start, len, modulo } => {
+                assert!(i < len, "shard index {i} out of 0..{len}");
+                (start + i) % modulo
+            }
+        }
+    }
+
+    /// Iterate the shard's sample indices (by value; `Shard` is `Copy`,
+    /// so the iterator outlives the view it was made from).
+    pub fn iter(self) -> impl Iterator<Item = usize> + 'a {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+}
+
+/// The two storage shapes behind [`Partition`].
+#[derive(Debug, Clone)]
+enum Shards {
+    Explicit(Vec<Vec<usize>>),
+    /// Lazy IID: node `i` owns `{(i·per_node + j) mod n_samples}`.
+    Arithmetic { n_nodes: usize, per_node: usize, n_samples: usize },
+}
+
 /// Assignment of dataset sample indices to nodes.
 #[derive(Debug, Clone)]
 pub struct Partition {
-    shards: Vec<Vec<usize>>,
+    shards: Shards,
 }
 
 impl Partition {
-    /// Deal `n_nodes * per_node` samples out of `n_samples` (must suffice)
-    /// into `n_nodes` equal shards, i.i.d. via a seeded shuffle.
-    pub fn iid(n_samples: usize, n_nodes: usize, per_node: usize, seed: u64) -> Self {
-        assert!(
-            n_nodes * per_node <= n_samples,
-            "need {} samples, dataset has {}",
-            n_nodes * per_node,
-            n_samples
-        );
-        let mut idx: Vec<usize> = (0..n_samples).collect();
-        let mut rng = Rng::from_coords(seed, &[0x9a27_11c3]);
-        rng.shuffle(&mut idx);
-        let shards = (0..n_nodes)
-            .map(|i| idx[i * per_node..(i + 1) * per_node].to_vec())
-            .collect();
-        Partition { shards }
+    /// The i.i.d. partition: `n_nodes` equal shards of `per_node`
+    /// arithmetic-range indices over a dataset of `n_samples`. O(1) time
+    /// and memory regardless of cohort size; when
+    /// `n_nodes · per_node > n_samples` shards wrap around and share
+    /// samples (oversubscription — how 10^6+-client cohorts run on a
+    /// bounded dataset).
+    pub fn iid(n_samples: usize, n_nodes: usize, per_node: usize) -> Self {
+        assert!(n_samples > 0, "need a non-empty dataset to partition");
+        Partition { shards: Shards::Arithmetic { n_nodes, per_node, n_samples } }
     }
 
     /// Label-skew partition: node `i` draws class proportions
@@ -107,7 +162,7 @@ impl Partition {
             }
             shards.push(shard);
         }
-        Partition { shards }
+        Partition { shards: Shards::Explicit(shards) }
     }
 
     /// Dispatch on [`PartitionKind`]; `Dirichlet` needs class labels and
@@ -120,11 +175,11 @@ impl Partition {
         seed: u64,
     ) -> Self {
         match kind {
-            PartitionKind::Iid => Self::iid(data.n_samples, n_nodes, per_node, seed),
+            PartitionKind::Iid => Self::iid(data.n_samples, n_nodes, per_node),
             PartitionKind::Dirichlet { alpha } => {
                 use super::synth::{DatasetKind, Labels};
                 if data.kind == DatasetKind::LmMarkov {
-                    return Self::iid(data.n_samples, n_nodes, per_node, seed);
+                    return Self::iid(data.n_samples, n_nodes, per_node);
                 }
                 let class_of: Vec<usize> = match &data.labels {
                     Labels::Float(v) => v.iter().map(|&y| y as usize).collect(),
@@ -143,16 +198,44 @@ impl Partition {
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.shards.len()
+        match &self.shards {
+            Shards::Explicit(s) => s.len(),
+            Shards::Arithmetic { n_nodes, .. } => *n_nodes,
+        }
     }
 
-    pub fn shard(&self, node: usize) -> &[usize] {
-        &self.shards[node]
+    /// Total assigned sample slots across all nodes (with wraparound
+    /// these are not necessarily distinct samples).
+    pub fn assigned(&self) -> usize {
+        match &self.shards {
+            Shards::Explicit(s) => s.iter().map(Vec::len).sum(),
+            Shards::Arithmetic { n_nodes, per_node, .. } => n_nodes * per_node,
+        }
     }
 
-    /// All assigned indices in node order (used for full-train-set eval).
-    pub fn all_indices(&self) -> Vec<usize> {
-        self.shards.iter().flatten().copied().collect()
+    pub fn shard(&self, node: usize) -> Shard<'_> {
+        match &self.shards {
+            Shards::Explicit(s) => Shard::Explicit(&s[node]),
+            Shards::Arithmetic { n_nodes, per_node, n_samples } => {
+                assert!(node < *n_nodes, "node {node} out of 0..{n_nodes}");
+                Shard::Range {
+                    start: (node * per_node) % n_samples,
+                    len: *per_node,
+                    modulo: *n_samples,
+                }
+            }
+        }
+    }
+
+    /// The first `n` assigned indices in node order (the eval slab).
+    /// Lazy for the arithmetic partition — never materializes
+    /// O(n_nodes · per_node) state, the historical `all_indices()` cost
+    /// that capped cohort size.
+    pub fn eval_indices(&self, n: usize) -> Vec<usize> {
+        match &self.shards {
+            Shards::Explicit(s) => s.iter().flatten().copied().take(n).collect(),
+            Shards::Arithmetic { n_samples, .. } => (0..n).map(|i| i % n_samples).collect(),
+        }
     }
 }
 
@@ -197,30 +280,75 @@ mod tests {
 
     #[test]
     fn covers_exactly_once() {
-        let p = Partition::iid(10_000, 50, 200, 42);
+        let p = Partition::iid(10_000, 50, 200);
         let mut seen = HashSet::new();
         for node in 0..50 {
-            for &i in p.shard(node) {
+            for i in p.shard(node).iter() {
                 assert!(seen.insert(i), "sample {i} assigned twice");
                 assert!(i < 10_000);
             }
         }
         assert_eq!(seen.len(), 10_000);
+        assert_eq!(p.assigned(), 10_000);
     }
 
     #[test]
     fn deterministic() {
-        let a = Partition::iid(1000, 10, 100, 7);
-        let b = Partition::iid(1000, 10, 100, 7);
+        let a = Partition::iid(1000, 10, 100);
+        let b = Partition::iid(1000, 10, 100);
         for n in 0..10 {
-            assert_eq!(a.shard(n), b.shard(n));
+            let av: Vec<usize> = a.shard(n).collect_vec();
+            let bv: Vec<usize> = b.shard(n).collect_vec();
+            assert_eq!(av, bv);
         }
     }
 
     #[test]
-    #[should_panic(expected = "need")]
-    fn too_few_samples_panics() {
-        Partition::iid(99, 10, 10, 0);
+    fn oversubscribed_shards_wrap_around_the_dataset() {
+        // 10 nodes × 15 samples over a 100-sample dataset: every shard is
+        // full-length, indices stay in range, and node 9's shard wraps
+        // from 135 % 100 back to the front.
+        let p = Partition::iid(100, 10, 15);
+        assert_eq!(p.assigned(), 150);
+        for node in 0..10 {
+            let s = p.shard(node);
+            assert_eq!(s.len(), 15);
+            assert!(s.iter().all(|i| i < 100));
+        }
+        let last: Vec<usize> = p.shard(9).collect_vec();
+        assert_eq!(last[0], 35);
+        assert_eq!(last[14], 49);
+        let wrap: Vec<usize> = p.shard(6).collect_vec(); // starts at 90
+        assert_eq!(wrap[9], 99);
+        assert_eq!(wrap[10], 0);
+    }
+
+    #[test]
+    fn eval_indices_is_lazy_prefix_modulo_dataset() {
+        let p = Partition::iid(100, 1_000_000, 10);
+        // O(eval_n), not O(n_nodes * per_node): a 10^7-slot assignment
+        // must not materialize to serve a 250-index eval slab.
+        let idx = p.eval_indices(250);
+        assert_eq!(idx.len(), 250);
+        assert_eq!(&idx[..3], &[0, 1, 2]);
+        assert_eq!(idx[100], 0);
+        assert_eq!(idx[249], 49);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_dataset_panics() {
+        Partition::iid(0, 10, 10);
+    }
+
+    /// Collect a [`Shard`] view into owned indices (test convenience).
+    trait CollectVec {
+        fn collect_vec(&self) -> Vec<usize>;
+    }
+    impl CollectVec for Shard<'_> {
+        fn collect_vec(&self) -> Vec<usize> {
+            self.iter().collect()
+        }
     }
 
     fn fake_labels(n: usize, classes: usize, seed: u64) -> Vec<usize> {
@@ -235,7 +363,7 @@ mod tests {
         let mut seen = HashSet::new();
         for node in 0..8 {
             assert_eq!(p.shard(node).len(), 100);
-            for &i in p.shard(node) {
+            for i in p.shard(node).iter() {
                 assert!(seen.insert(i));
             }
         }
@@ -250,7 +378,7 @@ mod tests {
             let mut acc = 0.0;
             for node in 0..10 {
                 let mut counts = [0f64; 10];
-                for &i in p.shard(node) {
+                for i in p.shard(node).iter() {
                     counts[labels[i]] += 1.0;
                 }
                 let n: f64 = counts.iter().sum();
@@ -276,7 +404,7 @@ mod tests {
         let a = Partition::dirichlet(&labels, 5, 4, 100, 0.5, 6);
         let b = Partition::dirichlet(&labels, 5, 4, 100, 0.5, 6);
         for n in 0..4 {
-            assert_eq!(a.shard(n), b.shard(n));
+            assert_eq!(a.shard(n).collect_vec(), b.shard(n).collect_vec());
         }
     }
 }

@@ -333,6 +333,42 @@ pub fn all_figures() -> Vec<FigureSpec> {
                 .with_name("s=4 elias"),
         ],
     });
+    // --- Extension: cohort scale × straggler model — how many commits a
+    // target loss costs as the cohort grows from 10^3 to 10^5 clients,
+    // under the paper's shifted-exponential stragglers vs a mean-matched
+    // heavy-tailed Pareto. O(active) machinery throughout: the active set
+    // (r=64, b=16) is held fixed while n grows, shards wrap a capped
+    // 16_384-sample dataset, and sampling/dispatch never materialize
+    // O(n) state.
+    let base = ExperimentConfig::fig1_logreg_base()
+        .with_engine(EngineKind::Rust)
+        .with_r(64)
+        .with_tau(2)
+        .with_async(16, 8);
+    let mut configs = Vec::new();
+    for &n in &[1_000usize, 10_000, 100_000] {
+        for dist in [
+            crate::simtime::StragglerDist::ShiftedExp,
+            crate::simtime::StragglerDist::Pareto { alpha: 1.5 },
+        ] {
+            configs.push(
+                ExperimentConfig {
+                    n_nodes: n,
+                    per_node: 32,
+                    dataset_cap: 16_384,
+                    ..base.clone().with_straggler(dist)
+                }
+                .with_name(format!("n={n} {}", dist.name())),
+            );
+        }
+    }
+    out.push(FigureSpec {
+        id: "ext_scale".into(),
+        title: "EXT LogReg/MNIST: cohort scale x straggler model, async \
+                (s=1, tau=2, r=64, b=16)"
+            .into(),
+        configs,
+    });
     out
 }
 
@@ -461,11 +497,11 @@ mod tests {
     #[test]
     fn all_figure_ids_unique_and_configs_valid() {
         let figs = all_figures();
-        assert_eq!(figs.len(), 25); // 4 + 4 + 4*3 + 5 extensions
+        assert_eq!(figs.len(), 26); // 4 + 4 + 4*3 + 6 extensions
         let mut ids: Vec<_> = figs.iter().map(|f| f.id.clone()).collect();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), 25);
+        assert_eq!(ids.len(), 26);
         for f in &figs {
             assert!(!f.configs.is_empty(), "{} empty", f.id);
             for c in &f.configs {

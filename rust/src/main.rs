@@ -34,6 +34,13 @@ USAGE:
                [--staleness-rule uniform|polynomial] [--staleness-a A]
                [--down-s S] [--down-topk PERMILLE] [--down-rand-k PERMILLE]
                [--down-adaptive-bits B] [--down-elias] [--down-ef]
+               [--straggler shifted_exp|pareto] [--pareto-alpha A]
+               [--dataset-cap N]
+  (--straggler picks the compute-time straggler model; pareto is the
+   heavy-tail variant, mean-matched to shifted_exp, tail index
+   --pareto-alpha, default 1.5; --dataset-cap N bounds the generated
+   dataset at N samples — i.i.d. shards wrap around it, which is how
+   million-client cohorts run in O(r + dataset) memory)
   (codec pick: --topk > --rand-k > --adaptive-bits > --s; --s 0 = identity;
    --elias selects Elias coding, and for --rand-k the explicit-index mode;
    --ef wraps the picked codec in per-node error feedback)
@@ -333,6 +340,15 @@ fn main() -> anyhow::Result<()> {
                         "--staleness-rule must be uniform|polynomial, got {other}"
                     ),
                 };
+                let straggler = match flags.get_or("straggler", "shifted_exp").as_str() {
+                    "shifted_exp" | "exp" => fedpaq::simtime::StragglerDist::ShiftedExp,
+                    "pareto" => fedpaq::simtime::StragglerDist::Pareto {
+                        alpha: flags.parse_num("pareto-alpha", 1.5f64)?,
+                    },
+                    other => anyhow::bail!(
+                        "--straggler must be shifted_exp|pareto, got {other}"
+                    ),
+                };
                 let mut cfg = ExperimentConfig {
                     name: String::new(),
                     model,
@@ -360,6 +376,8 @@ fn main() -> anyhow::Result<()> {
                     staleness_rule,
                     agg_shards: 1,
                     down_codec,
+                    straggler,
+                    dataset_cap: flags.parse_num("dataset-cap", 0usize)?,
                 }
                 .validated()?;
                 let async_label = if cfg.async_rounds {

@@ -223,7 +223,10 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
                     None => None,
                 };
                 reference = None;
-                let n_samples = cfg.n_nodes * cfg.per_node;
+                // Must agree with the sim engine's `build_world` on the
+                // (possibly capped) dataset size — cross-transport
+                // bit-equality depends on it.
+                let n_samples = cfg.n_samples();
                 let data = FederatedDataset::generate(cfg.dataset, cfg.seed, n_samples);
                 let partition =
                     Partition::build(cfg.partition, &data, cfg.n_nodes, cfg.per_node, cfg.seed);

@@ -27,7 +27,7 @@
 //!   stream, travels inside [`PlannerState`]); the table exists so a
 //!   future stateful stream has a format slot without a version bump.
 //!
-//! ## Binary layout (format version 2)
+//! ## Binary layout (format version 3)
 //!
 //! Little-endian, written with the same hand-rolled `Buf`/`Cursor`
 //! primitives as the wire protocol ([`crate::net::proto`]):
@@ -43,11 +43,22 @@
 //! · transport tag (0 = none, 1 = async planner + jobs)
 //! ```
 //!
-//! Version 2 (this layout) added the bidirectional-compression fields:
+//! Version 2 added the bidirectional-compression fields:
 //! `total_bits_down`, the `bits_down` column inside curve points and
 //! round stats, and the four downlink-state sections. v1 checkpoints
 //! are rejected with an explicit version error — they predate the
 //! downlink seam and cannot resume a bidirectional run faithfully.
+//!
+//! Version 3 (this layout) changed no bytes on the wire, but was bumped
+//! because two *semantic* contracts moved underneath the format: node
+//! sampling switched from partial Fisher–Yates to Floyd's O(r) algorithm
+//! (same distribution, different concrete cohorts per seed — a v2
+//! checkpoint would resume onto different sampled sets than the run that
+//! wrote it), and the config grew the `straggler`/`dataset_cap` scale
+//! knobs (which feed `config_hash`). In-flight jobs now also serialize
+//! in canonical event-queue order (`(finish, version, slot, node)`)
+//! rather than arrival-vector order, so checkpoint bytes are independent
+//! of the queue's internal layout.
 //!
 //! Decoding rejects wrong magic, unknown format versions, truncation
 //! (every read is bounds-checked) and trailing bytes — the same
@@ -70,7 +81,7 @@ use std::path::Path;
 
 /// Current checkpoint format version (bumped on layout changes; decode
 /// rejects versions it does not know).
-pub const CHECKPOINT_VERSION: u32 = 2;
+pub const CHECKPOINT_VERSION: u32 = 3;
 
 const MAGIC: &[u8; 4] = b"FPQC";
 

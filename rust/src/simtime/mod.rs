@@ -12,8 +12,52 @@
 //! The ratio `C_comm/C_comp = (p·F/BW) / (shift + 1/scale)` calibrates how
 //! communication-bound the deployment is (paper: 100 for logreg/MNIST,
 //! 1000 for the CIFAR networks).
+//!
+//! Two scale-oriented pieces live here as well:
+//!
+//! * [`StragglerDist`] makes the *random* component of a node's compute
+//!   time pluggable (`shifted_exp` is the paper's model; `pareto` is a
+//!   mean-matched heavy tail for million-client heterogeneity studies).
+//!   Draws stay pure functions of `(seed, node, round)` — no per-node
+//!   state exists, which is half of the simulator's O(active) memory
+//!   contract.
+//! * [`EventQueue`] is the indexed min-queue `AsyncSim` pops arrivals
+//!   from: O(log in-flight) per event instead of the historical linear
+//!   scan, same total order ([`EventKey`]) bit for bit.
 
 use crate::util::rng::Rng;
+
+/// The distribution of the random component of a node's compute time.
+///
+/// Every variant consumes the **same single uniform draw** from the
+/// `(seed, [4, node, round])` stream, so switching distributions never
+/// shifts any other RNG coordinate, and `ShiftedExp` remains
+/// bit-identical to the historical draws.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum StragglerDist {
+    /// The paper's §5 model: `work·shift + Exp(mean work/scale)`.
+    #[default]
+    ShiftedExp,
+    /// Heavy-tailed Pareto with tail index `alpha > 1` (finite mean),
+    /// mean-matched to the exponential component via
+    /// `x_m = work/scale · (alpha−1)/alpha` — average cost is unchanged,
+    /// only tail mass moves, so rounds-vs-straggler-model sweeps compare
+    /// like with like.
+    Pareto {
+        /// Tail index; smaller ⇒ heavier tail. Must be finite and > 1.
+        alpha: f64,
+    },
+}
+
+impl StragglerDist {
+    /// Short stable name (config JSON tag / figure labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerDist::ShiftedExp => "shifted_exp",
+            StragglerDist::Pareto { .. } => "pareto",
+        }
+    }
+}
 
 /// Cost-model parameters (paper §5 "Communication/Computation time").
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -26,6 +70,8 @@ pub struct CostModel {
     pub bandwidth: f64,
     /// RNG seed for the straggler draws.
     pub seed: u64,
+    /// Distribution of the random compute-time component.
+    pub dist: StragglerDist,
 }
 
 impl CostModel {
@@ -51,18 +97,33 @@ impl CostModel {
         let scale = 2.0;
         let c_comp = shift + 1.0 / scale; // = 1
         let bandwidth = (p as u64 * crate::FLOAT_BITS) as f64 / (ratio * c_comp);
-        CostModel { shift, scale, bandwidth, seed }
+        CostModel { shift, scale, bandwidth, seed, dist: StragglerDist::ShiftedExp }
+    }
+
+    /// Replace the straggler distribution, keeping calibration and seed.
+    pub fn with_dist(self, dist: StragglerDist) -> Self {
+        CostModel { dist, ..self }
     }
 
     /// Computation time for node `node` in round `k`: `τ·B` gradients of
-    /// shifted-exponential cost. Deterministic in `(seed, node, round)`.
+    /// `shift`-floored random cost under [`CostModel::dist`].
+    /// Deterministic in `(seed, node, round)` — a pure function, so no
+    /// per-node state is ever resident.
     pub fn node_compute_time(&self, node: usize, round: usize, tau: usize, batch: usize) -> f64 {
         let work = (tau * batch) as f64;
         let mut rng = self.rng_for(node, round);
         let u: f64 = (1.0 - rng.gen_f64()).max(1e-12); // in (0, 1]
-        // Exp with mean work/scale.
-        let exp = -u.ln() * work / self.scale;
-        work * self.shift + exp
+        let random = match self.dist {
+            // Exp with mean work/scale (inverse-CDF on the shared draw).
+            StragglerDist::ShiftedExp => -u.ln() * work / self.scale,
+            // Pareto(x_m, alpha) with x_m mean-matched to the Exp branch:
+            // E = x_m·alpha/(alpha−1) = work/scale.
+            StragglerDist::Pareto { alpha } => {
+                let xm = work / self.scale * (alpha - 1.0) / alpha;
+                xm * u.powf(-1.0 / alpha)
+            }
+        };
+        work * self.shift + random
     }
 
     /// Round computation time = max over the sampled nodes (stragglers).
@@ -104,6 +165,129 @@ impl VirtualClock {
         assert!(dt >= 0.0 && dt.is_finite(), "bad time step {dt}");
         self.now += dt;
         self.now
+    }
+}
+
+/// Total order on simulated arrivals: earliest `finish` first
+/// (`f64::total_cmp`), exact-time ties broken by `(version, slot, node)`
+/// — the same order the historical O(in-flight) linear scan in
+/// `AsyncSim::pop_next` produced, so the heap swap moves no event by
+/// construction (pinned against a scan reference by
+/// `rust/tests/prop_event_queue.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct EventKey {
+    /// Virtual arrival time.
+    pub finish: f64,
+    /// Model version the job was dispatched at.
+    pub version: usize,
+    /// The planner's canonical batch position (deterministic tie-break).
+    pub slot: usize,
+    /// Node id (final tie-break; unique per in-flight job).
+    pub node: usize,
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for EventKey {}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.finish
+            .total_cmp(&other.finish)
+            .then(self.version.cmp(&other.version))
+            .then(self.slot.cmp(&other.slot))
+            .then(self.node.cmp(&other.node))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Indexed min-queue over [`EventKey`]: `pop` returns the globally next
+/// arrival in O(log k) for k queued events, replacing an O(k)-per-pop
+/// linear scan. Entries compare by key alone; `AsyncSim` keys are unique
+/// (one in-flight job per `(node, version)`), and entries with fully
+/// equal keys pop in an unspecified order among themselves.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<Entry<T>>>,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    key: EventKey,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: std::collections::BinaryHeap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Queue `item` for arrival at `key`.
+    pub fn push(&mut self, key: EventKey, item: T) {
+        self.heap.push(std::cmp::Reverse(Entry { key, item }));
+    }
+
+    /// Remove and return the earliest entry in [`EventKey`] order.
+    pub fn pop(&mut self) -> Option<(EventKey, T)> {
+        self.heap.pop().map(|std::cmp::Reverse(e)| (e.key, e.item))
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// Key-sorted snapshot of every queued entry (O(k log k)) — the
+    /// canonical order for serialization, independent of the heap's
+    /// internal layout (checkpoint bytes must not depend on insertion
+    /// history).
+    pub fn sorted(&self) -> Vec<(EventKey, &T)> {
+        let mut v: Vec<_> =
+            self.heap.iter().map(|std::cmp::Reverse(e)| (e.key, &e.item)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 }
 
@@ -152,9 +336,78 @@ mod tests {
 
     #[test]
     fn comm_time_linear_in_bits() {
-        let cm = CostModel { shift: 0.5, scale: 2.0, bandwidth: 1000.0, seed: 0 };
+        let cm = CostModel {
+            shift: 0.5,
+            scale: 2.0,
+            bandwidth: 1000.0,
+            seed: 0,
+            dist: StragglerDist::ShiftedExp,
+        };
         assert_eq!(cm.round_comm_time(&[500, 500]), 1.0);
         assert_eq!(cm.round_comm_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn pareto_is_mean_matched_and_heavier_tailed() {
+        let exp = CostModel::with_ratio(100.0, 785, 5);
+        let par = exp.with_dist(StragglerDist::Pareto { alpha: 1.5 });
+        let (tau, b) = (5usize, 10usize);
+        let floor = (tau * b) as f64 * par.shift;
+        let n = 20_000;
+        let (mut acc, mut p99_exp, mut p99_par) = (0.0, Vec::new(), Vec::new());
+        for round in 0..n {
+            let t = par.node_compute_time(0, round, tau, b);
+            assert!(t >= floor, "Pareto draw under the shift floor");
+            acc += t;
+            p99_par.push(t);
+            p99_exp.push(exp.node_compute_time(0, round, tau, b));
+        }
+        // Mean-matched to the shifted-exp model. alpha=1.5 has infinite
+        // variance, so the sample mean converges slowly — assert a wide
+        // sanity band, not a tight tolerance (the draws are seeded, but a
+        // tight band would encode one lucky sample, not the property).
+        let mean = acc / n as f64;
+        let expect = (tau * b) as f64 * (par.shift + 1.0 / par.scale);
+        assert!(mean > 0.6 * expect && mean < 2.0 * expect, "mean {mean} vs {expect}");
+        // ... but with far more tail mass: the p99.9 straggler is worse.
+        let q = |v: &mut Vec<f64>| {
+            v.sort_by(f64::total_cmp);
+            v[(n as f64 * 0.999) as usize]
+        };
+        assert!(q(&mut p99_par) > 1.5 * q(&mut p99_exp), "Pareto tail not heavier");
+        // Deterministic in (seed, node, round), like every cost draw.
+        assert_eq!(
+            par.node_compute_time(3, 7, tau, b).to_bits(),
+            par.node_compute_time(3, 7, tau, b).to_bits()
+        );
+    }
+
+    #[test]
+    fn event_queue_pops_in_key_order_and_sorts_canonically() {
+        let key = |finish, version, slot, node| EventKey { finish, version, slot, node };
+        let mut q = EventQueue::new();
+        for (i, k) in [
+            key(2.0, 0, 1, 4),
+            key(1.0, 1, 0, 2),
+            key(1.0, 0, 3, 7), // same finish, earlier version
+            key(1.0, 0, 3, 5), // full tie down to node
+            key(0.5, 9, 9, 9),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            q.push(k, i);
+        }
+        assert_eq!(q.len(), 5);
+        // sorted() is a non-destructive view in the same total order.
+        let order: Vec<usize> = q.sorted().iter().map(|&(_, &i)| i).collect();
+        assert_eq!(order, vec![4, 3, 2, 1, 0]);
+        let mut popped = Vec::new();
+        while let Some((_, i)) = q.pop() {
+            popped.push(i);
+        }
+        assert_eq!(popped, order);
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -33,6 +33,8 @@ fn base_cfg() -> ExperimentConfig {
         staleness_rule: StalenessRule::Uniform,
         agg_shards: 1,
         down_codec: None,
+        straggler: Default::default(),
+        dataset_cap: 0,
     }
 }
 

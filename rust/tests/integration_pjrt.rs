@@ -221,6 +221,8 @@ fn pjrt_fedpaq_run_decreases_loss_and_matches_shape() {
         staleness_rule: Default::default(),
         agg_shards: 1,
         down_codec: None,
+        straggler: Default::default(),
+        dataset_cap: 0,
     };
     let res = runner.run_config(cfg, fedpaq::ops::RunControl::default()).unwrap();
     let first = res.curve.points.first().unwrap().loss;
@@ -254,6 +256,8 @@ fn pjrt_and_rust_engines_agree_on_full_logreg_run() {
         staleness_rule: Default::default(),
         agg_shards: 1,
         down_codec: None,
+        straggler: Default::default(),
+        dataset_cap: 0,
     };
     let client = client();
     let mut pjrt = PjrtEngine::load(&client, &dir, "logreg").unwrap();

@@ -171,6 +171,8 @@ fn base_cfg() -> ExperimentConfig {
         staleness_rule: StalenessRule::Uniform,
         agg_shards: 1,
         down_codec: None,
+        straggler: Default::default(),
+        dataset_cap: 0,
     }
 }
 
@@ -293,6 +295,61 @@ fn downlink_kill_resume_is_bit_identical_with_reference_state() {
         ..base_cfg()
     };
     kill_resume_roundtrip(&cfg, 5, "async-downlink.ck");
+}
+
+#[test]
+fn scale_kill_resume_is_bit_identical_and_exports_jobs_canonically() {
+    // 10^5-client cohort in O(r + dataset) memory: shards wrap a
+    // 2048-sample capped dataset, sampling is Floyd O(r), and the
+    // in-flight set is r = 32 jobs however large the cohort. The same
+    // kill/resume flow as the small configs must hold — and the
+    // checkpoint must serialize its in-flight jobs in the canonical
+    // event-queue order (sorted by `(finish, version, slot, node)`),
+    // independent of the heap's internal layout, or checkpoint bytes
+    // would depend on insertion history.
+    let cfg = ExperimentConfig {
+        name: "ops-ck-scale".into(),
+        n_nodes: 100_000,
+        per_node: 32,
+        r: 32,
+        tau: 1,
+        t_total: 10, // 10 commits
+        async_rounds: true,
+        buffer_size: 8,
+        max_staleness: 8,
+        straggler: fedpaq::simtime::StragglerDist::Pareto { alpha: 1.5 },
+        dataset_cap: 2048,
+        ..base_cfg()
+    };
+
+    let full = run_ctrl(&cfg, RunControl::default());
+    let path = temp_ck("scale.ck");
+    let stopped = run_ctrl(
+        &cfg,
+        RunControl {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: 0,
+            stop_after: Some(4),
+            ..Default::default()
+        },
+    );
+    assert_eq!(stopped.rounds.len(), 4);
+
+    let ck = Checkpoint::load(&path).unwrap();
+    let Some(TransportState::Async { jobs, .. }) = &ck.transport else {
+        panic!("async checkpoint must carry transport state");
+    };
+    // b < r ⇒ the snapshot carries in-flight stragglers, strictly
+    // ordered by the event-queue key (keys are unique in-flight).
+    assert_eq!(jobs.len(), cfg.r - cfg.buffer_size);
+    for w in jobs.windows(2) {
+        let key = |j: &JobState| (j.finish.to_bits(), j.version, j.slot, j.node);
+        assert!(key(&w[0]) < key(&w[1]), "jobs not in canonical order");
+    }
+
+    let resumed = run_ctrl(&cfg, RunControl { resume: Some(ck), ..Default::default() });
+    assert_identical(&full, &resumed);
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

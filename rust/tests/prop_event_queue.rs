@@ -1,0 +1,131 @@
+//! Property tests pinning the [`EventQueue`] heap to the historical
+//! linear-scan event selection it replaced (driver: `fedpaq::util::prop`
+//! — proptest is unavailable offline).
+//!
+//! The `AsyncSim` discrete-event loop popped the minimum
+//! `(finish, version, slot, node)` job by scanning the in-flight vector;
+//! the indexed queue must pop in *bit-identical* order — including under
+//! exact `finish`-time ties, which the random job sets here manufacture
+//! deliberately by drawing times from a coarse grid. Any divergence
+//! would silently change commit contents and break every determinism
+//! byte-diff leg downstream.
+
+use fedpaq::simtime::{EventKey, EventQueue};
+use fedpaq::util::prop::check;
+use fedpaq::util::rng::Rng;
+
+/// The reference implementation: the pre-heap linear scan, verbatim
+/// semantics — minimum by the `(finish, version, slot, node)` total
+/// order, removed via `swap_remove`.
+fn scan_pop(jobs: &mut Vec<(EventKey, u64)>) -> Option<(EventKey, u64)> {
+    let idx = jobs
+        .iter()
+        .enumerate()
+        .min_by(|(_, (a, _)), (_, (b, _))| {
+            a.finish
+                .total_cmp(&b.finish)
+                .then(a.version.cmp(&b.version))
+                .then(a.slot.cmp(&b.slot))
+                .then(a.node.cmp(&b.node))
+        })
+        .map(|(i, _)| i)?;
+    Some(jobs.swap_remove(idx))
+}
+
+/// A random key drawing `finish` from a coarse grid so exact ties are
+/// common, exercising the version/slot/node tie-break chain.
+fn random_key(rng: &mut Rng) -> EventKey {
+    EventKey {
+        finish: rng.gen_range(0, 8) as f64 * 0.25,
+        version: rng.gen_range(0, 4),
+        slot: rng.gen_range(0, 6),
+        node: rng.gen_range(0, 1000),
+    }
+}
+
+#[test]
+fn prop_heap_pop_order_matches_linear_scan() {
+    check(300, 0xfed_e0, |rng| {
+        let n = rng.gen_range(1, 120);
+        let mut queue = EventQueue::new();
+        let mut reference: Vec<(EventKey, u64)> = Vec::new();
+        for i in 0..n {
+            let key = random_key(rng);
+            queue.push(key, i as u64);
+            reference.push((key, i as u64));
+        }
+        assert_eq!(queue.len(), reference.len());
+        while let Some((want_key, want_item)) = scan_pop(&mut reference) {
+            let (got_key, got_item) = queue.pop().expect("heap drained early");
+            // Bit-identical key, same payload — f64 compared via to_bits
+            // so -0.0/0.0 or NaN drift can never slip through.
+            assert_eq!(got_key.finish.to_bits(), want_key.finish.to_bits());
+            assert_eq!(
+                (got_key.version, got_key.slot, got_key.node),
+                (want_key.version, want_key.slot, want_key.node)
+            );
+            assert_eq!(got_item, want_item);
+        }
+        assert!(queue.pop().is_none());
+        assert!(queue.is_empty());
+    });
+}
+
+#[test]
+fn prop_heap_matches_scan_under_interleaved_push_pop() {
+    // The sim interleaves dispatches (pushes) with arrivals (pops) inside
+    // one round; order equivalence must hold at every intermediate state,
+    // not just for a bulk load.
+    check(200, 0xfed_e1, |rng| {
+        let ops = rng.gen_range(1, 200);
+        let mut queue = EventQueue::new();
+        let mut reference: Vec<(EventKey, u64)> = Vec::new();
+        let mut next_item = 0u64;
+        for _ in 0..ops {
+            if reference.is_empty() || rng.gen_range(0, 3) > 0 {
+                let key = random_key(rng);
+                queue.push(key, next_item);
+                reference.push((key, next_item));
+                next_item += 1;
+            } else {
+                let want = scan_pop(&mut reference).unwrap();
+                let got = queue.pop().unwrap();
+                assert_eq!(got.0.finish.to_bits(), want.0.finish.to_bits());
+                assert_eq!(
+                    (got.0.version, got.0.slot, got.0.node),
+                    (want.0.version, want.0.slot, want.0.node)
+                );
+                assert_eq!(got.1, want.1);
+            }
+            assert_eq!(queue.len(), reference.len());
+        }
+    });
+}
+
+#[test]
+fn prop_sorted_is_exactly_the_pop_order() {
+    // `sorted()` is the canonical checkpoint serialization order; it must
+    // agree with what a full drain would produce, without draining.
+    check(150, 0xfed_e2, |rng| {
+        let n = rng.gen_range(0, 80);
+        let mut queue = EventQueue::new();
+        let mut reference: Vec<(EventKey, u64)> = Vec::new();
+        for i in 0..n {
+            let key = random_key(rng);
+            queue.push(key, i as u64);
+            reference.push((key, i as u64));
+        }
+        let snapshot: Vec<(EventKey, u64)> =
+            queue.sorted().into_iter().map(|(k, v)| (k, *v)).collect();
+        let mut drained = Vec::new();
+        while let Some(want) = scan_pop(&mut reference) {
+            drained.push(want);
+        }
+        assert_eq!(snapshot.len(), drained.len());
+        for ((sk, sv), (dk, dv)) in snapshot.iter().zip(&drained) {
+            assert_eq!(sk.finish.to_bits(), dk.finish.to_bits());
+            assert_eq!((sk.version, sk.slot, sk.node), (dk.version, dk.slot, dk.node));
+            assert_eq!(sv, dv);
+        }
+    });
+}

@@ -129,11 +129,11 @@ fn prop_partition_is_exact_cover() {
         let per_node = rng.gen_range(1, 60);
         let extra = rng.gen_range(0, 50);
         let n_samples = n_nodes * per_node + extra;
-        let part = Partition::iid(n_samples, n_nodes, per_node, rng.next_u64());
+        let part = Partition::iid(n_samples, n_nodes, per_node);
         let mut seen = vec![false; n_samples];
         for node in 0..n_nodes {
             assert_eq!(part.shard(node).len(), per_node);
-            for &i in part.shard(node) {
+            for i in part.shard(node).iter() {
                 assert!(!seen[i], "sample {i} in two shards");
                 seen[i] = true;
             }

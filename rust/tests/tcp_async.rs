@@ -48,6 +48,8 @@ fn cluster_cfg(seed: u64) -> ExperimentConfig {
         staleness_rule: Default::default(),
         agg_shards: 1,
         down_codec: None,
+        straggler: Default::default(),
+        dataset_cap: 0,
     }
 }
 

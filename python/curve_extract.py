@@ -8,49 +8,64 @@ telemetry, and the exact final parameters — is a deterministic function
 of `(config, seed)` for the barrier protocol and for the degenerate
 buffered-async protocol (`buffer_size == r`, `max_staleness == 0`).
 
-The CI async-TCP leg byte-diffs this extraction between repeat cluster
-runs and against the in-process simulation's dump of the same config.
+The CI async-TCP and tree-topology legs byte-diff this extraction
+between repeat cluster runs and against the in-process simulation's
+dump of the same config.
 
-Usage: curve_extract.py RUN_RESULT.json   (extraction on stdout)
+`bits_edge_to_root` (the second hop of the split uplink accounting on
+aggregation trees) is included by default; pass `--no-edge-bits` to
+omit those keys when diffing a tree run against a flat run of the same
+config — the flat side reports 0 while a relay tree charges the
+forwarded frames to both hops, so the key differs by construction even
+though every model bit matches.
+
+Usage: curve_extract.py [--no-edge-bits] RUN_RESULT.json
+       (extraction on stdout)
 """
 
 import json
 import sys
 
+POINT_KEYS = ("round", "iterations", "bits_up", "bits_down",
+              "bits_edge_to_root", "loss")
+ROUND_KEYS = ("round", "bits_up", "bits_down", "bits_edge_to_root",
+              "dropped", "staleness_max", "staleness_mean")
 
-def extract(doc):
-    return {
+
+def extract(doc, edge_bits=True):
+    def keep(k):
+        return edge_bits or k != "bits_edge_to_root"
+
+    out = {
         "label": doc["curve"]["label"],
         "points": [
-            {k: p[k] for k in ("round", "iterations", "bits_up", "bits_down", "loss")}
+            {k: p[k] for k in POINT_KEYS if keep(k)}
             for p in doc["curve"]["points"]
         ],
         "rounds": [
-            {
-                k: r[k]
-                for k in (
-                    "round",
-                    "bits_up",
-                    "bits_down",
-                    "dropped",
-                    "staleness_max",
-                    "staleness_mean",
-                )
-            }
+            {k: r[k] for k in ROUND_KEYS if keep(k)}
             for r in doc["rounds"]
         ],
         "total_bits": doc["total_bits"],
         "total_bits_down": doc["total_bits_down"],
         "params": doc["params"],
     }
+    if edge_bits:
+        out["total_bits_edge_to_root"] = doc["total_bits_edge_to_root"]
+    return out
 
 
 def main():
-    if len(sys.argv) != 2:
+    argv = sys.argv[1:]
+    edge_bits = True
+    if argv and argv[0] == "--no-edge-bits":
+        edge_bits = False
+        argv = argv[1:]
+    if len(argv) != 1:
         sys.exit(__doc__.strip())
-    with open(sys.argv[1]) as f:
+    with open(argv[0]) as f:
         doc = json.load(f)
-    json.dump(extract(doc), sys.stdout, indent=1, sort_keys=True)
+    json.dump(extract(doc, edge_bits), sys.stdout, indent=1, sort_keys=True)
     sys.stdout.write("\n")
 
 

@@ -3,9 +3,10 @@
 plus N workers, wait for every process, collect the leader's --out-json.
 
 This is the one orchestration helper behind every TCP leg of the CI
-determinism job (plain loopback runs, leader kill/resume, worker churn) —
-it replaces the shell `run_cluster`/`run_leader` functions the job had
-grown five near-copies of. The protocol it automates:
+determinism job (plain loopback runs, leader kill/resume, worker churn,
+aggregation trees) — it replaces the shell `run_cluster`/`run_leader`
+functions the job had grown five near-copies of. The protocol it
+automates:
 
 1. launch `fedpaq leader --bind 127.0.0.1:0` with stderr to a log file
    (truncated first, so a second invocation never scrapes a stale
@@ -16,6 +17,18 @@ grown five near-copies of. The protocol it automates:
 4. wait for every process individually — any non-zero exit dumps the
    leader log and fails the run.
 
+With `--edge-leaders N` the cluster is a two-level aggregation tree:
+the leader runs as the tree root, N `fedpaq edge` processes dial it
+(each scraped for its own `edge: listening on <addr>` line), and the
+workers split evenly across the edges — worker i dials edge i // K,
+where K = workers / N (which must divide evenly). Tree-mode leader
+flags (`--tree-summed`) go through `--leader-args` as usual.
+
+With `--run-dir DIR` every process keeps its own stderr log under DIR
+(leader.log, edge0.log, worker0.log, ...) instead of sharing the
+terminal — the CI determinism job uploads that directory as a failure
+artifact, so a red cluster leg ships the logs that explain it.
+
 Examples:
 
     python3 python/run_cluster.py --fedpaq target/release/fedpaq \\
@@ -24,25 +37,29 @@ Examples:
         --leader-args "--checkpoint /tmp/tcp.ck --stop-after 3"
     python3 python/run_cluster.py ... --workers 2 \\
         --worker-args "--max-jobs 4"   # worker 0 only; worker 1 plain
+    python3 python/run_cluster.py ... --workers 4 --edge-leaders 2 \\
+        --run-dir /tmp/tree-run       # 2 edges, 2 workers each
 """
 
 import argparse
+import os
 import shlex
 import subprocess
 import sys
 import time
 
 ADDR_PREFIX = "leader: listening on "
+EDGE_ADDR_PREFIX = "edge: listening on "
 
 
-def scrape_addr(log_path, timeout):
+def scrape_addr(log_path, timeout, prefix=ADDR_PREFIX):
     deadline = time.monotonic() + timeout
     while time.monotonic() < deadline:
         try:
             with open(log_path) as f:
                 for line in f:
-                    if line.startswith(ADDR_PREFIX):
-                        return line[len(ADDR_PREFIX):].strip()
+                    if line.startswith(prefix):
+                        return line[len(prefix):].strip()
         except OSError:
             pass
         time.sleep(0.1)
@@ -54,7 +71,7 @@ def dump_log(log_path):
         with open(log_path) as f:
             sys.stderr.write(f.read())
     except OSError as e:
-        print(f"(no leader log: {e})", file=sys.stderr)
+        print(f"(no log {log_path}: {e})", file=sys.stderr)
 
 
 def main():
@@ -65,28 +82,80 @@ def main():
                     help="experiment config JSON for the leader")
     ap.add_argument("--workers", type=int, default=2,
                     help="number of worker processes (default 2)")
+    ap.add_argument("--edge-leaders", type=int, default=0,
+                    help="run a two-level tree with this many edge-leader "
+                    "processes; workers split evenly across them "
+                    "(--workers must be a multiple)")
     ap.add_argument("--out-json", required=True,
                     help="leader RunResult output path")
     ap.add_argument("--leader-args", default="",
                     help="extra leader args, one shell-quoted string "
-                    "(e.g. \"--checkpoint /tmp/x.ck --stop-after 3\")")
+                    "(e.g. \"--checkpoint /tmp/x.ck --stop-after 3\" or "
+                    "\"--tree-summed\")")
     ap.add_argument("--worker-args", action="append", default=[],
                     help="extra args for one worker (repeatable; i-th flag "
                     "goes to the i-th worker, later workers get none)")
+    ap.add_argument("--edge-args", action="append", default=[],
+                    help="extra args for one edge leader (repeatable, like "
+                    "--worker-args; e.g. \"--max-partials 3\")")
+    ap.add_argument("--run-dir", default=None,
+                    help="keep per-process stderr logs under this directory "
+                    "(leader.log, edge0.log, worker0.log, ...) — what CI "
+                    "uploads as the failure artifact")
     ap.add_argument("--leader-log", default=None,
-                    help="leader stderr log path "
-                    "(default: <out-json>.leader.log)")
+                    help="leader stderr log path (default: "
+                    "<run-dir>/leader.log or <out-json>.leader.log)")
     ap.add_argument("--listen-timeout", type=float, default=10.0,
-                    help="seconds to wait for the leader's listen line")
+                    help="seconds to wait for each listen line")
     args = ap.parse_args()
 
-    log_path = args.leader_log or args.out_json + ".leader.log"
-    leader_cmd = [
-        args.fedpaq, "leader", "--config", args.config,
-        "--bind", "127.0.0.1:0", "--workers", str(args.workers),
-    ] + shlex.split(args.leader_args) + ["--out-json", args.out_json]
+    n_edges = args.edge_leaders
+    if n_edges:
+        if args.workers % n_edges:
+            print(f"--workers {args.workers} must be a multiple of "
+                  f"--edge-leaders {n_edges}", file=sys.stderr)
+            return 2
+        cohort = args.workers // n_edges
 
-    procs = []  # (name, Popen)
+    if args.run_dir:
+        os.makedirs(args.run_dir, exist_ok=True)
+
+    def log_file(name, default):
+        if args.run_dir:
+            return os.path.join(args.run_dir, name + ".log")
+        return default
+
+    log_path = args.leader_log or log_file("leader", args.out_json + ".leader.log")
+    leader_cmd = [args.fedpaq, "leader", "--config", args.config,
+                  "--bind", "127.0.0.1:0"]
+    if n_edges:
+        leader_cmd += ["--edge-leaders", str(n_edges)]
+    else:
+        leader_cmd += ["--workers", str(args.workers)]
+    leader_cmd += shlex.split(args.leader_args) + ["--out-json", args.out_json]
+
+    procs = []      # (name, Popen)
+    open_logs = []  # file handles to close on exit
+    all_logs = [log_path]
+
+    def spawn(name, cmd, logname=None):
+        if logname is not None:
+            path = log_file(name, logname)
+            all_logs.append(path)
+            log = open(path, "w")
+            open_logs.append(log)
+            procs.append((name, subprocess.Popen(cmd, stderr=log)))
+            return path
+        if args.run_dir:
+            path = log_file(name, None)
+            all_logs.append(path)
+            log = open(path, "w")
+            open_logs.append(log)
+            procs.append((name, subprocess.Popen(cmd, stderr=log)))
+            return path
+        procs.append((name, subprocess.Popen(cmd)))
+        return None
+
     try:
         with open(log_path, "w") as log:
             leader = subprocess.Popen(leader_cmd, stderr=log)
@@ -98,13 +167,37 @@ def main():
             dump_log(log_path)
             return 1
 
+        # Workers dial the leader directly on a flat run, or their pinned
+        # edge on a tree run (worker i -> edge i // cohort).
+        worker_targets = [addr] * args.workers
+        if n_edges:
+            edge_extras = args.edge_args + [""] * (n_edges - len(args.edge_args))
+            edge_logs = []
+            for e in range(n_edges):
+                cmd = [args.fedpaq, "edge", "--connect", addr,
+                       "--bind", "127.0.0.1:0", "--workers", str(cohort),
+                       "--retry-secs", "30"] + shlex.split(edge_extras[e])
+                # Edge logs are mandatory even without --run-dir: the
+                # edge's listen line is how its workers find it.
+                edge_logs.append(spawn(f"edge{e}", cmd,
+                                       logname=f"{args.out_json}.edge{e}.log"))
+            for e, elog in enumerate(edge_logs):
+                eaddr = scrape_addr(elog, args.listen_timeout, EDGE_ADDR_PREFIX)
+                if eaddr is None:
+                    print(f"edge{e} never started listening", file=sys.stderr)
+                    for p in all_logs:
+                        dump_log(p)
+                    return 1
+                for i in range(e * cohort, (e + 1) * cohort):
+                    worker_targets[i] = eaddr
+
         extras = args.worker_args + [""] * (args.workers - len(args.worker_args))
         for i in range(args.workers):
             extra = shlex.split(extras[i])
-            cmd = [args.fedpaq, "worker", "--connect", addr]
+            cmd = [args.fedpaq, "worker", "--connect", worker_targets[i]]
             if "--retry-secs" not in extra:
                 cmd += ["--retry-secs", "30"]
-            procs.append((f"worker{i}", subprocess.Popen(cmd + extra)))
+            spawn(f"worker{i}", cmd + extra)
 
         ok = True
         for name, proc in procs:
@@ -113,13 +206,17 @@ def main():
                 print(f"{name} exited with {rc}", file=sys.stderr)
                 ok = False
         if not ok:
-            dump_log(log_path)
+            for p in all_logs:
+                print(f"--- {p} ---", file=sys.stderr)
+                dump_log(p)
             return 1
         return 0
     finally:
         for _, proc in procs:
             if proc.poll() is None:
                 proc.terminate()
+        for log in open_logs:
+            log.close()
 
 
 if __name__ == "__main__":

@@ -259,10 +259,50 @@ fn sim_throughput() {
     g.finish();
 }
 
+/// Edge-leader partial aggregation: sum an 8-upload cohort over a
+/// 2^20-parameter model and re-encode the result through the same codec
+/// ([`fedpaq::net::partial_reencode`] — the summed-mode tree hot path),
+/// per codec family. Emitted as `BENCH_tree.json` and gated by CI
+/// against the committed floors in
+/// `rust/benches/baseline/BENCH_tree.json`: the edge re-encode sits on
+/// every commit's critical path in a summed tree, so a family that
+/// silently slows down fails the bench job by name.
+fn tree_partial() {
+    let mut g = Group::new("tree");
+    let p: usize = 1 << 20;
+    let cohort = 8usize;
+    let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.37).sin() * 0.01).collect();
+    for (label, spec) in [
+        ("identity", CodecSpec::Identity),
+        ("qsgd1", CodecSpec::qsgd(1)),
+        ("qsgd_s7_elias", CodecSpec::Qsgd { s: 7, coding: Coding::Elias }),
+        ("topk_100", CodecSpec::top_k(100)),
+        ("randk_100_seeded", CodecSpec::rand_k(100)),
+        ("adaptive_b4", CodecSpec::adaptive(4)),
+    ] {
+        let q = spec.build().unwrap();
+        let mut rng = Rng::seed_from_u64(5);
+        let encs: Vec<Encoded> = (0..cohort).map(|_| q.encode(&x, &mut rng)).collect();
+        let mut re_rng = Rng::seed_from_u64(6);
+        g.bench_elems(
+            &format!("partial_reencode_p1m_c8/{label}"),
+            (cohort * p) as u64,
+            || {
+                let out =
+                    fedpaq::net::partial_reencode(q.as_ref(), black_box(&encs), p, &mut re_rng)
+                        .unwrap();
+                black_box(out);
+            },
+        );
+    }
+    g.finish();
+}
+
 fn main() {
     quantizer_codec();
     codec_suite();
     aggregation();
     sampling_and_gather();
     sim_throughput();
+    tree_partial();
 }

@@ -54,7 +54,7 @@
 //! a miscounted round aborts loudly instead of silently corrupting a
 //! long run.
 
-use crate::quant::{accumulate_slice, Encoded, UpdateCodec};
+use crate::quant::{accumulate_slice, Encoded, FrameHeader, UpdateCodec};
 
 /// Disjoint contiguous parameter ranges for sharded accumulation: `k`
 /// near-equal ranges covering `0..p` (the first `p mod k` ranges are one
@@ -262,6 +262,33 @@ impl Aggregator {
         batch: &[(&Encoded, f64)],
         plan: &ShardPlan,
     ) -> crate::Result<()> {
+        // Delegation at mass 1 is bitwise free: `w * 1.0 == w` exactly,
+        // so every flat transport aggregates unchanged.
+        let scaled: Vec<(&Encoded, f64, f64)> =
+            batch.iter().map(|&(enc, w)| (enc, w, 1.0)).collect();
+        self.push_batch_scaled(codec, &scaled, plan)
+    }
+
+    /// [`Aggregator::push_batch`] with a per-upload **mass**: each batch
+    /// entry is `(enc, scale, mass)`, accumulated as `scale · Δ` but
+    /// counted in the normalizer as `scale · mass`. A flat upload has
+    /// mass 1; a tree edge-leader's *summed* partial carries its whole
+    /// cohort pre-summed inside one frame, so it accumulates once but
+    /// must normalize as `cohort_size` uploads — mass is that count
+    /// (see [`crate::net::TcpTree`]).
+    ///
+    /// Frame headers are parsed **once per upload** via
+    /// [`UpdateCodec::open_frame`] and shared across all shard threads
+    /// through [`UpdateCodec::accumulate_range_cached`] — previously each
+    /// shard re-read every upload's header, an O(shards × uploads)
+    /// redundancy. The cached kernels are pinned bit-identical to the
+    /// plain ones, so the shard-count determinism contract is untouched.
+    pub fn push_batch_scaled(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        batch: &[(&Encoded, f64, f64)],
+        plan: &ShardPlan,
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             plan.p() == self.sum.len(),
             "shard plan covers {} parameters, aggregator holds {}",
@@ -271,7 +298,7 @@ impl Aggregator {
         // Validate the whole batch before absorbing anything, on both the
         // sequential and the sharded path, so a malformed upload anywhere
         // in the batch cannot leave a half-absorbed commit behind.
-        for &(enc, w) in batch {
+        for &(enc, scale, mass) in batch {
             anyhow::ensure!(
                 enc.p == self.sum.len(),
                 "upload dimension mismatch: {} != {}",
@@ -279,18 +306,35 @@ impl Aggregator {
                 self.sum.len()
             );
             anyhow::ensure!(
+                scale.is_finite() && scale > 0.0,
+                "aggregation weight must be finite and positive, got {scale}"
+            );
+            anyhow::ensure!(
+                mass.is_finite() && mass > 0.0,
+                "aggregation mass must be finite and positive, got {mass}"
+            );
+            let w = scale * mass;
+            anyhow::ensure!(
                 w.is_finite() && w > 0.0,
-                "aggregation weight must be finite and positive, got {w}"
+                "aggregation weight·mass must stay finite and positive, got {w}"
             );
         }
         if plan.shards() == 1 || batch.is_empty() {
             // The historical streaming path (also the hot path for tiny
             // models, where thread spawns would dominate).
-            for &(enc, w) in batch {
-                self.push_weighted(codec, enc, w)?;
+            for &(enc, scale, mass) in batch {
+                codec.accumulate_range(enc, 0, enc.p, scale, &mut self.sum)?;
+                self.ledger(enc.bits(), scale * mass)?;
             }
             return Ok(());
         }
+        // Parse each upload's frame header exactly once, up front; shard
+        // threads then accumulate against the shared cache.
+        let headers: Vec<FrameHeader> = batch
+            .iter()
+            .map(|&(enc, _, _)| codec.open_frame(enc))
+            .collect::<crate::Result<_>>()?;
+        let headers = &headers;
         // Slice `sum` into the plan's disjoint ranges so each scoped
         // thread owns its shard exclusively.
         let mut shards: Vec<((usize, usize), &mut [f64])> = Vec::with_capacity(plan.shards());
@@ -305,11 +349,11 @@ impl Aggregator {
                 .into_iter()
                 .map(|((lo, hi), shard)| {
                     s.spawn(move || -> crate::Result<()> {
-                        for &(enc, w) in batch {
+                        for (&(enc, scale, _), hdr) in batch.iter().zip(headers) {
                             // Fused kernel: the upload's window streams
                             // straight into this shard's accumulators —
                             // no scratch decode, bit-identical to one.
-                            codec.accumulate_range(enc, lo, hi, w, shard)?;
+                            codec.accumulate_range_cached(enc, hdr, lo, hi, scale, shard)?;
                         }
                         Ok(())
                     })
@@ -324,8 +368,8 @@ impl Aggregator {
         // Ledgers advance in batch order — identical to the sequential
         // path (weight_sum is an f64 sum, so order matters for bit
         // reproducibility too).
-        for &(enc, w) in batch {
-            self.ledger(enc.bits(), w)?;
+        for &(enc, scale, mass) in batch {
+            self.ledger(enc.bits(), scale * mass)?;
         }
         Ok(())
     }
@@ -639,6 +683,92 @@ mod tests {
             let mut got = vec![0.5f32; p];
             agg.apply_sharded(&mut got, &plan).unwrap();
             assert_eq!(got, want, "shards={shards} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn push_batch_scaled_mass_scales_normalizer_not_sum() {
+        // One summed frame carrying a 3-upload cohort (mass 3) must equal
+        // three weight-1 pushes of the same per-upload mean: the sum gets
+        // one `scale · Δ` add, the normalizer gets `scale · mass`.
+        let q = IdentityCodec;
+        let mut rng = Rng::seed_from_u64(11);
+        let summed = q.encode(&[6.0, -3.0], &mut rng); // Σ of a 3-cohort
+        let plan = ShardPlan::new(2, 1);
+        let mut agg = Aggregator::new(2);
+        agg.push_batch_scaled(&q, &[(&summed, 1.0, 3.0)], &plan).unwrap();
+        assert_eq!(agg.count(), 1);
+        assert_eq!(agg.weight_sum(), 3.0);
+        let mut params = [0.0f32, 0.0];
+        agg.apply(&mut params).unwrap();
+        assert_eq!(params, [2.0, -1.0]);
+    }
+
+    #[test]
+    fn push_batch_scaled_mass_one_matches_push_batch_bitwise() {
+        let q = QsgdCodec::new(2);
+        let p = 57;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.37).cos()).collect();
+        let mut rng = Rng::seed_from_u64(12);
+        let encs: Vec<_> = (0..4).map(|_| q.encode(&x, &mut rng)).collect();
+        let weights = [1.0, 0.5, 0.25, 1.0];
+        for shards in [1usize, 3] {
+            let plan = ShardPlan::new(p, shards);
+            let mut a = Aggregator::new(p);
+            let batch: Vec<(&Encoded, f64)> = encs.iter().zip(weights).collect();
+            a.push_batch(&q, &batch, &plan).unwrap();
+            let mut b = Aggregator::new(p);
+            let scaled: Vec<(&Encoded, f64, f64)> =
+                encs.iter().zip(weights).map(|(e, w)| (e, w, 1.0)).collect();
+            b.push_batch_scaled(&q, &scaled, &plan).unwrap();
+            assert_eq!(a.weight_sum().to_bits(), b.weight_sum().to_bits());
+            let (mut pa, mut pb) = (vec![0.5f32; p], vec![0.5f32; p]);
+            a.apply_sharded(&mut pa, &plan).unwrap();
+            b.apply_sharded(&mut pb, &plan).unwrap();
+            assert_eq!(pa, pb, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn push_batch_header_cache_matches_sequential_for_sparse_codec() {
+        // Seeded rand-k is the codec whose open_frame does real work
+        // (index regeneration); the cached sharded path must stay
+        // bit-identical to the sequential one.
+        use crate::quant::RandKCodec;
+        let q = RandKCodec::new(250);
+        let p = 103;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.13).sin()).collect();
+        let mut rng = Rng::seed_from_u64(13);
+        let encs: Vec<_> = (0..5).map(|_| q.encode(&x, &mut rng)).collect();
+        let batch: Vec<(&Encoded, f64)> = encs.iter().map(|e| (e, 1.0)).collect();
+        let mut reference = Aggregator::new(p);
+        reference
+            .push_batch(&q, &batch, &ShardPlan::new(p, 1))
+            .unwrap();
+        let mut want = vec![0.25f32; p];
+        reference.apply(&mut want).unwrap();
+        for shards in [2usize, 7, 103] {
+            let plan = ShardPlan::new(p, shards);
+            let mut agg = Aggregator::new(p);
+            agg.push_batch(&q, &batch, &plan).unwrap();
+            let mut got = vec![0.25f32; p];
+            agg.apply_sharded(&mut got, &plan).unwrap();
+            assert_eq!(got, want, "shards={shards} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn push_batch_scaled_rejects_bad_mass() {
+        let q = IdentityCodec;
+        let mut rng = Rng::seed_from_u64(14);
+        let enc = q.encode(&[1.0], &mut rng);
+        let plan = ShardPlan::new(1, 1);
+        for mass in [0.0, -2.0, f64::NAN, f64::INFINITY] {
+            let mut agg = Aggregator::new(1);
+            assert!(agg
+                .push_batch_scaled(&q, &[(&enc, 1.0, mass)], &plan)
+                .is_err());
+            assert_eq!(agg.count(), 0, "mass={mass}");
         }
     }
 

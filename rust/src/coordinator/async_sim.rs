@@ -268,6 +268,7 @@ impl Transport for AsyncSim {
                             timing: Some(CommitTiming { compute_time, comm_time }),
                             dropped,
                             dispatches: std::mem::take(&mut self.dispatched),
+                            uplink_bits: None,
                         });
                     }
                 }
@@ -339,7 +340,12 @@ impl Transport for AsyncSim {
         state: crate::ops::TransportState,
     ) -> crate::Result<()> {
         anyhow::ensure!(self.world.is_some(), "AsyncSim::restore_state before setup");
-        let crate::ops::TransportState::Async { planner, now, jobs } = state;
+        let crate::ops::TransportState::Async { planner, now, jobs } = state else {
+            anyhow::bail!(
+                "checkpoint holds tree-transport state; resume it with a tree \
+                 leader (--edge-leaders), not the simulator"
+            );
+        };
         self.planner = Some(CommitPlanner::from_state(planner)?);
         self.now = now;
         self.jobs.clear();

@@ -372,6 +372,7 @@ impl CommitPlanner {
                 origin_round: b.version,
                 staleness: self.version - b.version,
                 enc: b.enc,
+                mass: 1.0,
             })
             .collect()
     }
@@ -435,6 +436,7 @@ impl CommitPlanner {
                 origin_round: b.version,
                 staleness: commit_version - b.version,
                 enc: b.enc,
+                mass: 1.0,
             })
             .collect();
         self.version += 1;

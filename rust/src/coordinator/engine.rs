@@ -78,6 +78,10 @@ pub struct RoundStats {
     /// one dense `32·p` model per dispatch (raw downlink). Per-node
     /// accounting — see `docs/PROTOCOL.md`.
     pub bits_down: u64,
+    /// Edge→root uplink bits for this commit on hierarchical transports
+    /// (`bits_up` is then the worker→edge hop). Identically 0 on flat
+    /// topologies — see `docs/TOPOLOGY.md`.
+    pub bits_edge_to_root: u64,
     /// Stale uploads dropped (and re-dispatched) between the previous
     /// commit and this one.
     pub dropped: u64,
@@ -125,6 +129,10 @@ pub struct RunResult {
     /// Total downlink (broadcast) bits over the run — the other half of
     /// the communication bill, per-node accounting.
     pub total_bits_down: u64,
+    /// Total edge→root uplink bits over the run (0 on flat topologies):
+    /// the second hop of the split `bits_up` accounting on aggregation
+    /// trees.
+    pub total_bits_edge_to_root: u64,
     /// Run self-description (seed, codec, config hash, provenance).
     pub meta: RunMeta,
 }
@@ -153,6 +161,7 @@ impl RunResult {
                     ("time", Json::num(p.time)),
                     ("bits_up", Json::num(p.bits_up as f64)),
                     ("bits_down", Json::num(p.bits_down as f64)),
+                    ("bits_edge_to_root", Json::num(p.bits_edge_to_root as f64)),
                     ("loss", Json::num(p.loss)),
                 ])
             })
@@ -167,6 +176,7 @@ impl RunResult {
                     ("comm_time", Json::num(r.comm_time)),
                     ("bits_up", Json::num(r.bits_up as f64)),
                     ("bits_down", Json::num(r.bits_down as f64)),
+                    ("bits_edge_to_root", Json::num(r.bits_edge_to_root as f64)),
                     ("dropped", Json::num(r.dropped as f64)),
                     ("staleness_max", Json::num(r.staleness_max as f64)),
                     ("staleness_mean", Json::num(r.staleness_mean)),
@@ -204,6 +214,10 @@ impl RunResult {
             ("rounds", Json::Arr(rounds)),
             ("total_bits", Json::num(self.total_bits as f64)),
             ("total_bits_down", Json::num(self.total_bits_down as f64)),
+            (
+                "total_bits_edge_to_root",
+                Json::num(self.total_bits_edge_to_root as f64),
+            ),
             (
                 "params",
                 Json::Arr(self.params.iter().map(|&v| Json::num(v as f64)).collect()),
@@ -350,6 +364,7 @@ impl RoundEngine {
         let mut stats;
         let mut total_bits;
         let mut total_bits_down;
+        let mut total_bits_edge;
         let mut params;
         let start_k;
         let mut timing = if self.transport.virtual_time() {
@@ -382,6 +397,7 @@ impl RoundEngine {
             stats = ck.stats.clone();
             total_bits = ck.total_bits;
             total_bits_down = ck.total_bits_down;
+            total_bits_edge = ck.total_bits_edge_to_root;
             start_k = ck.next_round;
             if let Timing::Virtual { clock, .. } = &mut timing {
                 clock.advance(ck.clock_now);
@@ -424,6 +440,7 @@ impl RoundEngine {
             stats = Vec::with_capacity(rounds);
             total_bits = 0u64;
             total_bits_down = 0u64;
+            total_bits_edge = 0u64;
             start_k = 0;
             // Round-0 point: initial loss at time 0.
             let loss0 = slab.eval(engine, &params)?;
@@ -433,6 +450,7 @@ impl RoundEngine {
                 time: 0.0,
                 bits_up: 0,
                 bits_down: 0,
+                bits_edge_to_root: 0,
                 loss: loss0,
             });
         }
@@ -490,13 +508,23 @@ impl RoundEngine {
                     * p as u64,
             };
             agg.reset();
-            let batch: Vec<(&crate::quant::Encoded, f64)> = outcome
+            // `mass` is 1.0 on every flat transport; hierarchical summed
+            // partials carry their cohort size so the weighted-mean
+            // normalizer matches the flat topology exactly.
+            let batch: Vec<(&crate::quant::Encoded, f64, f64)> = outcome
                 .uploads
                 .iter()
-                .map(|u| (&u.enc, cfg.staleness_rule.weight(u.staleness)))
+                .map(|u| (&u.enc, cfg.staleness_rule.weight(u.staleness), u.mass))
                 .collect();
-            agg.push_batch(self.codec.as_ref(), &batch, &plan)?;
-            let bits: u64 = agg.upload_bits().iter().sum();
+            agg.push_batch_scaled(self.codec.as_ref(), &batch, &plan)?;
+            // Split uplink accounting: hierarchical transports report the
+            // worker→edge and edge→root hops themselves (the aggregated
+            // frames at the root are not what the workers sent); flat
+            // transports charge the aggregator's ledger as the single hop.
+            let (bits, bits_edge): (u64, u64) = match outcome.uplink_bits {
+                Some((up, edge)) => (up, edge),
+                None => (agg.upload_bits().iter().sum(), 0),
+            };
             let (compute_time, comm_time) = match (&mut timing, outcome.timing) {
                 // The transport ran its own (virtual) event clock for
                 // this commit — charge its figures verbatim.
@@ -538,6 +566,7 @@ impl RoundEngine {
             }
             total_bits += bits;
             total_bits_down += bits_down;
+            total_bits_edge += bits_edge;
             // Async-protocol telemetry: staleness stamps come with the
             // uploads, drop counts with the outcome. Barrier transports
             // report all zeros (every upload is staleness 0, none drop).
@@ -555,6 +584,7 @@ impl RoundEngine {
                 comm_time,
                 bits_up: bits,
                 bits_down,
+                bits_edge_to_root: bits_edge,
                 dropped: outcome.dropped,
                 staleness_max,
                 staleness_mean,
@@ -572,6 +602,7 @@ impl RoundEngine {
                     time,
                     bits_up: total_bits,
                     bits_down: total_bits_down,
+                    bits_edge_to_root: total_bits_edge,
                     loss,
                 });
             }
@@ -586,6 +617,7 @@ impl RoundEngine {
                 vec![
                     ("bits", Json::num(bits as f64)),
                     ("bits_down", Json::num(bits_down as f64)),
+                    ("bits_edge_to_root", Json::num(bits_edge as f64)),
                     ("dropped", Json::num(outcome.dropped as f64)),
                     ("staleness_max", Json::num(staleness_max as f64)),
                     ("t", Json::num(t_now)),
@@ -609,6 +641,7 @@ impl RoundEngine {
                     next_round: completed,
                     total_bits,
                     total_bits_down,
+                    total_bits_edge_to_root: total_bits_edge,
                     clock_now: match &timing {
                         Timing::Virtual { clock, .. } => clock.now(),
                         // Wall-clock time restarts on resume; see
@@ -652,8 +685,17 @@ impl RoundEngine {
                 ("rounds_done", Json::num(stats.len() as f64)),
                 ("total_bits", Json::num(total_bits as f64)),
                 ("total_bits_down", Json::num(total_bits_down as f64)),
+                ("total_bits_edge_to_root", Json::num(total_bits_edge as f64)),
             ],
         );
-        Ok(RunResult { curve, params, rounds: stats, total_bits, total_bits_down, meta })
+        Ok(RunResult {
+            curve,
+            params,
+            rounds: stats,
+            total_bits,
+            total_bits_down,
+            total_bits_edge_to_root: total_bits_edge,
+            meta,
+        })
     }
 }

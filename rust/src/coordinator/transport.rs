@@ -91,6 +91,12 @@ pub struct Upload {
     pub staleness: usize,
     /// The encoded model delta.
     pub enc: Encoded,
+    /// How many node updates `enc` stands for in the weighted mean.
+    /// `1.0` everywhere except hierarchical transports, where a summed
+    /// edge partial carries its whole cohort: the aggregator adds the
+    /// frame once at the staleness weight but grows the normalizer by
+    /// `weight · mass` (see `docs/TOPOLOGY.md` for the algebra).
+    pub mass: f64,
 }
 
 /// Virtual-time charge for one commit, reported by transports that run
@@ -125,6 +131,11 @@ pub struct RoundOutcome {
     /// `ctx.round`; buffered-async transports also list their planner
     /// re-dispatches.
     pub dispatches: Vec<(usize, usize)>,
+    /// Split uplink accounting for hierarchical transports:
+    /// `(bits_worker_to_edge, bits_edge_to_root)`. `None` (every flat
+    /// transport) lets the engine charge the aggregator's ledger sum as
+    /// the single-hop `bits_up` with a zero edge→root component.
+    pub uplink_bits: Option<(u64, u64)>,
 }
 
 impl RoundOutcome {
@@ -136,10 +147,16 @@ impl RoundOutcome {
             .nodes
             .iter()
             .zip(encs)
-            .map(|(&node, enc)| Upload { node, origin_round: ctx.round, staleness: 0, enc })
+            .map(|(&node, enc)| Upload {
+                node,
+                origin_round: ctx.round,
+                staleness: 0,
+                enc,
+                mass: 1.0,
+            })
             .collect();
         let dispatches = ctx.nodes.iter().map(|&node| (node, ctx.round)).collect();
-        RoundOutcome { uploads, timing: None, dropped: 0, dispatches }
+        RoundOutcome { uploads, timing: None, dropped: 0, dispatches, uplink_bits: None }
     }
 }
 

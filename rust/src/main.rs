@@ -4,6 +4,7 @@
 //! fedpaq figure <id|all> [--out DIR] [--engine pjrt|rust] [--t N]
 //! fedpaq train [--config FILE.json] [--model M] [--s S] [--tau T] ...
 //! fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json]
+//! fedpaq edge [--connect ROOT] [--bind ADDR] [--workers K]
 //! fedpaq worker [--connect ADDR]
 //! fedpaq quantize-check [--s S] [--seed SEED]
 //! fedpaq info
@@ -50,8 +51,19 @@ USAGE:
   (a leading flag implies `train`: `fedpaq --async-rounds --buffer-size 4`)
   fedpaq leader [--bind ADDR] [--workers N] [--config FILE.json] [--engine E]
                 [--agg-shards N] [--out-json FILE]
+                [--edge-leaders N] [--tree-summed]
   (an async_rounds config runs the buffered-async TcpAsync leader; others
-   run the synchronous barrier)
+   run the synchronous barrier. --edge-leaders N makes this the root of a
+   two-level aggregation tree: N `fedpaq edge` processes connect here and
+   workers connect to the edges — needs an async_rounds config. The
+   default relay mode commits bit-identically to a flat run;
+   --tree-summed re-encodes each cohort wave into one summed frame,
+   reproducible per seed, degenerate knobs only — see docs/TOPOLOGY.md)
+  fedpaq edge [--connect ROOT] [--bind ADDR] [--workers K]
+              [--max-partials N] [--retry-secs S] [--events FILE|-]
+  (edge leader for a tree run: dials the root, accepts its cohort of K
+   workers, forwards dispatches down and partial updates up;
+   --max-partials N exits cleanly after N partials, for churn tests)
   fedpaq worker [--connect ADDR] [--delay-ms N] [--retry-secs S]
                 [--max-jobs N] [--events FILE|-]
   fedpaq quantize-check [--s S] [--seed SEED]
@@ -85,7 +97,13 @@ impl Flags {
                 // Boolean flags have no value or are followed by another --flag.
                 let is_bool = matches!(
                     key,
-                    "elias" | "fast" | "async-rounds" | "ef" | "down-elias" | "down-ef"
+                    "elias"
+                        | "fast"
+                        | "async-rounds"
+                        | "ef"
+                        | "down-elias"
+                        | "down-ef"
+                        | "tree-summed"
                 );
                 if is_bool {
                     map.insert(key.to_string(), "true".to_string());
@@ -447,15 +465,32 @@ fn main() -> anyhow::Result<()> {
             }
             let bind = flags.get_or("bind", "127.0.0.1:7070");
             let workers: usize = flags.parse_num("workers", 2usize)?;
+            let edge_leaders: usize = flags.parse_num("edge-leaders", 0usize)?;
             let mut engine = fedpaq::net::worker::build_engine(&cfg, &artifacts)?;
-            let res = fedpaq::net::run_leader(
-                cfg,
-                &bind,
-                workers,
-                engine.as_mut(),
-                &artifacts,
-                &run_control(&flags)?,
-            )?;
+            let res = if edge_leaders > 0 {
+                fedpaq::net::run_leader_tree(
+                    cfg,
+                    &bind,
+                    edge_leaders,
+                    flags.get("tree-summed").is_some(),
+                    engine.as_mut(),
+                    &artifacts,
+                    &run_control(&flags)?,
+                )?
+            } else {
+                anyhow::ensure!(
+                    flags.get("tree-summed").is_none(),
+                    "--tree-summed needs --edge-leaders N"
+                );
+                fedpaq::net::run_leader(
+                    cfg,
+                    &bind,
+                    workers,
+                    engine.as_mut(),
+                    &artifacts,
+                    &run_control(&flags)?,
+                )?
+            };
             println!("distributed run complete: final loss {:?}", res.curve.final_loss());
             for p in &res.curve.points {
                 println!("  k={:<4} wall={:<10.3}s loss={:.6}", p.round, p.time, p.loss);
@@ -470,6 +505,35 @@ fn main() -> anyhow::Result<()> {
                 )?;
                 println!("wrote {path}");
             }
+        }
+        "edge" => {
+            let connect = flags.get_or("connect", "127.0.0.1:7070");
+            let bind = flags.get_or("bind", "127.0.0.1:0");
+            let events = match flags.get("events") {
+                Some(dest) if dest == "-" || dest == "stderr" => {
+                    fedpaq::ops::EventSink::stderr()
+                }
+                Some(dest) => fedpaq::ops::EventSink::to_file(Path::new(dest))?,
+                None => fedpaq::ops::EventSink::null(),
+            };
+            let opts = fedpaq::net::EdgeOptions {
+                workers: flags.parse_num("workers", 2usize)?,
+                max_partials: flags
+                    .get("max-partials")
+                    .map(|v| {
+                        v.parse::<u64>()
+                            .map_err(|e| anyhow::anyhow!("--max-partials {v}: {e}"))
+                    })
+                    .transpose()?,
+                events,
+            };
+            let retry_secs: u64 = flags.parse_num("retry-secs", 10u64)?;
+            fedpaq::net::run_edge_retrying(
+                &connect,
+                &bind,
+                opts,
+                std::time::Duration::from_secs(retry_secs),
+            )?;
         }
         "worker" => {
             let connect = flags.get_or("connect", "127.0.0.1:7070");

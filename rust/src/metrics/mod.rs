@@ -16,6 +16,10 @@ pub struct CurvePoint {
     pub bits_up: u64,
     /// Cumulative downlink (broadcast) bits, per-node accounting.
     pub bits_down: u64,
+    /// Cumulative edge→root bits on hierarchical transports (the second
+    /// uplink hop of the split accounting; the worker→edge hop is
+    /// `bits_up`). Always 0 on flat topologies.
+    pub bits_edge_to_root: u64,
     /// Training loss at the server model.
     pub loss: f64,
 }
@@ -87,18 +91,25 @@ impl FigureData {
     }
 
     /// Write `<dir>/<id>.csv` with columns
-    /// `label,round,iterations,time,bits_up,bits_down,loss`.
+    /// `label,round,iterations,time,bits_up,bits_down,bits_edge_to_root,loss`.
     pub fn write_csv(&self, dir: &Path) -> crate::Result<std::path::PathBuf> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.csv", self.id));
         let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        writeln!(f, "label,round,iterations,time,bits_up,bits_down,loss")?;
+        writeln!(f, "label,round,iterations,time,bits_up,bits_down,bits_edge_to_root,loss")?;
         for c in &self.curves {
             for p in &c.points {
                 writeln!(
                     f,
-                    "{},{},{},{:.6},{},{},{:.6}",
-                    c.label, p.round, p.iterations, p.time, p.bits_up, p.bits_down, p.loss
+                    "{},{},{},{:.6},{},{},{},{:.6}",
+                    c.label,
+                    p.round,
+                    p.iterations,
+                    p.time,
+                    p.bits_up,
+                    p.bits_down,
+                    p.bits_edge_to_root,
+                    p.loss
                 )?;
             }
         }
@@ -153,6 +164,7 @@ mod tests {
                 time: t,
                 bits_up: 0,
                 bits_down: 0,
+                bits_edge_to_root: 0,
                 loss: l,
             });
         }
@@ -178,7 +190,7 @@ mod tests {
         let lines: Vec<_> = text.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("label,round"));
-        assert!(lines[1].starts_with("s=1,1,5,1.000000,0,0,0.9"));
+        assert!(lines[1].starts_with("s=1,1,5,1.000000,0,0,0,0.9"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -14,6 +14,7 @@
 //! semantics as the `AsyncSim` simulation, on real sockets.
 
 use super::transport::{Tcp, TcpAsync};
+use super::tree::TcpTree;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{EvalSlab, RoundEngine, RunResult, Transport};
 use crate::model::Engine;
@@ -46,6 +47,30 @@ pub fn run_leader(
     } else {
         Box::new(Tcp::new(bind, n_workers))
     };
+    let mut rounds = RoundEngine::new(cfg.codec.build()?, transport);
+    rounds.run(&cfg, engine, &slab, ctrl)
+}
+
+/// Run the distributed protocol as the **root of a two-level
+/// aggregation tree** (`fedpaq leader --edge-leaders N`): `n_edges`
+/// edge-leader processes connect on `bind` (workers connect to the
+/// edges, not here). Requires an async-rounds config —
+/// [`TcpTree`](super::TcpTree) rejects barrier configs at setup.
+/// `summed` selects lossy partial-aggregate re-encoding at the edges
+/// (`--tree-summed`, degenerate knobs only) instead of the default
+/// bit-identical relay; see `docs/TOPOLOGY.md`.
+pub fn run_leader_tree(
+    cfg: ExperimentConfig,
+    bind: &str,
+    n_edges: usize,
+    summed: bool,
+    engine: &mut dyn Engine,
+    _artifacts: &Path,
+    ctrl: &RunControl,
+) -> crate::Result<RunResult> {
+    let cfg = cfg.validated()?;
+    let slab = EvalSlab::build(&cfg, engine)?;
+    let transport: Box<dyn Transport> = Box::new(TcpTree::new(bind, n_edges, summed));
     let mut rounds = RoundEngine::new(cfg.codec.build()?, transport);
     rounds.run(&cfg, engine, &slab, ctrl)
 }

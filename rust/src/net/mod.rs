@@ -62,11 +62,26 @@
 //! jitter, and `WorkerOptions::max_jobs` injects a clean mid-run death
 //! for churn tests.
 
+//! ## Two-level aggregation trees (wire v4)
+//!
+//! [`TcpTree`] generalizes the async leader into the root of a
+//! two-level tree: **edge leaders** ([`run_edge_retrying`], the `fedpaq
+//! edge` subcommand) each own a pinned cohort of ordinary workers and
+//! stream [`proto::ToLeader::PartialUpdate`] frames upward — either
+//! relayed verbatim (the identity re-encode, bit-identical to a flat
+//! run) or summed and re-encoded through the run's own codec
+//! ([`tree::partial_reencode`], reproducible per seed). The root drives
+//! the same unchanged `CommitPlanner`; `bits_up` splits into
+//! worker→edge and edge→root hops. `docs/TOPOLOGY.md` covers roles,
+//! pinning, weighting, and failure semantics.
+
 pub mod leader;
 pub mod proto;
 pub mod transport;
+pub mod tree;
 pub mod worker;
 
-pub use leader::run_leader;
+pub use leader::{run_leader, run_leader_tree};
 pub use transport::{Tcp, TcpAsync};
+pub use tree::{partial_reencode, run_edge_retrying, EdgeOptions, TcpTree};
 pub use worker::{run_worker, run_worker_retrying, run_worker_with, WorkerOptions};

@@ -16,12 +16,21 @@
 //! lets a `Work` dispatch carry its model as either a dense raw vector
 //! or a **compressed delta chain** against the worker's last
 //! reconstructed reference ([`ModelPayload`]), and `Update` frames echo
-//! worker-side decode/compute timings for the event bus. The v1 and v2
-//! layouts used different variant tags; decoding one here fails with an
-//! explicit protocol-version error (not a byte-soup "truncated frame"),
-//! so a mixed-version cluster is rejected at the handshake instead of
-//! silently corrupting a run. See `docs/PROTOCOL.md` for the full frame
-//! catalogue.
+//! worker-side decode/compute timings for the event bus. v4 (the
+//! hierarchical-aggregation protocol) adds the edge-leader role: an
+//! edge joins the root with [`ToLeader::EdgeJoin`], receives a
+//! [`ToWorker::EdgeSetup`] naming its slot, and streams
+//! [`ToLeader::PartialUpdate`] frames upstream — each carrying the
+//! contributing `(node, version)` list, per-contrib bit/timing
+//! accounting, the summed weight, and either the relayed worker frames
+//! or one re-encoded partial sum (see `docs/TOPOLOGY.md`). All v3
+//! frame layouts are unchanged; v3 binaries are rejected by the
+//! in-band `proto` field at the handshake. The v1 and v2 layouts used
+//! different variant tags; decoding one here fails with an explicit
+//! protocol-version error (not a byte-soup "truncated frame"), so a
+//! mixed-version cluster is rejected at the handshake instead of
+//! silently corrupting a run. See `docs/PROTOCOL.md` for the full
+//! frame catalogue.
 
 use crate::config::ExperimentConfig;
 use crate::quant::{bitstream::BitBuf, CodecSpec, Coding, Encoded};
@@ -32,19 +41,23 @@ use std::io::{Read, Write};
 pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
 
 /// Wire protocol version. Bumped to 2 when dispatches/uploads gained
-/// model-version stamps (the buffered-async protocol), and to 3 when
+/// model-version stamps (the buffered-async protocol), to 3 when
 /// dispatches gained delta-chain model payloads and uploads gained
-/// worker timing (the bidirectional-compression protocol); v1/v2 peers
-/// are rejected with a clear error at the `Join`/`Setup` handshake.
-pub const PROTO_VERSION: u32 = 3;
+/// worker timing (the bidirectional-compression protocol), and to 4
+/// when the edge-leader role landed (`EdgeJoin`/`EdgeSetup`/
+/// `PartialUpdate` frames for two-level aggregation trees). v1/v2
+/// peers are rejected by retired tag values, v3 peers by the in-band
+/// `proto` field, both with a clear error at the `Join`/`Setup`
+/// handshake.
+pub const PROTO_VERSION: u32 = 4;
 
 /// The error both ends raise when an older-protocol frame shows up.
 fn protocol_version_error(v: u32, what: &str) -> anyhow::Error {
     anyhow::anyhow!(
         "peer sent a wire-protocol v{v} {what} frame; this build speaks \
-         v{PROTO_VERSION}, whose dispatches carry raw-or-delta model payloads \
-         and whose uploads carry worker timings — upgrade the older binary \
-         (leader and workers must match)"
+         v{PROTO_VERSION}, which adds edge-leader partial-aggregate frames \
+         on top of the v3 payload/timing layouts — upgrade the older binary \
+         (leader, edges, and workers must match)"
     )
 }
 
@@ -63,6 +76,36 @@ pub enum ModelPayload {
     Chain { base_version: u64, links: Vec<Encoded> },
 }
 
+/// One worker upload folded into a [`ToLeader::PartialUpdate`]: the
+/// `(node, version)` coordinate the root's
+/// [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
+/// keys staleness on, the worker frame's uplink bit count (the
+/// worker→edge hop of the split accounting), and the worker timings
+/// the root re-emits on its `upload_arrived` events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Contrib {
+    pub node: u64,
+    pub version: u64,
+    pub bits: u64,
+    pub compute_ms: f64,
+    pub decode_ms: f64,
+}
+
+/// How a [`ToLeader::PartialUpdate`] ships its cohort's updates.
+///
+/// `Relay` forwards the original worker frames **verbatim** (one per
+/// contrib, same order) — the identity re-encode, bit-exact against a
+/// flat topology. `Summed` carries one re-encoded frame holding the
+/// unweighted coordinate-wise sum of the cohort's decoded updates —
+/// the bandwidth-saving mode; the root feeds it to the aggregator once
+/// at the partial's summed weight (see `docs/TOPOLOGY.md` for the
+/// weighting math).
+#[derive(Debug, Clone)]
+pub enum PartialPayload {
+    Relay(Vec<Encoded>),
+    Summed(Encoded),
+}
+
 /// Leader → worker messages.
 #[derive(Debug, Clone)]
 pub enum ToWorker {
@@ -79,6 +122,20 @@ pub enum ToWorker {
     Work { version: u64, node: u64, payload: ModelPayload, lrs: Vec<f32> },
     /// Clean shutdown.
     Shutdown,
+    /// Root → edge-leader handshake reply (wire v4): the config the
+    /// edge relays to its own workers, the edge's join-order `slot`
+    /// (its identity in events and re-encode RNG streams), the total
+    /// edge count (for node→edge pinning), and whether the edge must
+    /// send `Summed` partials instead of `Relay` ones.
+    EdgeSetup { proto: u32, cfg: ExperimentConfig, edge_slot: u64, n_edges: u64, summed: bool },
+    /// Root → edge wave marker (wire v4, summed mode only): every
+    /// `Work` dispatch sent to this edge so far belongs to a closed
+    /// burst — once they have all been answered, flush the buffered
+    /// cohort uploads as one `Summed` partial. Without the marker the
+    /// flush boundary would depend on socket timing (how many dispatches
+    /// happened to be in flight when the cohort drained), which would
+    /// break summed-mode repeat-run reproducibility.
+    FlushPartial,
 }
 
 /// Worker → leader messages.
@@ -94,6 +151,15 @@ pub enum ToLeader {
     /// (reconstructing the model from its payload) and `compute_ms`
     /// (local training + uplink encode), surfaced on the event bus.
     Update { version: u64, node: u64, enc: Encoded, compute_ms: f64, decode_ms: f64 },
+    /// Edge-leader → root handshake (wire v4): this peer is an edge
+    /// leader that will accept `workers` workers of its own and stream
+    /// partial aggregates upstream.
+    EdgeJoin { proto: u32, workers: u64 },
+    /// One flushed partial aggregate from edge `edge_slot` (wire v4):
+    /// the contributing uploads (sorted by `(version, node)`), the
+    /// summed staleness weight `weight` (cohort size at staleness 0),
+    /// and the payload — relayed frames or one re-encoded sum.
+    PartialUpdate { edge_slot: u64, weight: f64, contribs: Vec<Contrib>, payload: PartialPayload },
 }
 
 // ---------------- primitive writers/readers ----------------
@@ -349,6 +415,17 @@ const TAG_WORK_V3: u8 = 6;
 const TAG_READY: u8 = 1;
 const TAG_JOIN_V3: u8 = 5;
 const TAG_UPDATE_V3: u8 = 6;
+// v4 additions (edge-leader role). The v3 layouts above are unchanged
+// — a v3 binary is caught by the in-band `proto` field check at the
+// handshake, not by retired tags.
+const TAG_EDGE_SETUP_V4: u8 = 7;
+const TAG_FLUSH_V4: u8 = 8;
+const TAG_EDGE_JOIN_V4: u8 = 7;
+const TAG_PARTIAL_V4: u8 = 8;
+
+// Payload tags inside a v4 PartialUpdate frame.
+const PARTIAL_RELAY: u8 = 0;
+const PARTIAL_SUMMED: u8 = 1;
 
 // Payload tags inside a v3 Work frame.
 const PAYLOAD_RAW: u8 = 0;
@@ -406,6 +483,15 @@ impl ToWorker {
                 b.f32s(lrs);
             }
             ToWorker::Shutdown => b.u8(TAG_SHUTDOWN),
+            ToWorker::EdgeSetup { proto, cfg, edge_slot, n_edges, summed } => {
+                b.u8(TAG_EDGE_SETUP_V4);
+                b.u32(*proto);
+                b.string(&cfg.to_json().to_string_pretty());
+                b.u64(*edge_slot);
+                b.u64(*n_edges);
+                b.u8(*summed as u8);
+            }
+            ToWorker::FlushPartial => b.u8(TAG_FLUSH_V4),
         }
         b.0
     }
@@ -431,6 +517,21 @@ impl ToWorker {
                 lrs: c.f32s()?,
             },
             TAG_SHUTDOWN => ToWorker::Shutdown,
+            TAG_EDGE_SETUP_V4 => {
+                let proto = c.u32()?;
+                let text = c.string()?;
+                let cfg =
+                    ExperimentConfig::from_json(&crate::util::json::Json::parse(&text)?)?;
+                let edge_slot = c.u64()?;
+                let n_edges = c.u64()?;
+                let summed = match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    x => anyhow::bail!("bad edge-setup summed flag {x}"),
+                };
+                ToWorker::EdgeSetup { proto, cfg, edge_slot, n_edges, summed }
+            }
+            TAG_FLUSH_V4 => ToWorker::FlushPartial,
             x => anyhow::bail!("bad ToWorker tag {x}"),
         };
         anyhow::ensure!(c.i == bytes.len(), "trailing bytes in frame");
@@ -455,6 +556,37 @@ impl ToLeader {
                 b.f64(*compute_ms);
                 b.f64(*decode_ms);
             }
+            ToLeader::EdgeJoin { proto, workers } => {
+                b.u8(TAG_EDGE_JOIN_V4);
+                b.u32(*proto);
+                b.u64(*workers);
+            }
+            ToLeader::PartialUpdate { edge_slot, weight, contribs, payload } => {
+                b.u8(TAG_PARTIAL_V4);
+                b.u64(*edge_slot);
+                b.f64(*weight);
+                b.u64(contribs.len() as u64);
+                for k in contribs {
+                    b.u64(k.node);
+                    b.u64(k.version);
+                    b.u64(k.bits);
+                    b.f64(k.compute_ms);
+                    b.f64(k.decode_ms);
+                }
+                match payload {
+                    PartialPayload::Relay(encs) => {
+                        b.u8(PARTIAL_RELAY);
+                        b.u64(encs.len() as u64);
+                        for enc in encs {
+                            write_encoded(&mut b, enc);
+                        }
+                    }
+                    PartialPayload::Summed(enc) => {
+                        b.u8(PARTIAL_SUMMED);
+                        write_encoded(&mut b, enc);
+                    }
+                }
+            }
         }
         b.0
     }
@@ -475,6 +607,44 @@ impl ToLeader {
                 compute_ms: c.f64()?,
                 decode_ms: c.f64()?,
             },
+            TAG_EDGE_JOIN_V4 => {
+                ToLeader::EdgeJoin { proto: c.u32()?, workers: c.u64()? }
+            }
+            TAG_PARTIAL_V4 => {
+                let edge_slot = c.u64()?;
+                let weight = c.f64()?;
+                let n = c.u64()? as usize;
+                // Each contrib is exactly 40 bytes on the wire.
+                anyhow::ensure!(n.saturating_mul(40) <= c.len(), "oversized contrib list");
+                let mut contribs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    contribs.push(Contrib {
+                        node: c.u64()?,
+                        version: c.u64()?,
+                        bits: c.u64()?,
+                        compute_ms: c.f64()?,
+                        decode_ms: c.f64()?,
+                    });
+                }
+                let payload = match c.u8()? {
+                    PARTIAL_RELAY => {
+                        let m = c.u64()? as usize;
+                        anyhow::ensure!(
+                            m == contribs.len(),
+                            "relay partial carries {m} frames for {} contribs",
+                            contribs.len()
+                        );
+                        let mut encs = Vec::with_capacity(m);
+                        for _ in 0..m {
+                            encs.push(read_encoded(&mut c)?);
+                        }
+                        PartialPayload::Relay(encs)
+                    }
+                    PARTIAL_SUMMED => PartialPayload::Summed(read_encoded(&mut c)?),
+                    x => anyhow::bail!("bad partial-payload tag {x}"),
+                };
+                ToLeader::PartialUpdate { edge_slot, weight, contribs, payload }
+            }
             x => anyhow::bail!("bad ToLeader tag {x}"),
         };
         anyhow::ensure!(c.i == bytes.len(), "trailing bytes in frame");
@@ -646,7 +816,7 @@ mod tests {
                 ToWorker::decode(&bytes).unwrap_err().to_string()
             };
             assert!(
-                err.contains(&format!("wire-protocol {gen}")) && err.contains("v3"),
+                err.contains(&format!("wire-protocol {gen}")) && err.contains("v4"),
                 "unhelpful error: {err}"
             );
         }
@@ -750,5 +920,119 @@ mod tests {
         let mut bytes = ToLeader::Join { proto: PROTO_VERSION }.encode();
         bytes.push(0xff);
         assert!(ToLeader::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn flush_partial_roundtrips() {
+        match ToWorker::decode(&ToWorker::FlushPartial.encode()).unwrap() {
+            ToWorker::FlushPartial => {}
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn edge_join_and_setup_roundtrip() {
+        let msg = ToLeader::EdgeJoin { proto: PROTO_VERSION, workers: 3 };
+        match ToLeader::decode(&msg.encode()).unwrap() {
+            ToLeader::EdgeJoin { proto, workers } => {
+                assert_eq!((proto, workers), (PROTO_VERSION, 3));
+            }
+            _ => panic!("wrong variant"),
+        }
+        let cfg = ExperimentConfig::fig1_nn_base().with_tau(3);
+        let msg = ToWorker::EdgeSetup {
+            proto: PROTO_VERSION,
+            cfg: cfg.clone(),
+            edge_slot: 1,
+            n_edges: 2,
+            summed: true,
+        };
+        match ToWorker::decode(&msg.encode()).unwrap() {
+            ToWorker::EdgeSetup { proto, cfg: back, edge_slot, n_edges, summed } => {
+                assert_eq!(proto, PROTO_VERSION);
+                assert_eq!(cfg, back);
+                assert_eq!((edge_slot, n_edges, summed), (1, 2, true));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    fn sample_contribs() -> Vec<Contrib> {
+        vec![
+            Contrib { node: 2, version: 7, bits: 320, compute_ms: 1.5, decode_ms: 0.25 },
+            Contrib { node: 9, version: 7, bits: 480, compute_ms: 2.0, decode_ms: 0.5 },
+        ]
+    }
+
+    #[test]
+    fn relay_partial_roundtrips_frames_verbatim() {
+        let q = CodecSpec::qsgd(2).build().unwrap();
+        let encs: Vec<Encoded> = (0..2u64)
+            .map(|i| {
+                let x: Vec<f32> = (0..48).map(|j| ((i * 48 + j) as f32 * 0.2).sin()).collect();
+                q.encode(&x, &mut Rng::seed_from_u64(i))
+            })
+            .collect();
+        let words_before: Vec<Vec<u64>> =
+            encs.iter().map(|e| e.buf.words().to_vec()).collect();
+        let msg = ToLeader::PartialUpdate {
+            edge_slot: 1,
+            weight: 2.0,
+            contribs: sample_contribs(),
+            payload: PartialPayload::Relay(encs),
+        };
+        match ToLeader::decode(&msg.encode()).unwrap() {
+            ToLeader::PartialUpdate { edge_slot, weight, contribs, payload } => {
+                assert_eq!(edge_slot, 1);
+                assert_eq!(weight.to_bits(), 2.0f64.to_bits());
+                assert_eq!(contribs, sample_contribs());
+                match payload {
+                    PartialPayload::Relay(back) => {
+                        assert_eq!(back.len(), 2);
+                        for (enc, words) in back.iter().zip(&words_before) {
+                            assert_eq!(enc.buf.words(), &words[..]);
+                        }
+                    }
+                    _ => panic!("expected relay payload"),
+                }
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn summed_partial_roundtrips() {
+        let q = CodecSpec::Identity.build().unwrap();
+        let enc = q.encode(&[1.0, -2.0, 0.5], &mut Rng::seed_from_u64(0));
+        let words_before = enc.buf.words().to_vec();
+        let msg = ToLeader::PartialUpdate {
+            edge_slot: 0,
+            weight: 2.0,
+            contribs: sample_contribs(),
+            payload: PartialPayload::Summed(enc),
+        };
+        match ToLeader::decode(&msg.encode()).unwrap() {
+            ToLeader::PartialUpdate { payload: PartialPayload::Summed(back), .. } => {
+                assert_eq!(back.buf.words(), &words_before[..]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn relay_partial_rejects_frame_contrib_mismatch() {
+        // A relay payload must carry exactly one frame per contrib —
+        // a mismatched count is a malformed frame, not a surprise at
+        // aggregation time.
+        let q = CodecSpec::qsgd(1).build().unwrap();
+        let enc = q.encode(&[0.5; 16], &mut Rng::seed_from_u64(3));
+        let msg = ToLeader::PartialUpdate {
+            edge_slot: 0,
+            weight: 2.0,
+            contribs: sample_contribs(), // two contribs, one frame
+            payload: PartialPayload::Relay(vec![enc]),
+        };
+        let err = ToLeader::decode(&msg.encode()).unwrap_err().to_string();
+        assert!(err.contains("relay partial"), "unhelpful error: {err}");
     }
 }

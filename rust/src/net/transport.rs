@@ -763,6 +763,7 @@ impl Transport for TcpAsync {
                             timing: None,
                             dropped,
                             dispatches: std::mem::take(&mut self.dispatched),
+                            uplink_bits: None,
                         });
                     }
                 }
@@ -908,7 +909,12 @@ impl Transport for TcpAsync {
 
     fn restore_state(&mut self, state: crate::ops::TransportState) -> crate::Result<()> {
         anyhow::ensure!(!self.writers.is_empty(), "TcpAsync::restore_state before setup");
-        let crate::ops::TransportState::Async { planner, now: _, jobs } = state;
+        let crate::ops::TransportState::Async { planner, now: _, jobs } = state else {
+            anyhow::bail!(
+                "checkpoint holds tree-transport state; resume it with a tree \
+                 leader (--edge-leaders), not a flat tcp-async leader"
+            );
+        };
         anyhow::ensure!(
             jobs.is_empty() && planner.in_flight.is_empty() && planner.buffer.is_empty(),
             "tcp-async can only resume from a quiescent checkpoint (no in-flight \

@@ -1,0 +1,1234 @@
+//! Two-level aggregation tree: the root [`TcpTree`] transport and the
+//! edge-leader process ([`run_edge_retrying`]).
+//!
+//! A tree run has three roles. **Workers** are completely unchanged —
+//! they dial an edge exactly as they would dial a flat leader and speak
+//! the same `Join`/`Setup`/`Work`/`Update` protocol. **Edge leaders**
+//! dial the root, accept a pinned cohort of workers, forward the root's
+//! dispatches downward, and stream [`ToLeader::PartialUpdate`] frames
+//! upward. The **root** runs the same buffered-async
+//! [`CommitPlanner`](crate::coordinator::commit_loop::CommitPlanner)
+//! loop as the flat [`TcpAsync`](super::TcpAsync) leader — every
+//! commit/drop/re-dispatch rule has exactly one implementation.
+//!
+//! ## Relay vs summed partials
+//!
+//! * **Relay** (the default): the edge forwards each worker frame
+//!   verbatim, one single-contrib partial per upload, in arrival order.
+//!   This is the identity re-encode — the root sees exactly the frames
+//!   a flat leader would see, so a degenerate-knob relay tree commits
+//!   **bit-identically** to the flat sim and the flat `TcpAsync`
+//!   cluster, for any edge count.
+//! * **Summed** (`--tree-summed`): the edge buffers its cohort's wave,
+//!   decodes the frames, sums them coordinate-wise in f64, casts to f32
+//!   once, and re-encodes **one** frame through the run's own codec
+//!   ([`partial_reencode`]) — the bandwidth-saving mode. A summed
+//!   partial can never be bit-identical to the flat run (the f32 cast
+//!   and edge-local addition order differ); it promises repeat-run
+//!   byte-reproducibility instead, and the root therefore only accepts
+//!   it under the degenerate knobs (`buffer_size == r`,
+//!   `max_staleness == 0`, stateless codec) where the flush boundary is
+//!   a full wave. The flush itself is closed by an explicit
+//!   [`ToWorker::FlushPartial`] marker from the root, never by socket
+//!   timing. Re-encode randomness comes from the dedicated
+//!   `(seed, TREE_STREAM, edge_slot, version)` RNG stream, disjoint
+//!   from every worker stream.
+//!
+//! ## Pinning and weighting
+//!
+//! Virtual node `i` is pinned to edge slot `i % n_edges` (re-pinned
+//! forward-scan on edge death, mirroring the flat leader's worker
+//! pinning); inside an edge's cohort of `K` workers the node runs on
+//! worker `(i / n_edges) % K`, a stable pure function of the node id,
+//! so stateful codec memory stays in one process. A summed partial
+//! reaches the aggregator as one [`Upload`] whose `mass` is the cohort
+//! size: the sum enters once at the staleness weight `w`, and the
+//! normalizer grows by `w · mass` — the same weighted mean the flat run
+//! computes, up to f32 rounding (`docs/TOPOLOGY.md` has the algebra).
+//!
+//! ## Failure domains
+//!
+//! An edge owns its cohort: a worker death inside an edge kills that
+//! edge (its partial stream can no longer be trusted to drain), and the
+//! root retires the dead edge's in-flight jobs through the planner's
+//! `CapacityFreed` path — surviving edges absorb the re-pinned nodes.
+//! The run fails only when no live edges remain. The root emits
+//! `edge_joined` / `edge_left` / `partial_committed` on the event bus.
+//!
+//! ## Split uplink accounting
+//!
+//! The tree splits `bits_up` into two hops: worker→edge (the sum of
+//! contrib frame bits) and edge→root (relay: the same frames again;
+//! summed: the one re-encoded frame per partial). Both window counters
+//! accumulate at arrival and are handed to the engine at commit — in
+//! degenerate mode (what CI byte-diffs) that equals the committed
+//! uploads' bits exactly; otherwise it is truthful wire accounting
+//! (bits that traveled, including uploads later dropped as stale).
+
+use super::proto::{
+    recv_to_leader, recv_to_worker, send_to_leader, send_to_worker, Contrib, ModelPayload,
+    PartialPayload, ToLeader, ToWorker, PROTO_VERSION,
+};
+use crate::config::ExperimentConfig;
+use crate::coordinator::commit_loop::{CommitPlanner, Decision, PlannerEvent};
+use crate::coordinator::{RoundCtx, RoundOutcome, Transport, Upload};
+use crate::model::Engine;
+use crate::ops::EventSink;
+use crate::quant::{bitstream::BitBuf, Encoded, UpdateCodec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::{BTreeSet, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// RNG stream id for edge-side partial re-encodes, disjoint from every
+/// other stream family in the tree (worker encode streams key on
+/// `(seed, node, version)` coordinates; sim streams use ids 0–5, 7, 99).
+pub(crate) const TREE_STREAM: u64 = 8;
+
+/// Sum `encs` coordinate-wise (f64 accumulation, one f32 cast) and
+/// re-encode the sum through `codec` — the edge half of summed-mode
+/// partial aggregation. Returns the frame plus its mass (the cohort
+/// size, what the root's [`Upload::mass`] carries). Deterministic for a
+/// fixed `rng` stream; public so property tests can pin that contract
+/// per codec family.
+pub fn partial_reencode(
+    codec: &dyn UpdateCodec,
+    encs: &[Encoded],
+    p: usize,
+    rng: &mut Rng,
+) -> crate::Result<(Encoded, f64)> {
+    anyhow::ensure!(!encs.is_empty(), "cannot re-encode an empty partial");
+    let mut sum = vec![0f64; p];
+    for enc in encs {
+        anyhow::ensure!(
+            enc.p == p,
+            "partial mixes frame widths: {} vs {p}",
+            enc.p
+        );
+        codec.accumulate_range(enc, 0, p, 1.0, &mut sum)?;
+    }
+    let x: Vec<f32> = sum.iter().map(|&v| v as f32).collect();
+    Ok((codec.encode(&x, rng), encs.len() as f64))
+}
+
+/// What a per-edge reader thread feeds the root: a wire message, or the
+/// news that the edge connection died.
+enum FromEdge {
+    Msg(ToLeader),
+    Dead(String),
+}
+
+/// Root of a two-level aggregation tree: accepts `n_edges` edge leaders
+/// on `bind`, then drives the shared [`CommitPlanner`] against their
+/// partial-update streams. See the module docs for the relay/summed
+/// contract.
+pub struct TcpTree {
+    bind: String,
+    n_edges: usize,
+    summed: bool,
+    /// Write halves, indexed by edge slot; `None` once an edge is dead.
+    writers: Vec<Option<TcpStream>>,
+    alive: Vec<bool>,
+    /// Virtual node → edge slot. Pinned to `node % n_edges` until the
+    /// pinned edge dies, then re-pinned forward-scan.
+    assign: Vec<usize>,
+    /// Jobs dispatched and not yet arrived: `(node, version, edge)`.
+    pending: Vec<(usize, usize, usize)>,
+    /// Every `(node, version)` dispatch since the last commit — downlink
+    /// bit accounting, mirroring the flat leaders.
+    dispatched: Vec<(usize, usize)>,
+    arrivals: Option<Receiver<(usize, FromEdge)>>,
+    arrivals_tx: Option<Sender<(usize, FromEdge)>>,
+    readers: Vec<JoinHandle<()>>,
+    planner: Option<CommitPlanner>,
+    /// Summed frames awaiting their commit, each with the cohort size it
+    /// must commit as one unit with. Slots are `take`n at commit; the
+    /// spent `None`s are O(rounds · edges) bookkeeping, not frame data.
+    partial_store: Vec<Option<(Encoded, usize)>>,
+    /// `(node, version)` → index into `partial_store`.
+    store_of: HashMap<(usize, usize), usize>,
+    /// Window counters for the split uplink accounting: accumulated at
+    /// arrival, taken at commit.
+    win_bits_up: u64,
+    win_bits_edge: u64,
+    events: EventSink,
+}
+
+impl TcpTree {
+    pub fn new(bind: impl Into<String>, n_edges: usize, summed: bool) -> Self {
+        TcpTree {
+            bind: bind.into(),
+            n_edges,
+            summed,
+            writers: Vec::new(),
+            alive: Vec::new(),
+            assign: Vec::new(),
+            pending: Vec::new(),
+            dispatched: Vec::new(),
+            arrivals: None,
+            arrivals_tx: None,
+            readers: Vec::new(),
+            planner: None,
+            partial_store: Vec::new(),
+            store_of: HashMap::new(),
+            win_bits_up: 0,
+            win_bits_edge: 0,
+            events: EventSink::null(),
+        }
+    }
+
+    /// Total stale uploads dropped so far in this run.
+    pub fn dropped(&self) -> u64 {
+        self.planner.as_ref().map_or(0, CommitPlanner::dropped)
+    }
+
+    fn spawn_reader(&mut self, idx: usize, mut rd: TcpStream) {
+        let tx = self
+            .arrivals_tx
+            .as_ref()
+            .expect("spawn_reader before setup")
+            .clone();
+        self.readers.push(std::thread::spawn(move || loop {
+            match recv_to_leader(&mut rd) {
+                Ok(msg) => {
+                    if tx.send((idx, FromEdge::Msg(msg))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((idx, FromEdge::Dead(e.to_string())));
+                    return;
+                }
+            }
+        }));
+    }
+
+    /// The edge that should run `node`: its pin if alive, else the next
+    /// live slot scanning forward (deterministic re-pin).
+    fn edge_for(&mut self, node: usize) -> crate::Result<usize> {
+        let pinned = self.assign[node];
+        if self.alive.get(pinned).copied().unwrap_or(false) {
+            return Ok(pinned);
+        }
+        let n = self.writers.len();
+        for off in 1..=n {
+            let cand = (pinned + off) % n;
+            if self.alive[cand] {
+                self.assign[node] = cand;
+                return Ok(cand);
+            }
+        }
+        anyhow::bail!("no live edge leaders remain to run node {node}")
+    }
+
+    /// Execute one planner `Dispatch`: ship the current model to the
+    /// node's edge. Returns the edge slot (for wave-marker bursts). A
+    /// failed write is reported through the arrivals channel as a death.
+    fn dispatch(
+        &mut self,
+        node: usize,
+        version: usize,
+        ctx: &RoundCtx<'_>,
+    ) -> crate::Result<usize> {
+        anyhow::ensure!(
+            version == ctx.frame.version,
+            "tree dispatch at version {version} but the round's model frame \
+             is version {}",
+            ctx.frame.version
+        );
+        let e = self.edge_for(node)?;
+        self.pending.push((node, version, e));
+        self.dispatched.push((node, version));
+        let frame = ToWorker::Work {
+            version: version as u64,
+            node: node as u64,
+            // Tree setups reject down_codec configs, so the model always
+            // ships dense.
+            payload: ModelPayload::Raw(ctx.frame.params.clone()),
+            lrs: ctx.lrs.to_vec(),
+        };
+        let wr = self.writers[e].as_mut().expect("live edge has a writer");
+        match send_to_worker(wr, &frame) {
+            Ok(()) => {
+                self.events.emit(
+                    "job_dispatched",
+                    vec![
+                        ("edge", Json::num(e as f64)),
+                        ("node", Json::num(node as f64)),
+                        ("version", Json::num(version as f64)),
+                    ],
+                );
+            }
+            Err(err) => {
+                if let Some(tx) = &self.arrivals_tx {
+                    let _ = tx.send((e, FromEdge::Dead(format!("write failed: {err}"))));
+                }
+            }
+        }
+        Ok(e)
+    }
+
+    /// Retire a dead edge: mark it gone, hand every job it held back to
+    /// the planner as freed capacity, return the replacement dispatches.
+    /// Idempotent per edge.
+    fn handle_dead(&mut self, e: usize, reason: &str) -> crate::Result<Vec<Decision>> {
+        if !self.alive.get(e).copied().unwrap_or(false) {
+            return Ok(Vec::new());
+        }
+        self.alive[e] = false;
+        self.writers[e] = None;
+        let lost: Vec<(usize, usize)> = self
+            .pending
+            .iter()
+            .filter(|&&(_, _, pe)| pe == e)
+            .map(|&(n, v, _)| (n, v))
+            .collect();
+        self.pending.retain(|&(_, _, pe)| pe != e);
+        self.events.emit(
+            "edge_left",
+            vec![
+                ("edge", Json::num(e as f64)),
+                ("jobs_retired", Json::num(lost.len() as f64)),
+                ("reason", Json::str(reason)),
+            ],
+        );
+        eprintln!(
+            "leader: edge {e} left ({reason}); retiring {} in-flight job(s)",
+            lost.len()
+        );
+        anyhow::ensure!(
+            self.alive.iter().any(|&a| a),
+            "all edge leaders are gone; cannot continue the run"
+        );
+        let planner = self.planner.as_mut().unwrap();
+        let mut decisions = Vec::new();
+        for (node, version) in lost {
+            decisions.extend(planner.on_event(PlannerEvent::CapacityFreed { node, version })?);
+        }
+        Ok(decisions)
+    }
+
+    fn next_event(&mut self) -> crate::Result<(usize, FromEdge)> {
+        let rx = self
+            .arrivals
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("TcpTree used before setup"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("all edge connections closed"))
+    }
+
+    /// Absorb one `PartialUpdate` from edge `e` into the planner,
+    /// returning its decisions.
+    fn on_partial(
+        &mut self,
+        e: usize,
+        edge_slot: u64,
+        weight: f64,
+        contribs: Vec<Contrib>,
+        payload: PartialPayload,
+    ) -> crate::Result<Vec<Decision>> {
+        anyhow::ensure!(
+            edge_slot as usize == e,
+            "partial stamped edge {edge_slot} arrived on connection {e}"
+        );
+        let mut out = Vec::new();
+        match payload {
+            PartialPayload::Relay(frames) => {
+                anyhow::ensure!(
+                    !self.summed,
+                    "edge {e} sent a relay partial to a summed-mode root"
+                );
+                for (k, enc) in contribs.iter().zip(frames) {
+                    let (node, version) = (k.node as usize, k.version as usize);
+                    let pos = self
+                        .pending
+                        .iter()
+                        .position(|&(n, v, _)| n == node && v == version);
+                    let Some(pos) = pos else {
+                        // A straggler relayed by an edge whose job was
+                        // already retired and re-dispatched elsewhere.
+                        eprintln!(
+                            "[tcp-tree] ignoring late upload (node {node}, \
+                             version {version}) from a retired job"
+                        );
+                        continue;
+                    };
+                    self.pending.swap_remove(pos);
+                    self.win_bits_up += k.bits;
+                    // Relay forwards the same frame on the second hop.
+                    self.win_bits_edge += k.bits;
+                    self.events.emit(
+                        "upload_arrived",
+                        vec![
+                            ("compute_ms", Json::num(k.compute_ms)),
+                            ("decode_ms", Json::num(k.decode_ms)),
+                            ("edge", Json::num(e as f64)),
+                            ("node", Json::num(node as f64)),
+                            ("version", Json::num(version as f64)),
+                        ],
+                    );
+                    out.extend(self.planner.as_mut().unwrap().on_event(
+                        PlannerEvent::UploadArrived { node, version, enc },
+                    )?);
+                }
+            }
+            PartialPayload::Summed(frame) => {
+                anyhow::ensure!(
+                    self.summed,
+                    "edge {e} sent a summed partial to a relay-mode root"
+                );
+                anyhow::ensure!(!contribs.is_empty(), "summed partial with no contribs");
+                anyhow::ensure!(
+                    weight == contribs.len() as f64,
+                    "summed partial weight {weight} disagrees with its {} contribs",
+                    contribs.len()
+                );
+                let id = self.partial_store.len();
+                let version = contribs[0].version;
+                self.win_bits_edge += frame.bits();
+                for k in &contribs {
+                    anyhow::ensure!(
+                        k.version == version,
+                        "summed partial mixes versions {version} and {}",
+                        k.version
+                    );
+                    let (node, version) = (k.node as usize, k.version as usize);
+                    // Summed mode runs degenerate knobs with whole-cohort
+                    // failure domains: every contrib must still be a live
+                    // job, or the frame's sum no longer matches any
+                    // committable unit.
+                    let pos = self
+                        .pending
+                        .iter()
+                        .position(|&(n, v, _)| n == node && v == version)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "summed partial from edge {e} contains \
+                                 (node {node}, version {version}) with no \
+                                 pending dispatch"
+                            )
+                        })?;
+                    self.pending.swap_remove(pos);
+                    self.store_of.insert((node, version), id);
+                    self.win_bits_up += k.bits;
+                    self.events.emit(
+                        "upload_arrived",
+                        vec![
+                            ("compute_ms", Json::num(k.compute_ms)),
+                            ("decode_ms", Json::num(k.decode_ms)),
+                            ("edge", Json::num(e as f64)),
+                            ("node", Json::num(node as f64)),
+                            ("version", Json::num(version as f64)),
+                        ],
+                    );
+                    // The planner tracks arrival order and staleness; the
+                    // actual frame is regrouped in at commit, so it sees a
+                    // zero-length stub carrying the right (p, spec).
+                    let stub = Encoded {
+                        buf: BitBuf::from_parts(Vec::new(), 0)?,
+                        p: frame.p,
+                        spec: frame.spec.clone(),
+                    };
+                    out.extend(self.planner.as_mut().unwrap().on_event(
+                        PlannerEvent::UploadArrived { node, version, enc: stub },
+                    )?);
+                }
+                self.events.emit(
+                    "partial_committed",
+                    vec![
+                        ("bits", Json::num(frame.bits() as f64)),
+                        ("contribs", Json::num(contribs.len() as f64)),
+                        ("edge", Json::num(e as f64)),
+                        ("version", Json::num(version as f64)),
+                    ],
+                );
+                self.partial_store.push(Some((frame, contribs.len())));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Replace a summed-mode commit batch's stub uploads with one
+    /// cohort-mass upload per stored partial, preserving the batch's
+    /// first-occurrence order.
+    fn regroup(&mut self, uploads: Vec<Upload>) -> crate::Result<Vec<Upload>> {
+        let mut order: Vec<usize> = Vec::new();
+        let mut groups: HashMap<usize, Vec<Upload>> = HashMap::new();
+        for u in uploads {
+            let id = self
+                .store_of
+                .remove(&(u.node, u.origin_round))
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "committed upload (node {}, version {}) has no stored \
+                         summed partial",
+                        u.node,
+                        u.origin_round
+                    )
+                })?;
+            if !groups.contains_key(&id) {
+                order.push(id);
+            }
+            groups.entry(id).or_default().push(u);
+        }
+        let mut out = Vec::with_capacity(order.len());
+        for id in order {
+            let members = groups.remove(&id).unwrap();
+            let (frame, expected) = self.partial_store[id]
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("stored partial {id} consumed twice"))?;
+            anyhow::ensure!(
+                members.len() == expected,
+                "summed partial splits across commits: {} of {expected} \
+                 contribs committed together",
+                members.len()
+            );
+            let first = &members[0];
+            out.push(Upload {
+                node: first.node,
+                origin_round: first.origin_round,
+                staleness: first.staleness,
+                enc: frame,
+                mass: members.len() as f64,
+            });
+        }
+        Ok(out)
+    }
+}
+
+impl Transport for TcpTree {
+    fn name(&self) -> &'static str {
+        "tcp-tree"
+    }
+
+    fn virtual_time(&self) -> bool {
+        false
+    }
+
+    fn rebuilds_codec_from_config(&self) -> bool {
+        true
+    }
+
+    fn buffered_async(&self) -> bool {
+        true
+    }
+
+    fn set_events(&mut self, events: EventSink) {
+        self.events = events;
+    }
+
+    fn setup(
+        &mut self,
+        cfg: &ExperimentConfig,
+        _engine: &mut dyn Engine,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(self.n_edges >= 1, "need at least one edge leader");
+        anyhow::ensure!(
+            cfg.async_rounds,
+            "the tree leader runs the buffered-async protocol; set \
+             async_rounds in the config"
+        );
+        anyhow::ensure!(
+            cfg.down_codec.is_none(),
+            "tree topologies ship raw models only: a downlink delta chain \
+             would need per-edge reference tracking — unset down_codec"
+        );
+        if self.summed {
+            anyhow::ensure!(
+                cfg.max_staleness == 0 && cfg.effective_buffer_size() == cfg.r,
+                "summed partials require the degenerate full-wave knobs \
+                 (buffer_size == r == {}, max_staleness == 0): a summed frame \
+                 commits as one unit, so every cohort upload must land in the \
+                 same commit",
+                cfg.r
+            );
+            anyhow::ensure!(
+                !cfg.codec.is_stateful(),
+                "summed partials cannot re-encode through a stateful codec: \
+                 the edge-side re-encode would fork the per-node residual \
+                 streams"
+            );
+        }
+        let listener = TcpListener::bind(&self.bind)?;
+        eprintln!("leader: listening on {}", listener.local_addr()?);
+        // Fixed edge membership: accept exactly n_edges, slot = join
+        // order, then drop the listener (no mid-run edge joins — a lost
+        // edge's nodes re-pin to survivors instead).
+        let mut conns = Vec::with_capacity(self.n_edges);
+        for slot in 0..self.n_edges {
+            let (stream, peer) = listener.accept()?;
+            stream.set_nodelay(true)?;
+            let mut rd = stream.try_clone()?;
+            let workers = match recv_to_leader(&mut rd)? {
+                ToLeader::EdgeJoin { proto, workers } => {
+                    anyhow::ensure!(
+                        proto == PROTO_VERSION,
+                        "edge at {peer} speaks wire-protocol v{proto}; this \
+                         leader requires v{PROTO_VERSION} — rebuild so root \
+                         and edges match"
+                    );
+                    workers
+                }
+                other => anyhow::bail!("expected EdgeJoin from {peer}, got {other:?}"),
+            };
+            let mut wr = stream;
+            send_to_worker(
+                &mut wr,
+                &ToWorker::EdgeSetup {
+                    proto: PROTO_VERSION,
+                    cfg: cfg.clone(),
+                    edge_slot: slot as u64,
+                    n_edges: self.n_edges as u64,
+                    summed: self.summed,
+                },
+            )?;
+            eprintln!("leader: edge {slot} joined from {peer} ({workers} worker(s))");
+            conns.push((rd, wr, peer.to_string(), workers));
+        }
+        // Ready arrives once an edge's own cohort has handshaken.
+        for (rd, _, peer, _) in conns.iter_mut() {
+            let msg = recv_to_leader(rd)?;
+            anyhow::ensure!(
+                matches!(msg, ToLeader::Ready),
+                "expected Ready from edge at {peer}"
+            );
+        }
+        for (slot, (_, _, peer, workers)) in conns.iter().enumerate() {
+            self.events.emit(
+                "edge_joined",
+                vec![
+                    ("edge", Json::num(slot as f64)),
+                    ("peer", Json::str(peer.as_str())),
+                    ("workers", Json::num(*workers as f64)),
+                ],
+            );
+        }
+        eprintln!("leader: {} edge leader(s) ready", self.n_edges);
+        self.planner = Some(CommitPlanner::new(cfg)?);
+        self.assign = (0..cfg.n_nodes).map(|n| n % self.n_edges).collect();
+        self.pending.clear();
+        self.dispatched.clear();
+        self.partial_store.clear();
+        self.store_of.clear();
+        self.win_bits_up = 0;
+        self.win_bits_edge = 0;
+        self.writers.clear();
+        self.alive.clear();
+        self.readers.clear();
+        let (tx, rx) = channel();
+        self.arrivals_tx = Some(tx);
+        self.arrivals = Some(rx);
+        for (rd, wr, _, _) in conns {
+            let idx = self.writers.len();
+            self.writers.push(Some(wr));
+            self.alive.push(true);
+            self.spawn_reader(idx, rd);
+        }
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        ctx: &RoundCtx<'_>,
+        _codec: &dyn UpdateCodec,
+        _engine: &mut dyn Engine,
+    ) -> crate::Result<RoundOutcome> {
+        anyhow::ensure!(!self.writers.is_empty(), "TcpTree::round before setup");
+        {
+            let planner = self.planner.as_mut().unwrap();
+            anyhow::ensure!(
+                ctx.round == planner.version(),
+                "TcpTree expects sequential rounds: got {} at version {}",
+                ctx.round,
+                planner.version()
+            );
+        }
+        self.dispatched.clear();
+        let mut queue: std::collections::VecDeque<Decision> =
+            self.planner.as_mut().unwrap().begin_version(ctx.nodes)?.into();
+        // Edges dispatched to since the last wave marker (summed mode).
+        let mut burst: BTreeSet<usize> = BTreeSet::new();
+        loop {
+            while let Some(d) = queue.pop_front() {
+                match d {
+                    Decision::Dispatch { node, version, .. } => {
+                        let e = self.dispatch(node, version, ctx)?;
+                        burst.insert(e);
+                    }
+                    Decision::Drop { node, staleness } => {
+                        self.events.emit(
+                            "upload_dropped",
+                            vec![
+                                ("node", Json::num(node as f64)),
+                                ("staleness", Json::num(staleness as f64)),
+                            ],
+                        );
+                        eprintln!(
+                            "[tcp-tree] commit {}: dropped node {node} upload \
+                             (staleness {staleness})",
+                            ctx.round
+                        );
+                    }
+                    Decision::Commit { uploads, dropped } => {
+                        let uploads = if self.summed {
+                            self.regroup(uploads)?
+                        } else {
+                            uploads
+                        };
+                        return Ok(RoundOutcome {
+                            uploads,
+                            timing: None,
+                            dropped,
+                            dispatches: std::mem::take(&mut self.dispatched),
+                            uplink_bits: Some((
+                                std::mem::take(&mut self.win_bits_up),
+                                std::mem::take(&mut self.win_bits_edge),
+                            )),
+                        });
+                    }
+                }
+            }
+            // About to block: close the dispatch burst. Summed edges must
+            // only flush at marker boundaries (a timing-dependent flush
+            // would split partials non-reproducibly); relay edges forward
+            // per-upload and need no markers.
+            if self.summed {
+                for e in std::mem::take(&mut burst) {
+                    if let Some(wr) = self.writers.get_mut(e).and_then(|w| w.as_mut()) {
+                        if let Err(err) = send_to_worker(wr, &ToWorker::FlushPartial) {
+                            if let Some(tx) = &self.arrivals_tx {
+                                let _ = tx
+                                    .send((e, FromEdge::Dead(format!("write failed: {err}"))));
+                            }
+                        }
+                    }
+                }
+            } else {
+                burst.clear();
+            }
+            let (e, msg) = self.next_event()?;
+            match msg {
+                FromEdge::Dead(reason) => {
+                    queue.extend(self.handle_dead(e, &reason)?);
+                }
+                FromEdge::Msg(ToLeader::PartialUpdate {
+                    edge_slot,
+                    weight,
+                    contribs,
+                    payload,
+                }) => {
+                    queue.extend(self.on_partial(e, edge_slot, weight, contribs, payload)?);
+                }
+                FromEdge::Msg(other) => anyhow::bail!("unexpected message {other:?}"),
+            }
+        }
+    }
+
+    fn shutdown(&mut self) -> crate::Result<()> {
+        // Drain straggler jobs still in flight (relay mode can end a run
+        // with re-dispatched jobs unanswered), then release the edges —
+        // they forward Shutdown to their cohorts. Best-effort: the first
+        // error is reported after every step has run.
+        let dropped = self.planner.as_ref().map_or(0, CommitPlanner::dropped);
+        let mut first_err: Option<anyhow::Error> = None;
+        while !self.pending.is_empty() {
+            match self.next_event() {
+                Ok((e, FromEdge::Dead(reason))) => {
+                    if self.alive.get(e).copied().unwrap_or(false) {
+                        self.alive[e] = false;
+                        self.writers[e] = None;
+                        let lost =
+                            self.pending.iter().filter(|&&(_, _, pe)| pe == e).count();
+                        self.pending.retain(|&(_, _, pe)| pe != e);
+                        self.events.emit(
+                            "edge_left",
+                            vec![
+                                ("edge", Json::num(e as f64)),
+                                ("jobs_retired", Json::num(lost as f64)),
+                                ("reason", Json::str(reason.as_str())),
+                            ],
+                        );
+                        eprintln!(
+                            "leader: edge {e} left during drain ({reason}); \
+                             discarding {lost} in-flight job(s)"
+                        );
+                    }
+                }
+                Ok((_, FromEdge::Msg(ToLeader::PartialUpdate { contribs, .. }))) => {
+                    for k in &contribs {
+                        let (node, version) = (k.node as usize, k.version as usize);
+                        if let Some(pos) = self
+                            .pending
+                            .iter()
+                            .position(|&(n, v, _)| n == node && v == version)
+                        {
+                            self.pending.swap_remove(pos);
+                        }
+                    }
+                }
+                Ok((_, FromEdge::Msg(other))) => {
+                    first_err
+                        .get_or_insert_with(|| anyhow::anyhow!("unexpected message {other:?}"));
+                    break;
+                }
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if dropped > 0 {
+            eprintln!("[tcp-tree] run complete: {dropped} stale upload(s) dropped");
+        }
+        for w in self.writers.iter_mut().flatten() {
+            if let Err(e) = send_to_worker(w, &ToWorker::Shutdown) {
+                first_err.get_or_insert(e);
+            }
+        }
+        self.arrivals_tx = None;
+        self.arrivals = None;
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn export_state(&self) -> crate::Result<Option<crate::ops::TransportState>> {
+        let planner = self
+            .planner
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("TcpTree::export_state before setup"))?;
+        // In-flight jobs live in worker processes behind the edges and
+        // cannot be serialized; restore_state insists on quiescence.
+        Ok(Some(crate::ops::TransportState::Tree { planner: planner.export_state() }))
+    }
+
+    fn restore_state(&mut self, state: crate::ops::TransportState) -> crate::Result<()> {
+        anyhow::ensure!(!self.writers.is_empty(), "TcpTree::restore_state before setup");
+        let crate::ops::TransportState::Tree { planner } = state else {
+            anyhow::bail!(
+                "checkpoint holds flat async-transport state; resume it with a \
+                 flat leader (no --edge-leaders) or the simulator, not a tree \
+                 leader"
+            );
+        };
+        anyhow::ensure!(
+            planner.in_flight.is_empty() && planner.buffer.is_empty(),
+            "the tree leader can only resume from a quiescent checkpoint (no \
+             in-flight jobs or buffered uploads): in-flight model state lives \
+             in worker processes and cannot be recreated. Run with \
+             buffer_size == r and max_staleness == 0 (where every commit \
+             quiesces), or resume this checkpoint in the simulator instead"
+        );
+        self.planner = Some(CommitPlanner::from_state(planner)?);
+        Ok(())
+    }
+}
+
+// ---------------- the edge-leader process ----------------
+
+/// Knobs for [`run_edge_retrying`].
+#[derive(Debug, Default)]
+pub struct EdgeOptions {
+    /// Cohort size: how many workers this edge accepts before reporting
+    /// Ready upstream.
+    pub workers: usize,
+    /// Exit cleanly after sending this many partials (after forwarding
+    /// Shutdown to the cohort) — a deterministic edge-death injector for
+    /// churn tests (`fedpaq edge --max-partials N`).
+    pub max_partials: Option<u64>,
+    /// Where reconnect attempts are reported. Null by default.
+    pub events: EventSink,
+}
+
+/// What the edge's reader threads feed its main loop.
+enum EdgeEvent {
+    Root(ToWorker),
+    RootDead(String),
+    Worker(usize, ToLeader),
+    WorkerDead(usize, String),
+}
+
+/// Dial `addr`, retrying transient failures until `retry_for` elapses —
+/// the same backoff/jitter policy as
+/// [`run_worker_retrying`](super::worker::run_worker_retrying), reported
+/// as `edge_reconnecting` events.
+fn dial_retrying(
+    addr: &str,
+    events: &EventSink,
+    retry_for: Duration,
+) -> crate::Result<TcpStream> {
+    let transient = |e: &std::io::Error| {
+        matches!(
+            e.kind(),
+            std::io::ErrorKind::ConnectionRefused
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::TimedOut
+        )
+    };
+    let jitter_of = |attempt: u32| {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in addr.bytes().chain(attempt.to_le_bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    };
+    let deadline = std::time::Instant::now() + retry_for;
+    let mut attempt: u32 = 0;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if transient(&e) => {
+                anyhow::ensure!(
+                    std::time::Instant::now() < deadline,
+                    "connect {addr}: retry budget ({retry_for:?}) exhausted \
+                     after {attempt} attempt(s): {e}"
+                );
+                let base = 100u64.saturating_mul(1u64 << attempt.min(10)).min(5_000);
+                let delay_ms = base + jitter_of(attempt) % (base / 4 + 1);
+                events.emit(
+                    "edge_reconnecting",
+                    vec![
+                        ("attempt", Json::num(attempt as f64)),
+                        ("delay_ms", Json::num(delay_ms as f64)),
+                        ("error", Json::str(e.to_string())),
+                    ],
+                );
+                eprintln!("edge: root {addr} not reachable ({e}); retrying in {delay_ms}ms");
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                attempt += 1;
+            }
+            Err(e) => return Err(anyhow::anyhow!("connect {addr}: {e}")),
+        }
+    }
+}
+
+/// Edge-leader main loop: dial the root at `connect` (retrying while it
+/// is not yet listening), accept `opts.workers` workers on `bind`,
+/// then forward dispatches down and partials up until the root sends
+/// Shutdown. See the module docs for the relay/summed flush rules.
+pub fn run_edge_retrying(
+    connect: &str,
+    bind: &str,
+    opts: EdgeOptions,
+    retry_for: Duration,
+) -> crate::Result<()> {
+    anyhow::ensure!(opts.workers >= 1, "need at least one worker per edge");
+    let root = dial_retrying(connect, &opts.events, retry_for)?;
+    root.set_nodelay(true)?;
+    let root_rd = root.try_clone()?;
+    let mut root_wr = root;
+    send_to_leader(
+        &mut root_wr,
+        &ToLeader::EdgeJoin { proto: PROTO_VERSION, workers: opts.workers as u64 },
+    )?;
+    let (cfg, edge_slot, n_edges, summed) = {
+        let mut rd = root_rd.try_clone()?;
+        match recv_to_worker(&mut rd)? {
+            ToWorker::EdgeSetup { proto, cfg, edge_slot, n_edges, summed } => {
+                anyhow::ensure!(
+                    proto == PROTO_VERSION,
+                    "root speaks wire-protocol v{proto}; this edge requires \
+                     v{PROTO_VERSION} — rebuild so root and edges match"
+                );
+                (cfg, edge_slot, n_edges as usize, summed)
+            }
+            other => anyhow::bail!("expected EdgeSetup from the root, got {other:?}"),
+        }
+    };
+    // The summed re-encode runs through the run's own codec family,
+    // rebuilt from the broadcast spec like any worker's. Relay edges
+    // never decode — frames pass through untouched.
+    let codec: Option<Box<dyn UpdateCodec>> = if summed {
+        let c = cfg.codec.build()?;
+        c.reset_state();
+        Some(c)
+    } else {
+        None
+    };
+    // Accept the cohort (Join/Setup/Ready, mirroring a flat leader).
+    let listener = TcpListener::bind(bind)?;
+    eprintln!("edge: listening on {}", listener.local_addr()?);
+    let k = opts.workers;
+    let mut cohort = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (stream, peer) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        let mut rd = stream.try_clone()?;
+        match recv_to_leader(&mut rd)? {
+            ToLeader::Join { proto } => anyhow::ensure!(
+                proto == PROTO_VERSION,
+                "worker at {peer} speaks wire-protocol v{proto}; this edge \
+                 requires v{PROTO_VERSION} — rebuild so edge and workers match"
+            ),
+            other => anyhow::bail!("expected Join from {peer}, got {other:?}"),
+        }
+        eprintln!("edge {edge_slot}: worker joined from {peer}");
+        cohort.push((rd, stream));
+    }
+    for (_, wr) in cohort.iter_mut() {
+        send_to_worker(wr, &ToWorker::Setup { proto: PROTO_VERSION, cfg: cfg.clone() })?;
+    }
+    for (rd, _) in cohort.iter_mut() {
+        let msg = recv_to_leader(rd)?;
+        anyhow::ensure!(matches!(msg, ToLeader::Ready), "expected Ready");
+    }
+    send_to_leader(&mut root_wr, &ToLeader::Ready)?;
+    eprintln!("edge {edge_slot}: {k} worker(s) ready");
+
+    // One reader thread per socket (root + each worker), all feeding one
+    // channel — the edge's main loop must never block on one peer while
+    // another has traffic.
+    let (tx, rx) = channel::<EdgeEvent>();
+    let mut reader_handles = Vec::with_capacity(k + 1);
+    {
+        let tx = tx.clone();
+        let mut rd = root_rd;
+        reader_handles.push(std::thread::spawn(move || loop {
+            match recv_to_worker(&mut rd) {
+                Ok(msg) => {
+                    if tx.send(EdgeEvent::Root(msg)).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(EdgeEvent::RootDead(e.to_string()));
+                    return;
+                }
+            }
+        }));
+    }
+    let mut worker_wrs: Vec<TcpStream> = Vec::with_capacity(k);
+    for (wi, (mut rd, wr)) in cohort.into_iter().enumerate() {
+        worker_wrs.push(wr);
+        let tx = tx.clone();
+        reader_handles.push(std::thread::spawn(move || loop {
+            match recv_to_leader(&mut rd) {
+                Ok(msg) => {
+                    if tx.send(EdgeEvent::Worker(wi, msg)).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(EdgeEvent::WorkerDead(wi, e.to_string()));
+                    return;
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    // Main loop state. `outstanding` counts forwarded-but-unanswered
+    // dispatches; summed mode flushes when a root marker has closed the
+    // wave AND the cohort has drained.
+    let mut outstanding: usize = 0;
+    let mut wave_closed = false;
+    let mut buffered: Vec<(u64, u64, Encoded, f64, f64)> = Vec::new();
+    let mut partials_sent: u64 = 0;
+    let finish = |worker_wrs: &mut [TcpStream]| -> crate::Result<()> {
+        for wr in worker_wrs.iter_mut() {
+            send_to_worker(wr, &ToWorker::Shutdown)?;
+        }
+        Ok(())
+    };
+    loop {
+        // Summed flush: the wave is closed and every forwarded job has
+        // answered. Sorted by (version, node) — the canonical contrib
+        // order the wire format documents.
+        if summed && wave_closed && outstanding == 0 {
+            wave_closed = false;
+            if !buffered.is_empty() {
+                buffered.sort_by_key(|&(v, n, ..)| (v, n));
+                let version = buffered[0].0;
+                anyhow::ensure!(
+                    buffered.iter().all(|&(v, ..)| v == version),
+                    "summed flush mixes model versions (degenerate knobs \
+                     should make waves single-version)"
+                );
+                let contribs: Vec<Contrib> = buffered
+                    .iter()
+                    .map(|(v, n, enc, compute_ms, decode_ms)| Contrib {
+                        node: *n,
+                        version: *v,
+                        bits: enc.bits(),
+                        compute_ms: *compute_ms,
+                        decode_ms: *decode_ms,
+                    })
+                    .collect();
+                let frames: Vec<Encoded> =
+                    buffered.drain(..).map(|(_, _, enc, _, _)| enc).collect();
+                let p = frames[0].p;
+                let mut rng =
+                    Rng::from_coords(cfg.seed, &[TREE_STREAM, edge_slot, version]);
+                let (frame, weight) = partial_reencode(
+                    codec.as_ref().expect("summed edge has a codec").as_ref(),
+                    &frames,
+                    p,
+                    &mut rng,
+                )?;
+                send_to_leader(
+                    &mut root_wr,
+                    &ToLeader::PartialUpdate {
+                        edge_slot,
+                        weight,
+                        contribs,
+                        payload: PartialPayload::Summed(frame),
+                    },
+                )?;
+                partials_sent += 1;
+                if opts.max_partials.is_some_and(|cap| partials_sent >= cap) {
+                    eprintln!("edge {edge_slot}: reached --max-partials {partials_sent}; exiting");
+                    return finish(&mut worker_wrs);
+                }
+            }
+        }
+        let ev = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("edge {edge_slot}: all connections closed"))?;
+        match ev {
+            EdgeEvent::Root(ToWorker::Work { version, node, payload, lrs }) => {
+                // Stable cohort-local pinning: nodes on this edge are a
+                // residue class mod n_edges, so dividing out the edge
+                // count spreads them evenly over the K workers.
+                let wi = (node as usize / n_edges) % k;
+                send_to_worker(
+                    &mut worker_wrs[wi],
+                    &ToWorker::Work { version, node, payload, lrs },
+                )?;
+                outstanding += 1;
+            }
+            EdgeEvent::Root(ToWorker::FlushPartial) => {
+                anyhow::ensure!(
+                    summed,
+                    "root sent a FlushPartial marker to a relay-mode edge"
+                );
+                wave_closed = true;
+            }
+            EdgeEvent::Root(ToWorker::Shutdown) => {
+                eprintln!("edge {edge_slot}: shutdown");
+                return finish(&mut worker_wrs);
+            }
+            EdgeEvent::Root(other) => {
+                anyhow::bail!("unexpected message from root: {other:?}")
+            }
+            EdgeEvent::RootDead(reason) => {
+                anyhow::bail!("edge {edge_slot}: root connection lost: {reason}")
+            }
+            EdgeEvent::Worker(_, ToLeader::Update { version, node, enc, compute_ms, decode_ms }) => {
+                outstanding = outstanding
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow::anyhow!("update with no outstanding dispatch"))?;
+                if summed {
+                    buffered.push((version, node, enc, compute_ms, decode_ms));
+                } else {
+                    // Relay: forward immediately as a one-contrib partial,
+                    // preserving true arrival order for the root's planner
+                    // exactly like a flat async leader.
+                    let contrib = Contrib {
+                        node,
+                        version,
+                        bits: enc.bits(),
+                        compute_ms,
+                        decode_ms,
+                    };
+                    send_to_leader(
+                        &mut root_wr,
+                        &ToLeader::PartialUpdate {
+                            edge_slot,
+                            weight: 1.0,
+                            contribs: vec![contrib],
+                            payload: PartialPayload::Relay(vec![enc]),
+                        },
+                    )?;
+                    partials_sent += 1;
+                    if opts.max_partials.is_some_and(|cap| partials_sent >= cap) {
+                        eprintln!(
+                            "edge {edge_slot}: reached --max-partials {partials_sent}; exiting"
+                        );
+                        return finish(&mut worker_wrs);
+                    }
+                }
+            }
+            EdgeEvent::Worker(wi, other) => {
+                anyhow::bail!("unexpected message from worker {wi}: {other:?}")
+            }
+            EdgeEvent::WorkerDead(wi, reason) => {
+                // The whole cohort is this edge's failure domain: give up
+                // so the root retires and re-pins every node we own.
+                anyhow::bail!(
+                    "edge {edge_slot}: worker {wi} died ({reason}); \
+                     surrendering the cohort to the root"
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::CodecSpec;
+
+    #[test]
+    fn partial_reencode_identity_matches_f64_sum_cast() {
+        let codec = CodecSpec::Identity.build().unwrap();
+        let a = vec![1.5f32, -2.25, 0.125, 1e-7];
+        let b = vec![0.5f32, 0.75, -0.125, 3e-7];
+        let mut rng = Rng::seed_from_u64(0);
+        let encs = vec![codec.encode(&a, &mut rng), codec.encode(&b, &mut rng)];
+        let (frame, mass) =
+            partial_reencode(codec.as_ref(), &encs, 4, &mut Rng::seed_from_u64(1)).unwrap();
+        assert_eq!(mass, 2.0);
+        let expect: Vec<f32> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| (x as f64 + y as f64) as f32)
+            .collect();
+        let got = codec.decode(&frame).unwrap();
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn partial_reencode_is_deterministic_per_rng_stream() {
+        let codec = CodecSpec::qsgd(2).build().unwrap();
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..64).map(|j| ((i * 64 + j) as f32 * 0.17).sin()).collect())
+            .collect();
+        let encs: Vec<Encoded> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| codec.encode(x, &mut Rng::seed_from_u64(i as u64)))
+            .collect();
+        let run = || {
+            let mut rng = Rng::from_coords(33, &[TREE_STREAM, 1, 4]);
+            partial_reencode(codec.as_ref(), &encs, 64, &mut rng).unwrap()
+        };
+        let (fa, wa) = run();
+        let (fb, wb) = run();
+        assert_eq!(wa, wb);
+        assert_eq!(fa.buf.words(), fb.buf.words());
+        assert_eq!(fa.bits(), fb.bits());
+    }
+
+    #[test]
+    fn partial_reencode_rejects_empty_and_mixed_widths() {
+        let codec = CodecSpec::Identity.build().unwrap();
+        let mut rng = Rng::seed_from_u64(0);
+        assert!(partial_reencode(codec.as_ref(), &[], 4, &mut rng).is_err());
+        let encs = vec![
+            codec.encode(&[1.0, 2.0], &mut rng),
+            codec.encode(&[1.0, 2.0, 3.0], &mut rng),
+        ];
+        assert!(partial_reencode(codec.as_ref(), &encs, 2, &mut rng).is_err());
+    }
+}

@@ -313,6 +313,10 @@ fn serve(stream: TcpStream, artifacts: &Path, opts: WorkerOptions) -> crate::Res
                 }
             }
             ToWorker::Shutdown => return Ok(()),
+            // Edge-leader frames (EdgeSetup / FlushPartial) are root →
+            // edge traffic; a worker receiving one means someone pointed
+            // an edge connection's frames at a worker loop.
+            other => anyhow::bail!("unexpected message for a worker: {other:?}"),
         }
     }
 }

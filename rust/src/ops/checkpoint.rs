@@ -27,20 +27,22 @@
 //!   stream, travels inside [`PlannerState`]); the table exists so a
 //!   future stateful stream has a format slot without a version bump.
 //!
-//! ## Binary layout (format version 3)
+//! ## Binary layout (format version 4)
 //!
 //! Little-endian, written with the same hand-rolled `Buf`/`Cursor`
 //! primitives as the wire protocol ([`crate::net::proto`]):
 //!
 //! ```text
 //! "FPQC" magic · u32 format version · u64 config_hash · u64 seed
-//! · u64 next_round · u64 total_bits · u64 total_bits_down · f64 clock_now
+//! · u64 next_round · u64 total_bits · u64 total_bits_down
+//! · u64 total_bits_edge_to_root · f64 clock_now
 //! · params f32s · curve label + points · round stats
 //! · codec state (node, residuals) pairs
 //! · downlink reference f32s · link-bit ledger u64s · per-node last u64s
 //! · downlink codec state (node, residuals) pairs
 //! · rng table (key, [u64;4]) pairs
-//! · transport tag (0 = none, 1 = async planner + jobs)
+//! · transport tag (0 = none, 1 = async planner + jobs,
+//!   2 = tree planner)
 //! ```
 //!
 //! Version 2 added the bidirectional-compression fields:
@@ -59,6 +61,15 @@
 //! in canonical event-queue order (`(finish, version, slot, node)`)
 //! rather than arrival-vector order, so checkpoint bytes are independent
 //! of the queue's internal layout.
+//!
+//! Version 4 added the hierarchical-aggregation fields:
+//! `total_bits_edge_to_root`, the `bits_edge_to_root` column inside
+//! curve points and round stats (the split per-hop uplink accounting),
+//! and the `Tree` transport tag capturing a tree root's planner
+//! snapshot. As with the flat TCP transports, edge-leader in-flight
+//! state lives in other processes, so tree checkpoints are only
+//! resumable when quiescent — the edge partial buffers are empty at
+//! every commit boundary in degenerate mode (see `docs/TOPOLOGY.md`).
 //!
 //! Decoding rejects wrong magic, unknown format versions, truncation
 //! (every read is bounds-checked) and trailing bytes — the same
@@ -81,7 +92,7 @@ use std::path::Path;
 
 /// Current checkpoint format version (bumped on layout changes; decode
 /// rejects versions it does not know).
-pub const CHECKPOINT_VERSION: u32 = 3;
+pub const CHECKPOINT_VERSION: u32 = 4;
 
 const MAGIC: &[u8; 4] = b"FPQC";
 
@@ -108,6 +119,12 @@ pub enum TransportState {
     /// worker processes and is only resumable from a quiescent
     /// checkpoint (see [`crate::net::TcpAsync`]).
     Async { planner: PlannerState, now: f64, jobs: Vec<JobState> },
+    /// Hierarchical-tree root state: the planner snapshot. Edge-leader
+    /// partial buffers live in edge processes and drain to empty at
+    /// every commit boundary under the degenerate knobs, so — like the
+    /// flat socket transport — a tree checkpoint is only resumable when
+    /// quiescent ([`crate::net::TcpTree`] enforces it).
+    Tree { planner: PlannerState },
 }
 
 /// A complete run snapshot. See the module docs for the format contract.
@@ -125,6 +142,8 @@ pub struct Checkpoint {
     /// Cumulative downlink (broadcast) bits; 0 for runs that predate or
     /// never enable the downlink seam.
     pub total_bits_down: u64,
+    /// Cumulative edge→root uplink bits; 0 on flat topologies.
+    pub total_bits_edge_to_root: u64,
     /// Virtual clock at the checkpoint (0 for wall-clock transports,
     /// whose time axis restarts on resume).
     pub clock_now: f64,
@@ -170,6 +189,7 @@ impl Checkpoint {
         b.u64(self.next_round as u64);
         b.u64(self.total_bits);
         b.u64(self.total_bits_down);
+        b.u64(self.total_bits_edge_to_root);
         b.f64(self.clock_now);
         b.f32s(&self.params);
         b.string(&self.curve_label);
@@ -180,6 +200,7 @@ impl Checkpoint {
             b.f64(p.time);
             b.u64(p.bits_up);
             b.u64(p.bits_down);
+            b.u64(p.bits_edge_to_root);
             b.f64(p.loss);
         }
         b.u64(self.stats.len() as u64);
@@ -189,6 +210,7 @@ impl Checkpoint {
             b.f64(s.comm_time);
             b.u64(s.bits_up);
             b.u64(s.bits_down);
+            b.u64(s.bits_edge_to_root);
             b.u64(s.dropped);
             b.u64(s.staleness_max as u64);
             b.f64(s.staleness_mean);
@@ -234,6 +256,10 @@ impl Checkpoint {
                     write_encoded(&mut b, &j.enc);
                 }
             }
+            Some(TransportState::Tree { planner }) => {
+                b.u8(2);
+                write_planner(&mut b, planner);
+            }
         }
         b.0
     }
@@ -256,11 +282,12 @@ impl Checkpoint {
         let next_round = c.u64()? as usize;
         let total_bits = c.u64()?;
         let total_bits_down = c.u64()?;
+        let total_bits_edge_to_root = c.u64()?;
         let clock_now = c.f64()?;
         let params = c.f32s()?;
         let curve_label = c.string()?;
         let count = c.u64()?;
-        let n_curve = read_count(&c, count, 48)?;
+        let n_curve = read_count(&c, count, 56)?;
         let mut curve = Vec::with_capacity(n_curve);
         for _ in 0..n_curve {
             curve.push(CurvePoint {
@@ -269,11 +296,12 @@ impl Checkpoint {
                 time: c.f64()?,
                 bits_up: c.u64()?,
                 bits_down: c.u64()?,
+                bits_edge_to_root: c.u64()?,
                 loss: c.f64()?,
             });
         }
         let count = c.u64()?;
-        let n_stats = read_count(&c, count, 64)?;
+        let n_stats = read_count(&c, count, 72)?;
         let mut stats = Vec::with_capacity(n_stats);
         for _ in 0..n_stats {
             stats.push(RoundStats {
@@ -282,6 +310,7 @@ impl Checkpoint {
                 comm_time: c.f64()?,
                 bits_up: c.u64()?,
                 bits_down: c.u64()?,
+                bits_edge_to_root: c.u64()?,
                 dropped: c.u64()?,
                 staleness_max: c.u64()? as usize,
                 staleness_mean: c.f64()?,
@@ -344,6 +373,7 @@ impl Checkpoint {
                 }
                 Some(TransportState::Async { planner, now, jobs })
             }
+            2 => Some(TransportState::Tree { planner: read_planner(&mut c)? }),
             x => anyhow::bail!("bad checkpoint transport tag {x}"),
         };
         anyhow::ensure!(
@@ -358,6 +388,7 @@ impl Checkpoint {
             next_round,
             total_bits,
             total_bits_down,
+            total_bits_edge_to_root,
             clock_now,
             params,
             curve_label,
@@ -507,6 +538,7 @@ mod tests {
             next_round: 7,
             total_bits: 123_456,
             total_bits_down: 77_000,
+            total_bits_edge_to_root: 9_900,
             clock_now: 98.25,
             params: vec![1.0, -0.5, 0.25, 3.5e-8],
             curve_label: "fedbuff logreg".into(),
@@ -517,6 +549,7 @@ mod tests {
                     time: 0.0,
                     bits_up: 0,
                     bits_down: 0,
+                    bits_edge_to_root: 0,
                     loss: 0.9,
                 },
                 CurvePoint {
@@ -525,6 +558,7 @@ mod tests {
                     time: 98.25,
                     bits_up: 123_456,
                     bits_down: 77_000,
+                    bits_edge_to_root: 9_900,
                     loss: 0.31,
                 },
             ],
@@ -534,6 +568,7 @@ mod tests {
                 comm_time: 1.25,
                 bits_up: 2048,
                 bits_down: 512,
+                bits_edge_to_root: 1024,
                 dropped: 1,
                 staleness_max: 3,
                 staleness_mean: 0.75,
@@ -577,6 +612,7 @@ mod tests {
         assert_eq!(a.next_round, b.next_round);
         assert_eq!(a.total_bits, b.total_bits);
         assert_eq!(a.total_bits_down, b.total_bits_down);
+        assert_eq!(a.total_bits_edge_to_root, b.total_bits_edge_to_root);
         assert_eq!(a.clock_now.to_bits(), b.clock_now.to_bits());
         assert_eq!(a.params, b.params);
         assert_eq!(a.curve_label, b.curve_label);
@@ -611,6 +647,21 @@ mod tests {
         let ck = Checkpoint { transport: None, ..sample() };
         let back = Checkpoint::decode(&ck.encode()).unwrap();
         assert!(back.transport.is_none());
+        assert_eq!(ck.encode(), back.encode());
+    }
+
+    #[test]
+    fn tree_transport_state_roundtrips() {
+        let planner = match sample().transport {
+            Some(TransportState::Async { planner, .. }) => planner,
+            _ => unreachable!(),
+        };
+        let ck = Checkpoint {
+            transport: Some(TransportState::Tree { planner }),
+            ..sample()
+        };
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert!(matches!(back.transport, Some(TransportState::Tree { .. })));
         assert_eq!(ck.encode(), back.encode());
     }
 
@@ -652,7 +703,7 @@ mod tests {
         let mut bytes = ck.encode();
         // The curve-count u64 sits right after the fixed header + params
         // + label; smash it to u64::MAX and expect a clean error.
-        let off = 4 + 4 + 8 * 5 + 8 // header (incl. total_bits_down)
+        let off = 4 + 4 + 8 * 6 + 8 // header (incl. both bit totals)
             + 8 + 4 * ck.params.len() // params
             + 4 + ck.curve_label.len(); // label
         bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());

@@ -500,6 +500,42 @@ pub trait UpdateCodec: std::fmt::Debug + Send + Sync {
         Ok(())
     }
 
+    /// Parse `enc`'s frame header once, returning reusable per-frame
+    /// state for [`UpdateCodec::accumulate_range_cached`]. The sharded
+    /// aggregator opens every upload of a commit batch exactly once and
+    /// hands the same handle to all shard threads, so per-range kernel
+    /// calls stop re-reading — or, for seeded sparsifiers, regenerating
+    /// — the header once per range. The default returns
+    /// [`FrameHeader::Opaque`]: correct for every codec, no caching.
+    ///
+    /// Overrides must perform the data-independent frame validation of
+    /// their `accumulate_range` here (spec match, frame-size checks), so
+    /// a corrupt frame fails at open time rather than per shard.
+    fn open_frame(&self, enc: &Encoded) -> crate::Result<FrameHeader> {
+        let _ = enc;
+        Ok(FrameHeader::Opaque)
+    }
+
+    /// [`UpdateCodec::accumulate_range`] with a header handle from
+    /// [`UpdateCodec::open_frame`] on the **same** frame. Must be
+    /// bit-identical to `accumulate_range` for every `(enc, hdr)` pair
+    /// that `open_frame(enc)` can produce — the cache may only save
+    /// work, never change an add or its order. The default ignores the
+    /// handle and takes the plain path, so codecs without a header fast
+    /// path stay correct for free.
+    fn accumulate_range_cached(
+        &self,
+        enc: &Encoded,
+        hdr: &FrameHeader,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        let _ = hdr;
+        self.accumulate_range(enc, lo, hi, weight, sum)
+    }
+
     /// Decode into a fresh vector (allocating convenience wrapper).
     fn decode(&self, enc: &Encoded) -> crate::Result<Vec<f32>> {
         let mut out = Vec::new();
@@ -586,6 +622,22 @@ impl UpdateCodec for Box<dyn UpdateCodec> {
         (**self).accumulate_range(enc, lo, hi, weight, sum)
     }
 
+    fn open_frame(&self, enc: &Encoded) -> crate::Result<FrameHeader> {
+        (**self).open_frame(enc)
+    }
+
+    fn accumulate_range_cached(
+        &self,
+        enc: &Encoded,
+        hdr: &FrameHeader,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        (**self).accumulate_range_cached(enc, hdr, lo, hi, weight, sum)
+    }
+
     fn analytic_bits(&self, p: usize) -> Option<u64> {
         (**self).analytic_bits(p)
     }
@@ -593,6 +645,20 @@ impl UpdateCodec for Box<dyn UpdateCodec> {
     fn variance_q(&self, p: usize) -> f64 {
         (**self).variance_q(p)
     }
+}
+
+/// Reusable per-frame state parsed once by [`UpdateCodec::open_frame`]
+/// and consumed by every shard-range call of
+/// [`UpdateCodec::accumulate_range_cached`] on the same frame.
+#[derive(Debug, Clone)]
+pub enum FrameHeader {
+    /// No cached state — the cached accumulate falls back to the plain
+    /// per-range path. What the default `open_frame` returns.
+    Opaque,
+    /// The frame's kept coordinate indices, ascending. Seeded rand-k
+    /// regenerates its Floyd sample once per upload here instead of
+    /// once per shard range.
+    SparseIndices(Vec<u32>),
 }
 
 /// A compressed, bit-packed model update as it travels to the server.

@@ -19,7 +19,7 @@
 use super::bitstream::BitWriter;
 use super::{
     accumulate_one, check_accumulate, check_range, check_spec, sparse_decode_elias,
-    sparse_encode_elias, sparse_scan_elias, CodecSpec, Encoded, UpdateCodec,
+    sparse_encode_elias, sparse_scan_elias, CodecSpec, Encoded, FrameHeader, UpdateCodec,
 };
 use crate::util::rng::Rng;
 
@@ -203,6 +203,63 @@ impl UpdateCodec for RandKCodec {
         }
     }
 
+    fn open_frame(&self, enc: &Encoded) -> crate::Result<FrameHeader> {
+        check_spec(self.spec(), enc)?;
+        if !self.seeded {
+            // Explicit Elias streams are scanned sequentially; nothing a
+            // header cache could save without decoding values too.
+            return Ok(FrameHeader::Opaque);
+        }
+        let p = enc.p;
+        let k = self.k_of(p);
+        let expect = 64 + 32 * k as u64;
+        anyhow::ensure!(
+            enc.buf.len_bits() == expect,
+            "rand-k frame truncated or oversized: {} bits, expected {expect} \
+             (k={k}, seeded indices)",
+            enc.buf.len_bits()
+        );
+        let index_seed = enc.buf.reader().read_bits(64);
+        // The expensive part: Floyd sampling + sort, now once per upload
+        // instead of once per shard range.
+        Ok(FrameHeader::SparseIndices(rand_k_indices(index_seed, p, k)))
+    }
+
+    fn accumulate_range_cached(
+        &self,
+        enc: &Encoded,
+        hdr: &FrameHeader,
+        lo: usize,
+        hi: usize,
+        weight: f64,
+        sum: &mut [f64],
+    ) -> crate::Result<()> {
+        let FrameHeader::SparseIndices(idx) = hdr else {
+            return self.accumulate_range(enc, lo, hi, weight, sum);
+        };
+        // Same validation and arithmetic as `accumulate_range`'s seeded
+        // arm, minus the per-range regeneration `open_frame` already did
+        // (frame size was validated there; a forged handle still can't
+        // overrun — `reader_at` bounds-checks the seek).
+        check_spec(self.spec(), enc)?;
+        check_accumulate(enc.p, lo, hi, weight, sum.len())?;
+        let p = enc.p;
+        let k = self.k_of(p);
+        let scale = self.scale(p);
+        anyhow::ensure!(
+            idx.len() == k,
+            "cached rand-k header holds {} indices; frame implies k={k}",
+            idx.len()
+        );
+        let j_lo = idx.partition_point(|&i| (i as usize) < lo);
+        let j_hi = idx.partition_point(|&i| (i as usize) < hi);
+        let mut r = enc.buf.reader_at(64 + 32 * j_lo as u64)?;
+        for &i in &idx[j_lo..j_hi] {
+            accumulate_one(&mut sum[i as usize - lo], scale * r.read_f32(), weight);
+        }
+        Ok(())
+    }
+
     fn analytic_bits(&self, p: usize) -> Option<u64> {
         if self.seeded {
             Some(64 + 32 * self.k_of(p) as u64)
@@ -369,6 +426,45 @@ mod tests {
             let cut = Encoded { buf: w.finish(), p: 60, spec: q.spec() };
             assert!(q.decode(&cut).is_err(), "seeded={seeded}: truncated accepted");
         }
+    }
+
+    #[test]
+    fn cached_accumulate_matches_plain_bit_for_bit() {
+        let p = 233;
+        let x: Vec<f32> = (0..p).map(|i| ((i as f32) * 0.19).sin() * 2.0).collect();
+        for seeded in [true, false] {
+            let q = RandKCodec { k_permille: 300, seeded };
+            let enc = q.encode(&x, &mut rng(21));
+            let hdr = q.open_frame(&enc).unwrap();
+            match (&hdr, seeded) {
+                (FrameHeader::SparseIndices(idx), true) => assert_eq!(idx.len(), q.k_of(p)),
+                (FrameHeader::Opaque, false) => {}
+                _ => panic!("wrong header shape for seeded={seeded}"),
+            }
+            for (lo, hi) in [(0, p), (0, 0), (0, 1), (50, 121), (200, p)] {
+                for w in [1.0f64, 0.625] {
+                    let mut plain = vec![0f64; hi - lo];
+                    let mut cached = vec![0f64; hi - lo];
+                    q.accumulate_range(&enc, lo, hi, w, &mut plain).unwrap();
+                    q.accumulate_range_cached(&enc, &hdr, lo, hi, w, &mut cached)
+                        .unwrap();
+                    let same =
+                        plain.iter().zip(&cached).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "seeded={seeded} {lo}..{hi} w={w}");
+                }
+            }
+        }
+        // A truncated seeded frame must fail at open time, before any
+        // shard thread touches it.
+        let q = RandKCodec::new(300);
+        let full = q.encode(&x, &mut rng(4));
+        let mut w = BitWriter::new();
+        let mut r = full.buf.reader();
+        for _ in 0..full.buf.len_bits() / 2 {
+            w.write_bit(r.read_bit());
+        }
+        let cut = Encoded { buf: w.finish(), p, spec: q.spec() };
+        assert!(q.open_frame(&cut).is_err());
     }
 
     #[test]

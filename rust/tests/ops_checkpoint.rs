@@ -79,6 +79,7 @@ fn rand_checkpoint(rng: &mut Rng) -> Checkpoint {
         next_round: rng.gen_range(0, 1000),
         total_bits: rng.next_u64() >> 20,
         total_bits_down: rng.next_u64() >> 20,
+        total_bits_edge_to_root: rng.next_u64() >> 20,
         clock_now: rng.gen_f32() as f64 * 1e4,
         params: (0..rng.gen_range(1, 40)).map(|_| rng.gen_f32() - 0.5).collect(),
         curve_label: format!("run-{}", rng.gen_range(0, 1000)),
@@ -89,6 +90,7 @@ fn rand_checkpoint(rng: &mut Rng) -> Checkpoint {
                 time: k as f64 * 1.5,
                 bits_up: rng.next_u64() >> 30,
                 bits_down: rng.next_u64() >> 30,
+                bits_edge_to_root: rng.next_u64() >> 30,
                 loss: rng.gen_f32() as f64,
             })
             .collect(),
@@ -198,6 +200,7 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
     assert_eq!(a.params, b.params, "final models differ");
     assert_eq!(a.total_bits, b.total_bits);
     assert_eq!(a.total_bits_down, b.total_bits_down);
+    assert_eq!(a.total_bits_edge_to_root, b.total_bits_edge_to_root);
     assert_eq!(a.curve.points.len(), b.curve.points.len());
     for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
         assert_eq!(pa.round, pb.round);
@@ -206,6 +209,7 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(pa.time.to_bits(), pb.time.to_bits(), "time at k={}", pa.round);
         assert_eq!(pa.bits_up, pb.bits_up);
         assert_eq!(pa.bits_down, pb.bits_down);
+        assert_eq!(pa.bits_edge_to_root, pb.bits_edge_to_root);
     }
     assert_eq!(a.rounds.len(), b.rounds.len());
     for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
@@ -214,6 +218,7 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(ra.comm_time.to_bits(), rb.comm_time.to_bits());
         assert_eq!(ra.bits_up, rb.bits_up);
         assert_eq!(ra.bits_down, rb.bits_down);
+        assert_eq!(ra.bits_edge_to_root, rb.bits_edge_to_root);
         assert_eq!(ra.dropped, rb.dropped);
         assert_eq!(ra.staleness_max, rb.staleness_max);
         assert_eq!(ra.staleness_mean.to_bits(), rb.staleness_mean.to_bits());

@@ -1,0 +1,343 @@
+//! Two-level aggregation trees over real localhost TCP sockets
+//! (`net::TcpTree` root + `net::run_edge_retrying` edge leaders): the
+//! ISSUE's acceptance gates —
+//!
+//! (a) a relay-mode (identity re-encode) tree with degenerate knobs
+//!     commits **bit-identically** to the flat `TcpAsync` cluster, and
+//!     the result is invariant to the edge count (1 vs 2);
+//! (b) summed-mode partial re-encoding is byte-reproducible across
+//!     repeat runs of the same seed, and the edge-side re-encode itself
+//!     is deterministic and bit-budget-preserving per codec family;
+//! (c) a mid-run edge-leader death retires the whole cohort's in-flight
+//!     jobs back to the planner and the run still completes on the
+//!     surviving edge.
+
+use fedpaq::config::{EngineKind, ExperimentConfig};
+use fedpaq::coordinator::RunResult;
+use fedpaq::data::DatasetKind;
+use fedpaq::model::RustEngine;
+use fedpaq::net::{
+    partial_reencode, run_edge_retrying, run_leader, run_leader_tree, run_worker_retrying,
+    EdgeOptions, WorkerOptions,
+};
+use fedpaq::ops::{EventSink, RunControl};
+use fedpaq::opt::LrSchedule;
+use fedpaq::quant::{CodecSpec, Coding, Encoded};
+use fedpaq::util::json::Json;
+use fedpaq::util::rng::Rng;
+use std::io::Write;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn cluster_cfg(seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "tcp-tree-it".into(),
+        model: "logreg".into(),
+        dataset: DatasetKind::Mnist08,
+        n_nodes: 12,
+        per_node: 60, // 720 samples >= the 480 eval slab below
+        r: 6,
+        tau: 2,
+        t_total: 10,
+        codec: CodecSpec::qsgd(2),
+        lr: LrSchedule::Const { eta: 0.4 },
+        ratio: 100.0,
+        seed,
+        eval_every: 1,
+        engine: EngineKind::Rust,
+        partition: fedpaq::data::PartitionKind::Iid,
+        async_rounds: true,
+        buffer_size: 0, // effective r — the degenerate full wave
+        max_staleness: 0,
+        staleness_rule: Default::default(),
+        agg_shards: 1,
+        down_codec: None,
+        straggler: Default::default(),
+        dataset_cap: 0,
+    }
+}
+
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn leader_engine() -> RustEngine {
+    RustEngine::new(fedpaq::model::ModelKind::LogReg { d: 784, l2: 0.05 }, 10, 480)
+        .unwrap()
+}
+
+/// A `Write` handle into a shared byte buffer, so a test can read back
+/// the root's JSONL event stream.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Events of a given kind from a captured stream.
+fn of_kind<'a>(events: &'a [Json], kind: &str) -> Vec<&'a Json> {
+    events
+        .iter()
+        .filter(|e| e.get("event").and_then(Json::as_str) == Some(kind))
+        .collect()
+}
+
+/// Root + `edge_opts.len()` edge leaders + their worker cohorts, all on
+/// localhost threads. Edge `i` runs with `edge_opts[i]` (its cohort size
+/// is `opts.workers`). Edge/worker errors are tolerated — an edge
+/// running `--max-partials` death injection exits by design, and its
+/// orphaned workers then lose their sockets.
+fn run_tree(
+    cfg: &ExperimentConfig,
+    edge_opts: Vec<EdgeOptions>,
+    summed: bool,
+) -> (RunResult, Vec<Json>) {
+    let root_addr = format!("127.0.0.1:{}", free_port());
+    let n_edges = edge_opts.len();
+    let mut threads = Vec::new();
+    for opts in edge_opts {
+        let root_addr = root_addr.clone();
+        let edge_addr = format!("127.0.0.1:{}", free_port());
+        let cohort = opts.workers;
+        for _ in 0..cohort {
+            let edge_addr = edge_addr.clone();
+            threads.push(std::thread::spawn(move || {
+                let _ = run_worker_retrying(
+                    &edge_addr,
+                    Path::new("artifacts"),
+                    WorkerOptions::default(),
+                    Duration::from_secs(30),
+                );
+            }));
+        }
+        threads.push(std::thread::spawn(move || {
+            let _ = run_edge_retrying(&root_addr, &edge_addr, opts, Duration::from_secs(30));
+        }));
+    }
+    let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let ctrl = RunControl {
+        events: EventSink::to_writer(Box::new(buf.clone())),
+        ..Default::default()
+    };
+    let mut engine = leader_engine();
+    let res = run_leader_tree(
+        cfg.clone(),
+        &root_addr,
+        n_edges,
+        summed,
+        &mut engine,
+        Path::new("artifacts"),
+        &ctrl,
+    )
+    .unwrap();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    let events = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    (res, events)
+}
+
+/// Flat `TcpAsync` cluster, the comparison baseline.
+fn run_flat(cfg: &ExperimentConfig, n_workers: usize) -> RunResult {
+    let addr = format!("127.0.0.1:{}", free_port());
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker_retrying(
+                    &addr,
+                    Path::new("artifacts"),
+                    WorkerOptions::default(),
+                    Duration::from_secs(30),
+                )
+                .unwrap_or_else(|e| panic!("worker failed: {e}"));
+            })
+        })
+        .collect();
+    let mut engine = leader_engine();
+    let res = run_leader(
+        cfg.clone(),
+        &addr,
+        n_workers,
+        &mut engine,
+        Path::new("artifacts"),
+        &RunControl::default(),
+    )
+    .unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    res
+}
+
+fn edges(n: usize, workers: usize) -> Vec<EdgeOptions> {
+    (0..n)
+        .map(|_| EdgeOptions { workers, ..Default::default() })
+        .collect()
+}
+
+fn assert_bitwise_equal(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.params, b.params, "{what}: final models differ");
+    assert_eq!(a.total_bits, b.total_bits, "{what}: uplink bits differ");
+    assert_eq!(a.total_bits_down, b.total_bits_down, "{what}: downlink bits differ");
+    assert_eq!(a.curve.points.len(), b.curve.points.len());
+    for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(pa.round, pb.round);
+        assert_eq!(
+            pa.loss.to_bits(),
+            pb.loss.to_bits(),
+            "{what}: loss differs at k={}",
+            pa.round
+        );
+        assert_eq!(pa.bits_up, pb.bits_up, "{what}: bits_up differs at k={}", pa.round);
+    }
+}
+
+#[test]
+fn relay_tree_matches_flat_async_bit_for_bit_and_edge_count_is_invariant() {
+    // Identity re-encode (relay) + degenerate knobs: the root's planner
+    // sees exactly the frames and commit boundaries a flat leader would,
+    // so the committed models must not differ by one bit from the flat
+    // TcpAsync run — and the 1-edge loopback must equal the 2-edge split.
+    let cfg = cluster_cfg(61);
+    let flat = run_flat(&cfg, 2);
+    let (tree2, events2) = run_tree(&cfg, edges(2, 1), false);
+    let (tree1, _) = run_tree(&cfg, edges(1, 2), false);
+
+    assert_bitwise_equal(&flat, &tree2, "flat vs 2-edge tree");
+    assert_bitwise_equal(&tree2, &tree1, "2-edge vs 1-edge tree");
+
+    // Relay forwards every worker frame verbatim on the second hop, so
+    // the split accounting must charge the same bits to both hops; the
+    // flat run has no second hop at all.
+    assert_eq!(flat.total_bits_edge_to_root, 0);
+    assert_eq!(tree2.total_bits_edge_to_root, tree2.total_bits);
+    for p in &tree2.curve.points {
+        assert_eq!(p.bits_edge_to_root, p.bits_up);
+    }
+    // Both edges joined and their cohorts were seen.
+    let joined = of_kind(&events2, "edge_joined");
+    assert_eq!(joined.len(), 2, "expected two edge_joined events");
+}
+
+#[test]
+fn summed_tree_is_byte_reproducible_across_repeat_runs() {
+    // Lossy summed re-encode: never bit-identical to the flat run (f32
+    // cast + edge-local addition order), but two runs of the same seed
+    // must agree byte-for-byte — the edge re-encode draws from the
+    // dedicated (seed, TREE_STREAM, edge_slot, version) RNG stream and
+    // the FlushPartial wave markers pin the flush boundaries.
+    let cfg = cluster_cfg(67);
+    let (a, events) = run_tree(&cfg, edges(2, 1), true);
+    let (b, _) = run_tree(&cfg, edges(2, 1), true);
+
+    assert_bitwise_equal(&a, &b, "summed repeat runs");
+    assert_eq!(a.total_bits_edge_to_root, b.total_bits_edge_to_root);
+    // The summed hop actually compressed: one frame per cohort wave
+    // instead of one per upload.
+    assert!(
+        a.total_bits_edge_to_root < a.total_bits,
+        "summed edge hop ({}) should carry fewer bits than worker hop ({})",
+        a.total_bits_edge_to_root,
+        a.total_bits
+    );
+    // Every commit's cohort partials are on the event bus.
+    assert!(!of_kind(&events, "partial_committed").is_empty());
+    // And it still trains.
+    let first = a.curve.points.first().unwrap().loss;
+    let last = a.curve.points.last().unwrap().loss;
+    assert!(last.is_finite() && last < first, "summed tree did not train");
+}
+
+#[test]
+fn edge_death_mid_run_retires_cohort_and_run_completes() {
+    // Edge 0 exits cleanly after 3 partials (`--max-partials`, the same
+    // injector the CLI exposes). The root must notice the closed socket,
+    // retire the whole cohort's in-flight jobs through CapacityFreed,
+    // re-pin edge 0's nodes onto the survivor, and finish every commit.
+    let cfg = ExperimentConfig {
+        max_staleness: 6, // re-dispatched jobs arrive stale
+        t_total: 10,      // 5 commits
+        ..cluster_cfg(71)
+    };
+    let opts = vec![
+        EdgeOptions { workers: 1, max_partials: Some(3), ..Default::default() },
+        EdgeOptions { workers: 1, ..Default::default() },
+    ];
+    let (res, events) = run_tree(&cfg, opts, false);
+    assert_eq!(res.rounds.len(), 5, "run did not complete all commits");
+    let left = of_kind(&events, "edge_left");
+    assert_eq!(left.len(), 1, "expected exactly one edge_left event");
+    assert_eq!(left[0].get("edge").and_then(Json::as_usize), Some(0));
+    assert!(left[0].get("jobs_retired").and_then(Json::as_usize).is_some());
+    let first = res.curve.points.first().unwrap().loss;
+    let last = res.curve.points.last().unwrap().loss;
+    assert!(last.is_finite() && last < first, "churned tree run did not train");
+}
+
+#[test]
+fn partial_reencode_is_deterministic_and_bit_preserving_per_family() {
+    // The edge-side accumulate-then-re-encode contract, per built-in
+    // family: byte-determinism given the seed stream, and the re-encoded
+    // frame pays exactly the family's analytic bit budget (when it has
+    // one) — a summed tree must not silently change a codec's wire cost.
+    let p = 512usize;
+    let cohort = 4usize;
+    for (label, spec) in [
+        ("identity", CodecSpec::Identity),
+        ("qsgd_s2", CodecSpec::qsgd(2)),
+        ("qsgd_s7_elias", CodecSpec::Qsgd { s: 7, coding: Coding::Elias }),
+        ("topk_100", CodecSpec::top_k(100)),
+        ("randk_100_seeded", CodecSpec::rand_k(100)),
+        ("randk_100_elias", CodecSpec::RandK { k_permille: 100, seeded: false }),
+        ("adaptive_b4", CodecSpec::adaptive(4)),
+    ] {
+        let codec = spec.build().unwrap();
+        let xs: Vec<Vec<f32>> = (0..cohort)
+            .map(|i| {
+                (0..p)
+                    .map(|j| ((i * p + j) as f32 * 0.31).sin() * 0.01)
+                    .collect()
+            })
+            .collect();
+        let encs: Vec<Encoded> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| codec.encode(x, &mut Rng::seed_from_u64(i as u64)))
+            .collect();
+        let run = || {
+            let mut rng = Rng::from_coords(33, &[8, 0, 3]);
+            partial_reencode(codec.as_ref(), &encs, p, &mut rng).unwrap()
+        };
+        let (fa, wa) = run();
+        let (fb, wb) = run();
+        assert_eq!(wa, cohort as f64, "{label}: wrong mass");
+        assert_eq!(wa, wb, "{label}: mass not deterministic");
+        assert_eq!(
+            fa.buf.words(),
+            fb.buf.words(),
+            "{label}: re-encode not byte-deterministic"
+        );
+        assert_eq!(fa.bits(), fb.bits());
+        if let Some(budget) = codec.analytic_bits(p) {
+            assert_eq!(
+                fa.bits(),
+                budget,
+                "{label}: re-encoded frame bits deviate from the analytic budget"
+            );
+        }
+        // The frame round-trips through the family's own decoder.
+        let decoded = codec.decode(&fa).unwrap();
+        assert_eq!(decoded.len(), p, "{label}: decode width");
+    }
+}
